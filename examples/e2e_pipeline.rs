@@ -1,0 +1,153 @@
+//! End-to-end driver (DESIGN.md experiment E2E) — the full system on a
+//! real workload, proving all three layers compose:
+//!
+//!   1. TRAIN the 2.4M-param velocity network on synth-mnist for several
+//!      hundred steps through the AOT `train_step` artifact (rust owns the
+//!      loop; loss curve logged).
+//!   2. QUANTIZE the trained checkpoint with all four methods at
+//!      b ∈ {2,3,4,6,8}.
+//!   3. GENERATE paired samples (same start noise) fp32-vs-quantized
+//!      through the `qsample_step` artifact (Pallas qmm inside) and score
+//!      SSIM / PSNR / latent stability.
+//!   4. Report the Fig. 3/4-shaped tables + wall-clock numbers.
+//!
+//!   cargo run --release --offline --example e2e_pipeline
+//!
+//! Requires `make artifacts`. Results are recorded in EXPERIMENTS.md §E2E.
+
+use std::path::PathBuf;
+
+use fmq::coordinator::experiment::EvalContext;
+use fmq::coordinator::report;
+use fmq::data::Dataset;
+use fmq::flow::train::{loss_improvement, train, TrainConfig};
+use fmq::model::checkpoint;
+use fmq::model::spec::ModelSpec;
+use fmq::quant::QuantMethod;
+use fmq::runtime::{artifacts, ArtifactSet};
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts::default_dir();
+    if !artifacts::available(&dir) {
+        anyhow::bail!("e2e_pipeline needs artifacts — run `make artifacts` first");
+    }
+    let art = ArtifactSet::load(&dir)?;
+    let spec = ModelSpec::default_spec();
+    let dataset = Dataset::SynthMnist;
+    let steps: usize = std::env::var("FMQ_E2E_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+
+    // ---- 1. train ------------------------------------------------------
+    println!("== [1/4] training on {} for {steps} steps (AOT train_step) ==", dataset.name());
+    let cfg = TrainConfig {
+        steps,
+        lr: 1e-3,
+        seed: 42,
+        log_every: 50,
+    };
+    let res = train(&art, dataset, &cfg)?;
+    let first = res.losses.first().unwrap().1;
+    let last = res.losses.last().unwrap().1;
+    println!(
+        "loss {first:.2} -> {last:.2} (x{:.2} improvement) in {:.1}s ({:.2} steps/s)",
+        loss_improvement(&res.losses),
+        res.wall_s,
+        steps as f64 / res.wall_s
+    );
+    assert!(
+        loss_improvement(&res.losses) > 1.2,
+        "training failed to reduce the loss"
+    );
+    std::fs::create_dir_all("checkpoints")?;
+    let ckpt = PathBuf::from(format!("checkpoints/model-{}.fmq", dataset.name()));
+    checkpoint::save_theta(&ckpt, &res.theta, vec![])?;
+    // loss curve CSV for EXPERIMENTS.md
+    std::fs::create_dir_all("results")?;
+    report::write_csv(
+        &PathBuf::from("results/e2e_loss_curve.csv"),
+        "step,loss",
+        &res
+            .losses
+            .iter()
+            .map(|(s, l)| format!("{s},{l}"))
+            .collect::<Vec<_>>(),
+    )?;
+
+    // ---- 2+3. quantize + paired generation ------------------------------
+    println!("\n== [2-3/4] quantize + paired generation (Pallas qmm via PJRT) ==");
+    let ctx = EvalContext {
+        spec: spec.clone(),
+        art: Some(&art),
+        steps: 32,
+        n: 32,
+        seed: 7,
+    };
+    let methods = QuantMethod::ALL;
+    let bits = [2u8, 3, 4, 6, 8];
+    let t0 = std::time::Instant::now();
+    let fid_points = ctx.fidelity_sweep(dataset, &res.theta, &methods, &bits)?;
+    println!("fidelity sweep ({} points) in {:.1}s", fid_points.len(), t0.elapsed().as_secs_f64());
+
+    println!("\nFig.3-shaped table (SSIM | PSNR vs fp32 reference):");
+    print!("{:>8} |", "bits");
+    for m in methods {
+        print!(" {:>16} |", m.name());
+    }
+    println!();
+    for &b in &bits {
+        print!("{b:>8} |");
+        for m in methods {
+            let p = fid_points
+                .iter()
+                .find(|p| p.method == m && p.bits == b)
+                .unwrap();
+            print!(" {:>6.4} / {:>5.1}dB |", p.ssim, p.psnr);
+        }
+        println!();
+    }
+    report::fidelity_csv(&PathBuf::from("results/e2e_fig3.csv"), &fid_points)?;
+
+    // ---- 4. latent stability -------------------------------------------
+    println!("\n== [4/4] latent stability (reverse ODE, Fig.4-shaped) ==");
+    let lat_points = ctx.latent_sweep(dataset, &res.theta, &methods, &[2, 4, 8])?;
+    println!("{:>8} {:>9} {:>12} {:>12}", "method", "bits", "var_std", "fp32 base");
+    for p in &lat_points {
+        println!(
+            "{:>8} {:>9} {:>12.4} {:>12.4}",
+            p.method.name(),
+            p.bits,
+            p.stats.var_std,
+            p.baseline_var_std
+        );
+    }
+    report::latent_csv(&PathBuf::from("results/e2e_fig4.csv"), &lat_points)?;
+
+    // ---- headline check --------------------------------------------------
+    let ot3 = fid_points
+        .iter()
+        .find(|p| p.method == QuantMethod::Ot && p.bits == 3)
+        .unwrap();
+    let un3 = fid_points
+        .iter()
+        .find(|p| p.method == QuantMethod::Uniform && p.bits == 3)
+        .unwrap();
+    let lg3 = fid_points
+        .iter()
+        .find(|p| p.method == QuantMethod::Log2 && p.bits == 3)
+        .unwrap();
+    println!(
+        "\nheadline @3 bits: OT ssim {:.4} vs uniform {:.4} vs log2 {:.4}",
+        ot3.ssim, un3.ssim, lg3.ssim
+    );
+    println!(
+        "compression at 3 bits: x{:.1} ({} -> {} KB)",
+        ot3.compression,
+        spec.p() * 4 / 1024,
+        (spec.p() * 4) / 1024 / ot3.compression as usize
+    );
+    println!("\ncsv outputs: results/e2e_loss_curve.csv, results/e2e_fig3.csv, results/e2e_fig4.csv");
+    println!("checkpoint:  {ckpt:?} (reused by `fmq sweep/latent/grid`)");
+    Ok(())
+}

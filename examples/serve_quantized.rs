@@ -1,0 +1,116 @@
+//! Serving demo + load test: start the TCP server with a quantized model
+//! fleet, fire concurrent batched requests, report latency/throughput.
+//!
+//!   cargo run --release --offline --example serve_quantized
+//!
+//! Uses the compiled HLO backend when artifacts exist (quantized sampling
+//! through the Pallas qmm), CPU reference otherwise.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fmq::coordinator::experiment::pseudo_trained_theta;
+use fmq::coordinator::registry::Registry;
+use fmq::coordinator::server::{serve, Client, ServerConfig};
+use fmq::data::Dataset;
+use fmq::model::checkpoint;
+use fmq::model::spec::ModelSpec;
+use fmq::quant::QuantMethod;
+use fmq::runtime::{artifacts, ArtifactSet, SharedArtifacts};
+
+fn main() -> anyhow::Result<()> {
+    let spec = ModelSpec::default_spec();
+    // prefer the e2e-trained checkpoint when present
+    let ckpt = std::path::Path::new("checkpoints/model-synth-mnist.fmq");
+    let theta = if ckpt.exists() {
+        println!("using trained checkpoint {ckpt:?}");
+        checkpoint::load_theta(ckpt, &spec)?
+    } else {
+        println!("no checkpoint — pseudo-trained weights (run e2e_pipeline first for the real model)");
+        pseudo_trained_theta(&spec, Dataset::SynthMnist)
+    };
+
+    println!("building variant fleet: fp32 + {{ot,uniform}} x {{2,4,8}} bits ...");
+    let registry = Arc::new(Registry::build_fleet(
+        &spec,
+        &theta,
+        &[QuantMethod::Ot, QuantMethod::Uniform],
+        &[2, 4, 8],
+    ));
+    let art = if artifacts::available(&artifacts::default_dir()) {
+        println!("backend: compiled HLO (PJRT, Pallas qmm on the quantized path)");
+        Some(Arc::new(SharedArtifacts::new(ArtifactSet::load(
+            &artifacts::default_dir(),
+        )?)))
+    } else {
+        println!("backend: CPU reference (run `make artifacts` for the real path)");
+        None
+    };
+    let server = serve(
+        registry.clone(),
+        art,
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            steps: 8,
+            linger: Duration::from_millis(4),
+        },
+    )?;
+    let addr = server.addr.to_string();
+    println!("server on {addr}; models: {:?}", registry.names());
+
+    // ---- load test: concurrent clients against the ot4 variant ---------
+    let clients = 8;
+    let reqs_per_client = 4;
+    let n_per_req = 2;
+    println!(
+        "\nload test: {clients} clients x {reqs_per_client} requests x {n_per_req} samples (model ot4)"
+    );
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+            let mut cli = Client::connect(&addr)?;
+            let mut lats = Vec::new();
+            for r in 0..reqs_per_client {
+                let t = Instant::now();
+                let imgs = cli.generate("ot4", n_per_req, (c * 100 + r) as u64)?;
+                assert_eq!(imgs.len(), n_per_req * 768);
+                lats.push(t.elapsed().as_secs_f64());
+            }
+            Ok(lats)
+        }));
+    }
+    let mut lats: Vec<f64> = Vec::new();
+    for h in handles {
+        lats.extend(h.join().unwrap()?);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lats.sort_by(f64::total_cmp);
+    let total_samples = clients * reqs_per_client * n_per_req;
+    println!(
+        "done: {total_samples} samples in {wall:.2}s -> {:.1} samples/s",
+        total_samples as f64 / wall
+    );
+    println!(
+        "latency p50 {:.1}ms  p95 {:.1}ms  max {:.1}ms",
+        lats[lats.len() / 2] * 1e3,
+        lats[(lats.len() as f64 * 0.95) as usize] * 1e3,
+        lats.last().unwrap() * 1e3
+    );
+    println!(
+        "server stats: {} requests, {} batches ({:.2} requests/batch — dynamic batching at work)",
+        server.stats.requests.load(std::sync::atomic::Ordering::Relaxed),
+        server.stats.batches.load(std::sync::atomic::Ordering::Relaxed),
+        server.stats.requests.load(std::sync::atomic::Ordering::Relaxed) as f64
+            / server
+                .stats
+                .batches
+                .load(std::sync::atomic::Ordering::Relaxed)
+                .max(1) as f64
+    );
+
+    server.stop();
+    println!("server stopped cleanly");
+    Ok(())
+}

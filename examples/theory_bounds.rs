@@ -1,0 +1,132 @@
+//! The paper's theory, evaluated end to end on a concrete model:
+//! empirical Lipschitz constants (Assumptions 1-A/B/C) -> front constants
+//! C_U / C_E -> Theorem 3/6 FID-bound curves -> ρ(b) -> Corollary 13.1/13.2
+//! bit budgets, plus the α(f_W) estimators against their closed forms.
+//!
+//!   cargo run --release --offline --example theory_bounds
+
+use fmq::coordinator::experiment::pseudo_trained_theta;
+use fmq::data::Dataset;
+use fmq::flow::cpu_ref::CpuOracle;
+use fmq::metrics::features::FeatureNet;
+use fmq::model::spec::ModelSpec;
+use fmq::stats::dist::{alpha_gaussian, alpha_laplace};
+use fmq::theory::alpha::{alpha_spacing, spacing_for};
+use fmq::theory::bounds::BoundInputs;
+use fmq::theory::lipschitz::{estimate_l_theta_2, estimate_l_theta_inf, estimate_l_x};
+use fmq::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let spec = ModelSpec::default_spec();
+    let theta = pseudo_trained_theta(&spec, Dataset::SynthCeleba);
+
+    // ---- closed-form alpha table (paper Eq. 18 + Laplace paragraph) ----
+    println!("== alpha(f_W) closed forms vs estimators ==");
+    let sigma = 0.05f64;
+    println!(
+        "gaussian sigma={sigma}: closed {:.4} (alpha^3 = {:.2} sigma^2; paper quotes 32.8)",
+        alpha_gaussian(sigma),
+        alpha_gaussian(sigma).powi(3) / (sigma * sigma)
+    );
+    let beta = sigma / std::f64::consts::SQRT_2;
+    println!(
+        "laplace  sigma={sigma}: closed {:.4} (alpha^3 = {:.1} sigma^2; paper quotes 54)",
+        alpha_laplace(beta),
+        alpha_laplace(beta).powi(3) / (sigma * sigma)
+    );
+
+    // per-layer empirical alpha on the model
+    println!("\n== per-layer empirical alpha (order-statistics estimator) ==");
+    for l in spec.weight_layers() {
+        let w = theta.layer(&spec, &l.name);
+        let a = alpha_spacing(w, spacing_for(w.len()));
+        let r = fmq::quant::uniform::symmetric_range(w) as f64;
+        println!(
+            "  {:8}  alpha {:.4}   R {:.3}   alpha^3/R^2 {:.3} (paper band 0.3-0.5 for ~8-10 sigma clips)",
+            l.name,
+            a,
+            r,
+            a.powi(3) / (r * r)
+        );
+    }
+
+    // ---- empirical Lipschitz constants ---------------------------------
+    println!("\n== empirical Lipschitz constants (finite differences) ==");
+    let mut rng = Pcg64::seed(13);
+    let mut oracle = CpuOracle {
+        spec: &spec,
+        theta: &theta,
+    };
+    let l_x = estimate_l_x(&mut oracle, &mut rng, 12, 1e-2);
+    println!("L_x       (Assumption 1-A) ~= {l_x:.3}");
+    let l_t2 = estimate_l_theta_2(&mut oracle, &mut rng, 4, 1e-3);
+    println!("L_theta2  (Assumption 1-C) ~= {l_t2:.3}");
+    let l_tinf = estimate_l_theta_inf(&mut oracle, &mut rng, 3, 1e-4);
+    println!("L_thetaI  (Assumption 1-B) ~= {l_tinf:.3}");
+    let net = FeatureNet::standard(spec.d);
+    let l_phi = net.lipschitz_bound();
+    println!("L_phi     (Assumption 1-D, provable bound) = {l_phi:.3}");
+
+    // ---- bound curves + rho + budgets ----------------------------------
+    // alpha over the whole parameter vector (size-weighted layers)
+    let mut alpha_model = 0.0;
+    let mut total = 0usize;
+    for l in spec.weight_layers() {
+        let w = theta.layer(&spec, &l.name);
+        alpha_model += alpha_spacing(w, spacing_for(w.len())) * w.len() as f64;
+        total += w.len();
+    }
+    alpha_model /= total as f64;
+    let r_model = spec
+        .weight_layers()
+        .iter()
+        .map(|l| fmq::quant::uniform::symmetric_range(theta.layer(&spec, &l.name)) as f64)
+        .fold(0.0f64, f64::max);
+    // the paper's Eq.-17 premise: L_theta2 * sqrt(p) ~= L_thetaInf * R.
+    // report how far the measured constants actually are from it.
+    let lhs = l_t2 * (spec.pw() as f64).sqrt();
+    let rhs = l_tinf * r_model;
+    println!(
+        "\npaper premise check: L_th2*sqrt(p) = {lhs:.1} vs L_thInf*R = {rhs:.1}  (ratio {:.2})",
+        lhs / rhs
+    );
+    println!("(the premise is what makes rho collapse to the histogram term; the gap");
+    println!(" above propagates straight into rho — see DESIGN.md §paper-errata)");
+
+    let b = BoundInputs {
+        l_x,
+        l_theta_inf: l_tinf,
+        l_theta_2: l_t2,
+        l_phi,
+        t: 1.0,
+        r: r_model,
+        p: spec.pw() as f64,
+        alpha: alpha_model,
+    };
+    println!("\n== Theorem 3/6 FID-bound curves (measured constants) ==");
+    println!("{:>6} {:>14} {:>14} {:>10}", "bits", "C_U 2^-2b", "C_E 2^-2b", "ratio");
+    for bits in 2..=8u8 {
+        let u = b.fid_bound_uniform(bits);
+        let e = b.fid_bound_ot(bits);
+        println!("{bits:>6} {u:>14.4e} {e:>14.4e} {:>10.4}", e / u);
+    }
+    println!("measured rho = C_E/C_U = {:.4e}", b.rho());
+
+    // analytic table under the paper's own premise (enforced), where the
+    // provable-advantage story is exact
+    let ba = BoundInputs::paper_defaults(0.05, 10.0);
+    println!("\n== same tables under the paper's premise (enforced analytically) ==");
+    println!("rho = alpha^3/12 = {:.4e} (<1: {})", ba.rho(), ba.rho() < 1.0);
+    println!("{:>12} {:>14} {:>10} {:>10}", "FID budget", "uniform bits", "OT bits", "headroom");
+    for exp in 0..=4 {
+        let delta = ba.c_uniform() * 10f64.powi(-exp);
+        let bu = ba.bit_budget(delta, false);
+        let bo = ba.bit_budget(delta, true);
+        println!("{delta:>12.3e} {bu:>14} {bo:>10} {:>10}", bu as i32 - bo as i32);
+    }
+    println!(
+        "\nCorollary 13.1 headroom under the premise: {} bits (paper claims ~2)",
+        ((1.0 / ba.rho()).log2() / 2.0).floor()
+    );
+    Ok(())
+}

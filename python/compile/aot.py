@@ -1,0 +1,132 @@
+"""AOT lowering: jax -> HLO *text* artifacts for the rust PJRT runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what
+the published `xla` 0.1.6 crate links) rejects (`proto.id() <= INT_MAX`).
+The text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/gen_hlo.py and its README.
+
+Run via `make artifacts` (no-op when inputs are unchanged):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits:
+    velocity_fwd.hlo.txt   (theta, x[S,D], t[S])                -> (v,)
+    sample_step.hlo.txt    (theta, x[S,D], t, dt)               -> (x',)
+    qsample_step.hlo.txt   (codes, biases, codebooks, x, t, dt) -> (x',)
+    train_step.hlo.txt     (theta, m, v, step, x1, x0, t, lr)   -> (theta', m', v', loss)
+    assign.hlo.txt         (vals[CHUNK], centroids[K_MAX])      -> (codes,)
+    manifest.json          shapes + layer table (rust cross-checks its own)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import arch, model
+
+ASSIGN_CHUNK = 65536  # vals per on-device assignment dispatch
+
+
+def to_hlo_text(lowered, return_tuple: bool = True) -> str:
+    """Lower to HLO text.
+
+    return_tuple=False emits a single-array root instead of a 1-tuple —
+    required for the device-resident sampling sessions on the rust side,
+    where the output buffer of step t feeds straight back in as the input
+    buffer of step t+1 without a host round trip (PJRT cannot cheaply
+    untuple a device buffer through this API).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_all() -> dict:
+    """Lower every entry point; returns {artifact_name: hlo_text}."""
+    f32, i32 = jnp.float32, jnp.int32
+    P, PW, PB = arch.P, arch.PW, arch.PB
+    D, S, B = arch.D, arch.B_SAMPLE, arch.B_TRAIN
+    NW, K = arch.N_WEIGHTS, arch.K_MAX
+
+    out = {}
+
+    def low(name, fn, *specs, return_tuple=False):
+        out[name] = to_hlo_text(jax.jit(fn).lower(*specs), return_tuple)
+        print(f"  lowered {name}: {len(out[name])} chars")
+
+    # single-array roots: outputs can chain as inputs on device (rust
+    # sampling sessions) — see to_hlo_text.
+    low(
+        "velocity_fwd",
+        model.velocity,
+        _spec((P,)), _spec((S, D)), _spec((S,)),
+    )
+    low(
+        "sample_step",
+        model.sample_step,
+        _spec((P,)), _spec((S, D)), _spec(()), _spec(()),
+    )
+    low(
+        "qsample_step",
+        model.qsample_step,
+        _spec((PW,), i32), _spec((PB,)), _spec((NW, K)),
+        _spec((S, D)), _spec(()), _spec(()),
+    )
+    # multi-output: stays a tuple
+    low(
+        "train_step",
+        model.train_step,
+        _spec((P,)), _spec((P,)), _spec((P,)), _spec(()),
+        _spec((B, D)), _spec((B, D)), _spec((B,)), _spec(()),
+        return_tuple=True,
+    )
+    low(
+        "assign",
+        model.assign_codes,
+        _spec((ASSIGN_CHUNK,)), _spec((K,)),
+    )
+    low(
+        "dequant_theta",
+        model.dequantize_theta,
+        _spec((PW,), i32), _spec((PB,)), _spec((NW, K)),
+    )
+    return out
+
+
+def write_artifacts(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts = lower_all()
+    for name, text in artifacts.items():
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+    manifest = arch.manifest_dict()
+    manifest["assign_chunk"] = ASSIGN_CHUNK
+    manifest["artifacts"] = sorted(artifacts.keys())
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(artifacts)} artifacts + manifest.json to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    write_artifacts(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

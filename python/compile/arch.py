@@ -1,0 +1,135 @@
+"""Architecture constants + layer table for the FM velocity network.
+
+This file is the single python-side source of truth for the model shape.
+`aot.py` serialises the table into artifacts/manifest.json; the rust side
+(`rust/src/model/spec.rs`) regenerates the same table independently and an
+integration test asserts the two agree byte-for-byte, so the flat-theta
+layout can never drift between layers of the stack.
+
+Layout of the flat parameter vector theta[P] (row-major matrices):
+
+    w_in [D,H]  b_in [H]  w_t [TEMB,H]  b_t [H]
+    ( w1_i [H,H]  b1_i [H]  w2_i [H,H]  b2_i [H] ) for i in 0..BLOCKS
+    w_out [H,D]  b_out [D]
+
+Weight matrices (the quantized tensors) are the entries with ndim == 2.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+# ---------------------------------------------------------------- constants
+D = 768          # flattened image: 16 x 16 x 3
+IMG_HW = 16
+IMG_C = 3
+H = 512          # hidden width
+TEMB_FREQS = 32  # sinusoidal frequencies
+TEMB = 2 * TEMB_FREQS
+BLOCKS = 3       # residual blocks
+B_TRAIN = 64     # training batch
+B_SAMPLE = 16    # sampling batch
+K_MAX = 256      # codebook slots (8-bit); smaller bit-widths pad
+FREQ_MAX = 1000.0
+
+# padding value for unused codebook slots: far away from any real weight so
+# nearest-centroid assignment can never pick a padded slot.
+CODEBOOK_PAD = 1.0e30
+
+
+@dataclass(frozen=True)
+class LayerEntry:
+    name: str
+    shape: tuple  # () handled as 1-d
+    offset: int   # into flat theta
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+    @property
+    def is_weight(self) -> bool:
+        return len(self.shape) == 2
+
+
+def layer_table() -> list:
+    """Ordered layer table with offsets into flat theta."""
+    entries = []
+    off = 0
+
+    def add(name, shape):
+        nonlocal off
+        entries.append(LayerEntry(name, tuple(shape), off))
+        off += int(math.prod(shape))
+
+    add("w_in", (D, H))
+    add("b_in", (H,))
+    add("w_t", (TEMB, H))
+    add("b_t", (H,))
+    for i in range(BLOCKS):
+        add(f"w1_{i}", (H, H))
+        add(f"b1_{i}", (H,))
+        add(f"w2_{i}", (H, H))
+        add(f"b2_{i}", (H,))
+    add("w_out", (H, D))
+    add("b_out", (D,))
+    return entries
+
+
+TABLE = layer_table()
+P = sum(e.size for e in TABLE)                     # total params
+WEIGHTS = [e for e in TABLE if e.is_weight]        # quantized tensors
+BIASES = [e for e in TABLE if not e.is_weight]
+PW = sum(e.size for e in WEIGHTS)                  # quantized param count
+PB = sum(e.size for e in BIASES)
+N_WEIGHTS = len(WEIGHTS)
+
+# offsets of each weight tensor inside the packed codes vector codes[PW],
+# and of each bias inside the packed bias vector biases[PB].
+_wo = 0
+WEIGHT_OFFSETS = {}
+for e in WEIGHTS:
+    WEIGHT_OFFSETS[e.name] = _wo
+    _wo += e.size
+_bo = 0
+BIAS_OFFSETS = {}
+for e in BIASES:
+    BIAS_OFFSETS[e.name] = _bo
+    _bo += e.size
+
+
+def manifest_dict() -> dict:
+    """JSON-serialisable manifest consumed by the rust runtime."""
+    return {
+        "d": D,
+        "img_hw": IMG_HW,
+        "img_c": IMG_C,
+        "hidden": H,
+        "temb_freqs": TEMB_FREQS,
+        "blocks": BLOCKS,
+        "b_train": B_TRAIN,
+        "b_sample": B_SAMPLE,
+        "k_max": K_MAX,
+        "freq_max": FREQ_MAX,
+        "p": P,
+        "pw": PW,
+        "pb": PB,
+        "n_weights": N_WEIGHTS,
+        "layers": [
+            {
+                "name": e.name,
+                "shape": list(e.shape),
+                "offset": e.offset,
+                "size": e.size,
+                "is_weight": e.is_weight,
+            }
+            for e in TABLE
+        ],
+    }
+
+
+if __name__ == "__main__":
+    for e in TABLE:
+        print(f"{e.name:8s} shape={e.shape} offset={e.offset}")
+    print(f"P={P} PW={PW} PB={PB} n_weights={N_WEIGHTS}")

@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: nearest-centroid code assignment.
+
+Steps 9-11 of the paper's Algorithm 1 (OT_Quantize): after the equal-mass
+codebook is built, every weight is mapped to the index of its nearest
+centroid. This is the O(N*K) hot loop of quantization itself; expressing it
+as a kernel lets the coordinator quantize *on device* when deploying.
+
+TPU mapping: values stream through VMEM in (1, bn)-shaped lane tiles; the
+K-entry centroid vector is VMEM-resident; |v - c| is a (bn x K) VPU
+broadcast and the argmin reduces along the K (sublane-expanded) axis.
+Padded centroid slots hold CODEBOOK_PAD (1e30) so they are never selected.
+
+Interpret mode on CPU PJRT; validated against `ref.assign_ref`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(dim: int, pref: int = 1024) -> int:
+    for cand in (pref, 512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if cand <= dim and dim % cand == 0:
+            return cand
+    return dim
+
+
+def _assign_kernel(vals_ref, cent_ref, out_ref):
+    v = vals_ref[...]          # f32[bn]
+    c = cent_ref[...]          # f32[K]
+    d = jnp.abs(v[:, None] - c[None, :])   # f32[bn, K] VPU broadcast
+    out_ref[...] = jnp.argmin(d, axis=1).astype(jnp.int32)
+
+
+def assign(vals, centroids, *, bn: int | None = None, interpret: bool = True):
+    """vals f32[N], centroids f32[K] -> codes int32[N]."""
+    (n,) = vals.shape
+    bn = bn or _pick_block(n)
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec(centroids.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(vals, centroids)

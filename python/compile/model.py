@@ -1,0 +1,178 @@
+"""L2: the flow-matching velocity network + train/sample steps in JAX.
+
+Everything here is build-time only: `aot.py` lowers these functions to HLO
+text once, and the rust coordinator executes the compiled artifacts through
+PJRT at run time. The quantized sampling path routes every weight matmul
+through the L1 Pallas `qmm` kernel so dequantization happens inside the
+kernel tile, never materialising f32 weights in the graph.
+
+Parameterisation: a single flat f32 theta[P] whose layout is defined by
+`arch.TABLE` (shared with rust via artifacts/manifest.json).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import arch
+from .kernels.assign import assign as pallas_assign
+from .kernels.qmm import qmm as pallas_qmm
+
+# --------------------------------------------------------------- utilities
+
+_OFFSETS = {e.name: (e.offset, e.shape) for e in arch.TABLE}
+
+
+def slice_param(theta, name):
+    """Static slice of one layer out of flat theta (trace-time constants)."""
+    off, shape = _OFFSETS[name]
+    size = int(math.prod(shape))
+    return jax.lax.dynamic_slice_in_dim(theta, off, size).reshape(shape)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def time_features(t):
+    """Sinusoidal features of t in [0, 1].
+
+    t f32[B] -> f32[B, 2*F]; frequencies geometric in [1, FREQ_MAX].
+    Mirrored exactly by rust/src/flow/cpu_ref.rs.
+    """
+    f = arch.TEMB_FREQS
+    i = jnp.arange(f, dtype=jnp.float32)
+    freqs = jnp.exp(i / (f - 1) * jnp.log(arch.FREQ_MAX))  # [F]
+    ang = t[:, None] * freqs[None, :]                      # [B, F]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+# ------------------------------------------------------- full-precision fwd
+
+def velocity(theta, x, t):
+    """v = f_theta(x, t).   x f32[B, D], t f32[B] -> f32[B, D]."""
+    temb = time_features(t)
+    ht = silu(temb @ slice_param(theta, "w_t") + slice_param(theta, "b_t"))
+    h = x @ slice_param(theta, "w_in") + slice_param(theta, "b_in") + ht
+    for i in range(arch.BLOCKS):
+        u = silu(h @ slice_param(theta, f"w1_{i}") + slice_param(theta, f"b1_{i}"))
+        h = h + u @ slice_param(theta, f"w2_{i}") + slice_param(theta, f"b2_{i}")
+    return h @ slice_param(theta, "w_out") + slice_param(theta, "b_out")
+
+
+def sample_step(theta, x, t, dt):
+    """One explicit-Euler step of the probability-flow ODE.
+
+    Signed dt: dt > 0 integrates noise -> data (generation); dt < 0
+    integrates data -> noise (latent encoding for the Fig. 4 experiment).
+    t is a scalar shared across the batch.
+    """
+    tb = jnp.full((x.shape[0],), t, dtype=jnp.float32)
+    return x + dt * velocity(theta, x, tb)
+
+
+# ---------------------------------------------------------- quantized fwd
+
+def _q_weight_inputs(codes, codebooks, name):
+    """Slice one weight's codes + its codebook row (trace-time offsets)."""
+    off = arch.WEIGHT_OFFSETS[name]
+    _, shape = _OFFSETS[name]
+    size = int(math.prod(shape))
+    c = jax.lax.dynamic_slice_in_dim(codes, off, size).reshape(shape)
+    row = [w.name for w in arch.WEIGHTS].index(name)
+    cb = codebooks[row]
+    return c, cb
+
+
+def _bias(biases, name):
+    off = arch.BIAS_OFFSETS[name]
+    _, shape = _OFFSETS[name]
+    return jax.lax.dynamic_slice_in_dim(biases, off, shape[0])
+
+
+def qvelocity(codes, biases, codebooks, x, t):
+    """Quantized velocity: every weight matmul runs through Pallas qmm.
+
+    codes     int32[PW]          codebook indices, weights packed in order
+    biases    f32[PB]            biases stay full precision (standard PTQ)
+    codebooks f32[N_WEIGHTS, K_MAX]  per-tensor codebooks, padded rows
+    """
+    temb = time_features(t)
+    c, cb = _q_weight_inputs(codes, codebooks, "w_t")
+    ht = silu(pallas_qmm(temb, c, cb) + _bias(biases, "b_t"))
+    c, cb = _q_weight_inputs(codes, codebooks, "w_in")
+    h = pallas_qmm(x, c, cb) + _bias(biases, "b_in") + ht
+    for i in range(arch.BLOCKS):
+        c, cb = _q_weight_inputs(codes, codebooks, f"w1_{i}")
+        u = silu(pallas_qmm(h, c, cb) + _bias(biases, f"b1_{i}"))
+        c, cb = _q_weight_inputs(codes, codebooks, f"w2_{i}")
+        h = h + pallas_qmm(u, c, cb) + _bias(biases, f"b2_{i}")
+    c, cb = _q_weight_inputs(codes, codebooks, "w_out")
+    return pallas_qmm(h, c, cb) + _bias(biases, "b_out")
+
+
+def qsample_step(codes, biases, codebooks, x, t, dt):
+    """Euler step with quantized weights (the serving hot path)."""
+    tb = jnp.full((x.shape[0],), t, dtype=jnp.float32)
+    return x + dt * qvelocity(codes, biases, codebooks, x, tb)
+
+
+# -------------------------------------------------------------- training
+
+def cfm_loss(theta, x1, x0, t):
+    """Conditional flow-matching loss with linear (OT) interpolation paths.
+
+    x_t = (1 - t) x0 + t x1, target velocity u = x1 - x0:
+        L = E || f_theta(x_t, t) - (x1 - x0) ||^2
+    """
+    xt = (1.0 - t[:, None]) * x0 + t[:, None] * x1
+    v = velocity(theta, xt, t)
+    return jnp.mean(jnp.sum((v - (x1 - x0)) ** 2, axis=1))
+
+
+def train_step(theta, m, v, step, x1, x0, t, lr):
+    """One Adam step on the CFM loss.
+
+    All state flows in and out so rust owns the loop. step is a float32
+    scalar (1-based) used for bias correction.
+    """
+    beta1, beta2, eps = 0.9, 0.999, 1e-8
+    loss, g = jax.value_and_grad(cfm_loss)(theta, x1, x0, t)
+    m = beta1 * m + (1.0 - beta1) * g
+    v = beta2 * v + (1.0 - beta2) * g * g
+    mhat = m / (1.0 - beta1 ** step)
+    vhat = v / (1.0 - beta2 ** step)
+    theta = theta - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return theta, m, v, loss
+
+
+# -------------------------------------------------- on-device quantization
+
+def assign_codes(vals, centroids):
+    """Nearest-centroid assignment via the Pallas kernel (1-D chunk)."""
+    return pallas_assign(vals, centroids)
+
+
+def dequantize_theta(codes, biases, codebooks):
+    """Reconstruct the flat fp32 theta from quantized storage, on device.
+
+    The dequantize-on-load serving mode: run once per model deployment,
+    then sample with the fp32 `sample_step` — uploads stay small (codes at
+    int32, 4x less than theta; bit-packed on the wire in rust) and the
+    per-step gather of the on-the-fly mode disappears. The Pallas `qmm`
+    path remains the dequantize-on-the-fly mode for VMEM-rich targets.
+    """
+    parts = []
+    for e in arch.TABLE:
+        if e.is_weight:
+            wo = arch.WEIGHT_OFFSETS[e.name]
+            c = jax.lax.dynamic_slice_in_dim(codes, wo, e.size)
+            row = [w.name for w in arch.WEIGHTS].index(e.name)
+            parts.append(codebooks[row][c])
+        else:
+            bo = arch.BIAS_OFFSETS[e.name]
+            parts.append(jax.lax.dynamic_slice_in_dim(biases, bo, e.size))
+    return jnp.concatenate(parts)

@@ -1,0 +1,56 @@
+"""AOT pipeline: HLO-text emission sanity (fast entry points only).
+
+Full artifact generation is exercised by `make artifacts`; here we lower the
+cheap entry points and check the HLO text is well-formed and carries the
+right parameter signature, plus manifest consistency.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, arch, model
+
+
+def test_manifest_dict_consistent():
+    m = arch.manifest_dict()
+    assert m["p"] == arch.P
+    assert m["pw"] + m["pb"] == m["p"]
+    assert len(m["layers"]) == len(arch.TABLE)
+    assert m["n_weights"] == sum(1 for l in m["layers"] if l["is_weight"])
+    # layout is contiguous
+    off = 0
+    for l in m["layers"]:
+        assert l["offset"] == off
+        off += l["size"]
+    # round-trips through JSON
+    assert json.loads(json.dumps(m)) == m
+
+
+def test_assign_artifact_lowers_to_hlo_text():
+    lowered = jax.jit(
+        lambda vals, cents: (model.assign_codes(vals, cents),)
+    ).lower(
+        jax.ShapeDtypeStruct((aot.ASSIGN_CHUNK,), jnp.float32),
+        jax.ShapeDtypeStruct((arch.K_MAX,), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert f"f32[{aot.ASSIGN_CHUNK}]" in text
+    assert f"s32[{aot.ASSIGN_CHUNK}]" in text  # output codes
+
+
+def test_sample_step_lowers_to_hlo_text():
+    spec = jax.ShapeDtypeStruct
+    lowered = jax.jit(
+        lambda th, x, t, dt: (model.sample_step(th, x, t, dt),)
+    ).lower(
+        spec((arch.P,), jnp.float32),
+        spec((arch.B_SAMPLE, arch.D), jnp.float32),
+        spec((), jnp.float32),
+        spec((), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert f"f32[{arch.P}]" in text

@@ -1,0 +1,128 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value regimes; explicit cases pin the shapes
+the production artifacts actually use.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.assign import assign
+from compile.kernels.qmm import qmm, _pick_block
+from compile.kernels.ref import assign_ref, dequant_ref, qmm_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _mk_qmm(b, m, n, k, scale=1.0):
+    x = (RNG.standard_normal((b, m)) * scale).astype(np.float32)
+    codes = RNG.integers(0, k, size=(m, n), dtype=np.int32)
+    cb = np.sort(RNG.standard_normal(k).astype(np.float32))
+    return jnp.asarray(x), jnp.asarray(codes), jnp.asarray(cb)
+
+
+# ------------------------------------------------------------------- qmm
+
+@pytest.mark.parametrize(
+    "b,m,n,k",
+    [
+        (16, 768, 512, 256),   # w_in @ sample batch (production shape)
+        (16, 64, 512, 256),    # w_t
+        (16, 512, 512, 16),    # block weight, 4-bit codebook
+        (16, 512, 768, 4),     # w_out, 2-bit codebook
+        (1, 8, 8, 2),          # degenerate small
+    ],
+)
+def test_qmm_production_shapes(b, m, n, k):
+    x, codes, cb = _mk_qmm(b, m, n, k)
+    got = qmm(x, codes, cb)
+    want = qmm_ref(x, codes, cb)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3).map(lambda e: 2 ** e),
+    m=st.integers(3, 7).map(lambda e: 2 ** e),
+    n=st.integers(3, 7).map(lambda e: 2 ** e),
+    kbits=st.integers(1, 8),
+)
+def test_qmm_hypothesis_shapes(b, m, n, kbits):
+    x, codes, cb = _mk_qmm(b, m, n, 2 ** kbits)
+    np.testing.assert_allclose(
+        qmm(x, codes, cb), qmm_ref(x, codes, cb), rtol=3e-4, atol=1e-3
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.sampled_from([1e-4, 1e-2, 1.0, 1e2, 1e4]))
+def test_qmm_value_regimes(scale):
+    x, codes, cb = _mk_qmm(8, 64, 64, 16, scale=scale)
+    cb = cb * scale
+    got, want = qmm(x, codes, cb), qmm_ref(x, codes, cb)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * scale * scale)
+
+
+def test_qmm_non_pow2_blocks():
+    # M = 96 forces a 32-wide reduction block; checks _pick_block fallback.
+    x, codes, cb = _mk_qmm(4, 96, 160, 8)
+    np.testing.assert_allclose(
+        qmm(x, codes, cb), qmm_ref(x, codes, cb), rtol=3e-4, atol=1e-3
+    )
+
+
+def test_pick_block():
+    assert _pick_block(768) == 128
+    assert _pick_block(512) == 128
+    assert _pick_block(64) == 64
+    assert _pick_block(96) == 32
+    assert _pick_block(7) == 1
+
+
+def test_qmm_matches_dense_matmul():
+    # dequantized-dense equivalence: qmm == x @ codebook[codes]
+    x, codes, cb = _mk_qmm(4, 32, 32, 256)
+    w = dequant_ref(codes, cb)
+    np.testing.assert_allclose(qmm(x, codes, cb), x @ w, rtol=3e-4, atol=1e-3)
+
+
+# ----------------------------------------------------------------- assign
+
+@pytest.mark.parametrize("n,k", [(65536, 256), (1024, 4), (512, 2), (8, 256)])
+def test_assign_shapes(n, k):
+    vals = jnp.asarray(RNG.standard_normal(n).astype(np.float32))
+    cents = jnp.asarray(np.sort(RNG.standard_normal(k).astype(np.float32)))
+    got, want = assign(vals, cents), assign_ref(vals, cents)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nexp=st.integers(3, 12),
+    kbits=st.integers(1, 8),
+    seed=st.integers(0, 2 ** 31 - 1),
+)
+def test_assign_hypothesis(nexp, kbits, seed):
+    r = np.random.default_rng(seed)
+    vals = jnp.asarray(r.standard_normal(2 ** nexp).astype(np.float32))
+    cents = jnp.asarray(np.sort(r.standard_normal(2 ** kbits)).astype(np.float32))
+    np.testing.assert_array_equal(assign(vals, cents), assign_ref(vals, cents))
+
+
+def test_assign_padded_slots_never_selected():
+    # padded slots carry CODEBOOK_PAD = 1e30 — argmin must avoid them.
+    vals = jnp.asarray(RNG.standard_normal(256).astype(np.float32))
+    cents = np.full(256, 1.0e30, dtype=np.float32)
+    cents[:4] = np.array([-1.0, -0.3, 0.3, 1.0], dtype=np.float32)
+    codes = np.asarray(assign(vals, jnp.asarray(cents)))
+    assert codes.max() < 4
+
+
+def test_assign_exact_centroid_values():
+    # values sitting exactly on a centroid map to that centroid.
+    cents = np.array([-2.0, -1.0, 0.0, 1.0], dtype=np.float32)
+    codes = np.asarray(assign(jnp.asarray(cents), jnp.asarray(cents)))
+    np.testing.assert_array_equal(codes, np.arange(4))

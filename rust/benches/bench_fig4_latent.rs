@@ -1,0 +1,103 @@
+//! FIG4 harness: regenerates the paper's Figure 4 — latent-variance
+//! standard deviation vs bit-width per method and dataset (reverse-ODE
+//! encoding) — and checks the expected shape: OT stays near the fp32
+//! baseline at every bit-width while uniform/log2 disperse at low bits.
+//!
+//! FMQ_BENCH_FAST=1 shrinks the grid.
+
+use fmq::coordinator::experiment::{pseudo_trained_theta, EvalContext};
+use fmq::coordinator::report;
+use fmq::data::Dataset;
+use fmq::model::checkpoint;
+use fmq::model::spec::ModelSpec;
+use fmq::quant::QuantMethod;
+use fmq::runtime::{artifacts, ArtifactSet};
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("FMQ_BENCH_FAST").is_ok();
+    let spec = ModelSpec::default_spec();
+    let art = if artifacts::available(&artifacts::default_dir()) {
+        Some(ArtifactSet::load(&artifacts::default_dir())?)
+    } else {
+        None
+    };
+    let ctx = EvalContext {
+        spec: spec.clone(),
+        art: art.as_ref(),
+        steps: if fast { 4 } else { 16 },
+        n: if fast { 8 } else { 16 },
+        seed: 11,
+    };
+    let datasets: &[Dataset] = if fast {
+        &[Dataset::SynthCifar]
+    } else {
+        &Dataset::ALL
+    };
+    let bits: &[u8] = if fast { &[2, 8] } else { &[2, 3, 4, 5, 6, 8] };
+    let methods = QuantMethod::PAPER;
+
+    let mut all = Vec::new();
+    let t0 = std::time::Instant::now();
+    for &ds in datasets {
+        let ckpt = std::path::PathBuf::from(format!("checkpoints/model-{}.fmq", ds.name()));
+        let theta = if ckpt.exists() {
+            checkpoint::load_theta(&ckpt, &spec)?
+        } else {
+            pseudo_trained_theta(&spec, ds)
+        };
+        let pts = ctx.latent_sweep(ds, &theta, &methods, bits)?;
+        println!("\n[{}] latent var-std (fp32 baseline in col 2):", ds.name());
+        print!("{:>6} {:>9} |", "bits", "fp32");
+        for m in methods {
+            print!(" {:>9} |", m.name());
+        }
+        println!();
+        for &b in bits {
+            let base = pts
+                .iter()
+                .find(|p| p.bits == b && p.method == QuantMethod::Ot)
+                .unwrap()
+                .baseline_var_std;
+            print!("{b:>6} {base:>9.4} |");
+            for m in methods {
+                let p = pts.iter().find(|p| p.method == m && p.bits == b).unwrap();
+                print!(" {:>9.4} |", p.stats.var_std);
+            }
+            println!();
+        }
+        all.extend(pts);
+    }
+    println!("\nsweep wall-clock: {:.1}s", t0.elapsed().as_secs_f64());
+
+    // shape check: at the lowest bit-width, OT's dispersion is the closest
+    // to baseline among all methods (paper's central Fig. 4 finding)
+    let mut ok = true;
+    for &ds in datasets {
+        let dev = |m: QuantMethod| {
+            let p = all
+                .iter()
+                .find(|p| p.dataset == ds.name() && p.method == m && p.bits == bits[0])
+                .unwrap();
+            (p.stats.var_std - p.baseline_var_std).abs()
+        };
+        let d_ot = dev(QuantMethod::Ot);
+        for m in [QuantMethod::Uniform, QuantMethod::Log2] {
+            if d_ot > dev(m) + 0.05 {
+                println!(
+                    "SHAPE VIOLATION: {} OT dev {:.4} > {} dev {:.4}",
+                    ds.name(),
+                    d_ot,
+                    m.name(),
+                    dev(m)
+                );
+                ok = false;
+            }
+        }
+    }
+    println!("fig4 shape: {}", if ok { "OK (matches paper)" } else { "VIOLATIONS — see above" });
+
+    std::fs::create_dir_all("results")?;
+    report::latent_csv(std::path::Path::new("results/fig4_latent.csv"), &all)?;
+    println!("-> results/fig4_latent.csv");
+    Ok(())
+}

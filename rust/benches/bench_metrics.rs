@@ -1,0 +1,47 @@
+//! PERF component bench: metric throughput (SSIM windows, PSNR, feature
+//! embedding + Fréchet distance, latent stats) — the evaluation-side cost
+//! of regenerating Figs. 3/4.
+
+use fmq::bench::Bencher;
+use fmq::data::{Dataset, IMG_D};
+use fmq::metrics::features::FeatureNet;
+use fmq::metrics::fid::fid_images;
+use fmq::metrics::latent::latent_stats;
+use fmq::metrics::psnr::batch_psnr;
+use fmq::metrics::ssim::batch_ssim;
+use fmq::util::rng::Pcg64;
+
+fn main() {
+    let mut b = Bencher::default();
+    let mut rng = Pcg64::seed(3);
+    let n = 64usize;
+    let a_imgs = Dataset::SynthCifar.batch(&mut rng, n);
+    let b_imgs = Dataset::SynthCifar.batch(&mut rng, n);
+
+    let r = b.bench("ssim batch (64 imgs)", || batch_ssim(&a_imgs, &b_imgs, IMG_D)).clone();
+    println!("{:<44}   -> {:.0} imgs/s", "", n as f64 / r.mean_s);
+
+    let r = b.bench("psnr batch (64 imgs)", || batch_psnr(&a_imgs, &b_imgs, IMG_D)).clone();
+    println!("{:<44}   -> {:.0} imgs/s", "", n as f64 / r.mean_s);
+
+    let net = FeatureNet::standard(IMG_D);
+    let r = b.bench("feature embed (64 imgs)", || net.embed(&a_imgs)).clone();
+    println!("{:<44}   -> {:.0} imgs/s", "", n as f64 / r.mean_s);
+
+    b.bench("fid (64 vs 64 imgs, d=64 feats)", || {
+        fid_images(&net, &a_imgs, &b_imgs)
+    });
+
+    let latents: Vec<f32> = (0..n * IMG_D).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    b.bench("latent stats (64 x 768)", || latent_stats(&latents, IMG_D));
+
+    // dataset generation cost (workload synthesis)
+    for ds in Dataset::ALL {
+        let r = b
+            .bench(&format!("gen {} (x16)", ds.name()), || {
+                ds.batch(&mut Pcg64::seed(9), 16)
+            })
+            .clone();
+        println!("{:<44}   -> {:.0} imgs/s", "", 16.0 / r.mean_s);
+    }
+}

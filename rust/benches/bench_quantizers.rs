@@ -1,0 +1,54 @@
+//! PERF component bench: quantizer throughput per method and tensor size
+//! (the coordinator-side cost of deployment-time PTQ). §Perf target:
+//! >= 100 MB/s of weights per core for the OT path (sort-bound).
+
+use fmq::bench::Bencher;
+use fmq::model::spec::ModelSpec;
+use fmq::quant::{quantize_model, quantize_tensor, QuantMethod};
+use fmq::util::rng::Pcg64;
+
+fn main() {
+    let mut b = Bencher::default();
+    let mut rng = Pcg64::seed(1);
+
+    for &n in &[4096usize, 65536, 393216] {
+        let w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.05)).collect();
+        for method in QuantMethod::ALL {
+            let r = b
+                .bench(&format!("{}/{}k", method.name(), n / 1024), || {
+                    quantize_tensor(method, &w, 4)
+                })
+                .clone();
+            let mbs = (n * 4) as f64 / r.mean_s / 1e6;
+            println!("{:<44}   -> {:.1} MB/s", "", mbs);
+        }
+    }
+
+    // whole-model quantization (9 tensors, 2.34M weights)
+    let spec = ModelSpec::default_spec();
+    let theta = spec.init_theta(&mut rng);
+    for method in QuantMethod::ALL {
+        let r = b
+            .bench(&format!("model/{}@4b", method.name()), || {
+                quantize_model(&spec, &theta, method, 4)
+            })
+            .clone();
+        let mbs = (spec.pw() * 4) as f64 / r.mean_s / 1e6;
+        println!("{:<44}   -> {:.1} MB/s whole-model", "", mbs);
+    }
+
+    // lloyd refinement cost (the optional accuracy knob)
+    let w: Vec<f32> = (0..65536).map(|_| rng.normal_f32(0.0, 0.05)).collect();
+    b.bench("ot+lloyd30/64k", || {
+        fmq::quant::otq::otq_refined_codebook(&w, 4, 30)
+    });
+
+    // bit-packing throughput
+    let codes: Vec<u32> = (0..1_000_000).map(|_| rng.below(16) as u32).collect();
+    let r = b
+        .bench("pack 1M codes @4b", || {
+            fmq::quant::packing::PackedCodes::pack(&codes, 4).unwrap()
+        })
+        .clone();
+    println!("{:<44}   -> {:.1} Mcodes/s", "", 1.0 / r.mean_s / 1e6 * 1e6);
+}

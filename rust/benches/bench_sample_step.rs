@@ -1,0 +1,109 @@
+//! PERF e2e bench: one Euler sampling step — fp32 vs quantized, HLO vs CPU
+//! reference. This is the serving hot path; the fp32-vs-quantized delta is
+//! the price of on-the-fly dequantization (Pallas qmm gather) and the
+//! HLO-vs-CPU delta is what AOT compilation buys.
+
+use fmq::bench::Bencher;
+use fmq::flow::cpu_ref;
+use fmq::model::spec::ModelSpec;
+use fmq::quant::{quantize_model, QuantMethod};
+use fmq::runtime::{artifacts, ArtifactSet};
+use fmq::util::rng::Pcg64;
+
+fn main() {
+    let spec = ModelSpec::default_spec();
+    let mut rng = Pcg64::seed(2);
+    let theta = spec.init_theta(&mut rng);
+    let mut b = Bencher::default();
+
+    let bs = 16usize;
+    let x: Vec<f32> = (0..bs * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+
+    // CPU reference paths
+    b.bench("cpu fp32 sample_step (B=16)", || {
+        cpu_ref::sample_step(&spec, &theta, &x, 0.5, 0.0625)
+    });
+    b.note_throughput(bs as f64, "samples");
+    for bits in [2u8, 8] {
+        let qm = quantize_model(&spec, &theta, QuantMethod::Ot, bits);
+        b.bench(&format!("cpu ot{bits} qsample_step (B=16)"), || {
+            cpu_ref::qsample_step(&qm, &x, 0.5, 0.0625)
+        });
+    }
+
+    // compiled HLO paths (the real serving numbers)
+    let dir = artifacts::default_dir();
+    if !artifacts::available(&dir) {
+        println!("(artifacts missing — skipping HLO benches; run `make artifacts`)");
+        return;
+    }
+    let art = ArtifactSet::load(&dir).expect("load artifacts");
+    b.bench("hlo fp32 sample_step (B=16)", || {
+        art.sample_step(&theta, &x, 0.5, 0.0625).unwrap()
+    });
+    b.note_throughput(bs as f64, "samples");
+    for bits in [2u8, 4, 8] {
+        let qm = quantize_model(&spec, &theta, QuantMethod::Ot, bits);
+        let codes = qm.codes_i32();
+        let biases = qm.biases.clone();
+        let cbs = qm.codebooks_padded();
+        b.bench(&format!("hlo ot{bits} qsample_step (B=16)"), || {
+            art.qsample_step(&codes, &biases, &cbs, &x, 0.5, 0.0625)
+                .unwrap()
+        });
+        b.note_throughput(bs as f64, "samples");
+    }
+
+    // full 32-step generation, fp32 vs quantized: one-shot (re-upload
+    // weights every step) vs device-resident session (§Perf opt 1)
+    let qm = quantize_model(&spec, &theta, QuantMethod::Ot, 4);
+    let codes = qm.codes_i32();
+    let biases = qm.biases.clone();
+    let cbs = qm.codebooks_padded();
+    b.bench("hlo fp32 gen x32 (one-shot steps)", || {
+        let mut xx = x.clone();
+        let dt = 1.0 / 32.0;
+        for s in 0..32 {
+            xx = art.sample_step(&theta, &xx, s as f32 * dt, dt).unwrap();
+        }
+        xx
+    });
+    b.bench("hlo fp32 gen x32 (device session)", || {
+        art.sample_session(&theta)
+            .unwrap()
+            .integrate(&x, 0.0, 1.0, 32)
+            .unwrap()
+    });
+    b.note_throughput(16.0, "images");
+    b.bench("hlo ot4 gen x32 (one-shot steps)", || {
+        let mut xx = x.clone();
+        let dt = 1.0 / 32.0;
+        for s in 0..32 {
+            xx = art
+                .qsample_step(&codes, &biases, &cbs, &xx, s as f32 * dt, dt)
+                .unwrap();
+        }
+        xx
+    });
+    b.bench("hlo ot4 gen x32 (on-the-fly session)", || {
+        art.qsample_session(&qm)
+            .unwrap()
+            .integrate(&x, 0.0, 1.0, 32)
+            .unwrap()
+    });
+    b.note_throughput(16.0, "images");
+    b.bench("hlo ot4 gen x32 (dequant-on-load)", || {
+        art.qsample_session_dequant(&qm)
+            .unwrap()
+            .integrate(&x, 0.0, 1.0, 32)
+            .unwrap()
+    });
+    b.note_throughput(16.0, "images");
+    // staging cost itself (once per model deployment)
+    b.bench("qsample_session staging (2.34M codes)", || {
+        art.qsample_session(&qm).unwrap()
+    });
+    b.bench("dequant-on-load staging (incl. gather)", || {
+        art.qsample_session_dequant(&qm).unwrap()
+    });
+}

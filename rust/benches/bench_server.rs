@@ -1,0 +1,100 @@
+//! PERF serving bench: end-to-end TCP request latency/throughput with the
+//! dynamic batcher, plus batching-efficiency accounting. §Perf target:
+//! batching overhead (non-compute latency) < 1 ms p50.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fmq::coordinator::experiment::pseudo_trained_theta;
+use fmq::coordinator::registry::Registry;
+use fmq::coordinator::server::{serve, Client, ServerConfig};
+use fmq::data::Dataset;
+use fmq::model::spec::ModelSpec;
+use fmq::quant::QuantMethod;
+use fmq::runtime::{artifacts, ArtifactSet, SharedArtifacts};
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("FMQ_BENCH_FAST").is_ok();
+    let spec = ModelSpec::default_spec();
+    let theta = pseudo_trained_theta(&spec, Dataset::SynthMnist);
+    let registry = Arc::new(Registry::build_fleet(
+        &spec,
+        &theta,
+        &[QuantMethod::Ot],
+        &[4],
+    ));
+    let art = if artifacts::available(&artifacts::default_dir()) {
+        Some(Arc::new(SharedArtifacts::new(ArtifactSet::load(
+            &artifacts::default_dir(),
+        )?)))
+    } else {
+        None
+    };
+    let hlo = art.is_some();
+    let server = serve(
+        registry,
+        art,
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            steps: if fast { 2 } else { 8 },
+            linger: Duration::from_millis(3),
+        },
+    )?;
+    let addr = server.addr.to_string();
+    println!("backend: {}", if hlo { "compiled HLO" } else { "CPU reference" });
+
+    // sequential latency (unbatched floor)
+    let mut cli = Client::connect(&addr)?;
+    let seq_n = if fast { 3 } else { 10 };
+    let mut lats = Vec::new();
+    for i in 0..seq_n {
+        let t = Instant::now();
+        cli.generate("ot4", 1, i)?;
+        lats.push(t.elapsed().as_secs_f64());
+    }
+    lats.sort_by(f64::total_cmp);
+    println!(
+        "sequential 1-sample requests: p50 {:.1}ms  min {:.1}ms",
+        lats[lats.len() / 2] * 1e3,
+        lats[0] * 1e3
+    );
+
+    // concurrent load (batched throughput)
+    let clients = if fast { 4 } else { 12 };
+    let per = if fast { 2 } else { 4 };
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<f64> {
+            let mut cli = Client::connect(&addr)?;
+            let mut total = 0.0;
+            for r in 0..per {
+                let t = Instant::now();
+                cli.generate("ot4", 2, (c * 1000 + r) as u64)?;
+                total += t.elapsed().as_secs_f64();
+            }
+            Ok(total / per as f64)
+        }));
+    }
+    let mut mean_lat = 0.0;
+    for h in handles {
+        mean_lat += h.join().unwrap()?;
+    }
+    mean_lat /= clients as f64;
+    let wall = t0.elapsed().as_secs_f64();
+    let samples = clients * per * 2;
+    let reqs = server.stats.requests.load(std::sync::atomic::Ordering::Relaxed);
+    let batches = server.stats.batches.load(std::sync::atomic::Ordering::Relaxed);
+    println!(
+        "concurrent: {samples} samples / {wall:.2}s = {:.1} samples/s; mean latency {:.1}ms",
+        samples as f64 / wall,
+        mean_lat * 1e3
+    );
+    println!(
+        "batching: {reqs} requests -> {batches} batches ({:.2} req/batch)",
+        reqs as f64 / batches.max(1) as f64
+    );
+    server.stop();
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! THEORY-RHO / THEORY-BOUND / COR13 harness: regenerates the paper's
+//! analytic tables — α(f_W) closed forms, the α³/R² histogram ratios for
+//! Gaussian/Laplace at k ∈ {8, 9, 10}σ (paper: 0.33 Gaussian, 0.54
+//! Laplace at k=10), ρ(b) < 1, the FID-bound curves with their 2^{-2b}
+//! slope, and the Corollary 13.1 bit-budget table.
+
+use fmq::stats::dist::{alpha_gaussian, alpha_laplace};
+use fmq::theory::bounds::BoundInputs;
+
+fn main() {
+    let sigma = 0.05f64;
+
+    println!("== alpha^3/R^2 histogram ratios (paper Eq. 18 block) ==");
+    println!("{:>6} {:>12} {:>12}", "k", "gaussian", "laplace");
+    for k in [8.0f64, 9.0, 10.0] {
+        let r = k * sigma;
+        let g = alpha_gaussian(sigma).powi(3) / (r * r);
+        let l = alpha_laplace(sigma / std::f64::consts::SQRT_2).powi(3) / (r * r);
+        println!("{k:>6.0} {g:>12.4} {l:>12.4}");
+    }
+    println!("(paper quotes: gaussian k=10 -> 0.33, laplace k=10 -> 0.54)");
+
+    let b = BoundInputs::paper_defaults(sigma, 10.0);
+    println!("\n== FID bound curves (Theorems 3/6) ==");
+    println!("{:>6} {:>14} {:>14} {:>8}", "bits", "uniform", "OT", "OT/U");
+    let mut prev_u = f64::NAN;
+    let mut slope_ok = true;
+    for bits in 2..=8u8 {
+        let u = b.fid_bound_uniform(bits);
+        let e = b.fid_bound_ot(bits);
+        println!("{bits:>6} {u:>14.4e} {e:>14.4e} {:>8.4}", e / u);
+        if prev_u.is_finite() && ((prev_u / u) - 4.0).abs() > 1e-6 {
+            slope_ok = false;
+        }
+        prev_u = u;
+    }
+    println!(
+        "2^-2b slope (4x per bit): {}",
+        if slope_ok { "CONFIRMED" } else { "VIOLATED" }
+    );
+    println!("rho = {:.4e} (<1 = OT tighter: {})", b.rho(), b.rho() < 1.0);
+
+    println!("\n== Corollary 13.1: bit budgets (relative to C_U) ==");
+    println!("{:>14} {:>9} {:>6} {:>9}", "FID budget", "uniform", "OT", "headroom");
+    for exp in 0..=5 {
+        let delta = b.c_uniform() * 10f64.powi(-exp);
+        let bu = b.bit_budget(delta, false);
+        let bo = b.bit_budget(delta, true);
+        println!("{delta:>14.3e} {bu:>9} {bo:>6} {:>9}", bu as i32 - bo as i32);
+    }
+
+    println!("\n== Corollary 13.2: achievable FID per bit-width ==");
+    println!("{:>6} {:>14} {:>14}", "bits", "uniform", "OT");
+    for bits in [2u8, 3, 4, 6, 8] {
+        println!(
+            "{bits:>6} {:>14.4e} {:>14.4e}",
+            b.achievable_fid(bits, false),
+            b.achievable_fid(bits, true)
+        );
+    }
+
+    // eps trajectory bounds over t (Lemmas 1/5)
+    println!("\n== trajectory error bounds eps(t, b=4) ==");
+    println!("{:>6} {:>14} {:>14}", "t", "eps_U", "eps_E");
+    for i in 0..=4 {
+        let t = i as f64 / 4.0;
+        println!(
+            "{t:>6.2} {:>14.4e} {:>14.4e}",
+            b.eps_uniform(t, 4),
+            b.eps_ot(t, 4)
+        );
+    }
+}

@@ -1,0 +1,156 @@
+//! Micro/meso benchmark harness (criterion stand-in).
+//!
+//! Adaptive: calibrates iterations to a target measurement window, then
+//! reports mean / p50 / p95 / min plus derived throughput. All `cargo
+//! bench` targets (`benches/*.rs`, `harness = false`) use this, and the
+//! `§Perf` numbers in EXPERIMENTS.md come straight from its output format.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean_s
+    }
+
+    /// Throughput given a per-iteration element count.
+    pub fn throughput(&self, elems_per_iter: f64) -> f64 {
+        elems_per_iter / self.mean_s
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12}",
+            self.name,
+            fmt_time(self.mean_s),
+            fmt_time(self.p50_s),
+            fmt_time(self.p95_s),
+            format!("x{}", self.iters),
+        )
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Benchmark runner with a wall-clock budget per case.
+pub struct Bencher {
+    /// target total measurement time per case (seconds)
+    pub budget_s: f64,
+    /// minimum timed iterations
+    pub min_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new(0.6)
+    }
+}
+
+impl Bencher {
+    pub fn new(budget_s: f64) -> Self {
+        // honor FMQ_BENCH_FAST=1 for CI smoke runs
+        let budget_s = if std::env::var("FMQ_BENCH_FAST").is_ok() {
+            budget_s.min(0.05)
+        } else {
+            budget_s
+        };
+        println!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12}",
+            "benchmark", "mean", "p50", "p95", "iters"
+        );
+        Self {
+            budget_s,
+            min_iters: 5,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which must do one unit of work per call. The closure's
+    /// return value is black-boxed so the work is not optimized away.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // warmup + calibration
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.budget_s / once) as usize).clamp(self.min_iters, 100_000);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        samples.sort_by(f64::total_cmp);
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let r = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_s: mean,
+            p50_s: samples[samples.len() / 2],
+            p95_s: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+            min_s: samples[0],
+        };
+        println!("{}", r.report_line());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print a throughput footnote for the last benchmark.
+    pub fn note_throughput(&self, elems: f64, unit: &str) {
+        if let Some(r) = self.results.last() {
+            println!(
+                "{:<44}   -> {:.3e} {unit}/s",
+                format!("  ({})", r.name),
+                r.throughput(elems)
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_and_records() {
+        std::env::set_var("FMQ_BENCH_FAST", "1");
+        let mut b = Bencher::new(0.02);
+        let r = b.bench("noop-sum", || (0..100u64).sum::<u64>()).clone();
+        assert!(r.mean_s > 0.0);
+        assert!(r.p50_s <= r.p95_s + 1e-12);
+        assert_eq!(b.results().len(), 1);
+        assert!(r.per_sec() > 0.0);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2e-9).ends_with("ns"));
+        assert!(fmt_time(2e-6).ends_with("us"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2.0).ends_with('s'));
+    }
+}

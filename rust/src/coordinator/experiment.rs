@@ -1,0 +1,321 @@
+//! Experiment sweep runner — regenerates the paper's evaluation grids.
+//!
+//! Fig. 3: (dataset × method × bits) → SSIM/PSNR of quantized-model samples
+//! against the full-precision model's samples *from the same start noise*
+//! (the paper's "reference outputs").
+//! Fig. 4: (dataset × method × bits) → latent-variance statistics from the
+//! reverse ODE.
+//! Fig. 2/5–8: sample grids per method/bits.
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::flow::sampler::{self, CpuQStep, CpuStep, HloQStep, HloStep, StepBackend};
+use crate::metrics::latent::{latent_stats, LatentStats};
+use crate::metrics::psnr::batch_psnr;
+use crate::metrics::ssim::batch_ssim;
+use crate::model::params::ParamStore;
+use crate::model::quantized::QuantizedModel;
+use crate::model::spec::ModelSpec;
+use crate::quant::{quantize_model, QuantMethod};
+use crate::runtime::ArtifactSet;
+use crate::util::rng::Pcg64;
+
+/// Shared sweep configuration.
+pub struct EvalContext<'a> {
+    pub spec: ModelSpec,
+    /// When present, sampling runs through the compiled HLO (Pallas qmm on
+    /// the quantized path); otherwise the CPU reference backend.
+    pub art: Option<&'a ArtifactSet>,
+    /// Euler integration steps.
+    pub steps: usize,
+    /// Number of evaluation samples (rounded up to the artifact batch).
+    pub n: usize,
+    pub seed: u64,
+}
+
+/// One Fig. 3 grid point.
+#[derive(Clone, Debug)]
+pub struct FidelityPoint {
+    pub dataset: String,
+    pub method: QuantMethod,
+    pub bits: u8,
+    pub ssim: f64,
+    pub psnr: f64,
+    /// size-weighted W₂² weight error
+    pub w2_sq: f64,
+    pub compression: f64,
+}
+
+/// One Fig. 4 grid point.
+#[derive(Clone, Debug)]
+pub struct LatentPoint {
+    pub dataset: String,
+    pub method: QuantMethod,
+    pub bits: u8,
+    pub stats: LatentStats,
+    /// fp32 baseline var_std for the same inputs
+    pub baseline_var_std: f64,
+}
+
+impl<'a> EvalContext<'a> {
+    /// Effective batch size for generation.
+    fn batch(&self) -> usize {
+        self.art.map(|a| a.b_sample).unwrap_or(16)
+    }
+
+    fn n_padded(&self) -> usize {
+        let b = self.batch();
+        self.n.div_ceil(b) * b
+    }
+
+    /// Shared start noise for paired comparisons.
+    pub fn start_noise(&self) -> Vec<f32> {
+        let mut rng = Pcg64::seed(self.seed ^ 0x5eed);
+        let d = self.spec.d;
+        (0..self.n_padded() * d)
+            .map(|_| rng.normal_f32(0.0, 1.0))
+            .collect()
+    }
+
+    fn run_batched(
+        &self,
+        backend: &mut dyn StepBackend,
+        x0: &[f32],
+        reverse: bool,
+    ) -> Result<Vec<f32>> {
+        let d = self.spec.d;
+        let b = self.batch();
+        let mut out = Vec::with_capacity(x0.len());
+        for chunk in x0.chunks(b * d) {
+            let res = if reverse {
+                sampler::encode(backend, chunk, self.steps)?
+            } else {
+                sampler::generate_from(backend, chunk, self.steps)?
+            };
+            out.extend(res);
+        }
+        Ok(out)
+    }
+
+    /// Generate with full-precision weights from given noise.
+    pub fn generate_fp32(&self, theta: &ParamStore, x0: &[f32]) -> Result<Vec<f32>> {
+        match self.art {
+            Some(art) => {
+                let mut be = HloStep { art, theta };
+                self.run_batched(&mut be, x0, false)
+            }
+            None => {
+                let mut be = CpuStep {
+                    spec: &self.spec,
+                    theta,
+                };
+                self.run_batched(&mut be, x0, false)
+            }
+        }
+    }
+
+    /// Generate with a quantized model from given noise.
+    pub fn generate_quant(&self, qm: &QuantizedModel, x0: &[f32]) -> Result<Vec<f32>> {
+        match self.art {
+            Some(art) => {
+                let mut be = HloQStep::new(art, qm);
+                self.run_batched(&mut be, x0, false)
+            }
+            None => {
+                let mut be = CpuQStep { qm };
+                self.run_batched(&mut be, x0, false)
+            }
+        }
+    }
+
+    /// Reverse-encode images to latents.
+    pub fn encode_fp32(&self, theta: &ParamStore, imgs: &[f32]) -> Result<Vec<f32>> {
+        match self.art {
+            Some(art) => {
+                let mut be = HloStep { art, theta };
+                self.run_batched(&mut be, imgs, true)
+            }
+            None => {
+                let mut be = CpuStep {
+                    spec: &self.spec,
+                    theta,
+                };
+                self.run_batched(&mut be, imgs, true)
+            }
+        }
+    }
+
+    pub fn encode_quant(&self, qm: &QuantizedModel, imgs: &[f32]) -> Result<Vec<f32>> {
+        match self.art {
+            Some(art) => {
+                let mut be = HloQStep::new(art, qm);
+                self.run_batched(&mut be, imgs, true)
+            }
+            None => {
+                let mut be = CpuQStep { qm };
+                self.run_batched(&mut be, imgs, true)
+            }
+        }
+    }
+
+    /// One Fig. 3 point: quantize, generate from the *same* noise as the
+    /// fp32 reference, score SSIM/PSNR.
+    pub fn fidelity_point(
+        &self,
+        dataset: Dataset,
+        theta: &ParamStore,
+        reference: &[f32],
+        x0: &[f32],
+        method: QuantMethod,
+        bits: u8,
+    ) -> Result<FidelityPoint> {
+        let qm = quantize_model(&self.spec, theta, method, bits);
+        let imgs = self.generate_quant(&qm, x0)?;
+        let d = self.spec.d;
+        Ok(FidelityPoint {
+            dataset: dataset.name().to_string(),
+            method,
+            bits,
+            ssim: batch_ssim(reference, &imgs, d),
+            psnr: batch_psnr(reference, &imgs, d),
+            w2_sq: qm.w2_error(theta).w2_sq,
+            compression: qm.compression_ratio(),
+        })
+    }
+
+    /// One Fig. 4 point: reverse-encode a dataset batch through the
+    /// quantized model and summarize latent variances.
+    pub fn latent_point(
+        &self,
+        dataset: Dataset,
+        theta: &ParamStore,
+        method: QuantMethod,
+        bits: u8,
+    ) -> Result<LatentPoint> {
+        let mut rng = Pcg64::seed(self.seed ^ 0x1a7e);
+        let imgs = dataset.batch(&mut rng, self.n_padded());
+        let qm = quantize_model(&self.spec, theta, method, bits);
+        let lat_q = self.encode_quant(&qm, &imgs)?;
+        let lat_f = self.encode_fp32(theta, &imgs)?;
+        let d = self.spec.d;
+        Ok(LatentPoint {
+            dataset: dataset.name().to_string(),
+            method,
+            bits,
+            stats: latent_stats(&lat_q, d),
+            baseline_var_std: latent_stats(&lat_f, d).var_std,
+        })
+    }
+
+    /// Full Fig. 3 sweep for one dataset/theta.
+    pub fn fidelity_sweep(
+        &self,
+        dataset: Dataset,
+        theta: &ParamStore,
+        methods: &[QuantMethod],
+        bits: &[u8],
+    ) -> Result<Vec<FidelityPoint>> {
+        let x0 = self.start_noise();
+        let reference = self.generate_fp32(theta, &x0)?;
+        let mut out = Vec::new();
+        for &m in methods {
+            for &b in bits {
+                out.push(self.fidelity_point(dataset, theta, &reference, &x0, m, b)?);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Full Fig. 4 sweep for one dataset/theta.
+    pub fn latent_sweep(
+        &self,
+        dataset: Dataset,
+        theta: &ParamStore,
+        methods: &[QuantMethod],
+        bits: &[u8],
+    ) -> Result<Vec<LatentPoint>> {
+        let mut out = Vec::new();
+        for &m in methods {
+            for &b in bits {
+                out.push(self.latent_point(dataset, theta, m, b)?);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Obtain a model for a dataset without artifacts: a deterministic
+/// "pseudo-trained" theta — initialized weights plus a dataset-dependent
+/// perturbation so each dataset has a distinct model with realistic weight
+/// histograms. Real training (examples/e2e_pipeline) replaces this when
+/// artifacts are available.
+pub fn pseudo_trained_theta(spec: &ModelSpec, dataset: Dataset) -> ParamStore {
+    let seed = 0xA110C ^ (dataset.name().len() as u64).wrapping_mul(0x9E3779B97F4A7C15);
+    let mut rng = Pcg64::seed(seed);
+    let mut theta = spec.init_theta(&mut rng);
+    // mild heavy-tail mixture: a few larger weights, as trained nets have
+    let sl = theta.as_mut_slice();
+    for v in sl.iter_mut() {
+        if rng.uniform() < 0.01 {
+            *v *= 4.0;
+        }
+    }
+    theta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(spec: &ModelSpec) -> EvalContext<'_> {
+        EvalContext {
+            spec: spec.clone(),
+            art: None,
+            steps: 4,
+            n: 4,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn fidelity_point_ordering_by_bits() {
+        let spec = ModelSpec::default_spec();
+        let c = ctx(&spec);
+        let theta = pseudo_trained_theta(&spec, Dataset::SynthMnist);
+        let x0 = c.start_noise();
+        let reference = c.generate_fp32(&theta, &x0).unwrap();
+        let p2 = c
+            .fidelity_point(Dataset::SynthMnist, &theta, &reference, &x0, QuantMethod::Ot, 2)
+            .unwrap();
+        let p8 = c
+            .fidelity_point(Dataset::SynthMnist, &theta, &reference, &x0, QuantMethod::Ot, 8)
+            .unwrap();
+        assert!(p8.ssim >= p2.ssim, "ssim {} vs {}", p8.ssim, p2.ssim);
+        assert!(p8.psnr >= p2.psnr);
+        assert!(p8.w2_sq < p2.w2_sq);
+        assert!(p2.compression > p8.compression);
+    }
+
+    #[test]
+    fn latent_point_has_baseline() {
+        let spec = ModelSpec::default_spec();
+        let c = ctx(&spec);
+        let theta = pseudo_trained_theta(&spec, Dataset::SynthCifar);
+        let lp = c
+            .latent_point(Dataset::SynthCifar, &theta, QuantMethod::Ot, 8)
+            .unwrap();
+        assert!(lp.stats.var_std.is_finite());
+        assert!(lp.baseline_var_std.is_finite());
+        // 8-bit OT should stay near the fp32 baseline
+        assert!(lp.stats.var_std < lp.baseline_var_std * 2.0 + 0.5);
+    }
+
+    #[test]
+    fn pseudo_theta_differs_per_dataset() {
+        let spec = ModelSpec::default_spec();
+        let a = pseudo_trained_theta(&spec, Dataset::SynthMnist);
+        let b = pseudo_trained_theta(&spec, Dataset::SynthImagenet);
+        assert!(a.max_abs_diff(&b) > 0.0);
+    }
+}

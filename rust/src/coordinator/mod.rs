@@ -1,0 +1,9 @@
+//! The L3 coordinator: experiment sweeps (Figs. 2–4 + theory tables),
+//! report/figure writers, the model-variant registry and the serving layer
+//! (TCP JSON protocol with a dynamic batcher).
+
+pub mod batcher;
+pub mod experiment;
+pub mod registry;
+pub mod report;
+pub mod server;

@@ -1,0 +1,105 @@
+//! Model-variant registry: named quantized variants ("ot4", "uniform8",
+//! "fp32") built from one trained theta, resolvable by serving requests.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::params::ParamStore;
+use crate::model::quantized::QuantizedModel;
+use crate::model::spec::ModelSpec;
+use crate::quant::{quantize_model, QuantMethod};
+
+/// A servable model variant.
+pub enum Variant {
+    FullPrecision(ParamStore),
+    Quantized(QuantizedModel),
+}
+
+impl Variant {
+    pub fn describe(&self) -> String {
+        match self {
+            Variant::FullPrecision(_) => "fp32".to_string(),
+            Variant::Quantized(q) => format!("{}{}", q.method.name(), q.bits),
+        }
+    }
+}
+
+/// Registry of variants, keyed by name.
+pub struct Registry {
+    pub spec: ModelSpec,
+    variants: BTreeMap<String, Variant>,
+}
+
+impl Registry {
+    pub fn new(spec: ModelSpec) -> Self {
+        Self {
+            spec,
+            variants: BTreeMap::new(),
+        }
+    }
+
+    /// Build a standard fleet from one theta: fp32 + each (method, bits).
+    pub fn build_fleet(
+        spec: &ModelSpec,
+        theta: &ParamStore,
+        methods: &[QuantMethod],
+        bits: &[u8],
+    ) -> Self {
+        let mut reg = Self::new(spec.clone());
+        reg.insert("fp32", Variant::FullPrecision(theta.clone()));
+        for &m in methods {
+            for &b in bits {
+                let qm = quantize_model(spec, theta, m, b);
+                reg.insert(&format!("{}{}", m.name(), b), Variant::Quantized(qm));
+            }
+        }
+        reg
+    }
+
+    pub fn insert(&mut self, name: &str, v: Variant) {
+        self.variants.insert(name.to_string(), v);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Variant> {
+        self.variants
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model '{name}'; have: {:?}", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.variants.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.variants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.variants.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn fleet_contains_expected_names() {
+        let spec = ModelSpec::default_spec();
+        let theta = spec.init_theta(&mut Pcg64::seed(1));
+        let reg = Registry::build_fleet(
+            &spec,
+            &theta,
+            &[QuantMethod::Ot, QuantMethod::Uniform],
+            &[2, 8],
+        );
+        assert_eq!(reg.len(), 5);
+        assert!(reg.get("fp32").is_ok());
+        assert!(reg.get("ot2").is_ok());
+        assert!(reg.get("uniform8").is_ok());
+        assert!(reg.get("log2_4").is_err());
+        assert_eq!(reg.get("ot8").unwrap().describe(), "ot8");
+    }
+}

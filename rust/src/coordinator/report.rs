@@ -1,0 +1,191 @@
+//! Report writers: CSV series for the figures, markdown tables for
+//! EXPERIMENTS.md, and plain-PPM image grids (dependency-free viewable
+//! output for Figs. 2 and 5–8).
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::experiment::{FidelityPoint, LatentPoint};
+use crate::data::{IMG_C, IMG_HW};
+
+/// Write rows as CSV with a header.
+pub fn write_csv(path: &Path, header: &str, rows: &[String]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    let mut s = String::from(header);
+    s.push('\n');
+    for r in rows {
+        s.push_str(r);
+        s.push('\n');
+    }
+    fs::write(path, s).with_context(|| format!("write {path:?}"))
+}
+
+pub fn fidelity_csv(path: &Path, points: &[FidelityPoint]) -> Result<()> {
+    let rows: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "{},{},{},{:.6},{:.4},{:.6e},{:.3}",
+                p.dataset,
+                p.method.name(),
+                p.bits,
+                p.ssim,
+                p.psnr,
+                p.w2_sq,
+                p.compression
+            )
+        })
+        .collect();
+    write_csv(path, "dataset,method,bits,ssim,psnr,w2_sq,compression", &rows)
+}
+
+pub fn latent_csv(path: &Path, points: &[LatentPoint]) -> Result<()> {
+    let rows: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "{},{},{},{:.6},{:.6},{:.6},{:.6},{:.6}",
+                p.dataset,
+                p.method.name(),
+                p.bits,
+                p.stats.var_mean,
+                p.stats.var_std,
+                p.stats.mean_abs,
+                p.stats.max_abs,
+                p.baseline_var_std
+            )
+        })
+        .collect();
+    write_csv(
+        path,
+        "dataset,method,bits,var_mean,var_std,mean_abs,max_abs,baseline_var_std",
+        &rows,
+    )
+}
+
+/// Markdown table from header cells + rows of cells.
+pub fn markdown_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("| {} |\n", header.join(" | ")));
+    s.push_str(&format!("|{}\n", "---|".repeat(header.len())));
+    for r in rows {
+        s.push_str(&format!("| {} |\n", r.join(" | ")));
+    }
+    s
+}
+
+/// Write a grid of flattened [-1,1] images as one plain-PPM (P3) file.
+/// `cols` images per row, 1px separator lines.
+pub fn write_image_grid(path: &Path, imgs: &[f32], cols: usize) -> Result<()> {
+    let d = IMG_HW * IMG_HW * IMG_C;
+    assert_eq!(imgs.len() % d, 0);
+    let n = imgs.len() / d;
+    let rows = n.div_ceil(cols);
+    let gw = cols * (IMG_HW + 1) + 1;
+    let gh = rows * (IMG_HW + 1) + 1;
+    // start mid-gray
+    let mut canvas = vec![128u8; gw * gh * 3];
+    for i in 0..n {
+        let (gr, gc) = (i / cols, i % cols);
+        let oy = gr * (IMG_HW + 1) + 1;
+        let ox = gc * (IMG_HW + 1) + 1;
+        for y in 0..IMG_HW {
+            for x in 0..IMG_HW {
+                for c in 0..IMG_C {
+                    let v = imgs[i * d + (y * IMG_HW + x) * IMG_C + c];
+                    let b = (((v + 1.0) * 0.5).clamp(0.0, 1.0) * 255.0) as u8;
+                    canvas[((oy + y) * gw + ox + x) * 3 + c] = b;
+                }
+            }
+        }
+    }
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    let mut s = format!("P3\n{gw} {gh}\n255\n");
+    for px in canvas.chunks(3) {
+        s.push_str(&format!("{} {} {}\n", px[0], px[1], px[2]));
+    }
+    fs::write(path, s).with_context(|| format!("write {path:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::latent::LatentStats;
+    use crate::quant::QuantMethod;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("fmq-report-tests");
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn csv_roundtrip_readable() {
+        let p = tmpdir().join("fid.csv");
+        let pt = FidelityPoint {
+            dataset: "synth-mnist".into(),
+            method: QuantMethod::Ot,
+            bits: 4,
+            ssim: 0.91,
+            psnr: 28.5,
+            w2_sq: 1.2e-6,
+            compression: 7.9,
+        };
+        fidelity_csv(&p, &[pt]).unwrap();
+        let text = fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("dataset,method,bits"));
+        assert!(text.contains("synth-mnist,ot,4,0.91"));
+    }
+
+    #[test]
+    fn latent_csv_written() {
+        let p = tmpdir().join("lat.csv");
+        let lp = LatentPoint {
+            dataset: "synth-cifar".into(),
+            method: QuantMethod::Log2,
+            bits: 2,
+            stats: LatentStats {
+                var_mean: 1.5,
+                var_std: 3.2,
+                mean_abs: 0.9,
+                max_abs: 12.0,
+            },
+            baseline_var_std: 0.1,
+        };
+        latent_csv(&p, &[lp]).unwrap();
+        assert!(fs::read_to_string(&p).unwrap().contains("log2,2,1.5"));
+    }
+
+    #[test]
+    fn markdown_table_shape() {
+        let t = markdown_table(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert_eq!(t.lines().count(), 3);
+        assert!(t.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn ppm_grid_valid_header_and_size() {
+        let p = tmpdir().join("grid.ppm");
+        let d = IMG_HW * IMG_HW * IMG_C;
+        let imgs = vec![0.0f32; 3 * d];
+        write_image_grid(&p, &imgs, 2).unwrap();
+        let text = fs::read_to_string(&p).unwrap();
+        let mut lines = text.lines();
+        assert_eq!(lines.next().unwrap(), "P3");
+        let dims: Vec<usize> = lines
+            .next()
+            .unwrap()
+            .split(' ')
+            .map(|v| v.parse().unwrap())
+            .collect();
+        assert_eq!(dims, vec![2 * 17 + 1, 2 * 17 + 1]);
+        // 0.0 maps to 127/128 gray
+        assert!(text.contains("127 127 127") || text.contains("128 128 128"));
+    }
+}

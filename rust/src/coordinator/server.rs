@@ -1,0 +1,356 @@
+//! Serving layer: TCP, JSON-lines protocol, dynamic batching per model
+//! variant. Python never runs here — quantized sampling executes through
+//! the compiled HLO (or the CPU reference when artifacts are absent).
+//!
+//! Protocol (one JSON object per line):
+//!   -> {"op": "generate", "model": "ot4", "n": 2, "seed": 7, "steps": 16}
+//!   <- {"ok": true, "model": "ot4", "n": 2, "d": 768, "images": [...]}
+//!   -> {"op": "models"}
+//!   <- {"ok": true, "models": ["fp32", "ot2", ...]}
+//!   -> {"op": "ping"} / {"op": "shutdown"}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::batcher::{distribute, Batcher, GenRequest};
+use crate::coordinator::registry::{Registry, Variant};
+use crate::flow::sampler::{self, CpuQStep, CpuStep, HloQStep, HloStep};
+use crate::runtime::SharedArtifacts;
+use crate::util::json::{parse, Json};
+use crate::util::rng::Pcg64;
+
+/// Server configuration.
+pub struct ServerConfig {
+    pub addr: String,
+    pub steps: usize,
+    pub linger: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7878".to_string(),
+            steps: 16,
+            linger: Duration::from_millis(5),
+        }
+    }
+}
+
+/// Metrics counters exposed for the bench harness.
+#[derive(Default)]
+pub struct ServerStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub samples: AtomicU64,
+}
+
+/// The running server handle.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    pub stats: Arc<ServerStats>,
+    shutdown: Arc<AtomicBool>,
+    threads: Vec<thread::JoinHandle<()>>,
+}
+
+impl Server {
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // nudge the acceptor with a dummy connection
+        let _ = TcpStream::connect(self.addr);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Launch the server: one acceptor thread, one batching worker per model
+/// variant. `registry` and the optional artifact set are shared read-only.
+pub fn serve(
+    registry: Arc<Registry>,
+    art: Option<Arc<SharedArtifacts>>,
+    cfg: ServerConfig,
+) -> Result<Server> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let addr = listener.local_addr()?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let stats = Arc::new(ServerStats::default());
+    let mut threads = Vec::new();
+
+    // one batcher + worker per variant
+    let batch_size = art
+        .as_ref()
+        .map(|a| a.with(|art| art.b_sample))
+        .unwrap_or(16);
+    let mut submitters = std::collections::BTreeMap::new();
+    for name in registry.names() {
+        let batcher = Batcher::new(batch_size, cfg.linger);
+        submitters.insert(name.clone(), batcher.submitter());
+        let reg = registry.clone();
+        let art = art.clone();
+        let stats = stats.clone();
+        let sd = shutdown.clone();
+        let steps = cfg.steps;
+        threads.push(thread::spawn(move || {
+            worker_loop(&name, reg, art, batcher, stats, sd, steps, batch_size)
+        }));
+    }
+    let submitters = Arc::new(submitters);
+
+    // acceptor
+    {
+        let sd = shutdown.clone();
+        let stats = stats.clone();
+        let reg = registry.clone();
+        let subs = submitters.clone();
+        threads.push(thread::spawn(move || {
+            for stream in listener.incoming() {
+                if sd.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let stats = stats.clone();
+                let reg = reg.clone();
+                let subs = subs.clone();
+                let sd2 = sd.clone();
+                thread::spawn(move || {
+                    let _ = handle_conn(stream, &reg, &subs, &stats, &sd2);
+                });
+            }
+        }));
+    }
+
+    Ok(Server {
+        addr,
+        stats,
+        shutdown,
+        threads,
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    name: &str,
+    registry: Arc<Registry>,
+    art: Option<Arc<SharedArtifacts>>,
+    batcher: Batcher,
+    stats: Arc<ServerStats>,
+    shutdown: Arc<AtomicBool>,
+    steps: usize,
+    batch_size: usize,
+) {
+    let variant = match registry.get(name) {
+        Ok(v) => v,
+        Err(_) => return,
+    };
+    let d = registry.spec.d;
+    while !shutdown.load(Ordering::SeqCst) {
+        let Some(batch) = batcher.next_batch() else {
+            // all submitters dropped -> server is shutting down
+            return;
+        };
+        if batch.requests.is_empty() {
+            continue; // wait timeout: loop to re-check the shutdown flag
+        }
+        let total = batch.total.max(1);
+        let padded = total.div_ceil(batch_size) * batch_size;
+        // mix per-request seeds into the noise
+        let seed = batch
+            .requests
+            .iter()
+            .fold(0x5eed_u64, |acc, r| acc ^ r.seed.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Pcg64::seed(seed);
+        let x0: Vec<f32> = (0..padded * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+
+        let imgs = run_generate(variant, art.as_deref(), &registry, &x0, steps, batch_size, d);
+        match imgs {
+            Ok(imgs) => {
+                stats.batches.fetch_add(1, Ordering::Relaxed);
+                stats
+                    .samples
+                    .fetch_add(total as u64, Ordering::Relaxed);
+                distribute(batch, &imgs, d);
+            }
+            Err(_) => {
+                // reply with empty payloads so clients don't hang
+                distribute(batch, &[], d);
+            }
+        }
+    }
+}
+
+fn run_generate(
+    variant: &Variant,
+    art: Option<&SharedArtifacts>,
+    registry: &Registry,
+    x0: &[f32],
+    steps: usize,
+    batch_size: usize,
+    d: usize,
+) -> Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(x0.len());
+    for chunk in x0.chunks(batch_size * d) {
+        let imgs = match (variant, art) {
+            (Variant::FullPrecision(theta), Some(sa)) => sa.with(|a| {
+                let mut be = HloStep { art: a, theta };
+                sampler::generate_from(&mut be, chunk, steps)
+            })?,
+            (Variant::FullPrecision(theta), None) => {
+                let mut be = CpuStep {
+                    spec: &registry.spec,
+                    theta,
+                };
+                sampler::generate_from(&mut be, chunk, steps)?
+            }
+            (Variant::Quantized(qm), Some(sa)) => sa.with(|a| {
+                let mut be = HloQStep::new(a, qm);
+                sampler::generate_from(&mut be, chunk, steps)
+            })?,
+            (Variant::Quantized(qm), None) => {
+                let mut be = CpuQStep { qm };
+                sampler::generate_from(&mut be, chunk, steps)?
+            }
+        };
+        out.extend(imgs);
+    }
+    Ok(out)
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    registry: &Registry,
+    submitters: &std::collections::BTreeMap<String, mpsc::Sender<GenRequest>>,
+    stats: &ServerStats,
+    shutdown: &AtomicBool,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(());
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let reply = match handle_request(trimmed, registry, submitters, stats, shutdown) {
+            Ok(j) => j,
+            Err(e) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::Str(e.to_string())),
+            ]),
+        };
+        writer.write_all(reply.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if shutdown.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+    }
+}
+
+fn handle_request(
+    line: &str,
+    registry: &Registry,
+    submitters: &std::collections::BTreeMap<String, mpsc::Sender<GenRequest>>,
+    stats: &ServerStats,
+    shutdown: &AtomicBool,
+) -> Result<Json> {
+    let req = parse(line)?;
+    stats.requests.fetch_add(1, Ordering::Relaxed);
+    match req.req_str("op")? {
+        "ping" => Ok(Json::obj(vec![("ok", Json::Bool(true))])),
+        "models" => Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            (
+                "models",
+                Json::Arr(registry.names().into_iter().map(Json::Str).collect()),
+            ),
+        ])),
+        "shutdown" => {
+            shutdown.store(true, Ordering::SeqCst);
+            Ok(Json::obj(vec![("ok", Json::Bool(true))]))
+        }
+        "generate" => {
+            let model = req.req_str("model")?;
+            let n = req.req_usize("n")?.clamp(1, 256);
+            let seed = req.get("seed").and_then(|j| j.as_f64()).unwrap_or(0.0) as u64;
+            let tx = submitters
+                .get(model)
+                .ok_or_else(|| anyhow!("unknown model '{model}'"))?;
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(GenRequest {
+                n,
+                seed,
+                reply: rtx,
+            })
+            .map_err(|_| anyhow!("worker for '{model}' is gone"))?;
+            let imgs = rrx
+                .recv_timeout(Duration::from_secs(600))
+                .map_err(|_| anyhow!("generation timed out"))?;
+            if imgs.is_empty() {
+                return Err(anyhow!("generation failed"));
+            }
+            let d = registry.spec.d;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("model", Json::Str(model.to_string())),
+                ("n", Json::Num((imgs.len() / d) as f64)),
+                ("d", Json::Num(d as f64)),
+                ("images", Json::from_f32s(&imgs)),
+            ]))
+        }
+        other => Err(anyhow!("unknown op '{other}'")),
+    }
+}
+
+/// Minimal blocking client (used by examples, benches and tests).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(Self {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        parse(line.trim())
+    }
+
+    pub fn generate(&mut self, model: &str, n: usize, seed: u64) -> Result<Vec<f32>> {
+        let req = Json::obj(vec![
+            ("op", Json::Str("generate".into())),
+            ("model", Json::Str(model.into())),
+            ("n", Json::Num(n as f64)),
+            ("seed", Json::Num(seed as f64)),
+        ]);
+        let resp = self.call(&req)?;
+        if resp.get("ok").and_then(|j| j.as_bool()) != Some(true) {
+            return Err(anyhow!(
+                "server error: {}",
+                resp.req_str("error").unwrap_or("unknown")
+            ));
+        }
+        resp.req("images")?.to_f32s()
+    }
+}

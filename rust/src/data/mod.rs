@@ -1,0 +1,159 @@
+//! Datasets: the paper's five-benchmark complexity ladder, simulated.
+//!
+//! The paper evaluates on MNIST → FashionMNIST → CIFAR10 → CelebA →
+//! ImageNet purely as a *complexity axis* (class count, visual diversity,
+//! intra-class variation). The offline environment has no datasets, so
+//! `synth` implements five procedural generators that replicate that axis
+//! with controlled knobs (see DESIGN.md §3). All render at 16×16×3 so a
+//! single AOT artifact set serves every dataset.
+
+pub mod synth;
+
+use crate::util::rng::Pcg64;
+
+/// Pixel count of one flattened image (matches `arch.D` on the python side).
+pub const IMG_HW: usize = 16;
+pub const IMG_C: usize = 3;
+pub const IMG_D: usize = IMG_HW * IMG_HW * IMG_C;
+
+/// The five benchmark stand-ins, ordered by the paper's complexity ladder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    /// MNIST stand-in: sparse monochrome stroke digits (10 classes).
+    SynthMnist,
+    /// FashionMNIST stand-in: textured garment silhouettes (10 classes).
+    SynthFashion,
+    /// CIFAR10 stand-in: colored geometric objects on noisy backgrounds.
+    SynthCifar,
+    /// CelebA stand-in: face-like compositions with attribute variation.
+    SynthCeleba,
+    /// ImageNet stand-in: high-diversity multi-object composite scenes.
+    SynthImagenet,
+}
+
+impl Dataset {
+    pub const ALL: [Dataset; 5] = [
+        Dataset::SynthMnist,
+        Dataset::SynthFashion,
+        Dataset::SynthCifar,
+        Dataset::SynthCeleba,
+        Dataset::SynthImagenet,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::SynthMnist => "synth-mnist",
+            Dataset::SynthFashion => "synth-fashion",
+            Dataset::SynthCifar => "synth-cifar",
+            Dataset::SynthCeleba => "synth-celeba",
+            Dataset::SynthImagenet => "synth-imagenet",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Dataset> {
+        Dataset::ALL.iter().copied().find(|d| d.name() == s)
+    }
+
+    /// Class cardinality — one of the paper's complexity knobs.
+    pub fn classes(&self) -> usize {
+        match self {
+            Dataset::SynthMnist | Dataset::SynthFashion => 10,
+            Dataset::SynthCifar => 10,
+            Dataset::SynthCeleba => 1, // attribute-continuous, like CelebA
+            Dataset::SynthImagenet => 40,
+        }
+    }
+
+    /// Generate one image (flattened, values in [-1, 1]).
+    pub fn sample(&self, rng: &mut Pcg64) -> Vec<f32> {
+        match self {
+            Dataset::SynthMnist => synth::mnist_like(rng),
+            Dataset::SynthFashion => synth::fashion_like(rng),
+            Dataset::SynthCifar => synth::cifar_like(rng),
+            Dataset::SynthCeleba => synth::celeba_like(rng),
+            Dataset::SynthImagenet => synth::imagenet_like(rng),
+        }
+    }
+
+    /// Generate a batch as a flat [n, IMG_D] matrix.
+    pub fn batch(&self, rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(n * IMG_D);
+        for _ in 0..n {
+            out.extend_from_slice(&self.sample(rng));
+        }
+        out
+    }
+
+    /// Empirical "visual diversity" proxy: mean pairwise L2 distance of a
+    /// sample batch. The complexity ladder must be monotone in this (tested).
+    pub fn diversity(&self, rng: &mut Pcg64, n: usize) -> f64 {
+        let b = self.batch(rng, n);
+        let mut total = 0.0f64;
+        let mut pairs = 0usize;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let mut d = 0.0f64;
+                for k in 0..IMG_D {
+                    let diff = (b[i * IMG_D + k] - b[j * IMG_D + k]) as f64;
+                    d += diff * diff;
+                }
+                total += d.sqrt();
+                pairs += 1;
+            }
+        }
+        total / pairs as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for d in Dataset::ALL {
+            assert_eq!(Dataset::parse(d.name()), Some(d));
+        }
+        assert_eq!(Dataset::parse("nope"), None);
+    }
+
+    #[test]
+    fn samples_are_bounded_and_shaped() {
+        let mut rng = Pcg64::seed(1);
+        for d in Dataset::ALL {
+            for _ in 0..8 {
+                let img = d.sample(&mut rng);
+                assert_eq!(img.len(), IMG_D);
+                for &p in &img {
+                    assert!((-1.0..=1.0).contains(&p), "{} out of range: {p}", d.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_shape() {
+        let mut rng = Pcg64::seed(2);
+        let b = Dataset::SynthCifar.batch(&mut rng, 5);
+        assert_eq!(b.len(), 5 * IMG_D);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = Dataset::SynthCeleba.sample(&mut Pcg64::seed(7));
+        let b = Dataset::SynthCeleba.sample(&mut Pcg64::seed(7));
+        assert_eq!(a, b);
+    }
+
+    /// The complexity ladder: diversity increases from mnist-like to
+    /// imagenet-like (the property the paper's dataset choice encodes).
+    #[test]
+    fn complexity_ladder_is_monotone_at_ends() {
+        let mut rng = Pcg64::seed(3);
+        let dm = Dataset::SynthMnist.diversity(&mut rng, 32);
+        let di = Dataset::SynthImagenet.diversity(&mut rng, 32);
+        let dc = Dataset::SynthCifar.diversity(&mut rng, 32);
+        assert!(dm < dc, "mnist {dm} !< cifar {dc}");
+        assert!(dc < di, "cifar {dc} !< imagenet {di}");
+    }
+}

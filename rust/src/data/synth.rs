@@ -1,0 +1,404 @@
+//! Procedural image generators: the five-benchmark complexity ladder.
+//!
+//! Shared drawing substrate (a tiny software rasterizer: strokes, ellipses,
+//! rectangles, textures) + five generators with increasing class count,
+//! color diversity and intra-class variation. Pixels land in [-1, 1].
+
+use super::{IMG_C, IMG_D, IMG_HW};
+use crate::util::rng::Pcg64;
+
+/// Mutable canvas over a flattened [H, W, C] image.
+pub struct Canvas {
+    pub px: Vec<f32>,
+}
+
+impl Canvas {
+    pub fn new(bg: [f32; 3]) -> Self {
+        let mut px = vec![0.0f32; IMG_D];
+        for i in 0..IMG_HW * IMG_HW {
+            for c in 0..IMG_C {
+                px[i * IMG_C + c] = bg[c];
+            }
+        }
+        Self { px }
+    }
+
+    #[inline]
+    fn idx(x: i32, y: i32) -> Option<usize> {
+        if x < 0 || y < 0 || x >= IMG_HW as i32 || y >= IMG_HW as i32 {
+            None
+        } else {
+            Some((y as usize * IMG_HW + x as usize) * IMG_C)
+        }
+    }
+
+    /// Alpha-blend a pixel.
+    pub fn blend(&mut self, x: i32, y: i32, color: [f32; 3], alpha: f32) {
+        if let Some(i) = Self::idx(x, y) {
+            for c in 0..IMG_C {
+                self.px[i + c] = self.px[i + c] * (1.0 - alpha) + color[c] * alpha;
+            }
+        }
+    }
+
+    /// Soft disc (gaussian falloff), the workhorse brush.
+    pub fn disc(&mut self, cx: f32, cy: f32, r: f32, color: [f32; 3], alpha: f32) {
+        let ir = r.ceil() as i32 + 1;
+        let (icx, icy) = (cx.round() as i32, cy.round() as i32);
+        for dy in -ir..=ir {
+            for dx in -ir..=ir {
+                let d2 = (dx as f32 - (cx - icx as f32)).powi(2)
+                    + (dy as f32 - (cy - icy as f32)).powi(2);
+                let a = alpha * (-d2 / (r * r).max(1e-6)).exp();
+                if a > 0.01 {
+                    self.blend(icx + dx, icy + dy, color, a.min(1.0));
+                }
+            }
+        }
+    }
+
+    /// Stroke from (x0,y0) to (x1,y1) with a soft brush.
+    pub fn stroke(&mut self, x0: f32, y0: f32, x1: f32, y1: f32, w: f32, color: [f32; 3]) {
+        let steps = (((x1 - x0).abs() + (y1 - y0).abs()) * 2.0).ceil().max(1.0) as usize;
+        for s in 0..=steps {
+            let t = s as f32 / steps as f32;
+            self.disc(x0 + t * (x1 - x0), y0 + t * (y1 - y0), w, color, 0.9);
+        }
+    }
+
+    /// Axis-aligned filled rectangle.
+    pub fn rect(&mut self, x0: i32, y0: i32, x1: i32, y1: i32, color: [f32; 3], alpha: f32) {
+        for y in y0..=y1 {
+            for x in x0..=x1 {
+                self.blend(x, y, color, alpha);
+            }
+        }
+    }
+
+    /// Filled ellipse.
+    pub fn ellipse(&mut self, cx: f32, cy: f32, rx: f32, ry: f32, color: [f32; 3], alpha: f32) {
+        for y in 0..IMG_HW as i32 {
+            for x in 0..IMG_HW as i32 {
+                let nx = (x as f32 - cx) / rx.max(0.1);
+                let ny = (y as f32 - cy) / ry.max(0.1);
+                let d = nx * nx + ny * ny;
+                if d <= 1.0 {
+                    self.blend(x, y, color, alpha * (1.0 - 0.3 * d));
+                }
+            }
+        }
+    }
+
+    /// Add per-pixel noise.
+    pub fn noise(&mut self, rng: &mut Pcg64, amp: f32) {
+        for p in self.px.iter_mut() {
+            *p += rng.normal_f32(0.0, amp);
+        }
+    }
+
+    /// Horizontal-stripe texture over a region.
+    pub fn stripes(&mut self, y0: i32, y1: i32, period: i32, color: [f32; 3], alpha: f32) {
+        for y in y0..=y1 {
+            if (y / period.max(1)) % 2 == 0 {
+                for x in 0..IMG_HW as i32 {
+                    self.blend(x, y, color, alpha);
+                }
+            }
+        }
+    }
+
+    pub fn finish(mut self) -> Vec<f32> {
+        for p in self.px.iter_mut() {
+            *p = p.clamp(-1.0, 1.0);
+        }
+        self.px
+    }
+}
+
+fn gray(v: f32) -> [f32; 3] {
+    [v, v, v]
+}
+
+fn random_color(rng: &mut Pcg64) -> [f32; 3] {
+    [
+        rng.uniform_in(-0.8, 0.9),
+        rng.uniform_in(-0.8, 0.9),
+        rng.uniform_in(-0.8, 0.9),
+    ]
+}
+
+// --------------------------------------------------------------- datasets
+
+/// MNIST-like: one white stroke glyph on black; 10 glyph classes with small
+/// jitter. Low diversity, grayscale, sparse.
+pub fn mnist_like(rng: &mut Pcg64) -> Vec<f32> {
+    let class = rng.below(10);
+    let mut c = Canvas::new(gray(-1.0));
+    let jx = rng.uniform_in(-1.0, 1.0);
+    let jy = rng.uniform_in(-1.0, 1.0);
+    let ink = gray(rng.uniform_in(0.6, 1.0));
+    let w = rng.uniform_in(0.7, 1.1);
+    // glyph skeletons: endpoints per class (coarse digit-like shapes)
+    let paths: &[&[(f32, f32)]] = &[
+        &[(5.0, 4.0), (10.0, 4.0), (10.0, 12.0), (5.0, 12.0), (5.0, 4.0)], // 0
+        &[(8.0, 3.0), (8.0, 13.0)],                                        // 1
+        &[(5.0, 5.0), (10.0, 5.0), (5.0, 12.0), (10.0, 12.0)],             // 2
+        &[(5.0, 4.0), (10.0, 6.0), (6.0, 8.0), (10.0, 10.0), (5.0, 12.0)], // 3
+        &[(9.0, 13.0), (9.0, 3.0), (5.0, 9.0), (11.0, 9.0)],               // 4
+        &[(10.0, 4.0), (5.0, 4.0), (5.0, 8.0), (10.0, 9.5), (5.0, 12.0)],  // 5
+        &[(9.0, 3.0), (5.0, 8.0), (5.0, 12.0), (10.0, 12.0), (9.0, 8.0), (5.0, 9.0)], // 6
+        &[(5.0, 4.0), (10.0, 4.0), (6.0, 13.0)],                           // 7
+        &[(7.5, 4.0), (5.0, 6.0), (10.0, 10.0), (7.5, 12.0), (5.0, 10.0), (10.0, 6.0), (7.5, 4.0)], // 8
+        &[(10.0, 13.0), (10.0, 4.0), (5.0, 4.0), (5.0, 8.0), (10.0, 8.0)], // 9
+    ];
+    let path = paths[class];
+    for seg in path.windows(2) {
+        c.stroke(
+            seg[0].0 + jx,
+            seg[0].1 + jy,
+            seg[1].0 + jx,
+            seg[1].1 + jy,
+            w,
+            ink,
+        );
+    }
+    c.finish()
+}
+
+/// FashionMNIST-like: textured garment silhouettes (10 classes), grayscale
+/// with stripe/noise textures — denser coverage, moderate diversity.
+pub fn fashion_like(rng: &mut Pcg64) -> Vec<f32> {
+    let class = rng.below(10);
+    let mut c = Canvas::new(gray(-1.0));
+    let shade = rng.uniform_in(-0.1, 0.7);
+    let body = gray(shade);
+    match class {
+        0..=2 => {
+            // shirts: torso + sleeves
+            c.rect(5, 4, 10, 12, body, 0.95);
+            c.rect(2, 4, 4, 7 + class as i32, body, 0.9);
+            c.rect(11, 4, 13, 7 + class as i32, body, 0.9);
+        }
+        3..=4 => {
+            // trousers: two legs
+            c.rect(5, 3, 10, 6, body, 0.95);
+            c.rect(5, 7, 7, 13, body, 0.95);
+            c.rect(9, 7, 10, 13, body, 0.95);
+        }
+        5..=6 => {
+            // dress: triangle-ish
+            for y in 3..14 {
+                let half = 1 + (y - 3) / 3;
+                c.rect(8 - half, y, 8 + half, y, body, 0.95);
+            }
+        }
+        7..=8 => {
+            // shoe: low wide form
+            c.rect(3, 9, 12, 12, body, 0.95);
+            c.rect(9, 6, 12, 9, body, 0.9);
+        }
+        _ => {
+            // bag
+            c.rect(4, 7, 11, 13, body, 0.95);
+            c.stroke(5.0, 7.0, 8.0, 3.0, 0.6, body);
+            c.stroke(8.0, 3.0, 10.0, 7.0, 0.6, body);
+        }
+    }
+    // texture varies within class
+    if rng.uniform() < 0.6 {
+        c.stripes(3, 13, 1 + rng.below(3) as i32, gray(shade - 0.4), 0.35);
+    }
+    c.noise(rng, 0.04);
+    c.finish()
+}
+
+/// CIFAR10-like: a colored object (10 shape classes) on a colored noisy
+/// background — full color, background clutter.
+pub fn cifar_like(rng: &mut Pcg64) -> Vec<f32> {
+    let class = rng.below(10);
+    // muted backgrounds: cifar photos cluster closer than imagenet scenes
+    let bg = random_color(rng).map(|v| v * 0.8);
+    let mut c = Canvas::new(bg);
+    c.noise(rng, 0.10);
+    let fg = random_color(rng);
+    let cx = rng.uniform_in(6.0, 10.0);
+    let cy = rng.uniform_in(6.0, 10.0);
+    match class % 5 {
+        0 => c.ellipse(cx, cy, 4.0, 4.0, fg, 0.95),
+        1 => c.rect(cx as i32 - 3, cy as i32 - 3, cx as i32 + 3, cy as i32 + 3, fg, 0.95),
+        2 => {
+            // triangle via strokes
+            c.stroke(cx - 4.0, cy + 3.0, cx + 4.0, cy + 3.0, 1.0, fg);
+            c.stroke(cx - 4.0, cy + 3.0, cx, cy - 4.0, 1.0, fg);
+            c.stroke(cx + 4.0, cy + 3.0, cx, cy - 4.0, 1.0, fg);
+        }
+        3 => c.ellipse(cx, cy, 5.0, 2.5, fg, 0.95), // "vehicle" blob
+        _ => {
+            // cross
+            c.rect(cx as i32 - 4, cy as i32 - 1, cx as i32 + 4, cy as i32 + 1, fg, 0.95);
+            c.rect(cx as i32 - 1, cy as i32 - 4, cx as i32 + 1, cy as i32 + 4, fg, 0.95);
+        }
+    }
+    // second accent per class parity (adds intra-class variation)
+    if class >= 5 {
+        let accent = random_color(rng);
+        c.disc(
+            rng.uniform_in(3.0, 13.0),
+            rng.uniform_in(3.0, 13.0),
+            1.5,
+            accent,
+            0.8,
+        );
+    }
+    c.noise(rng, 0.05);
+    c.finish()
+}
+
+/// CelebA-like: face composition — skin-tone ellipse, eyes, mouth, hair
+/// band; continuous attribute variation (tone, hair color, expression).
+pub fn celeba_like(rng: &mut Pcg64) -> Vec<f32> {
+    let bg = random_color(rng);
+    let mut c = Canvas::new(bg);
+    // skin tone family
+    let tone = rng.uniform_in(-0.2, 0.7);
+    let skin = [tone + 0.25, tone, tone - 0.25];
+    let fx = rng.uniform_in(7.0, 9.0);
+    let fy = rng.uniform_in(7.5, 9.0);
+    c.ellipse(fx, fy, 4.5, 5.5, skin, 0.98);
+    // hair band
+    let hair = [
+        rng.uniform_in(-1.0, 0.1),
+        rng.uniform_in(-1.0, 0.0),
+        rng.uniform_in(-1.0, 0.1),
+    ];
+    c.ellipse(fx, fy - 4.0, 4.8, 2.6, hair, 0.95);
+    // eyes
+    let eye_y = fy - 1.0 + rng.uniform_in(-0.4, 0.4);
+    let eye_dx = rng.uniform_in(1.6, 2.2);
+    let eye = gray(-0.9);
+    c.disc(fx - eye_dx, eye_y, 0.7, eye, 0.95);
+    c.disc(fx + eye_dx, eye_y, 0.7, eye, 0.95);
+    // mouth: expression = curvature
+    let smile = rng.uniform_in(-1.0, 1.0);
+    let my = fy + 2.6;
+    c.stroke(fx - 1.6, my, fx, my + smile * 0.8, 0.5, gray(-0.6));
+    c.stroke(fx, my + smile * 0.8, fx + 1.6, my, 0.5, gray(-0.6));
+    c.noise(rng, 0.03);
+    c.finish()
+}
+
+/// ImageNet-like: 40 latent classes, 2–4 objects of mixed shape families,
+/// textured backgrounds — the high-diversity end of the ladder.
+pub fn imagenet_like(rng: &mut Pcg64) -> Vec<f32> {
+    let class = rng.below(40);
+    // class seeds a scene palette so images cluster by class
+    let mut palette_rng = Pcg64::seed(0xDEAD_0000 + class as u64);
+    let bg = random_color(&mut palette_rng);
+    let mut c = Canvas::new(bg);
+    if palette_rng.uniform() < 0.5 {
+        c.stripes(0, 15, 2 + palette_rng.below(4) as i32, random_color(&mut palette_rng), 0.3);
+    }
+    c.noise(rng, 0.18);
+    let n_obj = 3 + rng.below(3);
+    for k in 0..n_obj {
+        // object family fixed per (class, k); pose free per image
+        let mut fam_rng = Pcg64::seed(0xBEEF_0000 + (class * 8 + k) as u64);
+        let fg = random_color(&mut fam_rng);
+        let fam = fam_rng.below(4);
+        let cx = rng.uniform_in(3.0, 13.0);
+        let cy = rng.uniform_in(3.0, 13.0);
+        let scale = rng.uniform_in(1.5, 3.5);
+        match fam {
+            0 => c.ellipse(cx, cy, scale, scale * 0.8, fg, 0.9),
+            1 => c.rect(
+                (cx - scale) as i32,
+                (cy - scale) as i32,
+                (cx + scale) as i32,
+                (cy + scale) as i32,
+                fg,
+                0.9,
+            ),
+            2 => c.stroke(cx - scale, cy - scale, cx + scale, cy + scale, scale * 0.4, fg),
+            _ => c.disc(cx, cy, scale * 0.7, fg, 0.95),
+        }
+    }
+    c.noise(rng, 0.06);
+    c.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canvas_blend_clamps_bounds() {
+        let mut c = Canvas::new(gray(0.0));
+        c.blend(-5, 2, gray(1.0), 1.0); // no panic
+        c.blend(2, 99, gray(1.0), 1.0);
+        c.blend(2, 2, gray(1.0), 1.0);
+        let px = c.finish();
+        assert_eq!(px[(2 * IMG_HW + 2) * IMG_C], 1.0);
+    }
+
+    #[test]
+    fn mnist_classes_differ() {
+        // two fixed-class renders with fixed jitter should differ across classes
+        let imgs: Vec<Vec<f32>> = (0..20)
+            .map(|i| mnist_like(&mut Pcg64::seed(1000 + i)))
+            .collect();
+        let mut distinct = 0;
+        for i in 0..imgs.len() {
+            for j in (i + 1)..imgs.len() {
+                let d: f32 = imgs[i]
+                    .iter()
+                    .zip(imgs[j].iter())
+                    .map(|(a, b)| (a - b).abs())
+                    .sum();
+                if d > 1.0 {
+                    distinct += 1;
+                }
+            }
+        }
+        assert!(distinct > 100, "distinct={distinct}");
+    }
+
+    #[test]
+    fn mnist_is_sparse_imagenet_is_dense() {
+        let mut rng = Pcg64::seed(4);
+        let m = mnist_like(&mut rng);
+        let dark = m.iter().filter(|&&p| p < -0.9).count();
+        assert!(dark > IMG_D / 2, "mnist should be mostly background: {dark}");
+        let mut var_sum = 0.0;
+        for i in 0..8 {
+            let im = imagenet_like(&mut Pcg64::seed(50 + i));
+            let (_, v) = crate::stats::mean_var(&im);
+            var_sum += v;
+        }
+        assert!(var_sum / 8.0 > 0.05, "imagenet-like should be high-variance");
+    }
+
+    #[test]
+    fn celeba_has_continuous_attributes() {
+        // faces from different seeds should differ smoothly but markedly
+        let a = celeba_like(&mut Pcg64::seed(1));
+        let b = celeba_like(&mut Pcg64::seed(2));
+        let d: f32 = a.iter().zip(b.iter()).map(|(x, y)| (x - y).abs()).sum();
+        assert!(d > 5.0);
+    }
+
+    #[test]
+    fn all_generators_in_range() {
+        for seed in 0..5 {
+            for img in [
+                mnist_like(&mut Pcg64::seed(seed)),
+                fashion_like(&mut Pcg64::seed(seed)),
+                cifar_like(&mut Pcg64::seed(seed)),
+                celeba_like(&mut Pcg64::seed(seed)),
+                imagenet_like(&mut Pcg64::seed(seed)),
+            ] {
+                assert_eq!(img.len(), IMG_D);
+                assert!(img.iter().all(|p| (-1.0..=1.0).contains(p)));
+            }
+        }
+    }
+}

@@ -1,0 +1,322 @@
+//! Pure-rust velocity network forward — the exact mirror of
+//! `python/compile/model.py::velocity` (and `qvelocity`).
+//!
+//! Three implementations of one model now exist: this, the jnp reference,
+//! and the Pallas kernels inside the lowered HLO. Integration tests pin
+//! them together (|rust − HLO| < 1e-4), which lets the entire pipeline run
+//! and be tested without artifacts, and catches layout drift instantly.
+
+use crate::model::params::ParamStore;
+use crate::model::quantized::QuantizedModel;
+use crate::model::spec::ModelSpec;
+use crate::tensor::matmul_into;
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Sinusoidal time features, matching `model.time_features`:
+/// freqs geometric in [1, FREQ_MAX], feats = [sin(t·f) ‖ cos(t·f)].
+pub fn time_features(spec: &ModelSpec, t: &[f32]) -> Vec<f32> {
+    let f = spec.temb_freqs;
+    let freqs: Vec<f32> = (0..f)
+        .map(|i| ((i as f32 / (f as f32 - 1.0)) * spec.freq_max.ln()).exp())
+        .collect();
+    let mut out = vec![0f32; t.len() * 2 * f];
+    for (b, &tb) in t.iter().enumerate() {
+        let row = &mut out[b * 2 * f..(b + 1) * 2 * f];
+        for i in 0..f {
+            let ang = tb * freqs[i];
+            row[i] = ang.sin();
+            row[f + i] = ang.cos();
+        }
+    }
+    out
+}
+
+/// Weight accessor abstraction so the fp32 and quantized paths share one
+/// forward implementation.
+trait Weights {
+    /// Materialize weight matrix `name` into `buf` (row-major [rows, cols]).
+    fn weight(&self, spec: &ModelSpec, name: &str, buf: &mut Vec<f32>);
+    fn bias<'a>(&'a self, spec: &ModelSpec, name: &str) -> Vec<f32>;
+}
+
+struct FullPrecision<'a>(&'a ParamStore);
+
+impl Weights for FullPrecision<'_> {
+    fn weight(&self, spec: &ModelSpec, name: &str, buf: &mut Vec<f32>) {
+        buf.clear();
+        buf.extend_from_slice(self.0.layer(spec, name));
+    }
+    fn bias(&self, spec: &ModelSpec, name: &str) -> Vec<f32> {
+        self.0.layer(spec, name).to_vec()
+    }
+}
+
+struct Quantized<'a>(&'a QuantizedModel);
+
+impl Weights for Quantized<'_> {
+    fn weight(&self, spec: &ModelSpec, name: &str, buf: &mut Vec<f32>) {
+        let qm = self.0;
+        let row = spec
+            .weight_layers()
+            .iter()
+            .position(|l| l.name == name)
+            .unwrap();
+        let l = spec.layer(name).unwrap();
+        let woff = spec.weight_offset(name);
+        let cb = &qm.codebooks[row];
+        buf.clear();
+        buf.extend(
+            qm.codes[woff..woff + l.size()]
+                .iter()
+                .map(|&c| cb.levels[c as usize]),
+        );
+    }
+    fn bias(&self, spec: &ModelSpec, name: &str) -> Vec<f32> {
+        let l = spec.layer(name).unwrap();
+        let boff = spec.bias_offset(name);
+        self.0.biases[boff..boff + l.size()].to_vec()
+    }
+}
+
+fn forward(spec: &ModelSpec, w: &dyn Weights, x: &[f32], t: &[f32]) -> Vec<f32> {
+    let b = t.len();
+    let (d, h_dim, temb_dim) = (spec.d, spec.hidden, 2 * spec.temb_freqs);
+    assert_eq!(x.len(), b * d);
+    let mut wbuf: Vec<f32> = Vec::new();
+
+    // ht = silu(temb @ w_t + b_t)
+    let temb = time_features(spec, t);
+    let mut ht = vec![0f32; b * h_dim];
+    w.weight(spec, "w_t", &mut wbuf);
+    matmul_into(&temb, &wbuf, &mut ht, b, temb_dim, h_dim);
+    let b_t = w.bias(spec, "b_t");
+    for r in ht.chunks_mut(h_dim) {
+        for (v, &bb) in r.iter_mut().zip(b_t.iter()) {
+            *v = silu(*v + bb);
+        }
+    }
+
+    // h = x @ w_in + b_in + ht
+    let mut h = vec![0f32; b * h_dim];
+    w.weight(spec, "w_in", &mut wbuf);
+    matmul_into(x, &wbuf, &mut h, b, d, h_dim);
+    let b_in = w.bias(spec, "b_in");
+    for (r, rt) in h.chunks_mut(h_dim).zip(ht.chunks(h_dim)) {
+        for ((v, &bb), &tv) in r.iter_mut().zip(b_in.iter()).zip(rt.iter()) {
+            *v += bb + tv;
+        }
+    }
+
+    // residual blocks: h += silu(h @ w1 + b1) @ w2 + b2
+    let mut u = vec![0f32; b * h_dim];
+    let mut r2 = vec![0f32; b * h_dim];
+    for i in 0..spec.blocks {
+        u.iter_mut().for_each(|v| *v = 0.0);
+        w.weight(spec, &format!("w1_{i}"), &mut wbuf);
+        matmul_into(&h, &wbuf, &mut u, b, h_dim, h_dim);
+        let b1 = w.bias(spec, &format!("b1_{i}"));
+        for r in u.chunks_mut(h_dim) {
+            for (v, &bb) in r.iter_mut().zip(b1.iter()) {
+                *v = silu(*v + bb);
+            }
+        }
+        r2.iter_mut().for_each(|v| *v = 0.0);
+        w.weight(spec, &format!("w2_{i}"), &mut wbuf);
+        matmul_into(&u, &wbuf, &mut r2, b, h_dim, h_dim);
+        let b2 = w.bias(spec, &format!("b2_{i}"));
+        for (hr, rr) in h.chunks_mut(h_dim).zip(r2.chunks(h_dim)) {
+            for ((v, &rv), &bb) in hr.iter_mut().zip(rr.iter()).zip(b2.iter()) {
+                *v += rv + bb;
+            }
+        }
+    }
+
+    // v = h @ w_out + b_out
+    let mut out = vec![0f32; b * d];
+    w.weight(spec, "w_out", &mut wbuf);
+    matmul_into(&h, &wbuf, &mut out, b, h_dim, d);
+    let b_out = w.bias(spec, "b_out");
+    for r in out.chunks_mut(d) {
+        for (v, &bb) in r.iter_mut().zip(b_out.iter()) {
+            *v += bb;
+        }
+    }
+    out
+}
+
+/// Full-precision velocity: x flat [B, D], t [B] -> v flat [B, D].
+pub fn velocity(spec: &ModelSpec, theta: &ParamStore, x: &[f32], t: &[f32]) -> Vec<f32> {
+    forward(spec, &FullPrecision(theta), x, t)
+}
+
+/// Quantized velocity (dequantize-on-the-fly, mirroring `qvelocity`).
+pub fn qvelocity(qm: &QuantizedModel, x: &[f32], t: &[f32]) -> Vec<f32> {
+    forward(&qm.spec.clone(), &Quantized(qm), x, t)
+}
+
+/// One Euler step (signed dt), shared t across the batch.
+pub fn sample_step(
+    spec: &ModelSpec,
+    theta: &ParamStore,
+    x: &[f32],
+    t: f32,
+    dt: f32,
+) -> Vec<f32> {
+    let b = x.len() / spec.d;
+    let tb = vec![t; b];
+    let v = velocity(spec, theta, x, &tb);
+    x.iter().zip(v.iter()).map(|(&xi, &vi)| xi + dt * vi).collect()
+}
+
+/// One quantized Euler step.
+pub fn qsample_step(qm: &QuantizedModel, x: &[f32], t: f32, dt: f32) -> Vec<f32> {
+    let b = x.len() / qm.spec.d;
+    let tb = vec![t; b];
+    let v = qvelocity(qm, x, &tb);
+    x.iter().zip(v.iter()).map(|(&xi, &vi)| xi + dt * vi).collect()
+}
+
+// ------------------------------------------------ Lipschitz oracle glue
+
+/// VelocityOracle over the CPU forward (for `theory::lipschitz`).
+pub struct CpuOracle<'a> {
+    pub spec: &'a ModelSpec,
+    pub theta: &'a ParamStore,
+}
+
+impl crate::theory::lipschitz::VelocityOracle for CpuOracle<'_> {
+    fn velocity(&mut self, x: &[f32], t: f32) -> Vec<f32> {
+        velocity(self.spec, self.theta, x, &[t])
+    }
+    fn dim(&self) -> usize {
+        self.spec.d
+    }
+}
+
+impl crate::theory::lipschitz::ParamOracle for CpuOracle<'_> {
+    fn velocity_with(&mut self, delta: &[f32], x: &[f32], t: f32) -> Vec<f32> {
+        let mut th = self.theta.clone();
+        for (a, &b) in th.as_mut_slice().iter_mut().zip(delta.iter()) {
+            *a += b;
+        }
+        velocity(self.spec, &th, x, &[t])
+    }
+    fn dim(&self) -> usize {
+        self.spec.d
+    }
+    fn p(&self) -> usize {
+        self.spec.p()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize_model, QuantMethod};
+    use crate::util::rng::Pcg64;
+
+    fn setup() -> (ModelSpec, ParamStore) {
+        let spec = ModelSpec::default_spec();
+        let mut rng = Pcg64::seed(7);
+        let theta = spec.init_theta(&mut rng);
+        (spec, theta)
+    }
+
+    #[test]
+    fn time_features_match_python_semantics() {
+        let spec = ModelSpec::default_spec();
+        let f = time_features(&spec, &[0.0, 1.0]);
+        let tf = spec.temb_freqs;
+        // t = 0: sin block 0, cos block 1
+        for i in 0..tf {
+            assert!((f[i]).abs() < 1e-7);
+            assert!((f[tf + i] - 1.0).abs() < 1e-7);
+        }
+        // t = 1, freq 0 = 1.0: sin(1), cos(1)
+        assert!((f[2 * tf] - 1f32.sin()).abs() < 1e-6);
+        assert!((f[3 * tf] - 1f32.cos()).abs() < 1e-6);
+        // last freq = FREQ_MAX
+        let last = ((tf - 1) as f32 / (tf as f32 - 1.0) * spec.freq_max.ln()).exp();
+        assert!((last - spec.freq_max).abs() < 1e-2);
+    }
+
+    #[test]
+    fn velocity_shape_and_determinism() {
+        let (spec, theta) = setup();
+        let mut rng = Pcg64::seed(1);
+        let x: Vec<f32> = (0..2 * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let v1 = velocity(&spec, &theta, &x, &[0.3, 0.8]);
+        let v2 = velocity(&spec, &theta, &x, &[0.3, 0.8]);
+        assert_eq!(v1.len(), 2 * spec.d);
+        assert_eq!(v1, v2);
+        assert!(v1.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn batch_independence() {
+        // each row's output depends only on its own input
+        let (spec, theta) = setup();
+        let mut rng = Pcg64::seed(2);
+        let x1: Vec<f32> = (0..spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let x2: Vec<f32> = (0..spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut both = x1.clone();
+        both.extend_from_slice(&x2);
+        let vb = velocity(&spec, &theta, &both, &[0.4, 0.9]);
+        let v1 = velocity(&spec, &theta, &x1, &[0.4]);
+        let v2 = velocity(&spec, &theta, &x2, &[0.9]);
+        crate::util::check::assert_close(&vb[..spec.d], &v1, 1e-6, 1e-6);
+        crate::util::check::assert_close(&vb[spec.d..], &v2, 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn qvelocity_at_8_bits_tracks_fp32() {
+        let (spec, theta) = setup();
+        let qm = quantize_model(&spec, &theta, QuantMethod::Ot, 8);
+        let mut rng = Pcg64::seed(3);
+        let x: Vec<f32> = (0..2 * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let t = [0.25, 0.75];
+        let v = velocity(&spec, &theta, &x, &t);
+        let vq = qvelocity(&qm, &x, &t);
+        let rel = {
+            let num: f64 = v
+                .iter()
+                .zip(vq.iter())
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            let den: f64 = v.iter().map(|&a| (a as f64).powi(2)).sum::<f64>().sqrt();
+            num / den.max(1e-12)
+        };
+        assert!(rel < 0.2, "rel={rel}");
+    }
+
+    #[test]
+    fn qvelocity_equals_dequantized_velocity() {
+        // the quantized path must equal running fp32 forward on dequantized
+        // weights — they are the same function by construction.
+        let (spec, theta) = setup();
+        let qm = quantize_model(&spec, &theta, QuantMethod::Uniform, 4);
+        let deq = qm.dequantize();
+        let mut rng = Pcg64::seed(4);
+        let x: Vec<f32> = (0..spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let vq = qvelocity(&qm, &x, &[0.5]);
+        let vd = velocity(&spec, &deq, &x, &[0.5]);
+        crate::util::check::assert_close(&vq, &vd, 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn sample_step_euler_identity() {
+        let (spec, theta) = setup();
+        let mut rng = Pcg64::seed(5);
+        let x: Vec<f32> = (0..spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let y = sample_step(&spec, &theta, &x, 0.2, 0.1);
+        let v = velocity(&spec, &theta, &x, &[0.2]);
+        for i in 0..spec.d {
+            assert!((y[i] - (x[i] + 0.1 * v[i])).abs() < 1e-6);
+        }
+    }
+}

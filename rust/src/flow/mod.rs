@@ -1,0 +1,9 @@
+//! Flow-matching drivers: the CPU reference forward (mirrors the L2 jax
+//! model exactly), the Euler ODE sampler (forward generation and reverse
+//! latent encoding), and the training-loop driver over the AOT
+//! `train_step` artifact.
+
+pub mod cpu_ref;
+pub mod ode;
+pub mod sampler;
+pub mod train;

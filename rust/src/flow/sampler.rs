@@ -1,0 +1,284 @@
+//! Euler ODE sampler: forward generation (noise → data) and reverse
+//! encoding (data → noise, the Fig. 4 latent extraction), over any step
+//! backend (compiled HLO or the CPU reference).
+
+use anyhow::Result;
+
+use crate::model::params::ParamStore;
+use crate::model::quantized::QuantizedModel;
+use crate::model::spec::ModelSpec;
+use crate::runtime::ArtifactSet;
+use crate::util::rng::Pcg64;
+
+/// A step backend: x, t, dt -> x'.
+pub trait StepBackend {
+    fn step(&mut self, x: &[f32], t: f32, dt: f32) -> Result<Vec<f32>>;
+    fn spec(&self) -> &ModelSpec;
+
+    /// Multi-step integration hook. The default loops [`StepBackend::step`]
+    /// (one host round trip per step); the HLO backends override it with
+    /// device-resident sessions where the state chains on device and the
+    /// weights/codes are staged once (§Perf optimization 1).
+    fn run(&mut self, x: Vec<f32>, t0: f32, t1: f32, steps: usize) -> Result<Vec<f32>> {
+        assert!(steps > 0);
+        let dt = (t1 - t0) / steps as f32;
+        let mut t = t0;
+        let mut x = x;
+        for _ in 0..steps {
+            x = self.step(&x, t, dt)?;
+            t += dt;
+        }
+        Ok(x)
+    }
+}
+
+/// CPU reference, full precision.
+pub struct CpuStep<'a> {
+    pub spec: &'a ModelSpec,
+    pub theta: &'a ParamStore,
+}
+
+impl StepBackend for CpuStep<'_> {
+    fn step(&mut self, x: &[f32], t: f32, dt: f32) -> Result<Vec<f32>> {
+        Ok(crate::flow::cpu_ref::sample_step(self.spec, self.theta, x, t, dt))
+    }
+    fn spec(&self) -> &ModelSpec {
+        self.spec
+    }
+}
+
+/// CPU reference, quantized weights.
+pub struct CpuQStep<'a> {
+    pub qm: &'a QuantizedModel,
+}
+
+impl StepBackend for CpuQStep<'_> {
+    fn step(&mut self, x: &[f32], t: f32, dt: f32) -> Result<Vec<f32>> {
+        Ok(crate::flow::cpu_ref::qsample_step(self.qm, x, t, dt))
+    }
+    fn spec(&self) -> &ModelSpec {
+        &self.qm.spec
+    }
+}
+
+/// Compiled HLO, full precision. Theta is staged on device lazily (first
+/// `run`), so constructing the backend stays cheap.
+pub struct HloStep<'a> {
+    pub art: &'a ArtifactSet,
+    pub theta: &'a ParamStore,
+}
+
+impl StepBackend for HloStep<'_> {
+    fn step(&mut self, x: &[f32], t: f32, dt: f32) -> Result<Vec<f32>> {
+        self.art.sample_step(self.theta, x, t, dt)
+    }
+    fn spec(&self) -> &ModelSpec {
+        &self.art.spec
+    }
+    fn run(&mut self, x: Vec<f32>, t0: f32, t1: f32, steps: usize) -> Result<Vec<f32>> {
+        self.art.sample_session(self.theta)?.integrate(&x, t0, t1, steps)
+    }
+}
+
+/// Compiled HLO, quantized. Two serving modes (numerically identical —
+/// both reconstruct weights from the same codebooks):
+/// * **dequantize-on-load** (default): the `dequant_theta` artifact
+///   reconstructs fp32 theta on device once per session, then fp32 steps
+///   run gather-free — §Perf optimization 2.
+/// * **dequantize-on-the-fly**: every step routes through the Pallas qmm
+///   gather (the paper-faithful TPU/VMEM mode) — used by `step()` and the
+///   `new_on_the_fly` constructor; benchmarked in bench_sample_step.
+pub struct HloQStep<'a> {
+    mode: QMode<'a>,
+    spec: ModelSpec,
+    // host copies for the one-shot step() path (always on-the-fly)
+    art: &'a ArtifactSet,
+    codes: Vec<i32>,
+    biases: Vec<f32>,
+    cbs: Vec<f32>,
+}
+
+enum QMode<'a> {
+    DequantOnLoad(crate::runtime::artifacts::SampleSession<'a>),
+    OnTheFly(crate::runtime::artifacts::QSampleSession<'a>),
+}
+
+impl<'a> HloQStep<'a> {
+    pub fn new(art: &'a ArtifactSet, qm: &QuantizedModel) -> Self {
+        let session = art
+            .qsample_session_dequant(qm)
+            .expect("dequantize quantized model on device");
+        Self::build(art, qm, QMode::DequantOnLoad(session))
+    }
+
+    /// Per-step Pallas-qmm dequantization (the TPU-faithful mode).
+    pub fn new_on_the_fly(art: &'a ArtifactSet, qm: &QuantizedModel) -> Self {
+        let session = art
+            .qsample_session(qm)
+            .expect("stage quantized model on device");
+        Self::build(art, qm, QMode::OnTheFly(session))
+    }
+
+    fn build(art: &'a ArtifactSet, qm: &QuantizedModel, mode: QMode<'a>) -> Self {
+        Self {
+            mode,
+            spec: qm.spec.clone(),
+            art,
+            codes: qm.codes_i32(),
+            biases: qm.biases.clone(),
+            cbs: qm.codebooks_padded(),
+        }
+    }
+}
+
+impl StepBackend for HloQStep<'_> {
+    fn step(&mut self, x: &[f32], t: f32, dt: f32) -> Result<Vec<f32>> {
+        self.art
+            .qsample_step(&self.codes, &self.biases, &self.cbs, x, t, dt)
+    }
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+    fn run(&mut self, x: Vec<f32>, t0: f32, t1: f32, steps: usize) -> Result<Vec<f32>> {
+        match &self.mode {
+            QMode::DequantOnLoad(s) => s.integrate(&x, t0, t1, steps),
+            QMode::OnTheFly(s) => s.integrate(&x, t0, t1, steps),
+        }
+    }
+}
+
+/// Integrate the probability-flow ODE forward: x₀ ~ N(0, I) → x₁ (images).
+/// Returns the generated batch (flat [n, D], clamped to [-1, 1] at the end).
+/// Clamp to image range; non-finite states (an exploded low-bit model —
+/// the failure mode Fig. 4 documents) map to mid-gray so downstream
+/// metrics stay well-defined and score the failure as what it is.
+fn to_pixel(v: f32) -> f32 {
+    if v.is_finite() {
+        v.clamp(-1.0, 1.0)
+    } else {
+        0.0
+    }
+}
+
+/// Bound latents; explosions register as a huge-but-finite sentinel so
+/// variance statistics quantify the blow-up instead of becoming NaN.
+fn to_latent(v: f32) -> f32 {
+    if v.is_finite() {
+        v.clamp(-1e3, 1e3)
+    } else {
+        1e3
+    }
+}
+
+pub fn generate(
+    backend: &mut dyn StepBackend,
+    rng: &mut Pcg64,
+    n: usize,
+    steps: usize,
+) -> Result<Vec<f32>> {
+    let d = backend.spec().d;
+    let x0: Vec<f32> = (0..n * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let out = integrate(backend, x0, 0.0, 1.0, steps)?;
+    Ok(out.into_iter().map(to_pixel).collect())
+}
+
+/// Same start noise, explicit (for paired fp32-vs-quantized comparisons).
+pub fn generate_from(
+    backend: &mut dyn StepBackend,
+    x0: &[f32],
+    steps: usize,
+) -> Result<Vec<f32>> {
+    let out = integrate(backend, x0.to_vec(), 0.0, 1.0, steps)?;
+    Ok(out.into_iter().map(to_pixel).collect())
+}
+
+/// Reverse encoding: images → latents (integrate t: 1 → 0, dt < 0).
+pub fn encode(backend: &mut dyn StepBackend, imgs: &[f32], steps: usize) -> Result<Vec<f32>> {
+    let out = integrate(backend, imgs.to_vec(), 1.0, 0.0, steps)?;
+    Ok(out.into_iter().map(to_latent).collect())
+}
+
+/// Fixed-step explicit Euler from t0 to t1 (delegates to the backend's
+/// `run`, which HLO backends override with device-resident sessions).
+pub fn integrate(
+    backend: &mut dyn StepBackend,
+    x: Vec<f32>,
+    t0: f32,
+    t1: f32,
+    steps: usize,
+) -> Result<Vec<f32>> {
+    backend.run(x, t0, t1, steps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::ModelSpec;
+
+    fn setup() -> (ModelSpec, ParamStore) {
+        let spec = ModelSpec::default_spec();
+        let mut rng = Pcg64::seed(9);
+        (spec.clone(), spec.init_theta(&mut rng))
+    }
+
+    #[test]
+    fn generate_shape_and_bounds() {
+        let (spec, theta) = setup();
+        let mut be = CpuStep {
+            spec: &spec,
+            theta: &theta,
+        };
+        let mut rng = Pcg64::seed(1);
+        let imgs = generate(&mut be, &mut rng, 3, 8).unwrap();
+        assert_eq!(imgs.len(), 3 * spec.d);
+        assert!(imgs.iter().all(|&p| (-1.0..=1.0).contains(&p)));
+    }
+
+    #[test]
+    fn forward_then_reverse_roundtrips_near_identity() {
+        // an untrained (small-weight) field is near-linear: encode(generate)
+        // with many steps should approximately recover the noise.
+        let (spec, theta) = setup();
+        let mut be = CpuStep {
+            spec: &spec,
+            theta: &theta,
+        };
+        let mut rng = Pcg64::seed(2);
+        let d = spec.d;
+        let x0: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let x1 = integrate(&mut be, x0.clone(), 0.0, 1.0, 64).unwrap();
+        let back = integrate(&mut be, x1, 1.0, 0.0, 64).unwrap();
+        let err: f32 = x0
+            .iter()
+            .zip(back.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(err < 0.05, "roundtrip err={err}");
+    }
+
+    #[test]
+    fn integrate_dt_sign_matches_direction() {
+        let (spec, theta) = setup();
+        let mut be = CpuStep {
+            spec: &spec,
+            theta: &theta,
+        };
+        let x = vec![0.5f32; spec.d];
+        let fwd = integrate(&mut be, x.clone(), 0.0, 1.0, 4).unwrap();
+        let bwd = integrate(&mut be, x.clone(), 1.0, 0.0, 4).unwrap();
+        assert_ne!(fwd, bwd);
+    }
+
+    #[test]
+    fn generate_from_is_deterministic() {
+        let (spec, theta) = setup();
+        let mut be = CpuStep {
+            spec: &spec,
+            theta: &theta,
+        };
+        let x0 = vec![0.3f32; 2 * spec.d];
+        let a = generate_from(&mut be, &x0, 8).unwrap();
+        let b = generate_from(&mut be, &x0, 8).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,117 @@
+//! Training driver: rust owns the loop, batches and RNG; the compiled
+//! `train_step` artifact owns fwd/bwd/Adam. Loss curve is recorded for
+//! EXPERIMENTS.md.
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::model::params::ParamStore;
+use crate::runtime::ArtifactSet;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// print every N steps (0 = silent)
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            steps: 400,
+            lr: 1e-3,
+            seed: 42,
+            log_every: 50,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    pub theta: ParamStore,
+    /// (step, loss) curve
+    pub losses: Vec<(usize, f32)>,
+    pub wall_s: f64,
+}
+
+/// Train a velocity network on one dataset through the AOT train_step.
+pub fn train(art: &ArtifactSet, dataset: Dataset, cfg: &TrainConfig) -> Result<TrainResult> {
+    let spec = &art.spec;
+    let mut rng = Pcg64::seed(cfg.seed);
+    let mut theta = spec.init_theta(&mut rng);
+    let p = spec.p();
+    let mut m = vec![0f32; p];
+    let mut v = vec![0f32; p];
+    let b = art.b_train;
+    let d = spec.d;
+    let mut losses = Vec::new();
+    let t0 = std::time::Instant::now();
+    for step in 1..=cfg.steps {
+        let x1 = dataset.batch(&mut rng, b);
+        let x0: Vec<f32> = (0..b * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let t: Vec<f32> = (0..b).map(|_| rng.uniform() as f32).collect();
+        let (th2, m2, v2, loss) =
+            art.train_step(&theta, &m, &v, step as f32, &x1, &x0, &t, cfg.lr)?;
+        theta = ParamStore::new(th2);
+        m = m2;
+        v = v2;
+        losses.push((step, loss));
+        if cfg.log_every > 0 && step % cfg.log_every == 0 {
+            let recent: f32 = losses[losses.len().saturating_sub(cfg.log_every)..]
+                .iter()
+                .map(|&(_, l)| l)
+                .sum::<f32>()
+                / cfg.log_every.min(losses.len()) as f32;
+            println!(
+                "  [train {}] step {step}/{} loss {loss:.3} (avg {recent:.3})",
+                dataset.name(),
+                cfg.steps
+            );
+        }
+    }
+    Ok(TrainResult {
+        theta,
+        losses,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Smoothed early/late loss ratio — the "did it learn" check used by the
+/// e2e example and EXPERIMENTS.md.
+pub fn loss_improvement(losses: &[(usize, f32)]) -> f64 {
+    if losses.len() < 20 {
+        return 1.0;
+    }
+    let k = losses.len() / 10;
+    let head: f64 = losses[..k].iter().map(|&(_, l)| l as f64).sum::<f64>() / k as f64;
+    let tail: f64 = losses[losses.len() - k..]
+        .iter()
+        .map(|&(_, l)| l as f64)
+        .sum::<f64>()
+        / k as f64;
+    head / tail.max(1e-9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_improvement_ratio() {
+        let losses: Vec<(usize, f32)> = (0..100).map(|i| (i, 100.0 / (i + 1) as f32)).collect();
+        assert!(loss_improvement(&losses) > 5.0);
+        let flat: Vec<(usize, f32)> = (0..100).map(|i| (i, 1.0)).collect();
+        assert!((loss_improvement(&flat) - 1.0).abs() < 1e-6);
+        assert_eq!(loss_improvement(&[(0, 1.0)]), 1.0);
+    }
+
+    #[test]
+    fn default_config_sane() {
+        let c = TrainConfig::default();
+        assert!(c.steps >= 100);
+        assert!(c.lr > 0.0);
+    }
+}

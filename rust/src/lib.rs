@@ -1,0 +1,45 @@
+//! # fmq — Low-Bit, High-Fidelity: OT Quantization for Flow Matching
+//!
+//! Full-system reproduction of *"Low-Bit, High-Fidelity: Optimal Transport
+//! Quantization for Flow Matching"* (Varam et al., 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: quantizers (the paper's
+//!   contribution, [`quant`]), theory calculator ([`theory`]), synthetic
+//!   datasets ([`data`]), metrics ([`metrics`]), training/sampling drivers
+//!   ([`flow`]), experiment sweeps and a serving layer ([`coordinator`]).
+//! * **Layer 2/1 (build-time python)** — the flow-matching velocity network
+//!   and the Pallas `qmm`/`assign` kernels, AOT-lowered to HLO text and
+//!   executed through the PJRT C API by [`runtime`]. Python never runs on
+//!   the request path.
+//!
+//! Quickstart (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use fmq::model::spec::ModelSpec;
+//! use fmq::quant::{QuantMethod, quantize_model};
+//! use fmq::util::rng::Pcg64;
+//!
+//! let spec = ModelSpec::default_spec();
+//! let mut rng = Pcg64::seed(7);
+//! let theta = spec.init_theta(&mut rng);
+//! let qm = quantize_model(&spec, &theta, QuantMethod::Ot, 4);
+//! println!("W2 err = {}", qm.total_w2_error());
+//! ```
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod flow;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod stats;
+pub mod tensor;
+pub mod theory;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

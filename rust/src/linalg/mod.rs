@@ -1,0 +1,338 @@
+//! Dense symmetric linear algebra for the FID metric.
+//!
+//! FID needs tr((Σ₁ + Σ₂ − 2(Σ₁^{1/2} Σ₂ Σ₁^{1/2})^{1/2})) — i.e. PSD
+//! matrix square roots. We implement a cyclic Jacobi eigensolver (robust
+//! for the small symmetric covariance matrices our feature dimension
+//! produces) and build sqrtm from the eigendecomposition.
+
+/// Column-major-free simple square matrix: row-major `n x n` f64.
+#[derive(Clone, Debug)]
+pub struct SymMat {
+    pub n: usize,
+    pub a: Vec<f64>,
+}
+
+impl SymMat {
+    pub fn zeros(n: usize) -> Self {
+        Self {
+            n,
+            a: vec![0.0; n * n],
+        }
+    }
+
+    pub fn from_rows(n: usize, a: Vec<f64>) -> Self {
+        assert_eq!(a.len(), n * n);
+        Self { n, a }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n);
+        for i in 0..n {
+            m.a[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.a[i * self.n + j] = v;
+    }
+
+    pub fn trace(&self) -> f64 {
+        (0..self.n).map(|i| self.get(i, i)).sum()
+    }
+
+    pub fn matmul(&self, rhs: &SymMat) -> SymMat {
+        assert_eq!(self.n, rhs.n);
+        let n = self.n;
+        let mut out = SymMat::zeros(n);
+        for i in 0..n {
+            for k in 0..n {
+                let aik = self.get(i, k);
+                if aik == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out.a[i * n + j] += aik * rhs.get(k, j);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn add(&self, rhs: &SymMat) -> SymMat {
+        assert_eq!(self.n, rhs.n);
+        SymMat {
+            n: self.n,
+            a: self
+                .a
+                .iter()
+                .zip(rhs.a.iter())
+                .map(|(x, y)| x + y)
+                .collect(),
+        }
+    }
+
+    pub fn scaled(&self, s: f64) -> SymMat {
+        SymMat {
+            n: self.n,
+            a: self.a.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    /// Max |A - Aᵀ| — symmetry defect.
+    pub fn asymmetry(&self) -> f64 {
+        let mut d = 0.0f64;
+        for i in 0..self.n {
+            for j in (i + 1)..self.n {
+                d = d.max((self.get(i, j) - self.get(j, i)).abs());
+            }
+        }
+        d
+    }
+
+    /// Force exact symmetry: A ← (A + Aᵀ)/2.
+    pub fn symmetrize(&mut self) {
+        for i in 0..self.n {
+            for j in (i + 1)..self.n {
+                let v = 0.5 * (self.get(i, j) + self.get(j, i));
+                self.set(i, j, v);
+                self.set(j, i, v);
+            }
+        }
+    }
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
+/// Returns (eigenvalues, eigenvectors as columns of V): A = V diag(λ) Vᵀ.
+pub fn jacobi_eigen(m: &SymMat, max_sweeps: usize) -> (Vec<f64>, SymMat) {
+    let n = m.n;
+    let mut a = m.clone();
+    a.symmetrize();
+    let mut v = SymMat::identity(n);
+    for _sweep in 0..max_sweeps {
+        // off-diagonal Frobenius norm
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += a.get(i, j) * a.get(i, j);
+            }
+        }
+        if off.sqrt() < 1e-12 * (1.0 + a.trace().abs()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a.get(p, q);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = a.get(p, p);
+                let aqq = a.get(q, q);
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // rotate rows/cols p,q of A
+                for k in 0..n {
+                    let akp = a.get(k, p);
+                    let akq = a.get(k, q);
+                    a.set(k, p, c * akp - s * akq);
+                    a.set(k, q, s * akp + c * akq);
+                }
+                for k in 0..n {
+                    let apk = a.get(p, k);
+                    let aqk = a.get(q, k);
+                    a.set(p, k, c * apk - s * aqk);
+                    a.set(q, k, s * apk + c * aqk);
+                }
+                // accumulate eigenvectors
+                for k in 0..n {
+                    let vkp = v.get(k, p);
+                    let vkq = v.get(k, q);
+                    v.set(k, p, c * vkp - s * vkq);
+                    v.set(k, q, s * vkp + c * vkq);
+                }
+            }
+        }
+    }
+    let eig = (0..n).map(|i| a.get(i, i)).collect();
+    (eig, v)
+}
+
+/// PSD matrix square root via eigendecomposition; negative eigenvalues
+/// (numerical noise) clamp to zero.
+pub fn sqrtm_psd(m: &SymMat) -> SymMat {
+    let n = m.n;
+    let (eig, v) = jacobi_eigen(m, 64);
+    let mut out = SymMat::zeros(n);
+    for k in 0..n {
+        let s = eig[k].max(0.0).sqrt();
+        if s == 0.0 {
+            continue;
+        }
+        for i in 0..n {
+            let vik = v.get(i, k);
+            if vik == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                out.a[i * n + j] += s * vik * v.get(j, k);
+            }
+        }
+    }
+    out
+}
+
+/// Covariance matrix (population) of rows: xs is a flat [m, d] matrix.
+pub fn covariance(xs: &[f32], m: usize, d: usize) -> (Vec<f64>, SymMat) {
+    assert_eq!(xs.len(), m * d);
+    let mut mean = vec![0.0f64; d];
+    for r in 0..m {
+        for c in 0..d {
+            mean[c] += xs[r * d + c] as f64;
+        }
+    }
+    for v in mean.iter_mut() {
+        *v /= m as f64;
+    }
+    let mut cov = SymMat::zeros(d);
+    for r in 0..m {
+        for i in 0..d {
+            let di = xs[r * d + i] as f64 - mean[i];
+            if di == 0.0 {
+                continue;
+            }
+            for j in i..d {
+                let dj = xs[r * d + j] as f64 - mean[j];
+                cov.a[i * d + j] += di * dj;
+            }
+        }
+    }
+    for i in 0..d {
+        for j in i..d {
+            let v = cov.a[i * d + j] / m as f64;
+            cov.a[i * d + j] = v;
+            cov.a[j * d + i] = v;
+        }
+    }
+    (mean, cov)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn reconstruct(eig: &[f64], v: &SymMat) -> SymMat {
+        let n = v.n;
+        let mut out = SymMat::zeros(n);
+        for k in 0..n {
+            for i in 0..n {
+                for j in 0..n {
+                    out.a[i * n + j] += eig[k] * v.get(i, k) * v.get(j, k);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn eigen_diagonal_matrix() {
+        let mut m = SymMat::zeros(3);
+        m.set(0, 0, 3.0);
+        m.set(1, 1, 1.0);
+        m.set(2, 2, 2.0);
+        let (mut eig, _) = jacobi_eigen(&m, 32);
+        eig.sort_by(f64::total_cmp);
+        assert!((eig[0] - 1.0).abs() < 1e-10);
+        assert!((eig[1] - 2.0).abs() < 1e-10);
+        assert!((eig[2] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn eigen_reconstructs_random_symmetric() {
+        let mut rng = Pcg64::seed(21);
+        let n = 12;
+        let mut m = SymMat::zeros(n);
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.normal();
+                m.set(i, j, v);
+                m.set(j, i, v);
+            }
+        }
+        let (eig, v) = jacobi_eigen(&m, 64);
+        let rec = reconstruct(&eig, &v);
+        for (a, b) in m.a.iter().zip(rec.a.iter()) {
+            assert!((a - b).abs() < 1e-8, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sqrtm_squares_back() {
+        let mut rng = Pcg64::seed(22);
+        let n = 10;
+        // build PSD: B Bᵀ
+        let b: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut m = SymMat::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b[i * n + k] * b[j * n + k];
+                }
+                m.set(i, j, s);
+            }
+        }
+        let r = sqrtm_psd(&m);
+        let r2 = r.matmul(&r);
+        for (a, b) in m.a.iter().zip(r2.a.iter()) {
+            assert!((a - b).abs() < 1e-7, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sqrtm_identity() {
+        let i4 = SymMat::identity(4);
+        let r = sqrtm_psd(&i4);
+        for (a, b) in r.a.iter().zip(i4.a.iter()) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn covariance_of_isotropic_gaussian() {
+        let mut rng = Pcg64::seed(23);
+        let (m, d) = (20_000, 4);
+        let xs: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+        let (mean, cov) = covariance(&xs, m, d);
+        for mu in mean {
+            assert!(mu.abs() < 0.05);
+        }
+        for i in 0..d {
+            for j in 0..d {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((cov.get(i, j) - want).abs() < 0.05);
+            }
+        }
+    }
+
+    #[test]
+    fn trace_and_add() {
+        let mut a = SymMat::identity(3);
+        let b = SymMat::identity(3);
+        a = a.add(&b);
+        assert!((a.trace() - 6.0).abs() < 1e-12);
+        assert!((a.scaled(0.5).trace() - 3.0).abs() < 1e-12);
+    }
+}

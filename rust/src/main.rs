@@ -1,0 +1,553 @@
+//! fmq — CLI for the OT-quantization flow-matching system.
+//!
+//! Subcommands map one-to-one onto the paper's experiments (DESIGN.md §5):
+//!   train     train a velocity net on a synthetic dataset (AOT train_step)
+//!   quantize  post-training-quantize a checkpoint at (method, bits)
+//!   generate  sample images from a checkpoint / quantized model
+//!   sweep     Fig. 3 fidelity grid -> results/fig3_*.csv
+//!   latent    Fig. 4 latent-stability grid -> results/fig4_latent.csv
+//!   grid      Figs. 2 & 5–8 sample grids -> results/*.ppm
+//!   theory    ρ(b), bound curves, bit budgets -> results/theory_*.csv
+//!   serve     TCP serving with dynamic batching
+//!   info      artifact/manifest status
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use fmq::coordinator::experiment::{pseudo_trained_theta, EvalContext};
+use fmq::coordinator::registry::Registry;
+use fmq::coordinator::report;
+use fmq::coordinator::server::{serve, ServerConfig};
+use fmq::data::Dataset;
+use fmq::flow::train::{train, TrainConfig};
+use fmq::model::checkpoint;
+use fmq::model::params::ParamStore;
+use fmq::model::spec::ModelSpec;
+use fmq::quant::{quantize_model, QuantMethod};
+use fmq::runtime::{artifacts, ArtifactSet};
+use fmq::theory::alpha::{alpha_spacing, spacing_for};
+use fmq::theory::bounds::BoundInputs;
+use fmq::util::cli::Command;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(sub) = argv.first() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match sub.as_str() {
+        "train" => cmd_train(rest),
+        "quantize" => cmd_quantize(rest),
+        "generate" => cmd_generate(rest),
+        "sweep" => cmd_sweep(rest),
+        "latent" => cmd_latent(rest),
+        "grid" => cmd_grid(rest),
+        "theory" => cmd_theory(rest),
+        "serve" => cmd_serve(rest),
+        "info" => cmd_info(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' — run `fmq help`"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "fmq — Low-Bit, High-Fidelity: OT Quantization for Flow Matching\n\
+         \n\
+         subcommands:\n\
+           train     train a velocity net (needs artifacts)\n\
+           quantize  PTQ a checkpoint at --method/--bits\n\
+           generate  sample images from a model\n\
+           sweep     Fig. 3 fidelity grid (SSIM/PSNR csv)\n\
+           latent    Fig. 4 latent-stability grid (csv)\n\
+           grid      Figs. 2 & 5-8 sample grids (ppm)\n\
+           theory    rho(b), FID bounds, bit budgets (csv)\n\
+           serve     TCP serving with dynamic batching\n\
+           info      artifact/manifest status\n\
+         run `fmq <sub> --help` for flags"
+    )
+}
+
+// ------------------------------------------------------------- helpers
+
+fn load_art(required: bool) -> Result<Option<ArtifactSet>> {
+    let dir = artifacts::default_dir();
+    if artifacts::available(&dir) {
+        println!("loading artifacts from {dir:?} ...");
+        Ok(Some(ArtifactSet::load(&dir)?))
+    } else if required {
+        bail!("artifacts missing at {dir:?} — run `make artifacts`")
+    } else {
+        println!("(no artifacts at {dir:?} — using CPU reference backend)");
+        Ok(None)
+    }
+}
+
+/// Load theta from --ckpt, else pseudo-trained weights for the dataset.
+fn theta_for(
+    spec: &ModelSpec,
+    ckpt: &str,
+    dataset: Dataset,
+) -> Result<ParamStore> {
+    if ckpt.is_empty() {
+        Ok(pseudo_trained_theta(spec, dataset))
+    } else {
+        checkpoint::load_theta(Path::new(ckpt), spec)
+    }
+}
+
+fn parse_bits(args: &fmq::util::cli::Args) -> Result<Vec<u8>> {
+    args.get_list("bits")
+        .iter()
+        .map(|s| Ok(s.parse::<u8>()?))
+        .collect()
+}
+
+fn parse_methods(args: &fmq::util::cli::Args) -> Result<Vec<QuantMethod>> {
+    args.get_list("methods")
+        .iter()
+        .map(|s| QuantMethod::parse(s).ok_or_else(|| anyhow::anyhow!("unknown method '{s}'")))
+        .collect()
+}
+
+fn parse_datasets(args: &fmq::util::cli::Args) -> Result<Vec<Dataset>> {
+    let list = args.get_list("datasets");
+    if list.len() == 1 && list[0] == "all" {
+        return Ok(Dataset::ALL.to_vec());
+    }
+    list.iter()
+        .map(|s| Dataset::parse(s).ok_or_else(|| anyhow::anyhow!("unknown dataset '{s}'")))
+        .collect()
+}
+
+// ------------------------------------------------------------ commands
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("train", "train a velocity net via the AOT train_step")
+        .flag("dataset", "synth-mnist", "dataset name")
+        .flag("steps", "400", "training steps")
+        .flag("lr", "0.001", "learning rate")
+        .flag("seed", "42", "rng seed")
+        .flag("out", "checkpoints/model.fmq", "output checkpoint");
+    let a = cmd.parse(argv)?;
+    let dataset = Dataset::parse(a.get("dataset"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+    let art = load_art(true)?.unwrap();
+    let cfg = TrainConfig {
+        steps: a.get_usize("steps")?,
+        lr: a.get_f32("lr")?,
+        seed: a.get_u64("seed")?,
+        log_every: 50,
+    };
+    println!("training on {} for {} steps ...", dataset.name(), cfg.steps);
+    let res = train(&art, dataset, &cfg)?;
+    println!(
+        "done in {:.1}s; loss {:.3} -> {:.3} (improvement x{:.2})",
+        res.wall_s,
+        res.losses.first().map(|&(_, l)| l).unwrap_or(0.0),
+        res.losses.last().map(|&(_, l)| l).unwrap_or(0.0),
+        fmq::flow::train::loss_improvement(&res.losses)
+    );
+    let out = PathBuf::from(a.get("out"));
+    if let Some(p) = out.parent() {
+        std::fs::create_dir_all(p)?;
+    }
+    checkpoint::save_theta(
+        &out,
+        &res.theta,
+        vec![(
+            "dataset",
+            fmq::util::json::Json::Str(dataset.name().to_string()),
+        )],
+    )?;
+    println!("checkpoint -> {out:?}");
+    Ok(())
+}
+
+fn cmd_quantize(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("quantize", "post-training quantization of a checkpoint")
+        .flag("ckpt", "checkpoints/model.fmq", "input checkpoint")
+        .flag("method", "ot", "ot|uniform|pwl|log2")
+        .flag("bits", "4", "bit-width")
+        .flag("out", "", "output path (default <ckpt>.<method><bits>)");
+    let a = cmd.parse(argv)?;
+    let spec = ModelSpec::default_spec();
+    let theta = checkpoint::load_theta(Path::new(a.get("ckpt")), &spec)?;
+    let method = QuantMethod::parse(a.get("method"))
+        .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
+    let bits: u8 = a.get("bits").parse()?;
+    let qm = quantize_model(&spec, &theta, method, bits);
+    let err = qm.w2_error(&theta);
+    println!(
+        "{} @ {} bits: W2^2 = {:.3e}, sup = {:.3e}, compression x{:.2}, utilization {:.1}%",
+        method.name(),
+        bits,
+        err.w2_sq,
+        err.sup,
+        qm.compression_ratio(),
+        100.0 * qm.mean_utilization()
+    );
+    let out = if a.get("out").is_empty() {
+        format!("{}.{}{}", a.get("ckpt"), method.name(), bits)
+    } else {
+        a.get("out").to_string()
+    };
+    checkpoint::save_quantized(Path::new(&out), &qm)?;
+    println!("quantized model -> {out}");
+    Ok(())
+}
+
+fn cmd_generate(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("generate", "sample images")
+        .flag("ckpt", "", "fp32 checkpoint (empty = pseudo-trained)")
+        .flag("qckpt", "", "quantized checkpoint (overrides --ckpt)")
+        .flag("dataset", "synth-mnist", "dataset (for pseudo weights)")
+        .flag("n", "16", "number of samples")
+        .flag("steps", "32", "euler steps")
+        .flag("seed", "7", "rng seed")
+        .flag("out", "results/samples.ppm", "output grid");
+    let a = cmd.parse(argv)?;
+    let spec = ModelSpec::default_spec();
+    let art = load_art(false)?;
+    let dataset = Dataset::parse(a.get("dataset"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+    let ctx = EvalContext {
+        spec: spec.clone(),
+        art: art.as_ref(),
+        steps: a.get_usize("steps")?,
+        n: a.get_usize("n")?,
+        seed: a.get_u64("seed")?,
+    };
+    let x0 = ctx.start_noise();
+    let imgs = if !a.get("qckpt").is_empty() {
+        let qm = checkpoint::load_quantized(Path::new(a.get("qckpt")), &spec)?;
+        ctx.generate_quant(&qm, &x0)?
+    } else {
+        let theta = theta_for(&spec, a.get("ckpt"), dataset)?;
+        ctx.generate_fp32(&theta, &x0)?
+    };
+    let out = PathBuf::from(a.get("out"));
+    report::write_image_grid(&out, &imgs[..ctx.n.min(imgs.len() / spec.d) * spec.d], 8)?;
+    println!("{} samples -> {out:?}", ctx.n);
+    Ok(())
+}
+
+fn cmd_sweep(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("sweep", "Fig. 3: SSIM/PSNR over (dataset x method x bits)")
+        .flag("datasets", "all", "comma list or 'all'")
+        .flag("methods", "ot,uniform,pwl,log2", "quantizers")
+        .flag("bits", "2,3,4,5,6,8", "bit-widths")
+        .flag("steps", "16", "euler steps")
+        .flag("n", "32", "samples per point")
+        .flag("seed", "7", "rng seed")
+        .flag("ckpt-dir", "checkpoints", "per-dataset checkpoints (model-<ds>.fmq)")
+        .flag("out", "results", "output directory");
+    let a = cmd.parse(argv)?;
+    let spec = ModelSpec::default_spec();
+    let art = load_art(false)?;
+    let ctx = EvalContext {
+        spec: spec.clone(),
+        art: art.as_ref(),
+        steps: a.get_usize("steps")?,
+        n: a.get_usize("n")?,
+        seed: a.get_u64("seed")?,
+    };
+    let methods = parse_methods(&a)?;
+    let bits = parse_bits(&a)?;
+    let mut all = Vec::new();
+    for ds in parse_datasets(&a)? {
+        let ckpt = PathBuf::from(a.get("ckpt-dir")).join(format!("model-{}.fmq", ds.name()));
+        let theta = if ckpt.exists() {
+            println!("[{}] using trained checkpoint {ckpt:?}", ds.name());
+            checkpoint::load_theta(&ckpt, &spec)?
+        } else {
+            println!("[{}] no checkpoint — pseudo-trained weights", ds.name());
+            pseudo_trained_theta(&spec, ds)
+        };
+        let points = ctx.fidelity_sweep(ds, &theta, &methods, &bits)?;
+        for p in &points {
+            println!(
+                "  {} {} b={}: ssim {:.4} psnr {:.2} w2 {:.2e}",
+                p.dataset,
+                p.method.name(),
+                p.bits,
+                p.ssim,
+                p.psnr,
+                p.w2_sq
+            );
+        }
+        all.extend(points);
+    }
+    let out = PathBuf::from(a.get("out"));
+    report::fidelity_csv(&out.join("fig3_fidelity.csv"), &all)?;
+    println!("-> {:?}", out.join("fig3_fidelity.csv"));
+    Ok(())
+}
+
+fn cmd_latent(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("latent", "Fig. 4: latent variance stability grid")
+        .flag("datasets", "all", "comma list or 'all'")
+        .flag("methods", "ot,uniform,pwl,log2", "quantizers")
+        .flag("bits", "2,3,4,5,6,8", "bit-widths")
+        .flag("steps", "16", "euler steps")
+        .flag("n", "32", "images per point")
+        .flag("seed", "7", "rng seed")
+        .flag("ckpt-dir", "checkpoints", "per-dataset checkpoints")
+        .flag("out", "results", "output directory");
+    let a = cmd.parse(argv)?;
+    let spec = ModelSpec::default_spec();
+    let art = load_art(false)?;
+    let ctx = EvalContext {
+        spec: spec.clone(),
+        art: art.as_ref(),
+        steps: a.get_usize("steps")?,
+        n: a.get_usize("n")?,
+        seed: a.get_u64("seed")?,
+    };
+    let methods = parse_methods(&a)?;
+    let bits = parse_bits(&a)?;
+    let mut all = Vec::new();
+    for ds in parse_datasets(&a)? {
+        let ckpt = PathBuf::from(a.get("ckpt-dir")).join(format!("model-{}.fmq", ds.name()));
+        let theta = if ckpt.exists() {
+            checkpoint::load_theta(&ckpt, &spec)?
+        } else {
+            pseudo_trained_theta(&spec, ds)
+        };
+        let points = ctx.latent_sweep(ds, &theta, &methods, &bits)?;
+        for p in &points {
+            println!(
+                "  {} {} b={}: var_std {:.4} (fp32 {:.4}) max|z| {:.2}",
+                p.dataset,
+                p.method.name(),
+                p.bits,
+                p.stats.var_std,
+                p.baseline_var_std,
+                p.stats.max_abs
+            );
+        }
+        all.extend(points);
+    }
+    let out = PathBuf::from(a.get("out"));
+    report::latent_csv(&out.join("fig4_latent.csv"), &all)?;
+    println!("-> {:?}", out.join("fig4_latent.csv"));
+    Ok(())
+}
+
+fn cmd_grid(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("grid", "Figs. 2 & 5-8: qualitative sample grids")
+        .flag("datasets", "synth-celeba", "comma list or 'all'")
+        .flag("methods", "ot,uniform,pwl,log2", "quantizers")
+        .flag("bits", "2,3,4,6,8", "bit-widths")
+        .flag("steps", "32", "euler steps")
+        .flag("n", "16", "samples per grid")
+        .flag("seed", "7", "rng seed")
+        .flag("ckpt-dir", "checkpoints", "per-dataset checkpoints")
+        .flag("out", "results", "output directory");
+    let a = cmd.parse(argv)?;
+    let spec = ModelSpec::default_spec();
+    let art = load_art(false)?;
+    let ctx = EvalContext {
+        spec: spec.clone(),
+        art: art.as_ref(),
+        steps: a.get_usize("steps")?,
+        n: a.get_usize("n")?,
+        seed: a.get_u64("seed")?,
+    };
+    let out = PathBuf::from(a.get("out"));
+    let bits = parse_bits(&a)?;
+    let methods = parse_methods(&a)?;
+    for ds in parse_datasets(&a)? {
+        let ckpt = PathBuf::from(a.get("ckpt-dir")).join(format!("model-{}.fmq", ds.name()));
+        let theta = if ckpt.exists() {
+            checkpoint::load_theta(&ckpt, &spec)?
+        } else {
+            pseudo_trained_theta(&spec, ds)
+        };
+        let x0 = ctx.start_noise();
+        let dir = out.join("grids").join(ds.name());
+        let reference = ctx.generate_fp32(&theta, &x0)?;
+        report::write_image_grid(&dir.join("fp32.ppm"), &reference, 8)?;
+        for &m in &methods {
+            for &b in &bits {
+                let qm = quantize_model(&spec, &theta, m, b);
+                let imgs = ctx.generate_quant(&qm, &x0)?;
+                let name = format!("{}{}.ppm", m.name(), b);
+                report::write_image_grid(&dir.join(&name), &imgs, 8)?;
+            }
+        }
+        println!("[{}] grids -> {dir:?}", ds.name());
+    }
+    Ok(())
+}
+
+fn cmd_theory(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("theory", "rho(b), FID bound curves, bit budgets")
+        .flag("ckpt", "", "checkpoint for empirical alpha (else Gaussian)")
+        .flag("sigma", "0.05", "weight std for analytic tables")
+        .flag("k-sigma", "10", "uniform clipping range in sigmas")
+        .flag("out", "results", "output directory");
+    let a = cmd.parse(argv)?;
+    let out = PathBuf::from(a.get("out"));
+    std::fs::create_dir_all(&out)?;
+    let sigma = a.get_f64("sigma")?;
+    let k = a.get_f64("k-sigma")?;
+
+    // analytic table (paper's "Provable Advantages" numbers)
+    let b_gauss = BoundInputs::paper_defaults(sigma, k);
+    let alpha_l =
+        fmq::stats::dist::alpha_laplace(sigma / std::f64::consts::SQRT_2);
+    println!("analytic (sigma={sigma}, R={k}sigma):");
+    println!(
+        "  gaussian: alpha^3/R^2 = {:.4} (paper: 0.33), rho = {:.4}",
+        b_gauss.alpha.powi(3) / (b_gauss.r * b_gauss.r),
+        b_gauss.rho()
+    );
+    println!(
+        "  laplace:  alpha^3/R^2 = {:.4} (paper: 0.54)",
+        alpha_l.powi(3) / (b_gauss.r * b_gauss.r)
+    );
+
+    // empirical alpha from a real checkpoint, per layer
+    let mut rows = vec![];
+    if !a.get("ckpt").is_empty() {
+        let spec = ModelSpec::default_spec();
+        let theta = checkpoint::load_theta(Path::new(a.get("ckpt")), &spec)?;
+        println!("per-layer empirical alpha (trained weights):");
+        for l in spec.weight_layers() {
+            let w = theta.layer(&spec, &l.name);
+            let alpha = alpha_spacing(w, spacing_for(w.len()));
+            let r = fmq::quant::uniform::symmetric_range(w) as f64;
+            let ratio = alpha.powi(3) / (r * r);
+            println!("  {:8} alpha={alpha:.4} R={r:.4} alpha^3/R^2={ratio:.4}", l.name);
+            rows.push(format!("{},{alpha:.6},{r:.6},{ratio:.6}", l.name));
+        }
+        report::write_csv(
+            &out.join("theory_alpha_layers.csv"),
+            "layer,alpha,r,alpha3_over_r2",
+            &rows,
+        )?;
+    }
+
+    // bound curves + bit budgets
+    let mut curve = vec![];
+    for bits in 2..=8u8 {
+        curve.push(format!(
+            "{bits},{:.6e},{:.6e}",
+            b_gauss.fid_bound_uniform(bits),
+            b_gauss.fid_bound_ot(bits)
+        ));
+    }
+    report::write_csv(
+        &out.join("theory_bounds.csv"),
+        "bits,fid_bound_uniform,fid_bound_ot",
+        &curve,
+    )?;
+    let mut budget = vec![];
+    for delta_exp in 1..=6 {
+        let delta = 10f64.powi(-delta_exp);
+        budget.push(format!(
+            "{delta:.0e},{},{}",
+            b_gauss.bit_budget(delta, false),
+            b_gauss.bit_budget(delta, true)
+        ));
+    }
+    report::write_csv(
+        &out.join("theory_budget.csv"),
+        "delta_max,bits_uniform,bits_ot",
+        &budget,
+    )?;
+    println!("-> {:?}, theory_bounds.csv, theory_budget.csv", out);
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("serve", "TCP serving with dynamic batching")
+        .flag("addr", "127.0.0.1:7878", "listen address")
+        .flag("ckpt", "", "fp32 checkpoint (empty = pseudo-trained)")
+        .flag("dataset", "synth-celeba", "dataset for pseudo weights")
+        .flag("methods", "ot,uniform", "variants to build")
+        .flag("bits", "2,4,8", "bit-widths to build")
+        .flag("steps", "16", "euler steps per sample");
+    let a = cmd.parse(argv)?;
+    let spec = ModelSpec::default_spec();
+    let dataset = Dataset::parse(a.get("dataset"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+    let theta = theta_for(&spec, a.get("ckpt"), dataset)?;
+    let methods = parse_methods(&a)?;
+    let bits = parse_bits(&a)?;
+    println!("building variant fleet ({} methods x {} bits + fp32) ...", methods.len(), bits.len());
+    let registry = Arc::new(Registry::build_fleet(&spec, &theta, &methods, &bits));
+    let art = load_art(false)?.map(|a| Arc::new(fmq::runtime::SharedArtifacts::new(a)));
+    let cfg = ServerConfig {
+        addr: a.get("addr").to_string(),
+        steps: a.get_usize("steps")?,
+        ..Default::default()
+    };
+    let server = serve(registry.clone(), art, cfg)?;
+    println!(
+        "serving {} variants on {} — ops: generate/models/ping/shutdown",
+        registry.len(),
+        server.addr
+    );
+    // block until shutdown op flips the flag
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        if server.stats.requests.load(std::sync::atomic::Ordering::Relaxed) > 0
+            && server
+                .stats
+                .samples
+                .load(std::sync::atomic::Ordering::Relaxed)
+                % 1000
+                == 999
+        {
+            // periodic stats line (cheap, approximate)
+            println!(
+                "requests={} batches={} samples={}",
+                server.stats.requests.load(std::sync::atomic::Ordering::Relaxed),
+                server.stats.batches.load(std::sync::atomic::Ordering::Relaxed),
+                server.stats.samples.load(std::sync::atomic::Ordering::Relaxed)
+            );
+        }
+    }
+}
+
+fn cmd_info(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("info", "artifact/manifest status");
+    let _a = cmd.parse(argv)?;
+    let spec = ModelSpec::default_spec();
+    println!(
+        "model: d={} hidden={} blocks={} P={} PW={} ({} weight tensors)",
+        spec.d,
+        spec.hidden,
+        spec.blocks,
+        spec.p(),
+        spec.pw(),
+        spec.weight_layers().len()
+    );
+    let dir = artifacts::default_dir();
+    if artifacts::available(&dir) {
+        println!("artifacts: complete at {dir:?}");
+        let art = ArtifactSet::load(&dir)?;
+        println!(
+            "  b_train={} b_sample={} assign_chunk={} (manifest cross-check OK)",
+            art.b_train, art.b_sample, art.assign_chunk
+        );
+    } else {
+        println!("artifacts: MISSING at {dir:?} — run `make artifacts`");
+    }
+    Ok(())
+}

@@ -1,0 +1,186 @@
+//! Inception-v3 stand-in: a fixed random-projection feature network.
+//!
+//! Assumptions 1-D/1-E only require an L_φ-Lipschitz feature extractor
+//! whose embeddings are ~Gaussian. We use a frozen 2-layer random net
+//! φ(x) = W₂ tanh(W₁ x): tanh is 1-Lipschitz, so
+//! L_φ ≤ ‖W₂‖₂ ‖W₁‖₂ — and unlike Inception we can *compute* that bound,
+//! making the Theorem 3/6 bound checks in EXPERIMENTS.md concrete.
+
+use crate::tensor::matmul_into;
+use crate::util::rng::Pcg64;
+
+/// Frozen feature extractor.
+pub struct FeatureNet {
+    pub in_dim: usize,
+    pub hidden: usize,
+    pub out_dim: usize,
+    w1: Vec<f32>, // [in, hidden]
+    w2: Vec<f32>, // [hidden, out]
+}
+
+pub const FEAT_DIM: usize = 64;
+pub const FEAT_HIDDEN: usize = 256;
+
+impl FeatureNet {
+    /// Deterministic net (fixed seed) — every experiment shares it.
+    pub fn standard(in_dim: usize) -> Self {
+        Self::new(in_dim, FEAT_HIDDEN, FEAT_DIM, 0x0F_EA_70)
+    }
+
+    pub fn new(in_dim: usize, hidden: usize, out_dim: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::seed(seed);
+        let s1 = 1.0 / (in_dim as f32).sqrt();
+        let s2 = 1.0 / (hidden as f32).sqrt();
+        let w1 = (0..in_dim * hidden)
+            .map(|_| rng.normal_f32(0.0, s1))
+            .collect();
+        let w2 = (0..hidden * out_dim)
+            .map(|_| rng.normal_f32(0.0, s2))
+            .collect();
+        Self {
+            in_dim,
+            hidden,
+            out_dim,
+            w1,
+            w2,
+        }
+    }
+
+    /// Embed a batch: xs flat [n, in_dim] -> [n, out_dim].
+    pub fn embed(&self, xs: &[f32]) -> Vec<f32> {
+        assert_eq!(xs.len() % self.in_dim, 0);
+        let n = xs.len() / self.in_dim;
+        let mut h = vec![0f32; n * self.hidden];
+        matmul_into(xs, &self.w1, &mut h, n, self.in_dim, self.hidden);
+        for v in h.iter_mut() {
+            *v = v.tanh();
+        }
+        let mut out = vec![0f32; n * self.out_dim];
+        matmul_into(&h, &self.w2, &mut out, n, self.hidden, self.out_dim);
+        out
+    }
+
+    /// Upper bound on L_φ via power iteration on W₁ᵀW₁ and W₂ᵀW₂:
+    /// L_φ ≤ σ_max(W₁) σ_max(W₂) (tanh is 1-Lipschitz).
+    pub fn lipschitz_bound(&self) -> f64 {
+        spectral_norm(&self.w1, self.in_dim, self.hidden)
+            * spectral_norm(&self.w2, self.hidden, self.out_dim)
+    }
+}
+
+/// Largest singular value of a [m, n] matrix by power iteration.
+pub fn spectral_norm(a: &[f32], m: usize, n: usize) -> f64 {
+    let mut rng = Pcg64::seed(0x5EC7);
+    let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut sigma = 0.0f64;
+    for _ in 0..60 {
+        // u = A v
+        let mut u = vec![0f64; m];
+        for i in 0..m {
+            let mut s = 0.0;
+            for j in 0..n {
+                s += a[i * n + j] as f64 * v[j];
+            }
+            u[i] = s;
+        }
+        let un = u.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-30);
+        for x in u.iter_mut() {
+            *x /= un;
+        }
+        // v = Aᵀ u
+        let mut v2 = vec![0f64; n];
+        for i in 0..m {
+            let ui = u[i];
+            for j in 0..n {
+                v2[j] += a[i * n + j] as f64 * ui;
+            }
+        }
+        sigma = v2.iter().map(|x| x * x).sum::<f64>().sqrt();
+        for x in v2.iter_mut() {
+            *x /= sigma.max(1e-30);
+        }
+        v = v2;
+    }
+    sigma
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn embed_shapes() {
+        let net = FeatureNet::new(32, 64, 16, 1);
+        let xs = vec![0.1f32; 5 * 32];
+        let e = net.embed(&xs);
+        assert_eq!(e.len(), 5 * 16);
+    }
+
+    #[test]
+    fn deterministic_standard_net() {
+        let a = FeatureNet::standard(768).embed(&vec![0.5f32; 768]);
+        let b = FeatureNet::standard(768).embed(&vec![0.5f32; 768]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn spectral_norm_of_diagonal() {
+        // diag(1, 2, 7) embedded in 3x3
+        let a = vec![1.0, 0.0, 0.0, 0.0, 2.0, 0.0, 0.0, 0.0, 7.0];
+        let s = spectral_norm(&a, 3, 3);
+        assert!((s - 7.0).abs() < 1e-6, "s={s}");
+    }
+
+    /// The Lipschitz bound must actually hold on random probes — this is
+    /// Assumption 1-D, verified by construction.
+    #[test]
+    fn lipschitz_bound_holds_empirically() {
+        let net = FeatureNet::new(48, 96, 24, 2);
+        let bound = net.lipschitz_bound();
+        let mut rng = Pcg64::seed(3);
+        for _ in 0..50 {
+            let x: Vec<f32> = (0..48).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut y = x.clone();
+            let i = rng.below(48);
+            y[i] += 0.01;
+            let ex = net.embed(&x);
+            let ey = net.embed(&y);
+            let num: f64 = ex
+                .iter()
+                .zip(ey.iter())
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            let den = 0.01f64;
+            assert!(num / den <= bound * 1.001, "ratio {} > bound {bound}", num / den);
+        }
+    }
+
+    /// Assumption 1-E: embeddings of image batches are near-Gaussian per
+    /// coordinate (loose normality check via standardized moments).
+    #[test]
+    fn embeddings_roughly_gaussian() {
+        use crate::data::Dataset;
+        let net = FeatureNet::standard(crate::data::IMG_D);
+        let mut rng = Pcg64::seed(4);
+        let batch = Dataset::SynthImagenet.batch(&mut rng, 256);
+        let e = net.embed(&batch);
+        // per-dim skewness should be small on average
+        let d = net.out_dim;
+        let n = e.len() / d;
+        let mut mean_abs_skew = 0.0f64;
+        for j in 0..d {
+            let col: Vec<f32> = (0..n).map(|i| e[i * d + j]).collect();
+            let (m, v) = crate::stats::mean_var(&col);
+            let sd = v.sqrt().max(1e-9);
+            let skew: f64 = col
+                .iter()
+                .map(|&x| ((x as f64 - m) / sd).powi(3))
+                .sum::<f64>()
+                / n as f64;
+            mean_abs_skew += skew.abs();
+        }
+        mean_abs_skew /= d as f64;
+        assert!(mean_abs_skew < 1.0, "skew={mean_abs_skew}");
+    }
+}

@@ -1,0 +1,109 @@
+//! Fréchet distance between embedded sample batches (the FID construction
+//! of Assumption 1-E / Lemma 2):
+//!
+//!   FID = ‖m₁ − m₂‖² + tr(Σ₁ + Σ₂ − 2 (Σ₁^{1/2} Σ₂ Σ₁^{1/2})^{1/2})
+//!
+//! computed over [`features::FeatureNet`] embeddings with the Jacobi
+//! eigensolver from [`crate::linalg`].
+
+use crate::linalg::{covariance, sqrtm_psd, SymMat};
+use crate::metrics::features::FeatureNet;
+
+/// Fréchet distance between two embedded batches (flat [n, d] each).
+pub fn frechet_distance(ea: &[f32], eb: &[f32], d: usize) -> f64 {
+    assert_eq!(ea.len() % d, 0);
+    assert_eq!(eb.len() % d, 0);
+    let (ma, ca) = covariance(ea, ea.len() / d, d);
+    let (mb, cb) = covariance(eb, eb.len() / d, d);
+    frechet_gaussians(&ma, &ca, &mb, &cb)
+}
+
+/// Fréchet distance between two Gaussians given moments.
+pub fn frechet_gaussians(ma: &[f64], ca: &SymMat, mb: &[f64], cb: &SymMat) -> f64 {
+    let d2: f64 = ma
+        .iter()
+        .zip(mb.iter())
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum();
+    let sa = sqrtm_psd(ca);
+    let inner = sa.matmul(cb).matmul(&sa);
+    let mut inner_sym = inner;
+    inner_sym.symmetrize(); // numerical asymmetry cleanup
+    let cross = sqrtm_psd(&inner_sym);
+    let tr = ca.trace() + cb.trace() - 2.0 * cross.trace();
+    (d2 + tr).max(0.0)
+}
+
+/// FID between two image batches using the standard feature net.
+pub fn fid_images(net: &FeatureNet, imgs_a: &[f32], imgs_b: &[f32]) -> f64 {
+    let ea = net.embed(imgs_a);
+    let eb = net.embed(imgs_b);
+    frechet_distance(&ea, &eb, net.out_dim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn zero_for_identical_batches() {
+        let mut rng = Pcg64::seed(1);
+        let e: Vec<f32> = (0..200 * 8).map(|_| rng.normal() as f32).collect();
+        let f = frechet_distance(&e, &e, 8);
+        assert!(f.abs() < 1e-6, "f={f}");
+    }
+
+    #[test]
+    fn mean_shift_gives_squared_distance() {
+        // identical covariance, mean shift u: FID = ||u||^2
+        let mut rng = Pcg64::seed(2);
+        let n = 60_000;
+        let d = 4;
+        let a: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let shift = [0.5f32, -0.25, 0.0, 1.0];
+        let b: Vec<f32> = a
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| x + shift[i % d])
+            .collect();
+        let want: f64 = shift.iter().map(|&s| (s as f64) * (s as f64)).sum();
+        let got = frechet_distance(&a, &b, d);
+        assert!((got - want).abs() < 0.05, "got={got} want={want}");
+    }
+
+    #[test]
+    fn scale_change_known_value() {
+        // N(0, I) vs N(0, 4I) in d dims: FID = d(1 + 4 - 2*2) = d
+        let mut rng = Pcg64::seed(3);
+        let n = 120_000;
+        let d = 3;
+        let a: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..n * d).map(|_| 2.0 * rng.normal() as f32).collect();
+        let got = frechet_distance(&a, &b, d);
+        assert!((got - d as f64).abs() < 0.1, "got={got}");
+    }
+
+    #[test]
+    fn fid_separates_datasets() {
+        let net = FeatureNet::standard(crate::data::IMG_D);
+        let mut rng = Pcg64::seed(4);
+        let a1 = Dataset::SynthMnist.batch(&mut rng, 128);
+        let a2 = Dataset::SynthMnist.batch(&mut rng, 128);
+        let b = Dataset::SynthImagenet.batch(&mut rng, 128);
+        let same = fid_images(&net, &a1, &a2);
+        let diff = fid_images(&net, &a1, &b);
+        assert!(diff > 5.0 * same, "same={same} diff={diff}");
+    }
+
+    #[test]
+    fn symmetric_metric() {
+        let mut rng = Pcg64::seed(5);
+        let a: Vec<f32> = (0..500 * 4).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..500 * 4).map(|_| rng.normal() as f32 * 1.3 + 0.2).collect();
+        let ab = frechet_distance(&a, &b, 4);
+        let ba = frechet_distance(&b, &a, 4);
+        assert!((ab - ba).abs() < 1e-6 * (1.0 + ab), "{ab} vs {ba}");
+    }
+}

@@ -1,0 +1,93 @@
+//! Latent-space stability statistics (the paper's Fig. 4).
+//!
+//! The FM "latent" of an image is the base-distribution point reached by
+//! integrating the probability-flow ODE *backwards* (data → noise). For a
+//! healthy model the latents are ~N(0, I), so the per-dimension variances
+//! cluster tightly around 1. Quantization noise destabilizes the reverse
+//! flow; the paper measures that as the *standard deviation of the
+//! per-dimension latent variances* — flat for OT, exploding for
+//! uniform/log2 at low bits.
+
+/// Summary of a latent batch (flat [n, d]).
+#[derive(Clone, Copy, Debug)]
+pub struct LatentStats {
+    /// mean of per-dimension variances (≈1 for a healthy model)
+    pub var_mean: f64,
+    /// std of per-dimension variances — Fig. 4's y-axis
+    pub var_std: f64,
+    /// mean |latent| magnitude (sanity: should stay O(1))
+    pub mean_abs: f64,
+    /// max |latent| (explosion detector)
+    pub max_abs: f64,
+}
+
+pub fn latent_stats(latents: &[f32], d: usize) -> LatentStats {
+    assert!(d > 0 && latents.len() % d == 0);
+    let n = latents.len() / d;
+    assert!(n > 1, "need at least 2 latents");
+    let mut var_per_dim = Vec::with_capacity(d);
+    for j in 0..d {
+        let mut mean = 0.0f64;
+        for i in 0..n {
+            mean += latents[i * d + j] as f64;
+        }
+        mean /= n as f64;
+        let mut var = 0.0f64;
+        for i in 0..n {
+            let dlt = latents[i * d + j] as f64 - mean;
+            var += dlt * dlt;
+        }
+        var_per_dim.push(var / n as f64);
+    }
+    let vm = var_per_dim.iter().sum::<f64>() / d as f64;
+    let vs = (var_per_dim.iter().map(|v| (v - vm) * (v - vm)).sum::<f64>() / d as f64).sqrt();
+    let mean_abs = latents.iter().map(|&x| x.abs() as f64).sum::<f64>() / latents.len() as f64;
+    let max_abs = latents.iter().fold(0.0f64, |m, &x| m.max(x.abs() as f64));
+    LatentStats {
+        var_mean: vm,
+        var_std: vs,
+        mean_abs,
+        max_abs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn standard_normal_latents() {
+        let mut rng = Pcg64::seed(1);
+        let (n, d) = (2000, 32);
+        let l: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let s = latent_stats(&l, d);
+        assert!((s.var_mean - 1.0).abs() < 0.05, "{}", s.var_mean);
+        assert!(s.var_std < 0.1, "{}", s.var_std);
+        assert!((s.mean_abs - 0.7979).abs() < 0.05); // E|N(0,1)| = sqrt(2/pi)
+    }
+
+    #[test]
+    fn heteroscedastic_latents_have_high_var_std() {
+        let mut rng = Pcg64::seed(2);
+        let (n, d) = (2000, 16);
+        // half the dims exploded to std 5
+        let l: Vec<f32> = (0..n * d)
+            .map(|i| {
+                let j = i % d;
+                let s = if j < d / 2 { 1.0 } else { 5.0 };
+                rng.normal_f32(0.0, s)
+            })
+            .collect();
+        let s = latent_stats(&l, d);
+        assert!(s.var_std > 5.0, "{}", s.var_std);
+    }
+
+    #[test]
+    fn detects_explosion() {
+        let mut l = vec![0.1f32; 100 * 4];
+        l[13] = 1e4;
+        let s = latent_stats(&l, 4);
+        assert!(s.max_abs >= 1e4);
+    }
+}

@@ -1,0 +1,10 @@
+//! Evaluation metrics: PSNR, windowed SSIM, Fréchet distance over a
+//! Lipschitz feature net, and latent-space variance statistics — the
+//! quantities behind the paper's Figures 3 and 4.
+
+pub mod coverage;
+pub mod features;
+pub mod fid;
+pub mod latent;
+pub mod psnr;
+pub mod ssim;

@@ -1,0 +1,77 @@
+//! Peak Signal-to-Noise Ratio — the paper's pixel-level fidelity metric
+//! (Fig. 3B). Images live in [-1, 1], so the peak-to-peak range is 2.
+
+use crate::stats::mse;
+
+/// PSNR in dB between a reference image and a test image (both [-1, 1]).
+pub fn psnr(reference: &[f32], test: &[f32]) -> f64 {
+    let m = mse(reference, test);
+    if m == 0.0 {
+        return f64::INFINITY;
+    }
+    let peak = 2.0f64; // dynamic range of [-1, 1]
+    10.0 * (peak * peak / m).log10()
+}
+
+/// Mean PSNR over a batch of flattened images.
+pub fn batch_psnr(reference: &[f32], test: &[f32], img_len: usize) -> f64 {
+    assert_eq!(reference.len(), test.len());
+    assert_eq!(reference.len() % img_len, 0);
+    let n = reference.len() / img_len;
+    let mut acc = 0.0;
+    for i in 0..n {
+        let a = &reference[i * img_len..(i + 1) * img_len];
+        let b = &test[i * img_len..(i + 1) * img_len];
+        // cap infinities (identical images) at a high but finite value so
+        // batch means stay informative; non-finite inputs score worst-case
+        let p = psnr(a, b);
+        acc += if p.is_nan() { 0.0 } else { p.min(99.0) };
+    }
+    acc / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn identical_images_infinite_psnr() {
+        let img = vec![0.3f32; 256];
+        assert!(psnr(&img, &img).is_infinite());
+    }
+
+    #[test]
+    fn known_value() {
+        // mse = 0.04 -> psnr = 10 log10(4/0.04) = 20 dB
+        let a = vec![0.0f32; 100];
+        let b = vec![0.2f32; 100];
+        // f32 representation of 0.2 puts us ~1e-7 off the exact 20 dB
+        assert!((psnr(&a, &b) - 20.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn monotone_in_noise() {
+        let mut rng = Pcg64::seed(1);
+        let a: Vec<f32> = (0..768).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let noisy = |amp: f32, rng: &mut Pcg64| -> Vec<f32> {
+            a.iter().map(|&x| x + rng.normal_f32(0.0, amp)).collect()
+        };
+        let p1 = psnr(&a, &noisy(0.01, &mut rng));
+        let p2 = psnr(&a, &noisy(0.1, &mut rng));
+        let p3 = psnr(&a, &noisy(0.5, &mut rng));
+        assert!(p1 > p2 && p2 > p3, "{p1} {p2} {p3}");
+    }
+
+    #[test]
+    fn batch_psnr_averages() {
+        let a = vec![0.0f32; 200];
+        let mut b = vec![0.0f32; 200];
+        for v in b[100..].iter_mut() {
+            *v = 0.2;
+        }
+        // first image identical (capped 99), second 20 dB
+        let got = batch_psnr(&a, &b, 100);
+        assert!((got - (99.0 + 20.0) / 2.0).abs() < 1e-5);
+    }
+}

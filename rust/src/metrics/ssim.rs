@@ -1,0 +1,168 @@
+//! Structural Similarity Index (SSIM) — the paper's perceptual metric
+//! (Fig. 3A). Full windowed implementation: 8×8 gaussian-weighted windows
+//! slid over each channel, per-window luminance/contrast/structure terms,
+//! averaged. Constants follow Wang et al. 2004 with L = 2 ([-1, 1] range).
+
+use crate::data::{IMG_C, IMG_HW};
+
+const WIN: usize = 8;
+const SIGMA: f64 = 1.5;
+const K1: f64 = 0.01;
+const K2: f64 = 0.03;
+const L: f64 = 2.0; // dynamic range of [-1, 1]
+
+/// Precomputed normalized gaussian window weights.
+fn gaussian_window() -> [f64; WIN * WIN] {
+    let mut w = [0f64; WIN * WIN];
+    let c = (WIN as f64 - 1.0) / 2.0;
+    let mut sum = 0.0;
+    for y in 0..WIN {
+        for x in 0..WIN {
+            let dx = x as f64 - c;
+            let dy = y as f64 - c;
+            let g = (-(dx * dx + dy * dy) / (2.0 * SIGMA * SIGMA)).exp();
+            w[y * WIN + x] = g;
+            sum += g;
+        }
+    }
+    for v in w.iter_mut() {
+        *v /= sum;
+    }
+    w
+}
+
+/// SSIM between two flattened [IMG_HW, IMG_HW, IMG_C] images in [-1, 1].
+pub fn ssim(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), IMG_HW * IMG_HW * IMG_C);
+    assert_eq!(a.len(), b.len());
+    let w = gaussian_window();
+    let c1 = (K1 * L) * (K1 * L);
+    let c2 = (K2 * L) * (K2 * L);
+
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    // stride-2 window placement: dense enough for 16x16, 5x5 windows/chan
+    for ch in 0..IMG_C {
+        let px = |img: &[f32], x: usize, y: usize| img[(y * IMG_HW + x) * IMG_C + ch] as f64;
+        let mut wy = 0;
+        while wy + WIN <= IMG_HW {
+            let mut wx = 0;
+            while wx + WIN <= IMG_HW {
+                // weighted moments inside the window
+                let (mut ma, mut mb) = (0.0f64, 0.0f64);
+                for y in 0..WIN {
+                    for x in 0..WIN {
+                        let g = w[y * WIN + x];
+                        ma += g * px(a, wx + x, wy + y);
+                        mb += g * px(b, wx + x, wy + y);
+                    }
+                }
+                let (mut va, mut vb, mut cov) = (0.0f64, 0.0f64, 0.0f64);
+                for y in 0..WIN {
+                    for x in 0..WIN {
+                        let g = w[y * WIN + x];
+                        let da = px(a, wx + x, wy + y) - ma;
+                        let db = px(b, wx + x, wy + y) - mb;
+                        va += g * da * da;
+                        vb += g * db * db;
+                        cov += g * da * db;
+                    }
+                }
+                let s = ((2.0 * ma * mb + c1) * (2.0 * cov + c2))
+                    / ((ma * ma + mb * mb + c1) * (va + vb + c2));
+                total += s;
+                count += 1;
+                wx += 2;
+            }
+            wy += 2;
+        }
+    }
+    total / count as f64
+}
+
+/// Mean SSIM over a batch of flattened images.
+pub fn batch_ssim(reference: &[f32], test: &[f32], img_len: usize) -> f64 {
+    assert_eq!(reference.len(), test.len());
+    let n = reference.len() / img_len;
+    let mut acc = 0.0;
+    for i in 0..n {
+        acc += ssim(
+            &reference[i * img_len..(i + 1) * img_len],
+            &test[i * img_len..(i + 1) * img_len],
+        );
+    }
+    acc / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Dataset, IMG_D};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn identical_images_score_one() {
+        let mut rng = Pcg64::seed(1);
+        let img = Dataset::SynthCifar.sample(&mut rng);
+        assert!((ssim(&img, &img) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn independent_images_score_low() {
+        let mut rng = Pcg64::seed(2);
+        let a = Dataset::SynthCifar.sample(&mut rng);
+        let b = Dataset::SynthCifar.sample(&mut rng);
+        let s = ssim(&a, &b);
+        assert!(s < 0.6, "s={s}");
+    }
+
+    #[test]
+    fn monotone_in_noise_amplitude() {
+        let mut rng = Pcg64::seed(3);
+        let img = Dataset::SynthCeleba.sample(&mut rng);
+        let noisy = |amp: f32, rng: &mut Pcg64| -> Vec<f32> {
+            img.iter()
+                .map(|&x| (x + rng.normal_f32(0.0, amp)).clamp(-1.0, 1.0))
+                .collect()
+        };
+        let s1 = ssim(&img, &noisy(0.02, &mut rng));
+        let s2 = ssim(&img, &noisy(0.1, &mut rng));
+        let s3 = ssim(&img, &noisy(0.4, &mut rng));
+        assert!(s1 > s2 && s2 > s3, "{s1} {s2} {s3}");
+        assert!(s1 > 0.8);
+    }
+
+    #[test]
+    fn symmetric() {
+        let mut rng = Pcg64::seed(4);
+        let a = Dataset::SynthMnist.sample(&mut rng);
+        let b = Dataset::SynthMnist.sample(&mut rng);
+        assert!((ssim(&a, &b) - ssim(&b, &a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bounded_above_by_one() {
+        let mut rng = Pcg64::seed(5);
+        for _ in 0..5 {
+            let a = Dataset::SynthImagenet.sample(&mut rng);
+            let b = Dataset::SynthImagenet.sample(&mut rng);
+            assert!(ssim(&a, &b) <= 1.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn batch_matches_singles() {
+        let mut rng = Pcg64::seed(6);
+        let a1 = Dataset::SynthCifar.sample(&mut rng);
+        let a2 = Dataset::SynthCifar.sample(&mut rng);
+        let b1 = Dataset::SynthCifar.sample(&mut rng);
+        let b2 = Dataset::SynthCifar.sample(&mut rng);
+        let mut ra = a1.clone();
+        ra.extend_from_slice(&a2);
+        let mut rb = b1.clone();
+        rb.extend_from_slice(&b2);
+        let got = batch_ssim(&ra, &rb, IMG_D);
+        let want = (ssim(&a1, &b1) + ssim(&a2, &b2)) / 2.0;
+        assert!((got - want).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,224 @@
+//! Binary checkpoint format for trained and quantized models.
+//!
+//! Layout (little-endian):
+//!   magic "FMQ1" | kind u32 | json header len u32 | json header bytes |
+//!   payload sections (raw f32/u64 arrays, lengths declared in header)
+//!
+//! kind 1 = full-precision theta; kind 2 = quantized model. The JSON header
+//! makes the format self-describing and versionable without a schema
+//! compiler.
+
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::params::ParamStore;
+use crate::model::quantized::QuantizedModel;
+use crate::model::spec::ModelSpec;
+use crate::quant::codebook::Codebook;
+use crate::quant::packing::PackedCodes;
+use crate::quant::QuantMethod;
+use crate::util::json::{parse, Json};
+
+const MAGIC: &[u8; 4] = b"FMQ1";
+
+fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_f32s(b: &[u8]) -> Result<Vec<f32>> {
+    if b.len() % 4 != 0 {
+        bail!("f32 payload not multiple of 4");
+    }
+    Ok(b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn u64s_to_bytes(xs: &[u64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 8);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_u64s(b: &[u8]) -> Result<Vec<u64>> {
+    if b.len() % 8 != 0 {
+        bail!("u64 payload not multiple of 8");
+    }
+    Ok(b.chunks_exact(8)
+        .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+        .collect())
+}
+
+fn write_file(path: &Path, kind: u32, header: &Json, payload: &[u8]) -> Result<()> {
+    let hdr = header.to_string().into_bytes();
+    let mut f = fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&kind.to_le_bytes())?;
+    f.write_all(&(hdr.len() as u32).to_le_bytes())?;
+    f.write_all(&hdr)?;
+    f.write_all(payload)?;
+    Ok(())
+}
+
+fn read_file(path: &Path) -> Result<(u32, Json, Vec<u8>)> {
+    let raw = fs::read(path).with_context(|| format!("read {path:?}"))?;
+    if raw.len() < 12 || &raw[..4] != MAGIC {
+        bail!("{path:?}: not an FMQ1 checkpoint");
+    }
+    let kind = u32::from_le_bytes([raw[4], raw[5], raw[6], raw[7]]);
+    let hlen = u32::from_le_bytes([raw[8], raw[9], raw[10], raw[11]]) as usize;
+    if raw.len() < 12 + hlen {
+        bail!("truncated header");
+    }
+    let header = parse(std::str::from_utf8(&raw[12..12 + hlen])?)?;
+    Ok((kind, header, raw[12 + hlen..].to_vec()))
+}
+
+/// Save a full-precision theta.
+pub fn save_theta(path: &Path, theta: &ParamStore, meta: Vec<(&str, Json)>) -> Result<()> {
+    let mut pairs = vec![("p", Json::Num(theta.len() as f64))];
+    pairs.extend(meta);
+    write_file(path, 1, &Json::obj(pairs), &f32s_to_bytes(theta.as_slice()))
+}
+
+/// Load a full-precision theta (checks length against spec).
+pub fn load_theta(path: &Path, spec: &ModelSpec) -> Result<ParamStore> {
+    let (kind, header, payload) = read_file(path)?;
+    if kind != 1 {
+        bail!("{path:?}: kind {kind}, expected full-precision (1)");
+    }
+    let p = header.req_usize("p")?;
+    if p != spec.p() {
+        bail!("checkpoint P={p}, spec P={}", spec.p());
+    }
+    let data = bytes_to_f32s(&payload)?;
+    if data.len() != p {
+        bail!("payload has {} f32s, header says {p}", data.len());
+    }
+    Ok(ParamStore::new(data))
+}
+
+/// Save a quantized model: packed codes + codebooks + biases.
+pub fn save_quantized(path: &Path, qm: &QuantizedModel) -> Result<()> {
+    let packed = qm.pack_codes()?;
+    let levels: Vec<Json> = qm
+        .codebooks
+        .iter()
+        .map(|cb| Json::from_f32s(&cb.levels))
+        .collect();
+    let header = Json::obj(vec![
+        ("method", Json::Str(qm.method.name().to_string())),
+        ("bits", Json::Num(qm.bits as f64)),
+        ("n_codes", Json::Num(packed.n as f64)),
+        ("n_words", Json::Num(packed.words.len() as f64)),
+        ("n_biases", Json::Num(qm.biases.len() as f64)),
+        ("codebooks", Json::Arr(levels)),
+    ]);
+    let mut payload = u64s_to_bytes(&packed.words);
+    payload.extend_from_slice(&f32s_to_bytes(&qm.biases));
+    write_file(path, 2, &header, &payload)
+}
+
+/// Load a quantized model.
+pub fn load_quantized(path: &Path, spec: &ModelSpec) -> Result<QuantizedModel> {
+    let (kind, header, payload) = read_file(path)?;
+    if kind != 2 {
+        bail!("{path:?}: kind {kind}, expected quantized (2)");
+    }
+    let method = QuantMethod::parse(header.req_str("method")?)
+        .context("unknown quant method in checkpoint")?;
+    let bits = header.req_usize("bits")? as u8;
+    let n_codes = header.req_usize("n_codes")?;
+    let n_words = header.req_usize("n_words")?;
+    let n_biases = header.req_usize("n_biases")?;
+    let words_bytes = n_words * 8;
+    if payload.len() != words_bytes + n_biases * 4 {
+        bail!("payload size mismatch");
+    }
+    let packed = PackedCodes {
+        bits,
+        n: n_codes,
+        words: bytes_to_u64s(&payload[..words_bytes])?,
+    };
+    let biases = bytes_to_f32s(&payload[words_bytes..])?;
+    let codebooks: Vec<Codebook> = header
+        .req("codebooks")?
+        .as_arr()
+        .context("codebooks not an array")?
+        .iter()
+        .map(|j| Ok(Codebook::new(j.to_f32s()?, bits)))
+        .collect::<Result<_>>()?;
+    QuantizedModel::from_packed(spec.clone(), method, bits, codebooks, packed, biases)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize_model, QuantMethod};
+    use crate::util::rng::Pcg64;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("fmq-ckpt-tests");
+        fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn theta_roundtrip() {
+        let spec = ModelSpec::default_spec();
+        let mut rng = Pcg64::seed(1);
+        let theta = spec.init_theta(&mut rng);
+        let p = tmp("theta.fmq");
+        save_theta(&p, &theta, vec![("note", Json::Str("test".into()))]).unwrap();
+        let back = load_theta(&p, &spec).unwrap();
+        assert_eq!(theta, back);
+    }
+
+    #[test]
+    fn quantized_roundtrip_preserves_dequant() {
+        let spec = ModelSpec::default_spec();
+        let mut rng = Pcg64::seed(2);
+        let theta = spec.init_theta(&mut rng);
+        let qm = quantize_model(&spec, &theta, QuantMethod::Ot, 3);
+        let p = tmp("q3.fmq");
+        save_quantized(&p, &qm).unwrap();
+        let back = load_quantized(&p, &spec).unwrap();
+        assert_eq!(back.method, QuantMethod::Ot);
+        assert_eq!(back.bits, 3);
+        assert_eq!(back.codes, qm.codes);
+        assert_eq!(back.biases, qm.biases);
+        for (a, b) in back.codebooks.iter().zip(qm.codebooks.iter()) {
+            assert_eq!(a.levels, b.levels);
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_kind_and_garbage() {
+        let spec = ModelSpec::default_spec();
+        let p = tmp("garbage.fmq");
+        fs::write(&p, b"not a checkpoint").unwrap();
+        assert!(load_theta(&p, &spec).is_err());
+        // theta file loaded as quantized
+        let theta = ParamStore::zeros(spec.p());
+        let p2 = tmp("theta2.fmq");
+        save_theta(&p2, &theta, vec![]).unwrap();
+        assert!(load_quantized(&p2, &spec).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_size() {
+        let spec = ModelSpec::default_spec();
+        let p = tmp("short.fmq");
+        save_theta(&p, &ParamStore::zeros(100), vec![]).unwrap();
+        assert!(load_theta(&p, &spec).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Model container: architecture spec, flat parameter store, checkpoint
+//! I/O and the quantized-model format.
+//!
+//! The spec regenerates the exact layer table that `python/compile/arch.py`
+//! defines; `runtime::artifacts` cross-checks it against the AOT
+//! `manifest.json` at load time so the flat-theta layout can never drift.
+
+pub mod checkpoint;
+pub mod params;
+pub mod quantized;
+pub mod spec;

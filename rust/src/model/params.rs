@@ -1,0 +1,92 @@
+//! Flat parameter store: the single theta[P] vector every artifact takes.
+
+use crate::model::spec::ModelSpec;
+
+/// Owns the flat f32 parameter vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamStore {
+    data: Vec<f32>,
+}
+
+impl ParamStore {
+    pub fn new(data: Vec<f32>) -> Self {
+        Self { data }
+    }
+
+    pub fn zeros(p: usize) -> Self {
+        Self { data: vec![0.0; p] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Slice of one named layer.
+    pub fn layer<'a>(&'a self, spec: &ModelSpec, name: &str) -> &'a [f32] {
+        let l = spec.layer(name).unwrap_or_else(|| panic!("no layer {name}"));
+        &self.data[l.offset..l.offset + l.size()]
+    }
+
+    pub fn layer_mut<'a>(&'a mut self, spec: &ModelSpec, name: &str) -> &'a mut [f32] {
+        let l = spec.layer(name).unwrap_or_else(|| panic!("no layer {name}"));
+        &mut self.data[l.offset..l.offset + l.size()]
+    }
+
+    /// L2 norm of the whole parameter vector.
+    pub fn norm(&self) -> f64 {
+        self.data
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Max |theta_i - other_i| — used to compare HLO vs CPU training paths.
+    pub fn max_abs_diff(&self, other: &ParamStore) -> f32 {
+        assert_eq!(self.len(), other.len());
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::ModelSpec;
+
+    #[test]
+    fn layer_slicing() {
+        let spec = ModelSpec::default_spec();
+        let mut theta = ParamStore::zeros(spec.p());
+        theta.layer_mut(&spec, "w_t")[0] = 7.0;
+        let off = spec.layer("w_t").unwrap().offset;
+        assert_eq!(theta.as_slice()[off], 7.0);
+        assert_eq!(theta.layer(&spec, "w_t").len(), 64 * 512);
+    }
+
+    #[test]
+    fn norm_and_diff() {
+        let a = ParamStore::new(vec![3.0, 4.0]);
+        let b = ParamStore::new(vec![3.0, 5.0]);
+        assert!((a.norm() - 5.0).abs() < 1e-12);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+}

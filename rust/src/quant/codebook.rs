@@ -1,0 +1,197 @@
+//! Codebook: the K ≤ 2^b representative levels plus assignment logic.
+//!
+//! Levels are kept sorted, so nearest-level assignment is a binary search
+//! (O(log K) per weight) instead of the naive O(K) scan — the same
+//! monotone-coupling fact that makes the 1-D OT solution analytic.
+
+/// Padding value for unused slots when a codebook is shipped to the fixed
+/// K_MAX=256 artifact input (mirrors `arch.CODEBOOK_PAD` on the python side).
+pub const CODEBOOK_PAD: f32 = 1.0e30;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Codebook {
+    /// Sorted representative levels (deduplicated).
+    pub levels: Vec<f32>,
+    /// Bit-width this codebook was built for.
+    pub bits: u8,
+}
+
+impl Codebook {
+    /// Build from possibly-unsorted, possibly-duplicated levels.
+    pub fn new(mut levels: Vec<f32>, bits: u8) -> Self {
+        assert!(!levels.is_empty(), "empty codebook");
+        assert!(levels.len() <= 1usize << bits, "too many levels for bits");
+        levels.sort_by(f32::total_cmp);
+        levels.dedup();
+        Self { levels, bits }
+    }
+
+    pub fn k(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Index of the nearest level (ties -> lower index, matching the
+    /// python `argmin` tie-break on first occurrence).
+    #[inline]
+    pub fn nearest(&self, x: f32) -> u32 {
+        let ls = &self.levels;
+        match ls.binary_search_by(|l| l.total_cmp(&x)) {
+            Ok(i) => i as u32,
+            Err(i) => {
+                if i == 0 {
+                    0
+                } else if i == ls.len() {
+                    (ls.len() - 1) as u32
+                } else {
+                    let lo = ls[i - 1];
+                    let hi = ls[i];
+                    // strict '<' keeps argmin's first-occurrence tie-break
+                    if (x - lo) <= (hi - x) {
+                        (i - 1) as u32
+                    } else {
+                        i as u32
+                    }
+                }
+            }
+        }
+    }
+
+    /// Assign every value to its nearest level.
+    pub fn assign(&self, xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|&x| self.nearest(x)).collect()
+    }
+
+    /// Reconstruct values from codes.
+    pub fn dequant(&self, codes: &[u32]) -> Vec<f32> {
+        codes.iter().map(|&c| self.levels[c as usize]).collect()
+    }
+
+    /// Quantize in one shot (assign + dequant), returning reconstruction.
+    pub fn reconstruct(&self, xs: &[f32]) -> Vec<f32> {
+        xs.iter()
+            .map(|&x| self.levels[self.nearest(x) as usize])
+            .collect()
+    }
+
+    /// Pad levels to `k_max` with CODEBOOK_PAD for the fixed-size artifact
+    /// input.
+    pub fn padded_levels(&self, k_max: usize) -> Vec<f32> {
+        assert!(self.levels.len() <= k_max);
+        let mut v = self.levels.clone();
+        v.resize(k_max, CODEBOOK_PAD);
+        v
+    }
+
+    /// Codebook-utilization: fraction of levels actually used by `codes`
+    /// (the paper's future-work §codebook-utilization analysis).
+    pub fn utilization(&self, codes: &[u32]) -> f64 {
+        let mut used = vec![false; self.levels.len()];
+        for &c in codes {
+            used[c as usize] = true;
+        }
+        used.iter().filter(|&&u| u).count() as f64 / self.levels.len() as f64
+    }
+
+    /// Shannon entropy (bits) of the code distribution — effective bits
+    /// actually spent vs the nominal b.
+    pub fn code_entropy(&self, codes: &[u32]) -> f64 {
+        if codes.is_empty() {
+            return 0.0;
+        }
+        let mut counts = vec![0usize; self.levels.len()];
+        for &c in codes {
+            counts[c as usize] += 1;
+        }
+        let n = codes.len() as f64;
+        counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / n;
+                -p * p.log2()
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn nearest_basic() {
+        let cb = Codebook::new(vec![-1.0, 0.0, 1.0], 2);
+        assert_eq!(cb.nearest(-0.9), 0);
+        assert_eq!(cb.nearest(-0.4), 1); // closer to 0
+        assert_eq!(cb.nearest(0.6), 2);
+        assert_eq!(cb.nearest(100.0), 2); // clamps
+        assert_eq!(cb.nearest(-100.0), 0);
+    }
+
+    #[test]
+    fn nearest_tie_breaks_low() {
+        let cb = Codebook::new(vec![0.0, 1.0], 1);
+        assert_eq!(cb.nearest(0.5), 0); // equidistant -> lower index
+    }
+
+    #[test]
+    fn dedup_and_sort() {
+        let cb = Codebook::new(vec![1.0, -1.0, 1.0, 0.0], 2);
+        assert_eq!(cb.levels, vec![-1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn assign_dequant_roundtrip_on_levels() {
+        let cb = Codebook::new(vec![-0.5, 0.1, 0.7], 2);
+        let codes = cb.assign(&cb.levels.clone());
+        assert_eq!(cb.dequant(&codes), cb.levels);
+    }
+
+    #[test]
+    fn padded_levels_layout() {
+        let cb = Codebook::new(vec![0.0, 1.0], 3);
+        let p = cb.padded_levels(8);
+        assert_eq!(p.len(), 8);
+        assert_eq!(&p[..2], &[0.0, 1.0]);
+        assert!(p[2..].iter().all(|&v| v == CODEBOOK_PAD));
+    }
+
+    #[test]
+    fn binary_search_matches_linear_scan() {
+        forall("nearest == argmin scan", 200, |g| {
+            let mut levels = g.f32_vec(1..=32, -2.0..=2.0);
+            levels.sort_by(f32::total_cmp);
+            levels.dedup();
+            let cb = Codebook {
+                levels: levels.clone(),
+                bits: 8,
+            };
+            let xs = g.f32_vec(1..=64, -3.0..=3.0);
+            xs.iter().all(|&x| {
+                let fast = cb.nearest(x) as usize;
+                // linear argmin with first-occurrence tie-break
+                let mut best = 0usize;
+                let mut bd = f32::INFINITY;
+                for (i, &l) in levels.iter().enumerate() {
+                    let d = (x - l).abs();
+                    if d < bd {
+                        bd = d;
+                        best = i;
+                    }
+                }
+                (cb.levels[fast] - x).abs() == (cb.levels[best] - x).abs()
+            })
+        });
+    }
+
+    #[test]
+    fn utilization_and_entropy() {
+        let cb = Codebook::new(vec![0.0, 1.0, 2.0, 3.0], 2);
+        let codes = vec![0, 0, 1, 1];
+        assert!((cb.utilization(&codes) - 0.5).abs() < 1e-12);
+        assert!((cb.code_entropy(&codes) - 1.0).abs() < 1e-12); // two equi-likely codes
+        let uniform = vec![0, 1, 2, 3];
+        assert!((cb.code_entropy(&uniform) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,71 @@
+//! On-device quantization driver — the paper's "efficient on-chip
+//! quantization routines" future-work item, built on the L1 Pallas
+//! `assign` kernel.
+//!
+//! The coordinator computes codebooks host-side (sort + segment means,
+//! cheap) and dispatches the O(N·K) nearest-centroid assignment to the
+//! compiled `assign` artifact in fixed 65536-value chunks (padding the
+//! tail with the first centroid value, which maps to a valid code).
+
+use anyhow::Result;
+
+use crate::model::params::ParamStore;
+use crate::model::quantized::QuantizedModel;
+use crate::model::spec::ModelSpec;
+use crate::quant::codebook::Codebook;
+use crate::quant::QuantMethod;
+use crate::runtime::ArtifactSet;
+
+/// Assign codes for one value slice through the device kernel.
+pub fn assign_on_device(art: &ArtifactSet, vals: &[f32], cb: &Codebook) -> Result<Vec<u32>> {
+    let chunk = art.assign_chunk;
+    let padded_cb = cb.padded_levels(art.spec.k_max);
+    let mut out = Vec::with_capacity(vals.len());
+    let mut buf = vec![0f32; chunk];
+    for piece in vals.chunks(chunk) {
+        let codes = if piece.len() == chunk {
+            art.assign_chunk_exec(piece, &padded_cb)?
+        } else {
+            // pad the tail with a real level so every lane stays valid
+            buf[..piece.len()].copy_from_slice(piece);
+            for v in buf[piece.len()..].iter_mut() {
+                *v = cb.levels[0];
+            }
+            art.assign_chunk_exec(&buf, &padded_cb)?
+        };
+        out.extend(codes[..piece.len()].iter().map(|&c| c as u32));
+    }
+    Ok(out)
+}
+
+/// Quantize a whole model with device-side assignment (host-side codebook
+/// construction). Mirrors `quant::quantize_model` exactly — an integration
+/// test pins the two against each other.
+pub fn quantize_model_on_device(
+    art: &ArtifactSet,
+    spec: &ModelSpec,
+    theta: &ParamStore,
+    method: QuantMethod,
+    bits: u8,
+) -> Result<QuantizedModel> {
+    let mut codebooks = Vec::new();
+    let mut codes: Vec<u32> = Vec::with_capacity(spec.pw());
+    for layer in spec.weight_layers() {
+        let w = theta.layer(spec, &layer.name);
+        let cb = method.build_codebook(w, bits);
+        codes.extend(assign_on_device(art, w, &cb)?);
+        codebooks.push(cb);
+    }
+    let mut biases: Vec<f32> = Vec::with_capacity(spec.pb());
+    for layer in spec.bias_layers() {
+        biases.extend_from_slice(theta.layer(spec, &layer.name));
+    }
+    Ok(QuantizedModel::new(
+        spec.clone(),
+        method,
+        bits,
+        codebooks,
+        codes,
+        biases,
+    ))
+}

@@ -1,0 +1,92 @@
+//! Quantization error accounting: per-layer and whole-model W₂²/MSE plus
+//! the sup-norm error that Theorem 3's worst-case analysis uses.
+
+use super::codebook::Codebook;
+
+/// Error summary for one quantized tensor.
+#[derive(Clone, Debug)]
+pub struct QuantError {
+    /// Mean squared error == W₂²(P_w, Q) under the monotone coupling.
+    pub w2_sq: f64,
+    /// sup-norm error max |w - q(w)| (the δ of Assumption 1-B analyses).
+    pub sup: f64,
+    /// signed mean error (bias) — should be ~0 for centroid codebooks.
+    pub bias: f64,
+    pub n: usize,
+}
+
+pub fn tensor_error(w: &[f32], cb: &Codebook) -> QuantError {
+    let mut sq = 0.0f64;
+    let mut sup = 0.0f64;
+    let mut bias = 0.0f64;
+    for &x in w {
+        let q = cb.levels[cb.nearest(x) as usize];
+        let d = (x - q) as f64;
+        sq += d * d;
+        bias += d;
+        sup = sup.max(d.abs());
+    }
+    let n = w.len().max(1);
+    QuantError {
+        w2_sq: sq / n as f64,
+        sup,
+        bias: bias / n as f64,
+        n: w.len(),
+    }
+}
+
+/// Aggregate per-layer errors into model totals (size-weighted).
+pub fn aggregate(errors: &[QuantError]) -> QuantError {
+    let total_n: usize = errors.iter().map(|e| e.n).sum();
+    let mut agg = QuantError {
+        w2_sq: 0.0,
+        sup: 0.0,
+        bias: 0.0,
+        n: total_n,
+    };
+    for e in errors {
+        let w = e.n as f64 / total_n.max(1) as f64;
+        agg.w2_sq += e.w2_sq * w;
+        agg.bias += e.bias * w;
+        agg.sup = agg.sup.max(e.sup);
+    }
+    agg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::otq::equal_mass_codebook;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn zero_error_when_codebook_exact() {
+        let cb = Codebook::new(vec![-1.0, 0.0, 1.0], 2);
+        let e = tensor_error(&[-1.0, 0.0, 1.0, 1.0], &cb);
+        assert_eq!(e.w2_sq, 0.0);
+        assert_eq!(e.sup, 0.0);
+        assert_eq!(e.bias, 0.0);
+    }
+
+    #[test]
+    fn centroid_codebooks_are_nearly_unbiased() {
+        let mut rng = Pcg64::seed(1);
+        let w: Vec<f32> = (0..32768).map(|_| rng.normal_f32(0.0, 0.05)).collect();
+        let cb = equal_mass_codebook(&w, 4);
+        let e = tensor_error(&w, &cb);
+        assert!(e.bias.abs() < 2e-4, "bias={}", e.bias);
+        assert!(e.w2_sq > 0.0);
+        assert!(e.sup >= e.w2_sq.sqrt());
+    }
+
+    #[test]
+    fn aggregate_weights_by_size() {
+        let a = QuantError { w2_sq: 1.0, sup: 0.5, bias: 0.1, n: 100 };
+        let b = QuantError { w2_sq: 3.0, sup: 2.0, bias: -0.1, n: 300 };
+        let agg = aggregate(&[a, b]);
+        assert!((agg.w2_sq - 2.5).abs() < 1e-12);
+        assert_eq!(agg.sup, 2.0);
+        assert!((agg.bias - (-0.05)).abs() < 1e-12);
+        assert_eq!(agg.n, 400);
+    }
+}

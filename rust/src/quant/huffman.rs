@@ -1,0 +1,319 @@
+//! Canonical Huffman coding of quantization codes — storage beyond plain
+//! bit-packing.
+//!
+//! Equal-mass OT codes are uniform by construction (entropy ≈ b bits →
+//! incompressible; the quantizer already spent its budget optimally).
+//! Uniform/log2 codes are heavily skewed (most weights fall in the few
+//! central levels), so entropy coding claws back real bytes — this module
+//! quantifies that trade-off (see `bench_ablations`), connecting the
+//! paper's codebook-utilization future-work item to actual storage.
+
+use std::collections::BinaryHeap;
+
+use anyhow::{bail, Result};
+
+/// Canonical Huffman code table: code lengths per symbol.
+#[derive(Clone, Debug)]
+pub struct HuffmanTable {
+    /// bit length per symbol (0 = symbol absent)
+    pub lengths: Vec<u8>,
+    /// canonical codes, aligned with `lengths`
+    codes: Vec<u32>,
+}
+
+const MAX_LEN: u8 = 32;
+
+impl HuffmanTable {
+    /// Build from symbol frequencies.
+    pub fn build(freqs: &[u64]) -> Result<Self> {
+        let n = freqs.len();
+        if n == 0 {
+            bail!("empty alphabet");
+        }
+        let present: Vec<usize> = (0..n).filter(|&i| freqs[i] > 0).collect();
+        if present.is_empty() {
+            bail!("no symbols present");
+        }
+        let mut lengths = vec![0u8; n];
+        if present.len() == 1 {
+            lengths[present[0]] = 1; // degenerate: one symbol, 1-bit code
+            return Ok(Self::canonicalize(lengths));
+        }
+        // standard Huffman over a min-heap of (weight, node)
+        #[derive(PartialEq, Eq)]
+        struct Node {
+            w: u64,
+            id: usize,
+        }
+        impl Ord for Node {
+            fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+                o.w.cmp(&self.w).then(o.id.cmp(&self.id)) // min-heap
+            }
+        }
+        impl PartialOrd for Node {
+            fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+                Some(self.cmp(o))
+            }
+        }
+        let mut heap = BinaryHeap::new();
+        // tree arena: leaves 0..n, internal nodes after
+        let mut parent = vec![usize::MAX; n];
+        for &i in &present {
+            heap.push(Node { w: freqs[i], id: i });
+        }
+        while heap.len() > 1 {
+            let a = heap.pop().unwrap();
+            let b = heap.pop().unwrap();
+            let id = parent.len();
+            parent.push(usize::MAX);
+            // record parents
+            set_parent(&mut parent, a.id, id);
+            set_parent(&mut parent, b.id, id);
+            heap.push(Node {
+                w: a.w + b.w,
+                id,
+            });
+        }
+        let root = heap.pop().unwrap().id;
+        for &i in &present {
+            let mut len = 0u8;
+            let mut cur = i;
+            while cur != root {
+                cur = parent[cur];
+                len += 1;
+            }
+            lengths[i] = len.max(1).min(MAX_LEN);
+        }
+        Ok(Self::canonicalize(lengths))
+    }
+
+    /// Assign canonical codes from lengths (shorter lengths first, then
+    /// symbol order) — decodable from lengths alone.
+    fn canonicalize(lengths: Vec<u8>) -> Self {
+        let mut symbols: Vec<usize> = (0..lengths.len()).filter(|&i| lengths[i] > 0).collect();
+        symbols.sort_by_key(|&i| (lengths[i], i));
+        let mut codes = vec![0u32; lengths.len()];
+        let mut code = 0u32;
+        let mut prev_len = 0u8;
+        for &s in &symbols {
+            code <<= lengths[s] - prev_len;
+            codes[s] = code;
+            code += 1;
+            prev_len = lengths[s];
+        }
+        Self { lengths, codes }
+    }
+
+    /// Encode a code stream; returns (bits, total bit count).
+    pub fn encode(&self, codes: &[u32]) -> Result<(Vec<u64>, usize)> {
+        let mut words = Vec::new();
+        let mut acc = 0u64;
+        let mut fill = 0usize;
+        let mut total = 0usize;
+        for &c in codes {
+            let c = c as usize;
+            if c >= self.lengths.len() || self.lengths[c] == 0 {
+                bail!("symbol {c} not in table");
+            }
+            let len = self.lengths[c] as usize;
+            let code = self.codes[c] as u64;
+            // write MSB-first into the accumulator
+            for k in (0..len).rev() {
+                let bit = (code >> k) & 1;
+                acc |= bit << (63 - fill);
+                fill += 1;
+                if fill == 64 {
+                    words.push(acc);
+                    acc = 0;
+                    fill = 0;
+                }
+            }
+            total += len;
+        }
+        if fill > 0 {
+            words.push(acc);
+        }
+        Ok((words, total))
+    }
+
+    /// Decode `n` symbols from a bit stream.
+    pub fn decode(&self, words: &[u64], total_bits: usize, n: usize) -> Result<Vec<u32>> {
+        // build (length, code) -> symbol lookup
+        let mut by_len: Vec<Vec<(u32, u32)>> = vec![Vec::new(); (MAX_LEN + 1) as usize];
+        for (s, (&len, &code)) in self.lengths.iter().zip(self.codes.iter()).enumerate() {
+            if len > 0 {
+                by_len[len as usize].push((code, s as u32));
+            }
+        }
+        for v in by_len.iter_mut() {
+            v.sort_unstable();
+        }
+        let mut out = Vec::with_capacity(n);
+        let mut pos = 0usize;
+        let read_bit = |p: usize| -> u64 { (words[p / 64] >> (63 - (p % 64))) & 1 };
+        while out.len() < n {
+            let mut code = 0u32;
+            let mut len = 0usize;
+            loop {
+                if pos >= total_bits {
+                    bail!("bit stream exhausted after {} symbols", out.len());
+                }
+                code = (code << 1) | read_bit(pos) as u32;
+                pos += 1;
+                len += 1;
+                if len > MAX_LEN as usize {
+                    bail!("code longer than MAX_LEN — corrupt stream");
+                }
+                if let Ok(i) = by_len[len].binary_search_by_key(&code, |&(c, _)| c) {
+                    out.push(by_len[len][i].1);
+                    break;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Expected bits/symbol under the given frequency distribution.
+    pub fn expected_bits(&self, freqs: &[u64]) -> f64 {
+        let total: u64 = freqs.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        freqs
+            .iter()
+            .zip(self.lengths.iter())
+            .map(|(&f, &l)| f as f64 * l as f64)
+            .sum::<f64>()
+            / total as f64
+    }
+}
+
+fn set_parent(parent: &mut [usize], child: usize, p: usize) {
+    parent[child] = p;
+}
+
+/// Frequencies of a code stream over alphabet size k.
+pub fn frequencies(codes: &[u32], k: usize) -> Vec<u64> {
+    let mut f = vec![0u64; k];
+    for &c in codes {
+        f[c as usize] += 1;
+    }
+    f
+}
+
+/// Compressed size (bytes) of a code stream under Huffman vs plain b-bit
+/// packing. Returns (huffman_bytes, packed_bytes).
+pub fn compare_storage(codes: &[u32], bits: u8, k: usize) -> Result<(usize, usize)> {
+    let freqs = frequencies(codes, k);
+    let table = HuffmanTable::build(&freqs)?;
+    let (_, total_bits) = table.encode(codes)?;
+    // + table overhead: one length byte per symbol
+    let huff = total_bits.div_ceil(8) + k;
+    let packed = (codes.len() * bits as usize).div_ceil(8);
+    Ok((huff, packed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn roundtrip_skewed_distribution() {
+        let mut rng = Pcg64::seed(1);
+        // zipf-ish: symbol i with weight 1/(i+1)^2
+        let w: Vec<f32> = (0..16).map(|i| 1.0 / ((i + 1) as f32).powi(2)).collect();
+        let codes: Vec<u32> = (0..10_000).map(|_| rng.pick_weighted(&w) as u32).collect();
+        let freqs = frequencies(&codes, 16);
+        let t = HuffmanTable::build(&freqs).unwrap();
+        let (words, bits) = t.encode(&codes).unwrap();
+        let back = t.decode(&words, bits, codes.len()).unwrap();
+        assert_eq!(back, codes);
+        // skewed -> fewer than 4 bits/symbol on average
+        assert!(
+            (bits as f64 / codes.len() as f64) < 3.0,
+            "{} bits/sym",
+            bits as f64 / codes.len() as f64
+        );
+    }
+
+    #[test]
+    fn uniform_codes_near_b_bits() {
+        let mut rng = Pcg64::seed(2);
+        let codes: Vec<u32> = (0..20_000).map(|_| rng.below(16) as u32).collect();
+        let t = HuffmanTable::build(&frequencies(&codes, 16)).unwrap();
+        let (_, bits) = t.encode(&codes).unwrap();
+        let per = bits as f64 / codes.len() as f64;
+        assert!((3.9..=4.3).contains(&per), "{per} bits/sym");
+    }
+
+    #[test]
+    fn near_entropy_optimal() {
+        let mut rng = Pcg64::seed(3);
+        let w = [8.0f32, 4.0, 2.0, 1.0, 1.0];
+        let codes: Vec<u32> = (0..50_000).map(|_| rng.pick_weighted(&w) as u32).collect();
+        let freqs = frequencies(&codes, 5);
+        let t = HuffmanTable::build(&freqs).unwrap();
+        let total: u64 = freqs.iter().sum();
+        let entropy: f64 = freqs
+            .iter()
+            .filter(|&&f| f > 0)
+            .map(|&f| {
+                let p = f as f64 / total as f64;
+                -p * p.log2()
+            })
+            .sum();
+        let avg = t.expected_bits(&freqs);
+        assert!(avg >= entropy - 1e-9);
+        assert!(avg <= entropy + 1.0, "avg {avg} vs entropy {entropy}"); // Huffman <= H+1
+    }
+
+    #[test]
+    fn degenerate_single_symbol() {
+        let codes = vec![3u32; 100];
+        let t = HuffmanTable::build(&frequencies(&codes, 8)).unwrap();
+        let (words, bits) = t.encode(&codes).unwrap();
+        assert_eq!(bits, 100); // 1 bit each
+        assert_eq!(t.decode(&words, bits, 100).unwrap(), codes);
+    }
+
+    #[test]
+    fn rejects_unknown_symbol() {
+        let t = HuffmanTable::build(&[10, 10, 0, 0]).unwrap();
+        assert!(t.encode(&[2]).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_random_alphabets() {
+        forall("huffman roundtrip", 60, |g| {
+            let k = g.usize_in(1..=64);
+            let n = g.len(1..=400);
+            let codes: Vec<u32> = (0..n).map(|_| g.usize_in(0..=k - 1) as u32).collect();
+            let t = match HuffmanTable::build(&frequencies(&codes, k)) {
+                Ok(t) => t,
+                Err(_) => return false,
+            };
+            let (words, bits) = t.encode(&codes).unwrap();
+            t.decode(&words, bits, codes.len()).unwrap() == codes
+        });
+    }
+
+    /// The storage story: OT codes are ~incompressible (already optimal),
+    /// uniform codes compress well — the information-theoretic echo of the
+    /// equal-mass construction.
+    #[test]
+    fn ot_codes_incompressible_uniform_codes_compress() {
+        use crate::quant::{quantize_tensor, QuantMethod};
+        let mut rng = Pcg64::seed(4);
+        let w: Vec<f32> = (0..32768).map(|_| rng.normal_f32(0.0, 0.05)).collect();
+        let (_, ot_codes) = quantize_tensor(QuantMethod::Ot, &w, 4);
+        let (_, un_codes) = quantize_tensor(QuantMethod::Uniform, &w, 4);
+        let (ot_h, ot_p) = compare_storage(&ot_codes, 4, 16).unwrap();
+        let (un_h, un_p) = compare_storage(&un_codes, 4, 16).unwrap();
+        assert_eq!(ot_p, un_p);
+        // OT: huffman within ~5% of packed; uniform: >= 15% smaller
+        assert!(ot_h as f64 >= 0.95 * ot_p as f64, "ot {ot_h} vs {ot_p}");
+        assert!(un_h as f64 <= 0.85 * un_p as f64, "uniform {un_h} vs {un_p}");
+    }
+}

@@ -1,0 +1,90 @@
+//! Logarithmic (base-2) quantization baseline — the paper's "LogBase2".
+//!
+//! Levels are sign × power-of-two magnitudes: ±2^e for e on an integer
+//! grid chosen from the weight range, plus an explicit zero level.
+//! Hardware-friendly (multiplies become shifts) but allocates resolution
+//! geometrically — far too coarse near the distribution mode, which is
+//! exactly where FM weight mass concentrates; the paper shows it collapses
+//! first at low bits.
+
+use super::codebook::Codebook;
+
+pub fn log2_codebook(w: &[f32], bits: u8) -> Codebook {
+    let k = 1usize << bits;
+    let max_abs = w.iter().fold(0.0f32, |m, &x| m.max(x.abs())).max(1e-12);
+    // largest exponent that covers max |w|
+    let e_hi = max_abs.log2().ceil() as i32;
+    // budget: 1 level for zero, the rest split into ± pairs
+    let pairs = (k - 1) / 2;
+    let mut levels = Vec::with_capacity(k);
+    levels.push(0.0);
+    for i in 0..pairs {
+        let mag = 2.0f32.powi(e_hi - i as i32);
+        levels.push(mag);
+        levels.push(-mag);
+    }
+    // odd leftover slot: one more positive magnitude
+    if levels.len() < k {
+        levels.push(2.0f32.powi(e_hi - pairs as i32));
+    }
+    Codebook::new(levels, bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::otq::equal_mass_codebook;
+    use crate::stats::mse;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn levels_are_signed_powers_of_two_plus_zero() {
+        let w = [-0.8f32, 0.3, 0.05, -0.01];
+        let cb = log2_codebook(&w, 3);
+        assert!(cb.levels.contains(&0.0));
+        for &l in &cb.levels {
+            if l != 0.0 {
+                let e = l.abs().log2();
+                assert!((e - e.round()).abs() < 1e-6, "level {l} not power of two");
+            }
+        }
+    }
+
+    #[test]
+    fn covers_max_weight() {
+        let mut rng = Pcg64::seed(1);
+        let w: Vec<f32> = (0..1024).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+        let cb = log2_codebook(&w, 5);
+        let max_abs = w.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let top = cb.levels.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        assert!(top >= max_abs);
+    }
+
+    #[test]
+    fn ot_beats_log2_on_gaussian() {
+        // the paper's Fig. 3 ordering at any bit-width
+        let mut rng = Pcg64::seed(2);
+        let w: Vec<f32> = (0..32768).map(|_| rng.normal_f32(0.0, 0.05)).collect();
+        for bits in 2..=6u8 {
+            let e_log = mse(&w, &log2_codebook(&w, bits).reconstruct(&w));
+            let e_ot = mse(&w, &equal_mass_codebook(&w, bits).reconstruct(&w));
+            assert!(e_ot < e_log, "bits={bits} ot={e_ot} log2={e_log}");
+        }
+    }
+
+    #[test]
+    fn respects_level_budget() {
+        let mut rng = Pcg64::seed(3);
+        let w: Vec<f32> = (0..512).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for bits in 2..=8u8 {
+            assert!(log2_codebook(&w, bits).k() <= 1usize << bits);
+        }
+    }
+
+    #[test]
+    fn zero_heavy_weights_quantize_to_zero() {
+        let w = vec![0.0f32; 100];
+        let cb = log2_codebook(&w, 4);
+        assert_eq!(cb.reconstruct(&[0.0])[0], 0.0);
+    }
+}

@@ -1,0 +1,227 @@
+//! Mixed-precision bit allocation — Corollary 13.1 made practical.
+//!
+//! The paper assigns one bit-width to every layer. Layers differ in size
+//! and sensitivity, so for a fixed *average* bit budget it is better to
+//! solve
+//!
+//! ```text
+//! min Σ_l  s_l · D_l(b_l)    s.t.   Σ_l n_l b_l ≤ B_total
+//! ```
+//!
+//! where D_l(b) is the measured per-weight distortion of layer l at b bits
+//! and s_l a sensitivity weight. With D_l convex-decreasing in b, the
+//! greedy marginal-gain allocator below is optimal (discrete
+//! water-filling): repeatedly give one more bit to the layer with the
+//! best distortion-reduction per parameter-bit spent.
+
+use crate::model::params::ParamStore;
+use crate::model::quantized::QuantizedModel;
+use crate::model::spec::ModelSpec;
+use crate::quant::codebook::Codebook;
+use crate::quant::QuantMethod;
+
+pub const MIN_BITS: u8 = 2;
+pub const MAX_BITS: u8 = 8;
+
+/// Per-layer distortion table D_l(b) (mean squared error per weight).
+pub struct DistortionTable {
+    /// [layer][bits - MIN_BITS]
+    pub d: Vec<Vec<f64>>,
+    pub sizes: Vec<usize>,
+}
+
+pub fn measure_distortions(
+    spec: &ModelSpec,
+    theta: &ParamStore,
+    method: QuantMethod,
+) -> DistortionTable {
+    let mut d = Vec::new();
+    let mut sizes = Vec::new();
+    for l in spec.weight_layers() {
+        let w = theta.layer(spec, &l.name);
+        let mut row = Vec::new();
+        for bits in MIN_BITS..=MAX_BITS {
+            let cb = method.build_codebook(w, bits);
+            row.push(crate::quant::otq::w2_sq(w, &cb));
+        }
+        d.push(row);
+        sizes.push(l.size());
+    }
+    DistortionTable { d, sizes }
+}
+
+/// Greedy optimal allocation under a total-bit budget expressed as an
+/// average bits/weight target. Returns per-layer bit-widths.
+pub fn allocate(table: &DistortionTable, avg_bits: f64) -> Vec<u8> {
+    let n_layers = table.sizes.len();
+    let total_params: usize = table.sizes.iter().sum();
+    let budget = (avg_bits * total_params as f64) as i64;
+    let mut bits = vec![MIN_BITS; n_layers];
+    let mut spent: i64 = table
+        .sizes
+        .iter()
+        .map(|&n| n as i64 * MIN_BITS as i64)
+        .sum();
+    loop {
+        // best marginal gain per parameter-bit
+        let mut best: Option<(usize, f64)> = None;
+        for l in 0..n_layers {
+            if bits[l] >= MAX_BITS {
+                continue;
+            }
+            let cost = table.sizes[l] as i64;
+            if spent + cost > budget {
+                continue;
+            }
+            let cur = table.d[l][(bits[l] - MIN_BITS) as usize] * table.sizes[l] as f64;
+            let nxt = table.d[l][(bits[l] + 1 - MIN_BITS) as usize] * table.sizes[l] as f64;
+            let gain = (cur - nxt) / cost as f64;
+            if best.map_or(true, |(_, g)| gain > g) {
+                best = Some((l, gain));
+            }
+        }
+        match best {
+            Some((l, gain)) if gain > 0.0 => {
+                bits[l] += 1;
+                spent += table.sizes[l] as i64;
+            }
+            _ => break,
+        }
+    }
+    bits
+}
+
+/// Quantize with per-layer bit-widths (codebooks padded to K_MAX as usual,
+/// so the serving artifact is unchanged — mixed precision is free at
+/// inference time).
+pub fn quantize_mixed(
+    spec: &ModelSpec,
+    theta: &ParamStore,
+    method: QuantMethod,
+    bits_per_layer: &[u8],
+) -> QuantizedModel {
+    let wl = spec.weight_layers();
+    assert_eq!(bits_per_layer.len(), wl.len());
+    let mut codebooks: Vec<Codebook> = Vec::new();
+    let mut codes: Vec<u32> = Vec::with_capacity(spec.pw());
+    for (l, &b) in wl.iter().zip(bits_per_layer.iter()) {
+        let w = theta.layer(spec, &l.name);
+        let cb = method.build_codebook(w, b);
+        codes.extend(cb.assign(w));
+        codebooks.push(cb);
+    }
+    let mut biases: Vec<f32> = Vec::with_capacity(spec.pb());
+    for l in spec.bias_layers() {
+        biases.extend_from_slice(theta.layer(spec, &l.name));
+    }
+    // stored bit-width = max over layers (packing granularity); effective
+    // average is what the allocator controlled
+    let max_bits = *bits_per_layer.iter().max().unwrap();
+    QuantizedModel::new(spec.clone(), method, max_bits, codebooks, codes, biases)
+}
+
+/// Size-weighted total distortion of an allocation (for tests/benches).
+pub fn total_distortion(table: &DistortionTable, bits: &[u8]) -> f64 {
+    let total: usize = table.sizes.iter().sum();
+    bits.iter()
+        .enumerate()
+        .map(|(l, &b)| table.d[l][(b - MIN_BITS) as usize] * table.sizes[l] as f64)
+        .sum::<f64>()
+        / total as f64
+}
+
+/// Average bits/weight of an allocation.
+pub fn avg_bits(table: &DistortionTable, bits: &[u8]) -> f64 {
+    let total: usize = table.sizes.iter().sum();
+    bits.iter()
+        .enumerate()
+        .map(|(l, &b)| b as f64 * table.sizes[l] as f64)
+        .sum::<f64>()
+        / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn setup() -> (ModelSpec, ParamStore, DistortionTable) {
+        let spec = ModelSpec::default_spec();
+        let mut rng = Pcg64::seed(5);
+        let theta = spec.init_theta(&mut rng);
+        let table = measure_distortions(&spec, &theta, QuantMethod::Ot);
+        (spec, theta, table)
+    }
+
+    #[test]
+    fn distortion_table_monotone() {
+        let (_, _, table) = setup();
+        for row in &table.d {
+            for w in row.windows(2) {
+                assert!(w[1] <= w[0] * 1.01, "distortion rose with bits: {row:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn allocation_respects_budget_and_bounds() {
+        let (_, _, table) = setup();
+        for target in [2.5f64, 4.0, 6.0] {
+            let bits = allocate(&table, target);
+            assert!(bits.iter().all(|&b| (MIN_BITS..=MAX_BITS).contains(&b)));
+            assert!(
+                avg_bits(&table, &bits) <= target + 1e-9,
+                "target {target} exceeded: {}",
+                avg_bits(&table, &bits)
+            );
+        }
+    }
+
+    /// The point of the exercise: at equal average bits, the mixed
+    /// allocation's total distortion never exceeds the uniform assignment.
+    #[test]
+    fn mixed_beats_or_ties_uniform_assignment() {
+        let (_, _, table) = setup();
+        for b in [3u8, 4, 6] {
+            let uniform = vec![b; table.sizes.len()];
+            let mixed = allocate(&table, b as f64);
+            let du = total_distortion(&table, &uniform);
+            let dm = total_distortion(&table, &mixed);
+            assert!(dm <= du * 1.001, "b={b}: mixed {dm} vs uniform {du}");
+        }
+    }
+
+    /// Sensitivity shows up: the high-variance w_t layer (fan-in 64) should
+    /// receive at least as many bits as the big homogeneous blocks at tight
+    /// budgets.
+    #[test]
+    fn high_sigma_layer_gets_more_bits() {
+        let (spec, _, table) = setup();
+        let bits = allocate(&table, 3.0);
+        let wl = spec.weight_layers();
+        let idx_wt = wl.iter().position(|l| l.name == "w_t").unwrap();
+        let idx_w1 = wl.iter().position(|l| l.name == "w1_0").unwrap();
+        assert!(
+            bits[idx_wt] >= bits[idx_w1],
+            "w_t got {} bits, w1_0 got {}",
+            bits[idx_wt],
+            bits[idx_w1]
+        );
+    }
+
+    #[test]
+    fn quantize_mixed_roundtrip() {
+        let (spec, theta, table) = setup();
+        let bits = allocate(&table, 3.5);
+        let qm = quantize_mixed(&spec, &theta, QuantMethod::Ot, &bits);
+        assert_eq!(qm.codes.len(), spec.pw());
+        // reconstruction error close to the table's prediction
+        let err = qm.w2_error(&theta);
+        let predicted = total_distortion(&table, &bits);
+        assert!(
+            (err.w2_sq - predicted).abs() / predicted < 0.05,
+            "measured {} vs predicted {predicted}",
+            err.w2_sq
+        );
+    }
+}

@@ -1,0 +1,253 @@
+//! Optimal-transport (equal-mass) quantization — the paper's Algorithm 1.
+//!
+//! The trained weights of a layer are an empirical distribution
+//! P_w = (1/N) Σ δ_{w_i}. The K-point distribution Q minimizing W₂(P_w, Q)
+//! on ℝ is found by the monotone (quantile) coupling: split the *sorted*
+//! weights into K contiguous groups of equal mass and take each group's
+//! mean as its codeword (Lloyd–Max optimality in 1-D). Equal-mass binning
+//! automatically spends resolution where the density is high and lets the
+//! tail bins be wide — the mechanism behind the C_E < C_U front-constant
+//! advantage of Theorem 6.
+//!
+//! `lloyd_refine` optionally runs classic Lloyd iterations afterwards;
+//! for heavy-tailed layers this can strictly reduce MSE versus the plain
+//! equal-mass split (the paper's "ensuring effective representation"
+//! future-work item — we measure this in the ablation bench).
+
+use super::codebook::Codebook;
+use crate::stats::sorted_copy;
+
+/// Equal-mass split of *sorted* values into K groups: group j spans
+/// `sorted[floor(jN/K) .. floor((j+1)N/K)]`. Returns group means.
+/// Mirrors `python/tests/test_model.py::_equal_mass_codebook` exactly.
+pub fn equal_mass_levels(sorted: &[f32], k: usize) -> Vec<f32> {
+    assert!(k >= 1);
+    let n = sorted.len();
+    let mut levels = Vec::with_capacity(k);
+    for j in 0..k {
+        let a = j * n / k;
+        let b = (j + 1) * n / k;
+        if b > a {
+            let sum: f64 = sorted[a..b].iter().map(|&x| x as f64).sum();
+            levels.push((sum / (b - a) as f64) as f32);
+        }
+        // empty group (N < K): skip — dedup in Codebook handles collisions
+    }
+    if levels.is_empty() {
+        levels.push(0.0);
+    }
+    levels
+}
+
+/// Algorithm 1 (per-tensor): equal-mass codebook for one flattened layer.
+pub fn equal_mass_codebook(w: &[f32], bits: u8) -> Codebook {
+    let k = 1usize << bits;
+    let sorted = sorted_copy(w);
+    Codebook::new(equal_mass_levels(&sorted, k), bits)
+}
+
+/// Classic Lloyd refinement on the 1-D codebook: alternate
+/// (nearest-level partition) <-> (partition means) until the MSE stops
+/// improving. Keeps W₂ optimality's fixed point; strictly non-increasing
+/// in MSE each iteration.
+pub fn lloyd_refine(w: &[f32], cb: &Codebook, max_iters: usize) -> Codebook {
+    let sorted = sorted_copy(w);
+    let mut levels = cb.levels.clone();
+    for _ in 0..max_iters {
+        // partition boundaries are midpoints between adjacent levels; on
+        // sorted data each cell is a contiguous range -> one linear pass.
+        let mut sums = vec![0f64; levels.len()];
+        let mut counts = vec![0usize; levels.len()];
+        let mut cell = 0usize;
+        for &x in &sorted {
+            while cell + 1 < levels.len()
+                && (x - levels[cell]).abs() > (x - levels[cell + 1]).abs()
+            {
+                cell += 1;
+            }
+            sums[cell] += x as f64;
+            counts[cell] += 1;
+        }
+        let mut changed = false;
+        for i in 0..levels.len() {
+            if counts[i] > 0 {
+                let new = (sums[i] / counts[i] as f64) as f32;
+                if (new - levels[i]).abs() > 1e-12 {
+                    changed = true;
+                }
+                levels[i] = new;
+            }
+        }
+        levels.sort_by(f32::total_cmp);
+        if !changed {
+            break;
+        }
+    }
+    Codebook::new(levels, cb.bits)
+}
+
+/// Convenience: equal-mass + Lloyd refinement.
+pub fn otq_refined_codebook(w: &[f32], bits: u8, lloyd_iters: usize) -> Codebook {
+    let cb = equal_mass_codebook(w, bits);
+    if lloyd_iters == 0 {
+        cb
+    } else {
+        lloyd_refine(w, &cb, lloyd_iters)
+    }
+}
+
+/// The W₂² distance between the empirical weight distribution and its
+/// quantization — for the monotone 1-D coupling this is exactly the mean
+/// squared quantization error (paper Eq. 9 discussion).
+pub fn w2_sq(w: &[f32], cb: &Codebook) -> f64 {
+    let rec = cb.reconstruct(w);
+    crate::stats::mse(w, &rec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::uniform::uniform_codebook;
+    use crate::stats::mse;
+    use crate::util::check::{forall, Gen};
+    use crate::util::rng::Pcg64;
+
+    fn gaussian_weights(n: usize, sigma: f32, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seed(seed);
+        (0..n).map(|_| rng.normal_f32(0.0, sigma)).collect()
+    }
+
+    #[test]
+    fn equal_mass_bins_have_equal_mass() {
+        let w = gaussian_weights(16384, 1.0, 1);
+        let cb = equal_mass_codebook(&w, 4); // K = 16
+        let codes = cb.assign(&w);
+        let mut counts = vec![0usize; cb.k()];
+        for &c in &codes {
+            counts[c as usize] += 1;
+        }
+        let expect = w.len() / cb.k();
+        for (i, &c) in counts.iter().enumerate() {
+            // nearest-assignment can shift boundary elements slightly from
+            // the pure quantile split; mass stays within a few percent.
+            assert!(
+                (c as f64 - expect as f64).abs() < 0.25 * expect as f64,
+                "bin {i}: {c} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn centroid_is_group_mean_exact_small_case() {
+        // N=8, K=4: groups of 2, centroids are pair means
+        let sorted = [1.0f32, 2.0, 3.0, 5.0, 8.0, 9.0, 10.0, 20.0];
+        let lv = equal_mass_levels(&sorted, 4);
+        assert_eq!(lv, vec![1.5, 4.0, 8.5, 15.0]);
+    }
+
+    #[test]
+    fn k_greater_than_n_degenerates_gracefully() {
+        let lv = equal_mass_levels(&[1.0, 2.0], 8);
+        assert!(!lv.is_empty());
+        let cb = Codebook::new(lv, 3);
+        // both values representable exactly
+        assert_eq!(cb.reconstruct(&[1.0, 2.0]), vec![1.0, 2.0]);
+    }
+
+    /// 1-D W₂ optimality (spot check): no small perturbation of the
+    /// codebook may lower the MSE.
+    #[test]
+    fn local_optimality_after_lloyd() {
+        let w = gaussian_weights(8192, 0.05, 2);
+        let cb = otq_refined_codebook(&w, 3, 50);
+        let base = w2_sq(&w, &cb);
+        let mut rng = Pcg64::seed(3);
+        for _ in 0..20 {
+            let mut lv = cb.levels.clone();
+            let i = rng.below(lv.len());
+            lv[i] += rng.normal_f32(0.0, 0.002);
+            lv.sort_by(f32::total_cmp);
+            let pert = Codebook { levels: lv, bits: 3 };
+            assert!(
+                w2_sq(&w, &pert) >= base * (1.0 - 1e-4),
+                "perturbation lowered W2"
+            );
+        }
+    }
+
+    #[test]
+    fn lloyd_never_increases_mse() {
+        forall("lloyd monotone", 40, |g: &mut Gen| {
+            let w = g.nasty_weights(64..=2048);
+            let bits = g.usize_in(2..=6) as u8;
+            let cb0 = equal_mass_codebook(&w, bits);
+            let cb1 = lloyd_refine(&w, &cb0, 25);
+            w2_sq(&w, &cb1) <= w2_sq(&w, &cb0) * (1.0 + 1e-6)
+        });
+    }
+
+    /// Theorem-6 mechanism check, with the honest caveat the paper glosses
+    /// over: Bennett's D_E = α³/12 · 2^{-2b} is the *optimal-point-density*
+    /// (λ ∝ f^{1/3}) error, while equal-mass binning uses λ ∝ f — so the
+    /// plain Algorithm-1 quantizer sits a constant factor (~2–4×) above the
+    /// Bennett value on Gaussians, and Lloyd refinement closes most of the
+    /// gap. Both scale as 2^{-2b}, which is what Theorem 6 needs.
+    #[test]
+    fn de_matches_bennett_integral_gaussian() {
+        let sigma = 0.05f64;
+        let w = gaussian_weights(1 << 18, sigma as f32, 4);
+        let alpha3 = crate::stats::dist::alpha_gaussian(sigma).powi(3);
+        for bits in 4..=6u8 {
+            let de = alpha3 / 12.0 * 2.0f64.powi(-2 * bits as i32);
+            let d_em = w2_sq(&w, &equal_mass_codebook(&w, bits));
+            let ratio_em = d_em / de;
+            // equal-mass drifts further above Bennett as b grows (its tail
+            // cells keep a fixed mass, not a fixed width)
+            assert!(
+                (1.0..12.0).contains(&ratio_em),
+                "bits={bits} equal-mass={d_em:.3e} bennett={de:.3e} ratio={ratio_em:.2}"
+            );
+            // Lloyd-refined OT approaches the Bennett optimum
+            let d_ll = w2_sq(&w, &otq_refined_codebook(&w, bits, 300));
+            let ratio_ll = d_ll / de;
+            assert!(d_ll <= d_em * 1.0001);
+            assert!(
+                (0.5..2.0).contains(&ratio_ll),
+                "bits={bits} lloyd={d_ll:.3e} bennett={de:.3e} ratio={ratio_ll:.2}"
+            );
+        }
+        // the 2^{-2b} slope itself (16x per 2 bits) on the refined codebook
+        let d4 = w2_sq(&w, &otq_refined_codebook(&w, 4, 300));
+        let d6 = w2_sq(&w, &otq_refined_codebook(&w, 6, 300));
+        let per_two_bits = d4 / d6;
+        assert!(
+            (8.0..32.0).contains(&per_two_bits),
+            "slope off 2^-2b: {per_two_bits}"
+        );
+    }
+
+    #[test]
+    fn ot_beats_uniform_more_on_heavy_tails() {
+        // Laplace weights: the OT advantage should be larger than on Gaussian
+        let mut rng = Pcg64::seed(5);
+        let lap: Vec<f32> = (0..65536).map(|_| rng.laplace(0.05) as f32).collect();
+        let gau = gaussian_weights(65536, 0.05 * std::f64::consts::SQRT_2 as f32, 6);
+        let adv = |w: &[f32]| {
+            let o = w2_sq(w, &equal_mass_codebook(w, 3));
+            let u = mse(w, &uniform_codebook(w, 3).reconstruct(w));
+            u / o
+        };
+        let adv_lap = adv(&lap);
+        let adv_gau = adv(&gau);
+        assert!(adv_lap > adv_gau, "lap={adv_lap} gau={adv_gau}");
+        assert!(adv_gau > 1.0);
+    }
+
+    #[test]
+    fn handles_constant_and_tiny_inputs() {
+        let cb = equal_mass_codebook(&[0.5; 100], 4);
+        assert_eq!(cb.levels, vec![0.5]);
+        let cb = equal_mass_codebook(&[1.0], 8);
+        assert_eq!(cb.reconstruct(&[1.0]), vec![1.0]);
+    }
+}

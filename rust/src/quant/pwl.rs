@@ -1,0 +1,106 @@
+//! Piecewise-linear (PWL) quantization baseline.
+//!
+//! Two uniform grids: a dense one over the central "core" of the
+//! distribution (between the 2.5% and 97.5% quantiles) holding 3/4 of the
+//! levels, and a sparse one over the tails holding the rest. This is the
+//! standard piecewise-linear PTQ construction the paper benchmarks as
+//! "PWL": better than plain uniform on peaked distributions, but not
+//! mass-adaptive like OT.
+
+use super::codebook::Codebook;
+use crate::stats::{quantile_sorted, sorted_copy};
+
+pub fn pwl_codebook(w: &[f32], bits: u8) -> Codebook {
+    let k = 1usize << bits;
+    let s = sorted_copy(w);
+    let lo = s[0];
+    let hi = s[s.len() - 1];
+    let core_lo = quantile_sorted(&s, 0.025);
+    let core_hi = quantile_sorted(&s, 0.975);
+
+    // degenerate core -> plain uniform over [lo, hi]
+    if core_hi <= core_lo || k < 4 {
+        let span = (hi - lo).max(1e-12);
+        let levels = (0..k)
+            .map(|i| lo + span * (i as f32 + 0.5) / k as f32)
+            .collect();
+        return Codebook::new(levels, bits);
+    }
+
+    let k_core = (3 * k) / 4;
+    let k_tail = k - k_core;
+    let mut levels = Vec::with_capacity(k);
+    // dense core grid (cell centers)
+    let core_span = core_hi - core_lo;
+    for i in 0..k_core {
+        levels.push(core_lo + core_span * (i as f32 + 0.5) / k_core as f32);
+    }
+    // sparse tails: split remaining levels between the two tails by span
+    let left_span = (core_lo - lo).max(0.0);
+    let right_span = (hi - core_hi).max(0.0);
+    let total = (left_span + right_span).max(1e-12);
+    let k_left = ((k_tail as f32 * left_span / total).round() as usize).min(k_tail);
+    let k_right = k_tail - k_left;
+    for i in 0..k_left {
+        levels.push(lo + left_span * (i as f32 + 0.5) / k_left as f32);
+    }
+    for i in 0..k_right {
+        levels.push(core_hi + right_span * (i as f32 + 0.5) / k_right as f32);
+    }
+    Codebook::new(levels, bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::uniform::uniform_codebook;
+    use crate::stats::mse;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn level_count_within_budget() {
+        let mut rng = Pcg64::seed(1);
+        let w: Vec<f32> = (0..4096).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for bits in 2..=8u8 {
+            let cb = pwl_codebook(&w, bits);
+            assert!(cb.k() <= 1usize << bits);
+            assert!(cb.k() >= (1usize << bits) / 2);
+        }
+    }
+
+    #[test]
+    fn beats_uniform_on_outlier_heavy_weights() {
+        // with outliers, PWL's dense core should beat plain uniform
+        let mut rng = Pcg64::seed(2);
+        let mut w: Vec<f32> = (0..8192).map(|_| rng.normal_f32(0.0, 0.05)).collect();
+        for _ in 0..16 {
+            w.push(rng.normal_f32(0.0, 2.0)); // heavy outliers
+        }
+        let e_pwl = mse(&w, &pwl_codebook(&w, 4).reconstruct(&w));
+        let e_uni = mse(&w, &uniform_codebook(&w, 4).reconstruct(&w));
+        assert!(e_pwl < e_uni, "pwl={e_pwl} uniform={e_uni}");
+    }
+
+    #[test]
+    fn covers_full_range() {
+        let mut rng = Pcg64::seed(3);
+        let w: Vec<f32> = (0..2048).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+        let cb = pwl_codebook(&w, 5);
+        let min_w = w.iter().fold(f32::INFINITY, |a, &b| a.min(b));
+        let max_w = w.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        // extreme values reconstruct within one tail-cell width
+        let rec = cb.reconstruct(&[min_w, max_w]);
+        assert!((rec[0] - min_w).abs() < (max_w - min_w) * 0.2);
+        assert!((rec[1] - max_w).abs() < (max_w - min_w) * 0.2);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        let cb = pwl_codebook(&[1.0; 64], 4);
+        assert!(cb.k() >= 1);
+        let rec = cb.reconstruct(&[1.0]);
+        assert!((rec[0] - 1.0).abs() < 0.51);
+        let cb2 = pwl_codebook(&[0.0, 1.0], 2);
+        assert!(cb2.k() <= 4);
+    }
+}

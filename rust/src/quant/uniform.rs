@@ -1,0 +1,88 @@
+//! Uniform symmetric PTQ — the paper's primary baseline.
+//!
+//! A single symmetric range [-R, R] wide enough to cover every weight in
+//! the layer (Definition 1), with 2^b equally spaced reconstruction levels
+//! at cell centers. Step Δ = 2R/2^b, worst-case per-weight error
+//! δ_U ≤ Δ/2 = R·2^{-(b-1)} (Definition 2) — the quantity Theorem 3's
+//! FID bound is built from. Because R must cover the single largest
+//! weight, outliers inflate every bin (the paper's "Intuition" paragraph).
+
+use super::codebook::Codebook;
+
+/// Symmetric clipping range R = max |w| (full coverage, as in Def. 1).
+pub fn symmetric_range(w: &[f32]) -> f32 {
+    w.iter().fold(0.0f32, |m, &x| m.max(x.abs())).max(1e-12)
+}
+
+/// Uniform codebook: 2^b cell centers of [-R, R].
+pub fn uniform_codebook(w: &[f32], bits: u8) -> Codebook {
+    let r = symmetric_range(w);
+    let k = 1usize << bits;
+    let delta = 2.0 * r / k as f32;
+    let levels = (0..k)
+        .map(|i| -r + delta * (i as f32 + 0.5))
+        .collect::<Vec<_>>();
+    Codebook::new(levels, bits)
+}
+
+/// Worst-case per-weight error δ_U = R / 2^{b-1} (Definition 2).
+pub fn delta_u(r: f64, bits: u8) -> f64 {
+    r / 2.0f64.powi(bits as i32 - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn levels_are_cell_centers() {
+        let w = [-1.0f32, 1.0];
+        let cb = uniform_codebook(&w, 2); // R=1, K=4, delta=0.5
+        assert_eq!(cb.levels, vec![-0.75, -0.25, 0.25, 0.75]);
+    }
+
+    #[test]
+    fn worst_case_error_bound_holds() {
+        forall("uniform |w - q(w)| <= delta_u", 100, |g| {
+            let w = g.nasty_weights(8..=1024);
+            let bits = g.usize_in(2..=8) as u8;
+            let cb = uniform_codebook(&w, bits);
+            let r = symmetric_range(&w) as f64;
+            let bound = delta_u(r, bits) + 1e-6;
+            let rec = cb.reconstruct(&w);
+            w.iter()
+                .zip(rec.iter())
+                .all(|(&x, &y)| ((x - y).abs() as f64) <= bound)
+        });
+    }
+
+    #[test]
+    fn delta_u_halves_per_bit() {
+        let r = 3.0;
+        for b in 2..8u8 {
+            assert!((delta_u(r, b) / delta_u(r, b + 1) - 2.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn outlier_inflates_every_bin() {
+        // the paper's intuition: one huge weight degrades everyone's error
+        let mut rng = Pcg64::seed(1);
+        let mut w: Vec<f32> = (0..4096).map(|_| rng.normal_f32(0.0, 0.05)).collect();
+        let cb_clean = uniform_codebook(&w, 4);
+        let e_clean = crate::stats::mse(&w, &cb_clean.reconstruct(&w));
+        w.push(5.0); // outlier
+        let cb_out = uniform_codebook(&w, 4);
+        let e_out = crate::stats::mse(&w[..4096], &cb_out.reconstruct(&w[..4096]));
+        assert!(e_out > 10.0 * e_clean, "clean={e_clean} out={e_out}");
+    }
+
+    #[test]
+    fn range_never_zero() {
+        assert!(symmetric_range(&[0.0, 0.0]) > 0.0);
+        let cb = uniform_codebook(&[0.0; 16], 3);
+        assert!(cb.k() >= 1);
+    }
+}

@@ -1,0 +1,320 @@
+//! Artifact set: manifest-driven loading of every AOT-compiled entry point,
+//! with the layer-table cross-check against the rust `ModelSpec`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::params::ParamStore;
+use crate::model::quantized::QuantizedModel;
+use crate::model::spec::ModelSpec;
+use crate::runtime::exec::{self, cpu_client, Arg, Executable};
+use crate::util::json::{parse, Json};
+
+/// All compiled entry points + shape info from the manifest.
+pub struct ArtifactSet {
+    pub spec: ModelSpec,
+    pub manifest: Json,
+    pub b_train: usize,
+    pub b_sample: usize,
+    pub assign_chunk: usize,
+    client: xla::PjRtClient,
+    velocity_fwd: Executable,
+    sample_step: Executable,
+    qsample_step: Executable,
+    train_step: Executable,
+    assign: Executable,
+    dequant_theta: Executable,
+}
+
+/// Default artifact directory (relative to the repo root / CWD).
+pub fn default_dir() -> PathBuf {
+    std::env::var("FMQ_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// True if a complete artifact set exists at `dir` (tests gate on this).
+pub fn available(dir: &Path) -> bool {
+    [
+        "manifest.json",
+        "velocity_fwd.hlo.txt",
+        "sample_step.hlo.txt",
+        "qsample_step.hlo.txt",
+        "train_step.hlo.txt",
+        "assign.hlo.txt",
+        "dequant_theta.hlo.txt",
+    ]
+    .iter()
+    .all(|f| dir.join(f).exists())
+}
+
+impl ArtifactSet {
+    /// Load + compile everything. One-time cost; executables are reused
+    /// across the whole run.
+    pub fn load(dir: &Path) -> Result<Self> {
+        if !available(dir) {
+            bail!(
+                "artifact set incomplete at {dir:?} — run `make artifacts` first"
+            );
+        }
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let manifest = parse(&manifest_text).context("parse manifest.json")?;
+        let spec = ModelSpec::default_spec();
+        spec.matches_manifest(&manifest)
+            .context("manifest/spec layer-table mismatch — rebuild artifacts")?;
+        let b_train = manifest.req_usize("b_train")?;
+        let b_sample = manifest.req_usize("b_sample")?;
+        let assign_chunk = manifest.req_usize("assign_chunk")?;
+        let client = cpu_client()?;
+        let load = |name: &str| Executable::load(&client, name, &dir.join(format!("{name}.hlo.txt")));
+        Ok(Self {
+            spec,
+            manifest,
+            b_train,
+            b_sample,
+            assign_chunk,
+            velocity_fwd: load("velocity_fwd")?,
+            sample_step: load("sample_step")?,
+            qsample_step: load("qsample_step")?,
+            train_step: load("train_step")?,
+            assign: load("assign")?,
+            dequant_theta: load("dequant_theta")?,
+            client,
+        })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// v = f_θ(x, t): x flat [B_SAMPLE, D], t [B_SAMPLE].
+    pub fn velocity(&self, theta: &ParamStore, x: &[f32], t: &[f32]) -> Result<Vec<f32>> {
+        let d = self.spec.d as i64;
+        let b = self.b_sample as i64;
+        self.velocity_fwd.run_single_f32(&[
+            Arg::F32(theta.as_slice()),
+            Arg::F32Shaped(x, &[b, d]),
+            Arg::F32(t),
+        ])
+    }
+
+    /// One fp32 Euler step (signed dt). One-shot path: uploads theta each
+    /// call — use [`ArtifactSet::sample_session`] for multi-step sampling.
+    pub fn sample_step(&self, theta: &ParamStore, x: &[f32], t: f32, dt: f32) -> Result<Vec<f32>> {
+        let d = self.spec.d as i64;
+        let b = self.b_sample as i64;
+        self.sample_step.run_single_f32(&[
+            Arg::F32(theta.as_slice()),
+            Arg::F32Shaped(x, &[b, d]),
+            Arg::ScalarF32(t),
+            Arg::ScalarF32(dt),
+        ])
+    }
+
+    /// One quantized Euler step (codes + padded codebooks + biases) — the
+    /// serving hot path; dequantization happens inside the Pallas qmm tile.
+    /// One-shot path: uploads codes each call — use
+    /// [`ArtifactSet::qsample_session`] for multi-step sampling.
+    pub fn qsample_step(
+        &self,
+        codes: &[i32],
+        biases: &[f32],
+        codebooks_padded: &[f32],
+        x: &[f32],
+        t: f32,
+        dt: f32,
+    ) -> Result<Vec<f32>> {
+        let d = self.spec.d as i64;
+        let b = self.b_sample as i64;
+        let nw = self.spec.weight_layers().len() as i64;
+        let k = self.spec.k_max as i64;
+        self.qsample_step.run_single_f32(&[
+            Arg::I32(codes),
+            Arg::F32(biases),
+            Arg::F32Shaped(codebooks_padded, &[nw, k]),
+            Arg::F32Shaped(x, &[b, d]),
+            Arg::ScalarF32(t),
+            Arg::ScalarF32(dt),
+        ])
+    }
+
+    /// Device-resident fp32 sampling session: theta staged once; per step
+    /// only the two scalars move host->device and the state chains on
+    /// device (§Perf optimization 1 in EXPERIMENTS.md).
+    pub fn sample_session(&self, theta: &ParamStore) -> Result<SampleSession<'_>> {
+        let theta_buf = exec::stage_f32(&self.client, theta.as_slice(), &[theta.len()])?;
+        Ok(SampleSession {
+            art: self,
+            theta: theta_buf,
+        })
+    }
+
+    /// Device-resident quantized sampling session: codes (9.1 MB at i32),
+    /// biases and codebooks staged once; each step dequantizes on the fly
+    /// through the Pallas qmm gather (the paper-faithful TPU mode).
+    pub fn qsample_session(&self, qm: &QuantizedModel) -> Result<QSampleSession<'_>> {
+        let nw = self.spec.weight_layers().len();
+        let k = self.spec.k_max;
+        Ok(QSampleSession {
+            art: self,
+            codes: exec::stage_i32(&self.client, &qm.codes_i32(), &[self.spec.pw()])?,
+            biases: exec::stage_f32(&self.client, &qm.biases, &[self.spec.pb()])?,
+            cbs: exec::stage_f32(&self.client, &qm.codebooks_padded(), &[nw, k])?,
+        })
+    }
+
+    /// Dequantize-on-load session: run the `dequant_theta` artifact once on
+    /// device, keep the reconstructed fp32 theta buffer resident, and
+    /// sample with the fp32 step. Numerically identical to the on-the-fly
+    /// mode (same codebook lookups) but pays the gather once per deployment
+    /// instead of once per step — §Perf optimization 2.
+    pub fn qsample_session_dequant(&self, qm: &QuantizedModel) -> Result<SampleSession<'_>> {
+        let nw = self.spec.weight_layers().len();
+        let k = self.spec.k_max;
+        let codes = exec::stage_i32(&self.client, &qm.codes_i32(), &[self.spec.pw()])?;
+        let biases = exec::stage_f32(&self.client, &qm.biases, &[self.spec.pb()])?;
+        let cbs = exec::stage_f32(&self.client, &qm.codebooks_padded(), &[nw, k])?;
+        let theta = self
+            .dequant_theta
+            .execute_buffers(&[&codes, &biases, &cbs])?;
+        Ok(SampleSession { art: self, theta })
+    }
+
+    /// Host-side dequantization through the artifact (used by tests to pin
+    /// the on-device reconstruction against `QuantizedModel::dequantize`).
+    pub fn dequantize(&self, qm: &QuantizedModel) -> Result<Vec<f32>> {
+        let nw = self.spec.weight_layers().len() as i64;
+        let k = self.spec.k_max as i64;
+        self.dequant_theta.run_single_f32(&[
+            Arg::I32(&qm.codes_i32()),
+            Arg::F32(&qm.biases),
+            Arg::F32Shaped(&qm.codebooks_padded(), &[nw, k]),
+        ])
+    }
+
+    /// Convenience wrapper taking a QuantizedModel.
+    pub fn qsample_step_model(
+        &self,
+        qm: &QuantizedModel,
+        x: &[f32],
+        t: f32,
+        dt: f32,
+    ) -> Result<Vec<f32>> {
+        self.qsample_step(
+            &qm.codes_i32(),
+            &qm.biases,
+            &qm.codebooks_padded(),
+            x,
+            t,
+            dt,
+        )
+    }
+
+    /// One Adam training step; returns (theta', m', v', loss).
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &self,
+        theta: &ParamStore,
+        m: &[f32],
+        v: &[f32],
+        step: f32,
+        x1: &[f32],
+        x0: &[f32],
+        t: &[f32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, f32)> {
+        let d = self.spec.d as i64;
+        let b = self.b_train as i64;
+        let mut out = self.train_step.run_f32(&[
+            Arg::F32(theta.as_slice()),
+            Arg::F32(m),
+            Arg::F32(v),
+            Arg::ScalarF32(step),
+            Arg::F32Shaped(x1, &[b, d]),
+            Arg::F32Shaped(x0, &[b, d]),
+            Arg::F32(t),
+            Arg::ScalarF32(lr),
+        ])?;
+        if out.len() != 4 {
+            bail!("train_step returned {} outputs, expected 4", out.len());
+        }
+        let loss_vec = out.pop().unwrap();
+        let v2 = out.pop().unwrap();
+        let m2 = out.pop().unwrap();
+        let th2 = out.pop().unwrap();
+        Ok((th2, m2, v2, loss_vec[0]))
+    }
+
+    /// On-device nearest-centroid assignment over one chunk.
+    pub fn assign_chunk_exec(&self, vals: &[f32], centroids_padded: &[f32]) -> Result<Vec<i32>> {
+        if vals.len() != self.assign_chunk {
+            bail!(
+                "assign expects exactly {} values, got {}",
+                self.assign_chunk,
+                vals.len()
+            );
+        }
+        self.assign
+            .run_single_i32(&[Arg::F32(vals), Arg::F32(centroids_padded)])
+    }
+}
+
+/// Multi-step fp32 sampler with device-resident theta.
+pub struct SampleSession<'a> {
+    art: &'a ArtifactSet,
+    theta: xla::PjRtBuffer,
+}
+
+impl SampleSession<'_> {
+    /// Integrate x from t0 to t1 in `steps` Euler steps; the state stays on
+    /// device between steps.
+    pub fn integrate(&self, x: &[f32], t0: f32, t1: f32, steps: usize) -> Result<Vec<f32>> {
+        let art = self.art;
+        let b = self.art.b_sample;
+        let d = art.spec.d;
+        let dt = (t1 - t0) / steps as f32;
+        let mut xbuf = exec::stage_f32(&art.client, x, &[b, d])?;
+        let dt_buf = exec::stage_f32(&art.client, &[dt], &[])?;
+        for s in 0..steps {
+            let t = t0 + s as f32 * dt;
+            let t_buf = exec::stage_f32(&art.client, &[t], &[])?;
+            xbuf = art
+                .sample_step
+                .execute_buffers(&[&self.theta, &xbuf, &t_buf, &dt_buf])?;
+        }
+        exec::fetch_f32(&xbuf)
+    }
+}
+
+/// Multi-step quantized sampler with device-resident codes/codebooks.
+pub struct QSampleSession<'a> {
+    art: &'a ArtifactSet,
+    codes: xla::PjRtBuffer,
+    biases: xla::PjRtBuffer,
+    cbs: xla::PjRtBuffer,
+}
+
+impl QSampleSession<'_> {
+    pub fn integrate(&self, x: &[f32], t0: f32, t1: f32, steps: usize) -> Result<Vec<f32>> {
+        let art = self.art;
+        let b = art.b_sample;
+        let d = art.spec.d;
+        let dt = (t1 - t0) / steps as f32;
+        let mut xbuf = exec::stage_f32(&art.client, x, &[b, d])?;
+        let dt_buf = exec::stage_f32(&art.client, &[dt], &[])?;
+        for s in 0..steps {
+            let t = t0 + s as f32 * dt;
+            let t_buf = exec::stage_f32(&art.client, &[t], &[])?;
+            xbuf = art.qsample_step.execute_buffers(&[
+                &self.codes,
+                &self.biases,
+                &self.cbs,
+                &xbuf,
+                &t_buf,
+                &dt_buf,
+            ])?;
+        }
+        exec::fetch_f32(&xbuf)
+    }
+}

@@ -1,0 +1,168 @@
+//! Typed execution helpers over the `xla` crate: f32/i32 slices in,
+//! f32 vectors out, tuple outputs unpacked.
+
+use anyhow::{anyhow, Context, Result};
+
+/// An input argument for an executable.
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    /// f32 buffer with an explicit shape (row-major).
+    F32Shaped(&'a [f32], &'a [i64]),
+    I32(&'a [i32]),
+    I32Shaped(&'a [i32], &'a [i64]),
+    ScalarF32(f32),
+}
+
+impl Arg<'_> {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Arg::F32(xs) => xla::Literal::vec1(xs),
+            Arg::F32Shaped(xs, dims) => xla::Literal::vec1(xs)
+                .reshape(dims)
+                .map_err(|e| anyhow!("reshape f32 to {dims:?}: {e:?}"))?,
+            Arg::I32(xs) => xla::Literal::vec1(xs),
+            Arg::I32Shaped(xs, dims) => xla::Literal::vec1(xs)
+                .reshape(dims)
+                .map_err(|e| anyhow!("reshape i32 to {dims:?}: {e:?}"))?,
+            Arg::ScalarF32(v) => xla::Literal::scalar(*v),
+        })
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Compile HLO text from a file on the given client.
+    pub fn load(client: &xla::PjRtClient, name: &str, path: &std::path::Path) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        Ok(Self {
+            name: name.to_string(),
+            exe,
+        })
+    }
+
+    /// Execute with typed args; returns the single array output as f32
+    /// (for artifacts lowered with `return_tuple=False`).
+    pub fn run_single_f32(&self, args: &[Arg]) -> Result<Vec<f32>> {
+        let lit = self.run_to_literal(args)?;
+        lit.to_vec::<f32>()
+            .map_err(|e| anyhow!("{}: output not f32: {e:?}", self.name))
+    }
+
+    /// Execute; single i32 array output.
+    pub fn run_single_i32(&self, args: &[Arg]) -> Result<Vec<i32>> {
+        let lit = self.run_to_literal(args)?;
+        lit.to_vec::<i32>()
+            .map_err(|e| anyhow!("{}: output not i32: {e:?}", self.name))
+    }
+
+    fn run_to_literal(&self, args: &[Arg]) -> Result<xla::Literal> {
+        let lits: Vec<xla::Literal> = args
+            .iter()
+            .map(|a| a.to_literal())
+            .collect::<Result<_>>()?;
+        let out = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        out.first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("{}: no output buffers", self.name))?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {}: {e:?}", self.name))
+    }
+
+    /// Execute over pre-staged device buffers; returns the single output
+    /// buffer WITHOUT copying back to the host. This is the hot path of
+    /// the sampling sessions: weights/codes stay device-resident, and each
+    /// step's output chains into the next step's input.
+    pub fn execute_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<xla::PjRtBuffer> {
+        let out = self
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("execute_b {}: {e:?}", self.name))?;
+        let dev0 = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{}: no output devices", self.name))?;
+        dev0.into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{}: no output buffer", self.name))
+    }
+
+    /// Execute with typed args; returns the tuple elements as f32 vectors.
+    /// (For artifacts lowered with `return_tuple=True`, i.e. train_step.)
+    pub fn run_f32(&self, args: &[Arg]) -> Result<Vec<Vec<f32>>> {
+        let lits: Vec<xla::Literal> = args
+            .iter()
+            .map(|a| a.to_literal())
+            .collect::<Result<_>>()?;
+        let out = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let lit = out
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("{}: no output buffers", self.name))?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {}: {e:?}", self.name))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {}: {e:?}", self.name))?;
+        parts
+            .iter()
+            .map(|p| {
+                p.to_vec::<f32>()
+                    .map_err(|e| anyhow!("{}: output not f32: {e:?}", self.name))
+            })
+            .collect()
+    }
+
+}
+
+/// Stage an f32 slice as a device buffer.
+pub fn stage_f32(
+    client: &xla::PjRtClient,
+    data: &[f32],
+    dims: &[usize],
+) -> Result<xla::PjRtBuffer> {
+    client
+        .buffer_from_host_buffer(data, dims, None)
+        .map_err(|e| anyhow!("stage f32 buffer {dims:?}: {e:?}"))
+}
+
+/// Stage an i32 slice as a device buffer.
+pub fn stage_i32(
+    client: &xla::PjRtClient,
+    data: &[i32],
+    dims: &[usize],
+) -> Result<xla::PjRtBuffer> {
+    client
+        .buffer_from_host_buffer(data, dims, None)
+        .map_err(|e| anyhow!("stage i32 buffer {dims:?}: {e:?}"))
+}
+
+/// Read an f32 device buffer back to the host.
+pub fn fetch_f32(buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+    buf.to_literal_sync()
+        .map_err(|e| anyhow!("fetch buffer: {e:?}"))?
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("buffer not f32: {e:?}"))
+}
+
+/// Create the shared CPU PJRT client.
+pub fn cpu_client() -> Result<xla::PjRtClient> {
+    xla::PjRtClient::cpu()
+        .map_err(|e| anyhow!("create PJRT CPU client: {e:?}"))
+        .context("is libxla_extension.so reachable? (rpath /opt/xla_extension/lib)")
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load the AOT HLO-text artifacts, compile them once on the
+//! CPU PJRT client, and execute them from the coordinator's hot path.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py` — jax ≥ 0.5
+//! emits 64-bit instruction-id protos that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids). Python never runs here.
+
+pub mod artifacts;
+pub mod exec;
+pub mod shared;
+
+pub use artifacts::ArtifactSet;
+pub use exec::Executable;
+pub use shared::SharedArtifacts;

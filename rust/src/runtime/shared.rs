@@ -1,0 +1,41 @@
+//! Cross-thread sharing of the PJRT artifact set.
+//!
+//! The `xla` crate's client/executable handles hold `Rc`s and raw C
+//! pointers, so they are not `Send`/`Sync`. The PJRT C API itself is
+//! thread-compatible for serialized use, and the `Rc` refcounts are only
+//! touched through methods we call — so guarding ALL access behind one
+//! `Mutex` makes cross-thread use sound: every call that could touch the
+//! refcount or the C handles happens under the lock.
+//!
+//! This mirrors what a production serving stack does with a per-device
+//! executor thread; a `Mutex` keeps the code obvious. Serving workers take
+//! the lock only for the duration of one `execute` dispatch.
+
+use std::sync::Mutex;
+
+use crate::runtime::ArtifactSet;
+
+/// A serialized-access, thread-shareable artifact set.
+pub struct SharedArtifacts {
+    inner: Mutex<ArtifactSet>,
+}
+
+// SAFETY: all access to the non-Send internals goes through `with`, which
+// holds the Mutex; the wrapped value never escapes the closure, so no two
+// threads can touch the Rc refcounts or PJRT handles concurrently.
+unsafe impl Send for SharedArtifacts {}
+unsafe impl Sync for SharedArtifacts {}
+
+impl SharedArtifacts {
+    pub fn new(art: ArtifactSet) -> Self {
+        Self {
+            inner: Mutex::new(art),
+        }
+    }
+
+    /// Run `f` with exclusive access to the artifact set.
+    pub fn with<T>(&self, f: impl FnOnce(&ArtifactSet) -> T) -> T {
+        let guard = self.inner.lock().unwrap();
+        f(&guard)
+    }
+}

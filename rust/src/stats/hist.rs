@@ -1,0 +1,132 @@
+//! Histograms and histogram-based density estimation.
+//!
+//! Used by `theory::alpha` to estimate α(f_W) = ∫ f^{1/3} dw from *trained*
+//! weights (the paper evaluates α analytically for Gaussian/Laplace and
+//! empirically from layer histograms).
+
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub n: u64,
+}
+
+impl Histogram {
+    /// Build with `bins` uniform bins spanning [min, max] of the data.
+    pub fn build(xs: &[f32], bins: usize) -> Self {
+        assert!(bins > 0);
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &x in xs {
+            lo = lo.min(x as f64);
+            hi = hi.max(x as f64);
+        }
+        if !lo.is_finite() || lo == hi {
+            lo -= 0.5;
+            hi += 0.5;
+        }
+        let mut counts = vec![0u64; bins];
+        let w = (hi - lo) / bins as f64;
+        for &x in xs {
+            let mut b = ((x as f64 - lo) / w) as usize;
+            if b >= bins {
+                b = bins - 1;
+            }
+            counts[b] += 1;
+        }
+        Self {
+            lo,
+            hi,
+            counts,
+            n: xs.len() as u64,
+        }
+    }
+
+    pub fn bin_width(&self) -> f64 {
+        (self.hi - self.lo) / self.counts.len() as f64
+    }
+
+    /// Density estimate at bin centers: f̂_i = c_i / (n·Δ).
+    pub fn density(&self) -> Vec<(f64, f64)> {
+        let w = self.bin_width();
+        self.counts
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                let center = self.lo + (i as f64 + 0.5) * w;
+                (center, c as f64 / (self.n as f64 * w))
+            })
+            .collect()
+    }
+
+    /// Riemann estimate of ∫ f̂(w)^{1/3} dw — the paper's α(f_W).
+    pub fn alpha_integral(&self) -> f64 {
+        let w = self.bin_width();
+        self.density()
+            .iter()
+            .map(|&(_, f)| f.powf(1.0 / 3.0) * w)
+            .sum()
+    }
+
+    /// Fraction of total mass in the given bin range.
+    pub fn mass(&self, lo_bin: usize, hi_bin: usize) -> f64 {
+        let c: u64 = self.counts[lo_bin..hi_bin].iter().sum();
+        c as f64 / self.n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::dist::alpha_gaussian;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn counts_sum_to_n() {
+        let xs: Vec<f32> = (0..1000).map(|i| (i % 10) as f32).collect();
+        let h = Histogram::build(&xs, 10);
+        assert_eq!(h.counts.iter().sum::<u64>(), 1000);
+    }
+
+    #[test]
+    fn density_integrates_to_one() {
+        let mut rng = Pcg64::seed(11);
+        let xs: Vec<f32> = (0..50_000).map(|_| rng.normal() as f32).collect();
+        let h = Histogram::build(&xs, 128);
+        let total: f64 = h.density().iter().map(|&(_, f)| f * h.bin_width()).sum();
+        assert!((total - 1.0).abs() < 1e-9, "total={total}");
+    }
+
+    /// The empirical α estimate on Gaussian draws must land near the paper's
+    /// closed form 3.197·σ^{2/3}. This is the key calibration the theory
+    /// module relies on.
+    #[test]
+    fn alpha_integral_matches_gaussian_closed_form() {
+        let mut rng = Pcg64::seed(12);
+        let sigma = 0.05f64;
+        let xs: Vec<f32> = (0..200_000)
+            .map(|_| (rng.normal() * sigma) as f32)
+            .collect();
+        let h = Histogram::build(&xs, 256);
+        let a = h.alpha_integral();
+        let closed = alpha_gaussian(sigma);
+        let rel = (a - closed).abs() / closed;
+        assert!(rel < 0.05, "a={a} closed={closed} rel={rel}");
+    }
+
+    #[test]
+    fn degenerate_constant_data() {
+        let xs = vec![1.0f32; 100];
+        let h = Histogram::build(&xs, 8);
+        assert_eq!(h.counts.iter().sum::<u64>(), 100);
+        assert!(h.bin_width() > 0.0);
+    }
+
+    #[test]
+    fn mass_fractions() {
+        let xs: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let h = Histogram::build(&xs, 4);
+        assert!((h.mass(0, 4) - 1.0).abs() < 1e-12);
+        assert!((h.mass(0, 2) - 0.5).abs() < 0.03);
+    }
+}

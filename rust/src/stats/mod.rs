@@ -1,0 +1,195 @@
+//! Statistics substrate: moments, quantiles, histograms, distribution
+//! functions and goodness-of-fit tests.
+//!
+//! Used by the quantizers (quantile splits), the theory module (α(f_W)
+//! estimation needs a density estimate), and the test suite (verifying the
+//! synthetic weight draws actually follow Gaussian/Laplace laws).
+
+pub mod dist;
+pub mod hist;
+
+/// Mean and (population) variance in one pass (Welford).
+pub fn mean_var(xs: &[f32]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mut mean = 0.0f64;
+    let mut m2 = 0.0f64;
+    for (i, &x) in xs.iter().enumerate() {
+        let x = x as f64;
+        let d = x - mean;
+        mean += d / (i + 1) as f64;
+        m2 += d * (x - mean);
+    }
+    (mean, m2 / xs.len() as f64)
+}
+
+pub fn std_dev(xs: &[f32]) -> f64 {
+    mean_var(xs).1.sqrt()
+}
+
+/// q-th quantile (0..=1) of *sorted* data, linear interpolation.
+pub fn quantile_sorted(sorted: &[f32], q: f64) -> f32 {
+    assert!(!sorted.is_empty());
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = (pos - lo as f64) as f32;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Sort a copy with total order (NaNs last).
+pub fn sorted_copy(xs: &[f32]) -> Vec<f32> {
+    let mut v = xs.to_vec();
+    v.sort_by(f32::total_cmp);
+    v
+}
+
+/// Mean squared error between two equal-length slices.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b.iter())
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Two-sample Kolmogorov–Smirnov statistic (max CDF gap). Inputs unsorted.
+pub fn ks_statistic(a: &[f32], b: &[f32]) -> f64 {
+    let sa = sorted_copy(a);
+    let sb = sorted_copy(b);
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut d = 0.0f64;
+    while i < sa.len() && j < sb.len() {
+        let (fa, fb) = (i as f64 / sa.len() as f64, j as f64 / sb.len() as f64);
+        d = d.max((fa - fb).abs());
+        if sa[i] <= sb[j] {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    d.max((1.0 - j as f64 / sb.len() as f64).abs())
+        .max((1.0 - i as f64 / sa.len() as f64).abs())
+}
+
+/// One-sample KS statistic against a CDF.
+pub fn ks_one_sample(xs: &[f32], cdf: impl Fn(f64) -> f64) -> f64 {
+    let s = sorted_copy(xs);
+    let n = s.len() as f64;
+    let mut d = 0.0f64;
+    for (i, &x) in s.iter().enumerate() {
+        let f = cdf(x as f64);
+        d = d.max((f - i as f64 / n).abs());
+        d = d.max(((i + 1) as f64 / n - f).abs());
+    }
+    d
+}
+
+/// Pearson correlation of two equal-length series.
+pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut da = 0.0;
+    let mut db = 0.0;
+    for (x, y) in a.iter().zip(b.iter()) {
+        num += (x - ma) * (y - mb);
+        da += (x - ma) * (x - ma);
+        db += (y - mb) * (y - mb);
+    }
+    num / (da.sqrt() * db.sqrt() + 1e-300)
+}
+
+/// Least-squares slope of y on x.
+pub fn ols_slope(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (xi, yi) in x.iter().zip(y.iter()) {
+        num += (xi - mx) * (yi - my);
+        den += (xi - mx) * (xi - mx);
+    }
+    num / (den + 1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn mean_var_known() {
+        let (m, v) = mean_var(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((m - 2.5).abs() < 1e-12);
+        assert!((v - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles_interpolate() {
+        let s = [0.0f32, 1.0, 2.0, 3.0];
+        assert_eq!(quantile_sorted(&s, 0.0), 0.0);
+        assert_eq!(quantile_sorted(&s, 1.0), 3.0);
+        assert!((quantile_sorted(&s, 0.5) - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mse_zero_for_identical() {
+        let a = [1.0f32, 2.0, 3.0];
+        assert_eq!(mse(&a, &a), 0.0);
+        assert!((mse(&[0.0], &[2.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ks_same_distribution_small() {
+        let mut rng = Pcg64::seed(1);
+        let a: Vec<f32> = (0..4000).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..4000).map(|_| rng.normal() as f32).collect();
+        assert!(ks_statistic(&a, &b) < 0.05);
+    }
+
+    #[test]
+    fn ks_different_distributions_large() {
+        let mut rng = Pcg64::seed(2);
+        let a: Vec<f32> = (0..2000).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..2000).map(|_| rng.normal() as f32 + 2.0).collect();
+        assert!(ks_statistic(&a, &b) > 0.5);
+    }
+
+    #[test]
+    fn ks_one_sample_gaussian_fits() {
+        let mut rng = Pcg64::seed(3);
+        let xs: Vec<f32> = (0..5000).map(|_| rng.normal() as f32).collect();
+        let d = ks_one_sample(&xs, dist::normal_cdf);
+        assert!(d < 0.03, "d={d}");
+    }
+
+    #[test]
+    fn pearson_perfect_correlation() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let yneg = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&x, &yneg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ols_slope_known() {
+        let x = [0.0, 1.0, 2.0, 3.0];
+        let y = [1.0, 3.0, 5.0, 7.0];
+        assert!((ols_slope(&x, &y) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,247 @@
+//! Minimal shaped f32 tensor used across the coordinator.
+//!
+//! Deliberately small: the heavy compute runs in the AOT-compiled XLA
+//! artifacts; this type exists for host-side glue (datasets, metrics,
+//! quantizer I/O, the CPU reference forward). Row-major, f32-only.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Self {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: vec![v; n],
+        }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        Self {
+            shape: vec![data.len()],
+            data,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {} elements to {:?}", self.data.len(), shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// 2-D accessor.
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// Row view of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert_eq!(self.shape.len(), 2);
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// `self` [m,k] @ `rhs` [k,n] -> [m,n]. Blocked i-k-j loop order so the
+    /// inner loop is a contiguous axpy (vectorizes well; see §Perf).
+    pub fn matmul(&self, rhs: &Tensor) -> Result<Tensor> {
+        if self.shape.len() != 2 || rhs.shape.len() != 2 || self.shape[1] != rhs.shape[0] {
+            bail!("matmul shapes {:?} x {:?}", self.shape, rhs.shape);
+        }
+        let (m, k, n) = (self.shape[0], self.shape[1], rhs.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        matmul_into(&self.data, &rhs.data, &mut out, m, k, n);
+        Tensor::new(&[m, n], out)
+    }
+
+    pub fn add_assign(&mut self, rhs: &Tensor) -> Result<()> {
+        if self.shape != rhs.shape {
+            bail!("add shapes {:?} vs {:?}", self.shape, rhs.shape);
+        }
+        for (a, b) in self.data.iter_mut().zip(rhs.data.iter()) {
+            *a += b;
+        }
+        Ok(())
+    }
+
+    /// Broadcast-add a row vector to every row of a 2-D tensor.
+    pub fn add_row(&mut self, row: &[f32]) -> Result<()> {
+        if self.shape.len() != 2 || self.shape[1] != row.len() {
+            bail!("add_row shapes {:?} vs [{}]", self.shape, row.len());
+        }
+        for r in self.data.chunks_mut(row.len()) {
+            for (a, b) in r.iter_mut().zip(row.iter()) {
+                *a += b;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    pub fn map(mut self, f: impl Fn(f32) -> f32) -> Self {
+        for a in self.data.iter_mut() {
+            *a = f(*a);
+        }
+        self
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.sum() / self.data.len() as f64
+        }
+    }
+
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+}
+
+/// Core GEMM used by both `Tensor::matmul` and the CPU reference forward:
+/// C[m,n] += A[m,k] @ B[k,n], accumulating into `out` (caller zeroes it).
+/// i-k-j order keeps the inner loop contiguous over both B and C rows.
+pub fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (c, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *c += av * bv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_shape() {
+        assert!(Tensor::new(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(&[2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tensor::new(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        // [1,3] @ [3,2]
+        let a = Tensor::new(&[1, 3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::new(&[3, 2], vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.shape(), &[1, 2]);
+        assert_eq!(c.data(), &[4.0, 5.0]);
+    }
+
+    #[test]
+    fn matmul_shape_mismatch() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        assert!(a.matmul(&b).is_err());
+    }
+
+    #[test]
+    fn add_row_broadcasts() {
+        let mut t = Tensor::zeros(&[2, 3]);
+        t.add_row(&[1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(t.data(), &[1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn reductions() {
+        let t = Tensor::from_vec(vec![1.0, -2.0, 3.0]);
+        assert_eq!(t.sum(), 2.0);
+        assert_eq!(t.max_abs(), 3.0);
+        assert!((t.sq_norm() - 14.0).abs() < 1e-9);
+        assert!((t.mean() - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reshape_and_row() {
+        let t = Tensor::from_vec((0..6).map(|i| i as f32).collect())
+            .reshape(&[2, 3])
+            .unwrap();
+        assert_eq!(t.row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(t.at2(1, 2), 5.0);
+    }
+}

@@ -1,0 +1,218 @@
+//! The paper's FID upper bounds, executable.
+//!
+//! Theorem 3 (uniform):  FID(T) ≤ C_U · 2^{-2b},
+//!   C_U = L_φ² [ (L_θ^∞ / L_x)(e^{L_x T} − 1) R ]²
+//! Theorem 6 (OT):       FID(T) ≤ C_E · 2^{-2b},
+//!   C_E = L_φ² [ (L_θ² √p / L_x)(e^{L_x T} − 1) ]² · α(f_W)³ / 12
+//! ρ(b) = C_E / C_U (Eq. 17) — the provable-advantage ratio, and the two
+//! bit-budget corollaries 13.1/13.2.
+
+/// Everything the bounds need, bundled.
+#[derive(Clone, Copy, Debug)]
+pub struct BoundInputs {
+    /// state-Lipschitz constant L_x (Assumption 1-A)
+    pub l_x: f64,
+    /// worst-case parameter sensitivity L_θ^∞ (Assumption 1-B)
+    pub l_theta_inf: f64,
+    /// rms parameter sensitivity L_θ² (Assumption 1-C)
+    pub l_theta_2: f64,
+    /// feature-extractor Lipschitz constant L_φ (Assumption 1-D)
+    pub l_phi: f64,
+    /// integration horizon T
+    pub t: f64,
+    /// uniform clipping range R
+    pub r: f64,
+    /// parameter count p (noise sources in Lemma 4)
+    pub p: f64,
+    /// α(f_W) of the weight density
+    pub alpha: f64,
+}
+
+/// The shared ODE amplification factor (e^{L_x T} − 1)/L_x, with the
+/// L_x → 0 limit handled (paper Lemma 1 boundary case).
+pub fn amplification(l_x: f64, t: f64) -> f64 {
+    if l_x.abs() < 1e-12 {
+        t
+    } else {
+        ((l_x * t).exp() - 1.0) / l_x
+    }
+}
+
+impl BoundInputs {
+    /// Front constant C_U of Theorem 3.
+    pub fn c_uniform(&self) -> f64 {
+        let amp = amplification(self.l_x, self.t);
+        let inner = self.l_theta_inf * amp * self.r;
+        self.l_phi * self.l_phi * inner * inner
+    }
+
+    /// Front constant C_E of Theorem 6.
+    pub fn c_ot(&self) -> f64 {
+        let amp = amplification(self.l_x, self.t);
+        let inner = self.l_theta_2 * self.p.sqrt() * amp;
+        self.l_phi * self.l_phi * inner * inner * self.alpha.powi(3) / 12.0
+    }
+
+    /// ρ = C_E / C_U (Eq. 17).
+    pub fn rho(&self) -> f64 {
+        self.c_ot() / self.c_uniform()
+    }
+
+    /// Theorem 3: FID bound at bit-width b.
+    pub fn fid_bound_uniform(&self, bits: u8) -> f64 {
+        self.c_uniform() * 2.0f64.powi(-2 * bits as i32)
+    }
+
+    /// Theorem 6: FID bound at bit-width b.
+    pub fn fid_bound_ot(&self, bits: u8) -> f64 {
+        self.c_ot() * 2.0f64.powi(-2 * bits as i32)
+    }
+
+    /// Trajectory error bound ε_U(t, b) (Lemma 1).
+    pub fn eps_uniform(&self, t: f64, bits: u8) -> f64 {
+        let delta_u = self.r / 2.0f64.powi(bits as i32 - 1);
+        self.l_theta_inf * delta_u * amplification(self.l_x, t)
+    }
+
+    /// Mean trajectory error bound ε_E(t, b) (Lemma 5) with
+    /// D_E = α³/12 · 2^{-2b}.
+    pub fn eps_ot(&self, t: f64, bits: u8) -> f64 {
+        let d_e = self.alpha.powi(3) / 12.0 * 2.0f64.powi(-2 * bits as i32);
+        self.l_theta_2 * (self.p * d_e).sqrt() * amplification(self.l_x, t)
+    }
+
+    /// Corollary 13.1: minimum bit-width guaranteeing FID gap ≤ Δ_max.
+    pub fn bit_budget(&self, delta_max: f64, ot: bool) -> u8 {
+        let c = if ot { self.c_ot() } else { self.c_uniform() };
+        // 2^{-2b} <= Δ/C  =>  b >= 0.5 log2(C/Δ)
+        let b = 0.5 * (c / delta_max).log2();
+        b.ceil().max(1.0) as u8
+    }
+
+    /// Corollary 13.2: FID bound achievable at a given bit-width (inverse
+    /// phrasing of 13.1, useful for the budget table).
+    pub fn achievable_fid(&self, bits: u8, ot: bool) -> f64 {
+        if ot {
+            self.fid_bound_ot(bits)
+        } else {
+            self.fid_bound_uniform(bits)
+        }
+    }
+
+    /// Paper defaults for the analytic comparison table: Gaussian weights,
+    /// kσ clipping, L_θ²√p ≈ L_θ^∞ R (the paper's "in practice" premise).
+    pub fn paper_defaults(sigma: f64, k_sigma: f64) -> Self {
+        let r = k_sigma * sigma;
+        BoundInputs {
+            l_x: 1.0,
+            l_theta_inf: 1.0,
+            l_theta_2: r / (1.0f64 * 1e6).sqrt(), // makes L_θ²√p = L_θ^∞ R at p=1e6
+            l_phi: 1.0,
+            t: 1.0,
+            r,
+            p: 1e6,
+            alpha: crate::stats::dist::alpha_gaussian(sigma),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs() -> BoundInputs {
+        BoundInputs::paper_defaults(0.05, 10.0)
+    }
+
+    #[test]
+    fn amplification_limit_lx_zero() {
+        assert!((amplification(0.0, 2.0) - 2.0).abs() < 1e-12);
+        // continuity near zero
+        assert!((amplification(1e-9, 2.0) - 2.0).abs() < 1e-6);
+        // known value
+        assert!((amplification(1.0, 1.0) - (1.0f64.exp() - 1.0)).abs() < 1e-12);
+    }
+
+    /// The paper's headline numbers, dimensionally untangled. Eq. 17 writes
+    /// ρ = [(L_θ²√p)/(L_θ^∞ R)]² · α³/12 and then quotes ρ ≈ 0.25–0.4 from
+    /// α³ ≈ 0.33 R² — but that substitution only yields 0.33 if the /12 is
+    /// silently absorbed AND the premise is L_θ²√p ≈ L_θ^∞ (sans R). We
+    /// implement the theorems exactly as stated: with L_θ²√p = L_θ^∞ R
+    /// (paper's "in practice" premise, which our defaults enforce) the R²
+    /// cancels and ρ = α³/12. The *paper-quoted* ratio α³/R² = 0.33 (k=10σ)
+    /// is checked separately; both agree that OT's constant is strictly
+    /// tighter. (Noted in DESIGN.md §paper-errata.)
+    #[test]
+    fn rho_matches_paper_gaussian_k10() {
+        let b = inputs();
+        // the quoted histogram ratio (paper: "k=10 => 0.33")
+        let ratio = b.alpha.powi(3) / (b.r * b.r);
+        assert!((ratio - 0.3267).abs() < 0.01, "ratio={ratio}");
+        // rho as Eq. 17 actually evaluates under the stated premise
+        let rho = b.rho();
+        assert!((rho - b.alpha.powi(3) / 12.0).abs() < 1e-9, "rho={rho}");
+        assert!(rho < 1.0, "OT front-constant must be tighter");
+    }
+
+    #[test]
+    fn laplace_ratio_is_054() {
+        // paper: Laplace α³ = 54 σ², k=10 ⇒ α³/R² = 0.54
+        let sigma = 0.05f64;
+        let beta = sigma / std::f64::consts::SQRT_2;
+        let alpha = crate::stats::dist::alpha_laplace(beta);
+        let r = 10.0 * sigma;
+        let ratio = alpha.powi(3) / (r * r);
+        assert!((ratio - 0.54).abs() < 0.01, "ratio={ratio}");
+    }
+
+    #[test]
+    fn fid_bounds_scale_as_2_pow_minus_2b() {
+        let b = inputs();
+        for bits in 2..8u8 {
+            let r_u = b.fid_bound_uniform(bits) / b.fid_bound_uniform(bits + 1);
+            let r_o = b.fid_bound_ot(bits) / b.fid_bound_ot(bits + 1);
+            assert!((r_u - 4.0).abs() < 1e-9);
+            assert!((r_o - 4.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn ot_bound_tighter_at_every_bitwidth() {
+        let b = inputs();
+        for bits in 2..=8u8 {
+            assert!(b.fid_bound_ot(bits) < b.fid_bound_uniform(bits));
+        }
+    }
+
+    /// Corollary 13.1's "two extra bits of headroom": with ρ < 1/4? No —
+    /// ρ ≈ 0.027 here (ratio/12), so OT admits ⌈log₄(1/ρ)⌉ ≈ 2–3 fewer
+    /// bits at the same budget.
+    #[test]
+    fn bit_budget_headroom() {
+        let b = inputs();
+        for delta in [1e-4, 1e-3, 1e-2] {
+            let bu = b.bit_budget(delta, false);
+            let bo = b.bit_budget(delta, true);
+            assert!(bo < bu, "delta={delta}: ot {bo} !< uniform {bu}");
+            assert!(bu - bo >= 2, "expected >= 2 bits headroom, got {}", bu - bo);
+            // the budget really is satisfied at the returned bit-width
+            assert!(b.achievable_fid(bu, false) <= delta * 1.0001);
+            assert!(b.achievable_fid(bo, true) <= delta * 1.0001);
+            // ...and violated one bit below (unless already at the floor)
+            if bu > 1 {
+                assert!(b.achievable_fid(bu - 1, false) > delta);
+            }
+        }
+    }
+
+    #[test]
+    fn eps_bounds_decrease_with_bits_increase_with_t() {
+        let b = inputs();
+        assert!(b.eps_uniform(1.0, 4) > b.eps_uniform(1.0, 6));
+        assert!(b.eps_ot(1.0, 4) > b.eps_ot(1.0, 6));
+        assert!(b.eps_uniform(1.0, 4) > b.eps_uniform(0.5, 4));
+        assert!(b.eps_ot(1.0, 4) > b.eps_ot(0.5, 4));
+        // lemma boundary case: delta=0 equivalent (infinite bits) -> ~0
+        assert!(b.eps_uniform(1.0, 30) < 1e-6);
+    }
+}

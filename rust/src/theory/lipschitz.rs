@@ -1,0 +1,190 @@
+//! Empirical Lipschitz-constant estimation (Assumptions 1-A/1-B/1-C).
+//!
+//! The paper's bounds are stated in terms of L_x, L_θ^∞ and L_θ² but never
+//! measured; we estimate them by randomized finite differences through any
+//! velocity oracle (the CPU reference forward or the compiled HLO), which
+//! lets EXPERIMENTS.md report *concrete* bound curves for the trained
+//! model rather than symbolic ones.
+
+use crate::util::rng::Pcg64;
+
+/// A velocity oracle: v = f(x, t) for a single state.
+pub trait VelocityOracle {
+    fn velocity(&mut self, x: &[f32], t: f32) -> Vec<f32>;
+    fn dim(&self) -> usize;
+}
+
+fn l2(xs: &[f32]) -> f64 {
+    xs.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+}
+
+/// Estimate the state-Lipschitz constant L_x:
+/// max over probes of ||f(x+δ,t) − f(x,t)|| / ||δ||.
+pub fn estimate_l_x(
+    oracle: &mut dyn VelocityOracle,
+    rng: &mut Pcg64,
+    probes: usize,
+    eps: f32,
+) -> f64 {
+    let d = oracle.dim();
+    let mut best = 0.0f64;
+    for _ in 0..probes {
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let t = rng.uniform() as f32;
+        let dir: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let dn = l2(&dir);
+        let xp: Vec<f32> = x
+            .iter()
+            .zip(dir.iter())
+            .map(|(&a, &b)| a + eps * b / dn as f32)
+            .collect();
+        let v0 = oracle.velocity(&x, t);
+        let v1 = oracle.velocity(&xp, t);
+        let dv: Vec<f32> = v0.iter().zip(v1.iter()).map(|(&a, &b)| b - a).collect();
+        best = best.max(l2(&dv) / eps as f64);
+    }
+    best
+}
+
+/// A parameterized velocity oracle: can evaluate under perturbed params.
+pub trait ParamOracle {
+    fn velocity_with(&mut self, delta_theta: &[f32], x: &[f32], t: f32) -> Vec<f32>;
+    fn dim(&self) -> usize;
+    fn p(&self) -> usize;
+}
+
+/// Estimate L_θ^∞ (worst-case sensitivity, Assumption 1-B):
+/// max ||f_{θ+Δ} − f_θ|| / ||Δ||_∞ over sign-pattern perturbations
+/// (the extremal directions for the sup-norm ball).
+pub fn estimate_l_theta_inf(
+    oracle: &mut dyn ParamOracle,
+    rng: &mut Pcg64,
+    probes: usize,
+    eps: f32,
+) -> f64 {
+    let d = oracle.dim();
+    let p = oracle.p();
+    let zero = vec![0f32; p];
+    let mut best = 0.0f64;
+    for _ in 0..probes {
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let t = rng.uniform() as f32;
+        let delta: Vec<f32> = (0..p)
+            .map(|_| if rng.next_u64() & 1 == 1 { eps } else { -eps })
+            .collect();
+        let v0 = oracle.velocity_with(&zero, &x, t);
+        let v1 = oracle.velocity_with(&delta, &x, t);
+        let dv: Vec<f32> = v0.iter().zip(v1.iter()).map(|(&a, &b)| b - a).collect();
+        best = best.max(l2(&dv) / eps as f64); // ||Δ||_∞ = eps
+    }
+    best
+}
+
+/// Estimate L_θ² (rms sensitivity, Assumption 1-C):
+/// max ||f_{θ+Δ} − f_θ|| / ||Δ||₂ over Gaussian perturbation directions.
+pub fn estimate_l_theta_2(
+    oracle: &mut dyn ParamOracle,
+    rng: &mut Pcg64,
+    probes: usize,
+    eps: f32,
+) -> f64 {
+    let d = oracle.dim();
+    let p = oracle.p();
+    let zero = vec![0f32; p];
+    let mut best = 0.0f64;
+    for _ in 0..probes {
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let t = rng.uniform() as f32;
+        let mut delta: Vec<f32> = (0..p).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let n = l2(&delta) as f32;
+        for v in delta.iter_mut() {
+            *v *= eps / n;
+        }
+        let v0 = oracle.velocity_with(&zero, &x, t);
+        let v1 = oracle.velocity_with(&delta, &x, t);
+        let dv: Vec<f32> = v0.iter().zip(v1.iter()).map(|(&a, &b)| b - a).collect();
+        best = best.max(l2(&dv) / eps as f64);
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Linear oracle f(x,t) = A x with known operator norm.
+    struct LinOracle {
+        a: Vec<f32>, // [d, d]
+        d: usize,
+    }
+
+    impl VelocityOracle for LinOracle {
+        fn velocity(&mut self, x: &[f32], _t: f32) -> Vec<f32> {
+            let d = self.d;
+            let mut out = vec![0f32; d];
+            for i in 0..d {
+                for j in 0..d {
+                    out[i] += self.a[i * d + j] * x[j];
+                }
+            }
+            out
+        }
+        fn dim(&self) -> usize {
+            self.d
+        }
+    }
+
+    #[test]
+    fn l_x_of_scaled_identity() {
+        // f(x) = 3x: L_x must be ~3 exactly in every direction
+        let d = 16;
+        let mut a = vec![0f32; d * d];
+        for i in 0..d {
+            a[i * d + i] = 3.0;
+        }
+        let mut o = LinOracle { a, d };
+        let mut rng = Pcg64::seed(1);
+        let l = estimate_l_x(&mut o, &mut rng, 32, 1e-2);
+        assert!((l - 3.0).abs() < 1e-3, "l={l}");
+    }
+
+    #[test]
+    fn l_x_lower_bounds_operator_norm() {
+        // diag(1, 5): probes should find >= ~3 (can't exceed 5)
+        let d = 2;
+        let a = vec![1.0, 0.0, 0.0, 5.0];
+        let mut o = LinOracle { a, d };
+        let mut rng = Pcg64::seed(2);
+        let l = estimate_l_x(&mut o, &mut rng, 200, 1e-2);
+        assert!(l > 3.0 && l <= 5.0 + 1e-3, "l={l}");
+    }
+
+    /// Oracle whose param dependence is f = x + Δθ (p == d).
+    struct ShiftOracle {
+        d: usize,
+    }
+
+    impl ParamOracle for ShiftOracle {
+        fn velocity_with(&mut self, dt: &[f32], x: &[f32], _t: f32) -> Vec<f32> {
+            x.iter().zip(dt.iter()).map(|(&a, &b)| a + b).collect()
+        }
+        fn dim(&self) -> usize {
+            self.d
+        }
+        fn p(&self) -> usize {
+            self.d
+        }
+    }
+
+    #[test]
+    fn l_theta_norms_of_shift_oracle() {
+        // ||f_{θ+Δ} − f_θ|| = ||Δ||₂. With sign patterns ||Δ||₂ = √p·ε so
+        // L_θ^∞ = √p; with normalized gaussian Δ, L_θ² = 1.
+        let mut o = ShiftOracle { d: 64 };
+        let mut rng = Pcg64::seed(3);
+        let linf = estimate_l_theta_inf(&mut o, &mut rng, 16, 1e-3);
+        assert!((linf - 8.0).abs() < 1e-2, "linf={linf}");
+        let l2n = estimate_l_theta_2(&mut o, &mut rng, 16, 1e-3);
+        assert!((l2n - 1.0).abs() < 1e-3, "l2={l2n}");
+    }
+}

@@ -1,0 +1,7 @@
+//! The paper's theory, executable: α(f_W), the FID upper bounds of
+//! Theorems 3/6, the ρ(b) front-constant ratio, bit-budget corollaries
+//! 13.1/13.2, and empirical Lipschitz-constant estimation.
+
+pub mod alpha;
+pub mod bounds;
+pub mod lipschitz;

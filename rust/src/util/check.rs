@@ -1,0 +1,194 @@
+//! Mini property-testing harness (proptest stand-in).
+//!
+//! Runs an invariant over many seeded random cases; on failure it reports
+//! the failing seed and then *shrinks* the case by retrying the invariant
+//! with progressively smaller size hints, reporting the smallest size that
+//! still fails. Deterministic: case seeds derive from a fixed run seed so
+//! failures reproduce exactly.
+//!
+//! ```no_run
+//! // (no_run: rustdoc binaries miss the xla rpath in this environment)
+//! use fmq::util::check::{forall, Gen};
+//! forall("sorted after sort", 64, |g| {
+//!     let mut xs = g.f32_vec(1..=100, -1e3..=1e3);
+//!     xs.sort_by(f32::total_cmp);
+//!     xs.windows(2).all(|w| w[0] <= w[1])
+//! });
+//! ```
+
+use std::ops::RangeInclusive;
+
+use crate::util::rng::Pcg64;
+
+/// Case generator handed to the property closure.
+pub struct Gen {
+    rng: Pcg64,
+    /// Size multiplier in (0, 1]; shrinking lowers it.
+    pub size: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, size: f64) -> Self {
+        Self {
+            rng: Pcg64::seed(seed),
+            size,
+        }
+    }
+
+    /// Scaled length draw: the effective max shrinks with `size`.
+    pub fn len(&mut self, range: RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*range.start(), *range.end());
+        let span = ((hi - lo) as f64 * self.size).ceil() as usize;
+        lo + if span == 0 { 0 } else { self.rng.below(span + 1) }
+    }
+
+    pub fn usize_in(&mut self, range: RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*range.start(), *range.end());
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, range: RangeInclusive<f32>) -> f32 {
+        self.rng.uniform_in(*range.start(), *range.end())
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vector of uniform f32s.
+    pub fn f32_vec(&mut self, len: RangeInclusive<usize>, vals: RangeInclusive<f32>) -> Vec<f32> {
+        let n = self.len(len);
+        (0..n).map(|_| self.f32_in(vals.clone())).collect()
+    }
+
+    /// Vector of normals with the given std.
+    pub fn normal_vec(&mut self, len: RangeInclusive<usize>, std: f32) -> Vec<f32> {
+        let n = self.len(len);
+        (0..n).map(|_| self.rng.normal_f32(0.0, std)).collect()
+    }
+
+    /// Vector of Laplace draws.
+    pub fn laplace_vec(&mut self, len: RangeInclusive<usize>, beta: f64) -> Vec<f32> {
+        let n = self.len(len);
+        (0..n).map(|_| self.rng.laplace(beta) as f32).collect()
+    }
+
+    /// A "nasty" weight vector: mixes scales, ties, zeros and outliers —
+    /// the regimes where quantizers break.
+    pub fn nasty_weights(&mut self, len: RangeInclusive<usize>) -> Vec<f32> {
+        let n = self.len(len).max(1);
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            let r = self.rng.uniform();
+            let x = if r < 0.5 {
+                self.rng.normal_f32(0.0, 0.05)
+            } else if r < 0.7 {
+                0.0
+            } else if r < 0.85 {
+                self.rng.normal_f32(0.0, 1.0)
+            } else if r < 0.95 {
+                // tied plateau values
+                0.125
+            } else {
+                // outlier
+                self.rng.normal_f32(0.0, 50.0)
+            };
+            v.push(x);
+        }
+        v
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` over `cases` random cases; panic (with seed + shrink info) on
+/// the first failure. Set `FMQ_CHECK_SEED` to rerun one exact case.
+pub fn forall(name: &str, cases: u64, prop: impl Fn(&mut Gen) -> bool) {
+    let base = match std::env::var("FMQ_CHECK_SEED") {
+        Ok(s) => {
+            let seed: u64 = s.parse().expect("FMQ_CHECK_SEED must be u64");
+            let mut g = Gen::new(seed, 1.0);
+            assert!(prop(&mut g), "property '{name}' failed for seed {seed}");
+            return;
+        }
+        Err(_) => 0xF00D_u64,
+    };
+    for case in 0..cases {
+        let seed = base
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case * 2 + 1);
+        let mut g = Gen::new(seed, 1.0);
+        if !prop(&mut g) {
+            // shrink: find the smallest size multiplier that still fails
+            let mut worst = 1.0f64;
+            for step in 1..=6 {
+                let size = 1.0 / (1 << step) as f64;
+                let mut g = Gen::new(seed, size);
+                if !prop(&mut g) {
+                    worst = size;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed: case {case}, seed {seed}, \
+                 minimal failing size multiplier {worst}. \
+                 Rerun with FMQ_CHECK_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are close (abs+rel), with index context on failure.
+pub fn assert_close(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        assert!(
+            (x - y).abs() <= tol || (x.is_nan() && y.is_nan()),
+            "index {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("abs is nonneg", 32, |g| {
+            let v = g.f32_vec(0..=64, -10.0..=10.0);
+            v.iter().all(|x| x.abs() >= 0.0)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn forall_reports_failure() {
+        forall("always fails", 4, |_g| false);
+    }
+
+    #[test]
+    fn nasty_weights_mixes_regimes() {
+        let mut g = Gen::new(9, 1.0);
+        let v = g.nasty_weights(5000..=5000);
+        let zeros = v.iter().filter(|&&x| x == 0.0).count();
+        let big = v.iter().filter(|&&x| x.abs() > 10.0).count();
+        assert!(zeros > 500, "zeros={zeros}");
+        assert!(big > 50, "big={big}");
+    }
+
+    #[test]
+    fn assert_close_passes_equal() {
+        assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-5);
+    }
+
+    #[test]
+    #[should_panic(expected = "index 1")]
+    fn assert_close_pinpoints_index() {
+        assert_close(&[1.0, 2.0], &[1.0, 3.0], 1e-5, 1e-5);
+    }
+}

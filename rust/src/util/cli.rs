@@ -1,0 +1,214 @@
+//! Tiny subcommand + flag parser (clap stand-in).
+//!
+//! Grammar: `fmq <subcommand> [--flag value]... [--switch]...`
+//! Flags are declared up front so typos are hard errors, and `--help`
+//! output is generated from the declarations.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// One declared flag.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None => boolean switch; Some(default) => value flag with default.
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one subcommand.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .map(|s| s.as_str())
+            .unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn get_f32(&self, name: &str) -> Result<f32> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        *self
+            .switches
+            .get(name)
+            .unwrap_or_else(|| panic!("switch --{name} not declared"))
+    }
+
+    /// Comma-separated list flag.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        let raw = self.get(name);
+        if raw.is_empty() {
+            vec![]
+        } else {
+            raw.split(',').map(|s| s.trim().to_string()).collect()
+        }
+    }
+}
+
+/// Declarative parser for one subcommand.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    flags: Vec<FlagSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            flags: Vec::new(),
+        }
+    }
+
+    pub fn flag(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: Some(default),
+        });
+        self
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: None,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("fmq {} — {}\n", self.name, self.about);
+        for f in &self.flags {
+            match f.default {
+                Some(d) => s.push_str(&format!("  --{:<16} {} (default: {})\n", f.name, f.help, d)),
+                None => s.push_str(&format!("  --{:<16} {} (switch)\n", f.name, f.help)),
+            }
+        }
+        s
+    }
+
+    /// Parse `argv` (after the subcommand word).
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        for f in &self.flags {
+            match f.default {
+                Some(d) => {
+                    args.values.insert(f.name.to_string(), d.to_string());
+                }
+                None => {
+                    args.switches.insert(f.name.to_string(), false);
+                }
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if name == "help" {
+                    bail!("{}", self.usage());
+                }
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("unknown flag --{name} for '{}'\n{}", self.name, self.usage())
+                    })?;
+                match spec.default {
+                    Some(_) => {
+                        // value flag: accept "--k v" or "--k=v"
+                        if let Some((n, v)) = name.split_once('=') {
+                            let _ = n;
+                            args.values.insert(spec.name.to_string(), v.to_string());
+                        } else {
+                            i += 1;
+                            let v = argv.get(i).ok_or_else(|| {
+                                anyhow::anyhow!("flag --{name} needs a value")
+                            })?;
+                            args.values.insert(spec.name.to_string(), v.clone());
+                        }
+                    }
+                    None => {
+                        args.switches.insert(spec.name.to_string(), true);
+                    }
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("sweep", "run the fidelity sweep")
+            .flag("bits", "2,3,4,5,6,8", "bit-widths")
+            .flag("steps", "32", "euler steps")
+            .switch("fast", "use fewer samples")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&sv(&[])).unwrap();
+        assert_eq!(a.get("steps"), "32");
+        assert!(!a.switch("fast"));
+        assert_eq!(a.get_list("bits"), vec!["2", "3", "4", "5", "6", "8"]);
+    }
+
+    #[test]
+    fn values_and_switches() {
+        let a = cmd()
+            .parse(&sv(&["--steps", "64", "--fast", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), 64);
+        assert!(a.switch("fast"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        assert!(cmd().parse(&sv(&["--nope", "1"])).is_err());
+        assert!(cmd().parse(&sv(&["--steps"])).is_err()); // missing value
+    }
+
+    #[test]
+    fn usage_mentions_flags() {
+        let u = cmd().usage();
+        assert!(u.contains("--bits"));
+        assert!(u.contains("switch"));
+    }
+}

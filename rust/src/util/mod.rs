@@ -1,0 +1,51 @@
+//! Hand-rolled substrates that would normally be external crates.
+//!
+//! The build environment is fully offline with only the `xla` + `anyhow`
+//! dependency closure available, so the pieces a production repo would take
+//! from crates.io (rand, serde_json, clap, proptest) are implemented here
+//! from scratch (see DESIGN.md §3 substitution table).
+
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod rng;
+
+/// Format a float with engineering-friendly precision for report tables.
+pub fn fmt_g(v: f64) -> String {
+    if v == 0.0 {
+        return "0".to_string();
+    }
+    let a = v.abs();
+    if a >= 1e4 || a < 1e-3 {
+        format!("{v:.3e}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+/// Wall-clock seconds of a closure (used by drivers for coarse timing).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = std::time::Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_g_ranges() {
+        assert_eq!(fmt_g(0.0), "0");
+        assert!(fmt_g(1234.5).starts_with("1234."));
+        assert!(fmt_g(1.2345e7).contains('e'));
+        assert!(fmt_g(-3.2e-9).contains('e'));
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, dt) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+}

@@ -1,0 +1,188 @@
+//! Property-based tests over the quantizer suite (the proptest-style
+//! coverage the paper's claims rest on), via `fmq::util::check`.
+
+use fmq::quant::codebook::Codebook;
+use fmq::quant::otq::{equal_mass_codebook, equal_mass_levels, lloyd_refine, w2_sq};
+use fmq::quant::packing::PackedCodes;
+use fmq::quant::uniform::{delta_u, symmetric_range, uniform_codebook};
+use fmq::quant::{quantize_tensor, QuantMethod};
+use fmq::stats::{mse, sorted_copy};
+use fmq::util::check::{forall, Gen};
+
+/// Every method, every bit-width: codes index valid levels, reconstruction
+/// error is bounded by the data range, dedup keeps levels sorted+unique.
+#[test]
+fn prop_all_methods_basic_contract() {
+    forall("quantizer contract", 120, |g: &mut Gen| {
+        let w = g.nasty_weights(1..=800);
+        let bits = g.usize_in(2..=8) as u8;
+        let method = match g.usize_in(0..=3) {
+            0 => QuantMethod::Ot,
+            1 => QuantMethod::Uniform,
+            2 => QuantMethod::Pwl,
+            _ => QuantMethod::Log2,
+        };
+        let (cb, codes) = quantize_tensor(method, &w, bits);
+        let sorted_ok = cb.levels.windows(2).all(|p| p[0] < p[1]);
+        let k_ok = cb.levels.len() <= 1usize << bits;
+        let codes_ok = codes.iter().all(|&c| (c as usize) < cb.levels.len());
+        let span = {
+            let s = sorted_copy(&w);
+            (s[s.len() - 1] - s[0]).abs().max(1.0)
+        };
+        let rec = cb.dequant(&codes);
+        let err_ok = w
+            .iter()
+            .zip(rec.iter())
+            .all(|(&x, &y)| (x - y).abs() <= span + 1.0);
+        sorted_ok && k_ok && codes_ok && err_ok
+    });
+}
+
+/// Equal-mass optimality vs random same-size codebooks: no random codebook
+/// of the same K beats the Lloyd-refined OT codebook on W₂².
+#[test]
+fn prop_ot_not_beaten_by_random_codebooks() {
+    forall("ot vs random codebooks", 40, |g: &mut Gen| {
+        let w = g.normal_vec(64..=1024, 0.1);
+        if w.len() < 8 {
+            return true;
+        }
+        let bits = g.usize_in(2..=4) as u8;
+        let cb = equal_mass_codebook(&w, bits);
+        let cb = lloyd_refine(&w, &cb, 40);
+        let base = w2_sq(&w, &cb);
+        let k = cb.levels.len();
+        // random competitor with the same number of levels
+        let lo = w.iter().fold(f32::INFINITY, |a, &b| a.min(b));
+        let hi = w.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let competitor: Vec<f32> = (0..k).map(|_| g.f32_in(lo..=hi)).collect();
+        let ccb = Codebook::new(competitor, 8);
+        w2_sq(&w, &ccb) >= base * (1.0 - 1e-5)
+    });
+}
+
+/// Uniform worst-case bound δ_U = R·2^{1−b} holds on arbitrary data.
+#[test]
+fn prop_uniform_delta_bound() {
+    forall("uniform delta bound", 120, |g: &mut Gen| {
+        let w = g.nasty_weights(1..=600);
+        let bits = g.usize_in(2..=8) as u8;
+        let cb = uniform_codebook(&w, bits);
+        let bound = delta_u(symmetric_range(&w) as f64, bits) + 1e-6;
+        let rec = cb.reconstruct(&w);
+        w.iter()
+            .zip(rec.iter())
+            .all(|(&x, &y)| ((x - y).abs() as f64) <= bound)
+    });
+}
+
+/// Equal-mass split: group sizes differ by at most 1, and group means are
+/// monotone (the quantile-coupling structure of the 1-D OT solution).
+#[test]
+fn prop_equal_mass_structure() {
+    forall("equal-mass structure", 120, |g: &mut Gen| {
+        let mut w = g.normal_vec(16..=2048, 1.0);
+        if w.is_empty() {
+            return true;
+        }
+        w.sort_by(f32::total_cmp);
+        let k = 1usize << g.usize_in(1..=6);
+        let levels = equal_mass_levels(&w, k);
+        // monotone means
+        let monotone = levels.windows(2).all(|p| p[0] <= p[1]);
+        // group sizes from the same split rule differ by <= 1
+        let n = w.len();
+        let mut sizes = vec![];
+        for j in 0..k {
+            sizes.push((j + 1) * n / k - j * n / k);
+        }
+        let min = sizes.iter().min().unwrap();
+        let max = sizes.iter().max().unwrap();
+        monotone && max - min <= 1
+    });
+}
+
+/// Lloyd refinement is monotone in MSE and idempotent at the fixed point.
+#[test]
+fn prop_lloyd_monotone_idempotent() {
+    forall("lloyd monotone+idempotent", 40, |g: &mut Gen| {
+        let w = g.nasty_weights(32..=1024);
+        let bits = g.usize_in(2..=5) as u8;
+        let cb0 = equal_mass_codebook(&w, bits);
+        let cb1 = lloyd_refine(&w, &cb0, 60);
+        let cb2 = lloyd_refine(&w, &cb1, 10);
+        let e0 = w2_sq(&w, &cb0);
+        let e1 = w2_sq(&w, &cb1);
+        let e2 = w2_sq(&w, &cb2);
+        e1 <= e0 * (1.0 + 1e-6) && e2 <= e1 * (1.0 + 1e-6)
+    });
+}
+
+/// Pack/unpack at every bit-width is the identity, and the byte size is
+/// exactly ceil(n·b/64)·8.
+#[test]
+fn prop_packing_roundtrip_and_size() {
+    forall("packing roundtrip", 150, |g: &mut Gen| {
+        let bits = g.usize_in(1..=12) as u8;
+        let n = g.len(0..=700);
+        let codes: Vec<u32> = (0..n)
+            .map(|_| g.usize_in(0..=(1usize << bits) - 1) as u32)
+            .collect();
+        let p = PackedCodes::pack(&codes, bits).unwrap();
+        let size_ok = p.byte_len() == (n * bits as usize).div_ceil(64) * 8;
+        p.unpack() == codes && size_ok
+    });
+}
+
+/// Quantization error never grows when bits increase (all methods), on
+/// nasty mixed-regime weights.
+#[test]
+fn prop_bits_monotone_error() {
+    forall("bits monotone", 30, |g: &mut Gen| {
+        let w = g.nasty_weights(256..=2048);
+        let method = match g.usize_in(0..=3) {
+            0 => QuantMethod::Ot,
+            1 => QuantMethod::Uniform,
+            2 => QuantMethod::Pwl,
+            _ => QuantMethod::Log2,
+        };
+        let mut prev = f64::INFINITY;
+        for bits in [2u8, 4, 6, 8] {
+            let (cb, codes) = quantize_tensor(method, &w, bits);
+            let e = mse(&w, &cb.dequant(&codes));
+            if e > prev * 1.1 {
+                return false;
+            }
+            prev = e;
+        }
+        true
+    });
+}
+
+/// Scale equivariance: quantizing s·w gives s·(quantized w) for OT and
+/// uniform (both are scale-covariant constructions).
+#[test]
+fn prop_scale_equivariance() {
+    forall("scale equivariance", 60, |g: &mut Gen| {
+        let w = g.normal_vec(32..=512, 0.5);
+        if w.is_empty() {
+            return true;
+        }
+        let s = 2.0f32.powi(g.usize_in(0..=6) as i32 - 3); // powers of two: exact in f32
+        let bits = g.usize_in(2..=6) as u8;
+        for method in [QuantMethod::Ot, QuantMethod::Uniform] {
+            let (cb_a, codes_a) = quantize_tensor(method, &w, bits);
+            let ws: Vec<f32> = w.iter().map(|&x| x * s).collect();
+            let (cb_b, codes_b) = quantize_tensor(method, &ws, bits);
+            let rec_a = cb_a.dequant(&codes_a);
+            let rec_b = cb_b.dequant(&codes_b);
+            for (a, b) in rec_a.iter().zip(rec_b.iter()) {
+                if (a * s - b).abs() > 1e-4 * (1.0 + b.abs()) {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}

@@ -1,0 +1,236 @@
+//! Runtime integration: the compiled HLO artifacts against the rust CPU
+//! reference — the three-implementations-one-model cross-check.
+//!
+//! These tests require `make artifacts`; they are skipped (with a loud
+//! message) when the artifact set is missing so `cargo test` stays green
+//! in a fresh checkout.
+
+use fmq::data::Dataset;
+use fmq::flow::cpu_ref;
+use fmq::model::spec::ModelSpec;
+use fmq::quant::{quantize_model, QuantMethod};
+use fmq::runtime::{artifacts, ArtifactSet};
+use fmq::util::rng::Pcg64;
+
+fn load() -> Option<ArtifactSet> {
+    let dir = artifacts::default_dir();
+    if !artifacts::available(&dir) {
+        eprintln!("SKIP: artifacts missing at {dir:?} — run `make artifacts`");
+        return None;
+    }
+    Some(ArtifactSet::load(&dir).expect("artifact set must load"))
+}
+
+fn rel_err(a: &[f32], b: &[f32]) -> f64 {
+    let num: f64 = a
+        .iter()
+        .zip(b.iter())
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt();
+    let den: f64 = b.iter().map(|&y| (y as f64).powi(2)).sum::<f64>().sqrt();
+    num / den.max(1e-12)
+}
+
+#[test]
+fn hlo_velocity_matches_cpu_reference() {
+    let Some(art) = load() else { return };
+    let spec = ModelSpec::default_spec();
+    let mut rng = Pcg64::seed(1);
+    let theta = spec.init_theta(&mut rng);
+    let b = art.b_sample;
+    let x: Vec<f32> = (0..b * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let t: Vec<f32> = (0..b).map(|_| rng.uniform() as f32).collect();
+    let v_hlo = art.velocity(&theta, &x, &t).unwrap();
+    let v_cpu = cpu_ref::velocity(&spec, &theta, &x, &t);
+    assert_eq!(v_hlo.len(), v_cpu.len());
+    let rel = rel_err(&v_hlo, &v_cpu);
+    assert!(rel < 1e-4, "rust-vs-HLO velocity rel err {rel}");
+}
+
+#[test]
+fn hlo_sample_step_matches_cpu_reference() {
+    let Some(art) = load() else { return };
+    let spec = ModelSpec::default_spec();
+    let mut rng = Pcg64::seed(2);
+    let theta = spec.init_theta(&mut rng);
+    let b = art.b_sample;
+    let x: Vec<f32> = (0..b * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    for (t, dt) in [(0.0f32, 0.125f32), (0.5, 0.03125), (1.0, -0.125)] {
+        let y_hlo = art.sample_step(&theta, &x, t, dt).unwrap();
+        let y_cpu = cpu_ref::sample_step(&spec, &theta, &x, t, dt);
+        let rel = rel_err(&y_hlo, &y_cpu);
+        assert!(rel < 1e-4, "t={t} dt={dt}: rel err {rel}");
+    }
+}
+
+#[test]
+fn hlo_qsample_step_matches_cpu_quantized_path() {
+    let Some(art) = load() else { return };
+    let spec = ModelSpec::default_spec();
+    let mut rng = Pcg64::seed(3);
+    let theta = spec.init_theta(&mut rng);
+    let b = art.b_sample;
+    let x: Vec<f32> = (0..b * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    for (method, bits) in [
+        (QuantMethod::Ot, 3u8),
+        (QuantMethod::Ot, 8),
+        (QuantMethod::Uniform, 4),
+        (QuantMethod::Log2, 2),
+    ] {
+        let qm = quantize_model(&spec, &theta, method, bits);
+        let y_hlo = art.qsample_step_model(&qm, &x, 0.25, 0.0625).unwrap();
+        let y_cpu = cpu_ref::qsample_step(&qm, &x, 0.25, 0.0625);
+        let rel = rel_err(&y_hlo, &y_cpu);
+        assert!(
+            rel < 1e-4,
+            "{method:?} b={bits}: Pallas-qmm-vs-rust rel err {rel}"
+        );
+    }
+}
+
+#[test]
+fn hlo_train_step_decreases_loss_and_stays_finite() {
+    let Some(art) = load() else { return };
+    let spec = ModelSpec::default_spec();
+    let mut rng = Pcg64::seed(4);
+    let mut theta = spec.init_theta(&mut rng);
+    let p = spec.p();
+    let mut m = vec![0f32; p];
+    let mut v = vec![0f32; p];
+    let b = art.b_train;
+    // fixed batch: loss must drop when stepping on it repeatedly
+    let x1 = Dataset::SynthMnist.batch(&mut rng, b);
+    let x0: Vec<f32> = (0..b * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let t: Vec<f32> = (0..b).map(|_| rng.uniform() as f32).collect();
+    let mut losses = Vec::new();
+    for step in 1..=10 {
+        let (th2, m2, v2, loss) = art
+            .train_step(&theta, &m, &v, step as f32, &x1, &x0, &t, 2e-3)
+            .unwrap();
+        assert!(loss.is_finite());
+        theta = fmq::model::params::ParamStore::new(th2);
+        m = m2;
+        v = v2;
+        losses.push(loss);
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not drop: {losses:?}"
+    );
+    assert!(theta.as_slice().iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn hlo_assign_matches_rust_codebook_assign() {
+    let Some(art) = load() else { return };
+    let mut rng = Pcg64::seed(5);
+    let n = art.assign_chunk;
+    let vals: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.05)).collect();
+    let cb = fmq::quant::otq::equal_mass_codebook(&vals, 4);
+    let padded = cb.padded_levels(256);
+    let codes_hlo = art.assign_chunk_exec(&vals, &padded).unwrap();
+    let codes_rust = cb.assign(&vals);
+    let mut mismatches = 0usize;
+    for (i, (&h, &r)) in codes_hlo.iter().zip(codes_rust.iter()).enumerate() {
+        if h as u32 != r {
+            // ties may break differently across implementations; accept
+            // only if reconstruction is identical
+            let lh = cb.levels[h as usize];
+            let lr = cb.levels[r as usize];
+            assert!(
+                (lh - vals[i]).abs() == (lr - vals[i]).abs(),
+                "idx {i}: hlo {h} rust {r} not a tie"
+            );
+            mismatches += 1;
+        }
+    }
+    assert!(
+        mismatches < n / 1000,
+        "too many tie-mismatches: {mismatches}"
+    );
+}
+
+#[test]
+fn manifest_layer_table_cross_check() {
+    let Some(art) = load() else { return };
+    // ArtifactSet::load already cross-checks; assert the numbers again here
+    let spec = ModelSpec::default_spec();
+    assert_eq!(art.manifest.req_usize("p").unwrap(), spec.p());
+    assert_eq!(art.manifest.req_usize("pw").unwrap(), spec.pw());
+    assert_eq!(art.manifest.req_usize("pb").unwrap(), spec.pb());
+    assert_eq!(
+        art.manifest.req_usize("n_weights").unwrap(),
+        spec.weight_layers().len()
+    );
+}
+
+#[test]
+fn hlo_dequant_theta_matches_rust_dequantize() {
+    let Some(art) = load() else { return };
+    let spec = ModelSpec::default_spec();
+    let mut rng = Pcg64::seed(6);
+    let theta = spec.init_theta(&mut rng);
+    let qm = quantize_model(&spec, &theta, QuantMethod::Ot, 3);
+    let hlo = art.dequantize(&qm).unwrap();
+    let rust = qm.dequantize();
+    assert_eq!(hlo.len(), rust.len());
+    for (i, (a, b)) in hlo.iter().zip(rust.as_slice().iter()).enumerate() {
+        assert!((a - b).abs() < 1e-6, "idx {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn dequant_on_load_session_matches_on_the_fly() {
+    use fmq::flow::sampler::{HloQStep, StepBackend};
+    let Some(art) = load() else { return };
+    let spec = ModelSpec::default_spec();
+    let mut rng = Pcg64::seed(7);
+    let theta = spec.init_theta(&mut rng);
+    let qm = quantize_model(&spec, &theta, QuantMethod::Ot, 4);
+    let x: Vec<f32> = (0..art.b_sample * spec.d)
+        .map(|_| rng.normal_f32(0.0, 1.0))
+        .collect();
+    let a = HloQStep::new(&art, &qm)
+        .run(x.clone(), 0.0, 1.0, 8)
+        .unwrap();
+    let b = HloQStep::new_on_the_fly(&art, &qm)
+        .run(x, 0.0, 1.0, 8)
+        .unwrap();
+    let rel = rel_err(&a, &b);
+    assert!(rel < 1e-4, "serving modes diverged: rel {rel}");
+}
+
+#[test]
+fn on_device_quantization_matches_host() {
+    use fmq::quant::device::quantize_model_on_device;
+    let Some(art) = load() else { return };
+    let spec = ModelSpec::default_spec();
+    let mut rng = Pcg64::seed(8);
+    let theta = spec.init_theta(&mut rng);
+    for (method, bits) in [(QuantMethod::Ot, 3u8), (QuantMethod::Uniform, 5)] {
+        let host = quantize_model(&spec, &theta, method, bits);
+        let dev = quantize_model_on_device(&art, &spec, &theta, method, bits).unwrap();
+        // codes may differ only on exact distance ties
+        let mut diff = 0usize;
+        for (row, l) in spec.weight_layers().iter().enumerate() {
+            let off = spec.weight_offset(&l.name);
+            let cb = &host.codebooks[row];
+            let w = theta.layer(&spec, &l.name);
+            for i in 0..l.size() {
+                let (h, d) = (host.codes[off + i], dev.codes[off + i]);
+                if h != d {
+                    let eh = (cb.levels[h as usize] - w[i]).abs();
+                    let ed = (cb.levels[d as usize] - w[i]).abs();
+                    assert!(eh == ed, "{method:?} b={bits} idx {i}: not a tie");
+                    diff += 1;
+                }
+            }
+        }
+        assert!(diff < spec.pw() / 1000, "{method:?}: {diff} tie-mismatches");
+        // reconstruction identical up to those ties
+        let dh = host.dequantize();
+        let dd = dev.dequantize();
+        assert!(dh.max_abs_diff(&dd) < 1e-6 || diff > 0);
+    }
+}

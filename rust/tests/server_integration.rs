@@ -1,0 +1,135 @@
+//! Serving-layer integration: real TCP round trips, dynamic batching,
+//! protocol errors, and concurrent clients (CPU backend; the HLO path is
+//! covered by runtime_integration + examples/serve_quantized).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fmq::coordinator::registry::Registry;
+use fmq::coordinator::server::{serve, Client, ServerConfig};
+use fmq::model::spec::ModelSpec;
+use fmq::quant::QuantMethod;
+use fmq::util::json::Json;
+use fmq::util::rng::Pcg64;
+
+fn start_server() -> (fmq::coordinator::server::Server, String) {
+    let spec = ModelSpec::default_spec();
+    let theta = spec.init_theta(&mut Pcg64::seed(5));
+    let registry = Arc::new(Registry::build_fleet(
+        &spec,
+        &theta,
+        &[QuantMethod::Ot],
+        &[2, 8],
+    ));
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".to_string(), // ephemeral port
+        steps: 2,                        // fast for tests
+        linger: Duration::from_millis(3),
+    };
+    let server = serve(registry, None, cfg).expect("server start");
+    let addr = server.addr.to_string();
+    (server, addr)
+}
+
+#[test]
+fn ping_models_and_generate() {
+    let (server, addr) = start_server();
+    let mut c = Client::connect(&addr).unwrap();
+
+    let pong = c.call(&Json::obj(vec![("op", Json::Str("ping".into()))])).unwrap();
+    assert_eq!(pong.get("ok").unwrap().as_bool(), Some(true));
+
+    let models = c
+        .call(&Json::obj(vec![("op", Json::Str("models".into()))]))
+        .unwrap();
+    let names: Vec<String> = models
+        .get("models")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|j| j.as_str().unwrap().to_string())
+        .collect();
+    assert!(names.contains(&"fp32".to_string()));
+    assert!(names.contains(&"ot2".to_string()));
+    assert!(names.contains(&"ot8".to_string()));
+
+    let imgs = c.generate("ot2", 2, 42).unwrap();
+    let d = ModelSpec::default_spec().d;
+    assert_eq!(imgs.len(), 2 * d);
+    assert!(imgs.iter().all(|&p| (-1.0..=1.0).contains(&p)));
+
+    server.stop();
+}
+
+#[test]
+fn unknown_model_and_bad_json_are_reported() {
+    let (server, addr) = start_server();
+    let mut c = Client::connect(&addr).unwrap();
+
+    let resp = c
+        .call(&Json::obj(vec![
+            ("op", Json::Str("generate".into())),
+            ("model", Json::Str("nope9".into())),
+            ("n", Json::Num(1.0)),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+    assert!(resp.req_str("error").unwrap().contains("unknown model"));
+
+    // raw garbage line
+    use std::io::{BufRead, BufReader, Write};
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut r = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    w.write_all(b"this is not json\n").unwrap();
+    w.flush().unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":false"));
+
+    server.stop();
+}
+
+#[test]
+fn concurrent_clients_are_batched() {
+    let (server, addr) = start_server();
+    let mut handles = Vec::new();
+    for i in 0..6 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            c.generate("ot8", 2, i).unwrap().len()
+        }));
+    }
+    let d = ModelSpec::default_spec().d;
+    for h in handles {
+        assert_eq!(h.join().unwrap(), 2 * d);
+    }
+    let reqs = server
+        .stats
+        .requests
+        .load(std::sync::atomic::Ordering::Relaxed);
+    let batches = server
+        .stats
+        .batches
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(reqs, 6);
+    assert!(batches >= 1, "no batches recorded");
+    // dynamic batching must have merged at least some requests
+    assert!(
+        batches <= reqs,
+        "batches {batches} should not exceed requests {reqs}"
+    );
+    server.stop();
+}
+
+#[test]
+fn same_seed_same_images() {
+    let (server, addr) = start_server();
+    let mut c = Client::connect(&addr).unwrap();
+    let a = c.generate("fp32", 1, 99).unwrap();
+    let b = c.generate("fp32", 1, 99).unwrap();
+    assert_eq!(a, b, "generation must be deterministic per seed");
+    server.stop();
+}
