@@ -83,6 +83,7 @@ fn main() -> anyhow::Result<()> {
         steps: 32,
         n: 32,
         seed: 7,
+        engine: None,
     };
     let methods = QuantMethod::ALL;
     let bits = [2u8, 3, 4, 6, 8];

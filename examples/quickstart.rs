@@ -33,6 +33,7 @@ fn main() -> anyhow::Result<()> {
         steps: 16,
         n: 16,
         seed: 7,
+        engine: None,
     };
 
     // 3. full-precision reference samples

@@ -53,6 +53,7 @@ fn main() -> anyhow::Result<()> {
             addr: "127.0.0.1:0".into(),
             steps: 8,
             linger: Duration::from_millis(4),
+            engine: None,
         },
     )?;
     let addr = server.addr.to_string();

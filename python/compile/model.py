@@ -45,7 +45,9 @@ def time_features(t):
     """
     f = arch.TEMB_FREQS
     i = jnp.arange(f, dtype=jnp.float32)
-    freqs = jnp.exp(i / (f - 1) * jnp.log(arch.FREQ_MAX))  # [F]
+    # max(f-1, 1): a single-frequency embedding degenerates to freq = 1
+    # instead of 0/0 -> NaN (mirrors the clamp in cpu_ref.rs)
+    freqs = jnp.exp(i / max(f - 1, 1) * jnp.log(arch.FREQ_MAX))  # [F]
     ang = t[:, None] * freqs[None, :]                      # [B, F]
     return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
 

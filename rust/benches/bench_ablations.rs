@@ -113,6 +113,7 @@ fn main() {
             steps: if fast { 4 } else { 12 },
             n: if fast { 16 } else { 48 },
             seed: 23,
+            engine: None,
         };
         let x0 = ctx.start_noise();
         println!("{:>9} {:>9} {:>9} {:>9}", "variant", "bits", "covered", "entropy");

@@ -1,0 +1,109 @@
+//! PERF: the native LUT-GEMM engine vs dequantize-then-f32-GEMM vs the
+//! compiled HLO runtime, across serving bit-widths and batch sizes.
+//!
+//! The dequantize-then-GEMM path (`cpu_ref::qvelocity`) is what the serve
+//! stack did before `engine/` existed: reconstruct every weight matrix to
+//! dense f32, then dense matmul. The LUT engine runs the same math from
+//! the packed codes, so the delta is pure memory traffic + fused gather.
+//! Acceptance target (ISSUE 2): LUT >= 2x the dequantize path at b <= 4
+//! on batch 512.
+//!
+//!   cargo bench --bench bench_engine             # full grid
+//!   FMQ_BENCH_FAST=1 cargo bench --bench bench_engine   # CI smoke
+
+use fmq::bench::Bencher;
+use fmq::engine::{Engine, LutEngine, Pool};
+use fmq::flow::cpu_ref;
+use fmq::model::spec::ModelSpec;
+use fmq::quant::{quantize_model, QuantMethod};
+use fmq::runtime::{artifacts, ArtifactSet};
+use fmq::util::rng::Pcg64;
+
+fn main() {
+    let fast = std::env::var("FMQ_BENCH_FAST").is_ok();
+    let spec = ModelSpec::default_spec();
+    let mut rng = Pcg64::seed(51);
+    let theta = spec.init_theta(&mut rng);
+    let mut b = Bencher::default();
+
+    let batches: &[usize] = if fast { &[1, 16] } else { &[1, 64, 512] };
+    let bit_widths = [2u8, 3, 4, 8];
+
+    // fp32 dense GEMM baseline (the ceiling dequantize-then-GEMM pays for)
+    for &bs in batches {
+        let x: Vec<f32> = (0..bs * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let t = vec![0.5f32; bs];
+        b.bench(&format!("cpu-ref fp32 velocity (B={bs})"), || {
+            cpu_ref::velocity(&spec, &theta, &x, &t)
+        });
+        b.note_throughput(bs as f64, "samples");
+    }
+
+    let mut speedups: Vec<(u8, usize, f64)> = Vec::new();
+    for &bits in &bit_widths {
+        let qm = quantize_model(&spec, &theta, QuantMethod::Ot, bits);
+        let engine = LutEngine::with_pool(&qm, Pool::serial()).expect("pack model");
+        let pooled = LutEngine::new(&qm).expect("pack model");
+        println!(
+            "-- ot{bits}: resident {} KB packed vs {} KB fp32",
+            engine.model().resident_bytes() / 1024,
+            spec.p() * 4 / 1024
+        );
+        for &bs in batches {
+            let x: Vec<f32> = (0..bs * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let t = vec![0.5f32; bs];
+            let dequant = b
+                .bench(&format!("dequant+GEMM ot{bits} velocity (B={bs})"), || {
+                    cpu_ref::qvelocity(&qm, &x, &t)
+                })
+                .mean_s;
+            let lut = b
+                .bench(&format!("lut-gemm    ot{bits} velocity (B={bs})"), || {
+                    engine.velocity(&x, &t).unwrap()
+                })
+                .mean_s;
+            b.note_throughput(bs as f64, "samples");
+            if bs > 1 {
+                b.bench(
+                    &format!(
+                        "lut-gemm    ot{bits} velocity (B={bs}, {} threads)",
+                        pooled.pool().threads()
+                    ),
+                    || pooled.velocity(&x, &t).unwrap(),
+                );
+                b.note_throughput(bs as f64, "samples");
+            }
+            speedups.push((bits, bs, dequant / lut));
+        }
+    }
+
+    println!("\nLUT-GEMM speedup vs dequantize-then-GEMM (single thread):");
+    for (bits, bs, s) in &speedups {
+        let flag = if *bits <= 4 && *bs >= 512 && *s < 2.0 {
+            "  <-- BELOW 2x TARGET"
+        } else {
+            ""
+        };
+        println!("  ot{bits} B={bs:<4} {s:>6.2}x{flag}");
+    }
+
+    // compiled HLO runtime, when artifacts exist (the `runtime` engine)
+    let dir = artifacts::default_dir();
+    if !artifacts::available(&dir) {
+        println!("(artifacts missing — skipping runtime-engine benches)");
+        return;
+    }
+    let art = ArtifactSet::load(&dir).expect("load artifacts");
+    let bs = art.b_sample;
+    let x: Vec<f32> = (0..bs * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let t = vec![0.5f32; bs];
+    b.bench(&format!("runtime fp32 velocity (B={bs})"), || {
+        art.velocity(&theta, &x, &t).unwrap()
+    });
+    for &bits in &bit_widths {
+        let qm = quantize_model(&spec, &theta, QuantMethod::Ot, bits);
+        b.bench(&format!("runtime ot{bits} qsample_step (B={bs})"), || {
+            art.qsample_step_model(&qm, &x, 0.5, 0.0625).unwrap()
+        });
+    }
+}

@@ -28,6 +28,7 @@ fn main() -> anyhow::Result<()> {
         steps: if fast { 4 } else { 32 },
         n: 16,
         seed: 7,
+        engine: None,
     };
     let out = std::path::PathBuf::from("results/grids");
 

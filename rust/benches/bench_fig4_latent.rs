@@ -27,6 +27,7 @@ fn main() -> anyhow::Result<()> {
         steps: if fast { 4 } else { 16 },
         n: if fast { 8 } else { 16 },
         seed: 11,
+        engine: None,
     };
     let datasets: &[Dataset] = if fast {
         &[Dataset::SynthCifar]

@@ -38,6 +38,7 @@ fn main() -> anyhow::Result<()> {
             addr: "127.0.0.1:0".into(),
             steps: if fast { 2 } else { 8 },
             linger: Duration::from_millis(3),
+            engine: None,
         },
     )?;
     let addr = server.addr.to_string();

@@ -20,6 +20,16 @@ pub struct Batch {
     pub total: usize,
 }
 
+impl Batch {
+    /// Sample count padded up to a whole number of model batches — the
+    /// size every execution engine is handed, regardless of backend
+    /// (fixed-shape HLO artifacts need exact batches; the CPU engines
+    /// just amortize better on full ones).
+    pub fn padded_total(&self, batch_size: usize) -> usize {
+        self.total.max(1).div_ceil(batch_size.max(1)) * batch_size.max(1)
+    }
+}
+
 /// Batching queue with a linger window.
 pub struct Batcher {
     tx: Sender<GenRequest>,
@@ -136,6 +146,18 @@ mod tests {
         let batch = b.next_batch().unwrap();
         assert!(t0.elapsed() < Duration::from_secs(1)); // didn't linger
         assert_eq!(batch.total, 4);
+    }
+
+    #[test]
+    fn padded_total_rounds_to_model_batches() {
+        let mk = |total| Batch {
+            requests: Vec::new(),
+            total,
+        };
+        assert_eq!(mk(1).padded_total(16), 16);
+        assert_eq!(mk(16).padded_total(16), 16);
+        assert_eq!(mk(17).padded_total(16), 32);
+        assert_eq!(mk(0).padded_total(16), 16); // empty batch still 1 slot
     }
 
     #[test]

@@ -16,11 +16,13 @@ use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::Duration;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::batcher::{distribute, Batcher, GenRequest};
 use crate::coordinator::registry::{Registry, Variant};
-use crate::flow::sampler::{self, CpuQStep, CpuStep, HloQStep, HloStep};
+use crate::engine::{CpuRefEngine, Engine, EngineKind, LutEngine};
+use crate::flow::sampler::{self, EngineStep, HloQStep, HloStep};
+use crate::model::spec::ModelSpec;
 use crate::runtime::SharedArtifacts;
 use crate::util::json::{parse, Json};
 use crate::util::rng::Pcg64;
@@ -30,6 +32,10 @@ pub struct ServerConfig {
     pub addr: String,
     pub steps: usize,
     pub linger: Duration,
+    /// Execution backend; `None` = auto (compiled HLO when artifacts are
+    /// loaded, else the native LUT engine for quantized variants and the
+    /// CPU reference for fp32).
+    pub engine: Option<EngineKind>,
 }
 
 impl Default for ServerConfig {
@@ -38,6 +44,49 @@ impl Default for ServerConfig {
             addr: "127.0.0.1:7878".to_string(),
             steps: 16,
             linger: Duration::from_millis(5),
+            engine: None,
+        }
+    }
+}
+
+/// Resolve the configured engine for one variant. `None` means "run the
+/// batch through the compiled-HLO artifact sessions" (the `Runtime`
+/// kind); `Some(engine)` is a native in-process backend. Built once per
+/// serving worker, so LUT packing happens at startup, never per request.
+fn resolve_engine<'a>(
+    choice: Option<EngineKind>,
+    has_art: bool,
+    variant: &'a Variant,
+    spec: &'a ModelSpec,
+    pool: crate::engine::Pool,
+) -> Option<Box<dyn Engine + 'a>> {
+    let kind = choice.unwrap_or(if has_art {
+        EngineKind::Runtime
+    } else if matches!(variant, Variant::Quantized(_)) {
+        EngineKind::Lut
+    } else {
+        EngineKind::CpuRef
+    });
+    match (kind, variant) {
+        (EngineKind::Runtime, _) if has_art => None,
+        // runtime resolved by auto without artifacts cannot happen (auto
+        // never picks it then); an *explicit* runtime choice without
+        // artifacts is rejected up front in `serve`. Defensive fallback:
+        (EngineKind::Runtime, _) => resolve_engine(None, false, variant, spec, pool),
+        (EngineKind::Lut, Variant::Quantized(qm)) => match LutEngine::with_pool(qm, pool) {
+            Ok(e) => Some(Box::new(e)),
+            // unpackable model (e.g. >8 bits): serve correct, just slower
+            Err(_) => Some(Box::new(CpuRefEngine::quantized(qm))),
+        },
+        // the LUT engine is quantized-only; fp32 serves via the reference
+        (EngineKind::Lut, Variant::FullPrecision(theta)) => {
+            Some(Box::new(CpuRefEngine::fp32(spec, theta)))
+        }
+        (EngineKind::CpuRef, Variant::FullPrecision(theta)) => {
+            Some(Box::new(CpuRefEngine::fp32(spec, theta)))
+        }
+        (EngineKind::CpuRef, Variant::Quantized(qm)) => {
+            Some(Box::new(CpuRefEngine::quantized(qm)))
         }
     }
 }
@@ -76,6 +125,12 @@ pub fn serve(
     art: Option<Arc<SharedArtifacts>>,
     cfg: ServerConfig,
 ) -> Result<Server> {
+    if cfg.engine == Some(EngineKind::Runtime) && art.is_none() {
+        bail!(
+            "--engine runtime needs compiled artifacts \
+             (build with --features pjrt and run `make artifacts`)"
+        );
+    }
     let listener = TcpListener::bind(&cfg.addr)?;
     let addr = listener.local_addr()?;
     let shutdown = Arc::new(AtomicBool::new(false));
@@ -96,8 +151,9 @@ pub fn serve(
         let stats = stats.clone();
         let sd = shutdown.clone();
         let steps = cfg.steps;
+        let engine = cfg.engine;
         threads.push(thread::spawn(move || {
-            worker_loop(&name, reg, art, batcher, stats, sd, steps, batch_size)
+            worker_loop(&name, reg, art, batcher, stats, sd, steps, batch_size, engine)
         }));
     }
     let submitters = Arc::new(submitters);
@@ -143,11 +199,20 @@ fn worker_loop(
     shutdown: Arc<AtomicBool>,
     steps: usize,
     batch_size: usize,
+    engine_choice: Option<EngineKind>,
 ) {
     let variant = match registry.get(name) {
         Ok(v) => v,
         Err(_) => return,
     };
+    // resolve + build the execution engine once per worker: for the LUT
+    // engine this packs the codes at startup, so the request path only
+    // ever touches the packed representation. Each worker's pool spans
+    // all cores — a lone hot variant should saturate the machine, and
+    // when several variants batch at once the scoped worker threads
+    // simply time-share.
+    let pool = crate::engine::Pool::new(0);
+    let engine = resolve_engine(engine_choice, art.is_some(), variant, &registry.spec, pool);
     let d = registry.spec.d;
     while !shutdown.load(Ordering::SeqCst) {
         let Some(batch) = batcher.next_batch() else {
@@ -158,7 +223,7 @@ fn worker_loop(
             continue; // wait timeout: loop to re-check the shutdown flag
         }
         let total = batch.total.max(1);
-        let padded = total.div_ceil(batch_size) * batch_size;
+        let padded = batch.padded_total(batch_size);
         // mix per-request seeds into the noise
         let seed = batch
             .requests
@@ -167,7 +232,15 @@ fn worker_loop(
         let mut rng = Pcg64::seed(seed);
         let x0: Vec<f32> = (0..padded * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
 
-        let imgs = run_generate(variant, art.as_deref(), &registry, &x0, steps, batch_size, d);
+        let imgs = run_generate(
+            engine.as_deref(),
+            variant,
+            art.as_deref(),
+            &x0,
+            steps,
+            batch_size,
+            d,
+        );
         match imgs {
             Ok(imgs) => {
                 stats.batches.fetch_add(1, Ordering::Relaxed);
@@ -184,10 +257,14 @@ fn worker_loop(
     }
 }
 
+/// Generate one padded super-batch. `engine = Some(..)` runs the native
+/// in-process backend through the [`EngineStep`] adapter; `engine = None`
+/// is the `Runtime` kind and drives the compiled-HLO sessions.
+#[allow(clippy::too_many_arguments)]
 fn run_generate(
+    engine: Option<&dyn Engine>,
     variant: &Variant,
     art: Option<&SharedArtifacts>,
-    registry: &Registry,
     x0: &[f32],
     steps: usize,
     batch_size: usize,
@@ -195,25 +272,23 @@ fn run_generate(
 ) -> Result<Vec<f32>> {
     let mut out = Vec::with_capacity(x0.len());
     for chunk in x0.chunks(batch_size * d) {
-        let imgs = match (variant, art) {
-            (Variant::FullPrecision(theta), Some(sa)) => sa.with(|a| {
-                let mut be = HloStep { art: a, theta };
-                sampler::generate_from(&mut be, chunk, steps)
-            })?,
-            (Variant::FullPrecision(theta), None) => {
-                let mut be = CpuStep {
-                    spec: &registry.spec,
-                    theta,
-                };
+        let imgs = match engine {
+            Some(eng) => {
+                let mut be = EngineStep { engine: eng };
                 sampler::generate_from(&mut be, chunk, steps)?
             }
-            (Variant::Quantized(qm), Some(sa)) => sa.with(|a| {
-                let mut be = HloQStep::new(a, qm);
-                sampler::generate_from(&mut be, chunk, steps)
-            })?,
-            (Variant::Quantized(qm), None) => {
-                let mut be = CpuQStep { qm };
-                sampler::generate_from(&mut be, chunk, steps)?
+            None => {
+                let sa = art.ok_or_else(|| anyhow!("runtime engine requires artifacts"))?;
+                match variant {
+                    Variant::FullPrecision(theta) => sa.with(|a| {
+                        let mut be = HloStep { art: a, theta };
+                        sampler::generate_from(&mut be, chunk, steps)
+                    })?,
+                    Variant::Quantized(qm) => sa.with(|a| {
+                        let mut be = HloQStep::new(a, qm);
+                        sampler::generate_from(&mut be, chunk, steps)
+                    })?,
+                }
             }
         };
         out.extend(imgs);

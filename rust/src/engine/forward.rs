@@ -1,0 +1,189 @@
+//! Fused quantized forward: the full velocity network executed directly
+//! from packed codes via [`LutLayer`] — time features → hidden SiLU layers
+//! → residual blocks → output, with **no dense weight materialization
+//! anywhere**.
+//!
+//! The op sequence, bias handling and accumulation order mirror
+//! `flow/cpu_ref.rs::forward` exactly, and every multiply is the same
+//! `activation × codebook-level` product, so the output is bit-exact
+//! against [`crate::flow::cpu_ref::qvelocity`] (pinned by
+//! `tests/engine_integration.rs`).
+
+use anyhow::{bail, Result};
+
+use crate::engine::lut::LutLayer;
+use crate::flow::cpu_ref::time_features;
+use crate::model::quantized::QuantizedModel;
+use crate::model::spec::ModelSpec;
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// A quantized model compiled to executable packed form: one [`LutLayer`]
+/// per weight matrix plus the fp32 biases. Construction packs the codes
+/// once (cheap, ~b/32 of the f32 model size); after that the model serves
+/// from ~`P·b/8` bytes instead of `P·4`.
+pub struct LutModel {
+    pub spec: ModelSpec,
+    pub bits: u8,
+    /// Ordered as `spec.weight_layers()`.
+    layers: Vec<LutLayer>,
+    /// All biases packed contiguously (`spec.pb()`), fp32.
+    biases: Vec<f32>,
+}
+
+impl LutModel {
+    pub fn new(qm: &QuantizedModel) -> Result<Self> {
+        if qm.bits > 8 {
+            bail!("LUT engine supports 1..=8 bit codes, got {}", qm.bits);
+        }
+        let spec = qm.spec.clone();
+        let layers = spec
+            .weight_layers()
+            .iter()
+            .map(|l| LutLayer::from_model(qm, &l.name))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            spec,
+            bits: qm.bits.max(1),
+            layers,
+            biases: qm.biases.clone(),
+        })
+    }
+
+    fn layer(&self, name: &str) -> &LutLayer {
+        self.layers
+            .iter()
+            .find(|l| l.name == name)
+            .unwrap_or_else(|| panic!("unknown weight layer {name}"))
+    }
+
+    fn bias(&self, name: &str) -> &[f32] {
+        let l = self.spec.layer(name).expect("bias layer");
+        let boff = self.spec.bias_offset(name);
+        &self.biases[boff..boff + l.size()]
+    }
+
+    /// Total packed bytes actually held (codes + codebooks + fp32 biases)
+    /// — the engine's resident model footprint.
+    pub fn resident_bytes(&self) -> usize {
+        let codes: usize = self.layers.iter().map(|l| l.byte_len()).sum();
+        let cbs: usize = self.layers.iter().map(|l| l.levels.len() * 4).sum();
+        codes + cbs + self.biases.len() * 4
+    }
+
+    /// Velocity forward: x flat [B, D], t [B] → v flat [B, D].
+    pub fn velocity(&self, x: &[f32], t: &[f32]) -> Vec<f32> {
+        let spec = &self.spec;
+        let b = t.len();
+        let (d, h_dim) = (spec.d, spec.hidden);
+        assert_eq!(x.len(), b * d);
+
+        // ht = silu(temb @ w_t + b_t)
+        let temb = time_features(spec, t);
+        let mut ht = vec![0f32; b * h_dim];
+        self.layer("w_t").matmul_into(&temb, &mut ht, b);
+        let b_t = self.bias("b_t");
+        for r in ht.chunks_mut(h_dim) {
+            for (v, &bb) in r.iter_mut().zip(b_t.iter()) {
+                *v = silu(*v + bb);
+            }
+        }
+
+        // h = x @ w_in + b_in + ht
+        let mut h = vec![0f32; b * h_dim];
+        self.layer("w_in").matmul_into(x, &mut h, b);
+        let b_in = self.bias("b_in");
+        for (r, rt) in h.chunks_mut(h_dim).zip(ht.chunks(h_dim)) {
+            for ((v, &bb), &tv) in r.iter_mut().zip(b_in.iter()).zip(rt.iter()) {
+                *v += bb + tv;
+            }
+        }
+
+        // residual blocks: h += silu(h @ w1 + b1) @ w2 + b2
+        let mut u = vec![0f32; b * h_dim];
+        let mut r2 = vec![0f32; b * h_dim];
+        for i in 0..spec.blocks {
+            u.iter_mut().for_each(|v| *v = 0.0);
+            self.layer(&format!("w1_{i}")).matmul_into(&h, &mut u, b);
+            let b1 = self.bias(&format!("b1_{i}"));
+            for r in u.chunks_mut(h_dim) {
+                for (v, &bb) in r.iter_mut().zip(b1.iter()) {
+                    *v = silu(*v + bb);
+                }
+            }
+            r2.iter_mut().for_each(|v| *v = 0.0);
+            self.layer(&format!("w2_{i}")).matmul_into(&u, &mut r2, b);
+            let b2 = self.bias(&format!("b2_{i}"));
+            for (hr, rr) in h.chunks_mut(h_dim).zip(r2.chunks(h_dim)) {
+                for ((v, &rv), &bb) in hr.iter_mut().zip(rr.iter()).zip(b2.iter()) {
+                    *v += rv + bb;
+                }
+            }
+        }
+
+        // v = h @ w_out + b_out
+        let mut out = vec![0f32; b * d];
+        self.layer("w_out").matmul_into(&h, &mut out, b);
+        let b_out = self.bias("b_out");
+        for r in out.chunks_mut(d) {
+            for (v, &bb) in r.iter_mut().zip(b_out.iter()) {
+                *v += bb;
+            }
+        }
+        out
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::cpu_ref;
+    use crate::quant::{quantize_model, QuantMethod};
+    use crate::util::rng::Pcg64;
+
+    fn setup(method: QuantMethod, bits: u8) -> (ModelSpec, QuantizedModel) {
+        let spec = ModelSpec::default_spec();
+        let mut rng = Pcg64::seed(21);
+        let theta = spec.init_theta(&mut rng);
+        (spec.clone(), quantize_model(&spec, &theta, method, bits))
+    }
+
+    #[test]
+    fn velocity_bit_exact_vs_cpu_ref() {
+        let (spec, qm) = setup(QuantMethod::Ot, 3);
+        let lm = LutModel::new(&qm).unwrap();
+        let mut rng = Pcg64::seed(22);
+        let x: Vec<f32> = (0..2 * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let t = [0.2, 0.9];
+        let v_lut = lm.velocity(&x, &t);
+        let v_ref = cpu_ref::qvelocity(&qm, &x, &t);
+        assert_eq!(v_lut, v_ref, "LUT forward must be bit-exact vs cpu_ref");
+    }
+
+    #[test]
+    fn velocity_bit_exact_at_two_bits_uniform() {
+        let (spec, qm) = setup(QuantMethod::Uniform, 2);
+        let lm = LutModel::new(&qm).unwrap();
+        let mut rng = Pcg64::seed(23);
+        let x: Vec<f32> = (0..spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        assert_eq!(
+            lm.velocity(&x, &[0.4]),
+            cpu_ref::qvelocity(&qm, &x, &[0.4])
+        );
+    }
+
+    #[test]
+    fn resident_footprint_tracks_bits() {
+        let (spec, q2) = setup(QuantMethod::Ot, 2);
+        let (_, q8) = setup(QuantMethod::Ot, 8);
+        let m2 = LutModel::new(&q2).unwrap();
+        let m8 = LutModel::new(&q8).unwrap();
+        assert!(m2.resident_bytes() < m8.resident_bytes());
+        // 2-bit resident model is far below the fp32 footprint
+        assert!(m2.resident_bytes() * 8 < spec.p() * 4);
+    }
+}

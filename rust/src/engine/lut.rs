@@ -1,0 +1,240 @@
+//! LUT-GEMM: matrix multiply directly over packed b-bit codes.
+//!
+//! The dequantize-then-GEMM serve path reconstructs every weight matrix to
+//! dense f32 (4 bytes/weight) before each matmul, so low-bit compression
+//! buys nothing at inference time. This kernel keeps weights as the packed
+//! bitstream (b/8 bytes/weight) and a ≤256-entry codebook, and fuses
+//! dequantization into the GEMM inner loop:
+//!
+//! * codes stream tile-by-tile out of the [`PackedCodes`] words into a
+//!   small `u8` scratch that stays L1-resident (`TILE_K` weight rows);
+//! * for each (batch row, weight row) pair the scalar product
+//!   `a · levels[c]` is precomputed once per codebook entry into a 256-slot
+//!   lookup table, so the inner loop is one byte load, one L1 table load
+//!   and one add per weight — no multiply, no dense W materialization;
+//! * accumulation order over k is identical to [`crate::tensor::matmul_into`]
+//!   (ascending k within ascending tiles, skipping zero activations), so
+//!   the result is bit-exact against the dequantize-then-GEMM reference.
+
+use anyhow::{bail, Result};
+
+use crate::model::quantized::QuantizedModel;
+use crate::quant::packing::PackedCodes;
+
+/// Weight rows unpacked per tile. 16 rows × 512 cols = 8 KB of `u8`
+/// scratch — comfortably L1-resident alongside the accumulator row.
+pub const TILE_K: usize = 16;
+
+/// One weight matrix in executable packed form: `[rows, cols]` row-major
+/// codes at `packed.bits` bits each, plus the sorted codebook levels.
+#[derive(Clone, Debug)]
+pub struct LutLayer {
+    pub name: String,
+    /// Fan-in (k dimension of x[m,k] @ W[k,n]).
+    pub rows: usize,
+    /// Fan-out (n dimension).
+    pub cols: usize,
+    /// Codebook levels; every packed code indexes into this.
+    pub levels: Vec<f32>,
+    pub packed: PackedCodes,
+}
+
+impl LutLayer {
+    /// Build from raw codes (row-major `[rows, cols]`) and a codebook.
+    pub fn new(
+        name: &str,
+        rows: usize,
+        cols: usize,
+        codes: &[u32],
+        levels: Vec<f32>,
+        bits: u8,
+    ) -> Result<Self> {
+        if codes.len() != rows * cols {
+            bail!(
+                "layer {name}: {} codes for shape [{rows}, {cols}]",
+                codes.len()
+            );
+        }
+        if levels.is_empty() || levels.len() > 256 {
+            bail!(
+                "layer {name}: codebook size {} outside 1..=256",
+                levels.len()
+            );
+        }
+        let bits = bits.clamp(1, 8);
+        if let Some(&bad) = codes.iter().find(|&&c| c as usize >= levels.len()) {
+            bail!(
+                "layer {name}: code {bad} out of range for {} levels",
+                levels.len()
+            );
+        }
+        let packed = PackedCodes::pack(codes, bits)?;
+        Ok(Self {
+            name: name.to_string(),
+            rows,
+            cols,
+            levels,
+            packed,
+        })
+    }
+
+    /// Extract one weight layer of a quantized model into packed form.
+    pub fn from_model(qm: &QuantizedModel, layer_name: &str) -> Result<Self> {
+        let spec = &qm.spec;
+        let Some(l) = spec.layer(layer_name) else {
+            bail!("unknown layer {layer_name}");
+        };
+        if l.shape.len() != 2 {
+            bail!("{layer_name} is not a weight matrix");
+        }
+        let woff = spec.weight_offset(layer_name);
+        let row = spec
+            .weight_layers()
+            .iter()
+            .position(|wl| wl.name == layer_name)
+            .expect("weight layer position");
+        LutLayer::new(
+            layer_name,
+            l.shape[0],
+            l.shape[1],
+            &qm.codes[woff..woff + l.size()],
+            qm.codebooks[row].levels.clone(),
+            qm.bits,
+        )
+    }
+
+    /// Packed payload bytes (codes only).
+    pub fn byte_len(&self) -> usize {
+        self.packed.byte_len()
+    }
+
+    /// `out[m, cols] += x[m, rows] @ W` with W gathered from the packed
+    /// codes. The caller zeroes (or pre-loads) `out`; accumulation matches
+    /// `tensor::matmul_into` bit-for-bit (same multiply, same k order,
+    /// same zero-activation skip).
+    pub fn matmul_into(&self, x: &[f32], out: &mut [f32], m: usize) {
+        let (kd, n) = (self.rows, self.cols);
+        debug_assert_eq!(x.len(), m * kd);
+        debug_assert_eq!(out.len(), m * n);
+        let kmax = self.levels.len();
+        // 256-slot table: a u8 code can never index out of it, so the
+        // inner-loop gather compiles without a bounds check.
+        let mut lut = [0f32; 256];
+        let mut tile = vec![0u8; TILE_K.min(kd.max(1)) * n];
+        let mut k0 = 0usize;
+        while k0 < kd {
+            let kt = TILE_K.min(kd - k0);
+            self.packed.unpack_range_u8(k0 * n, &mut tile[..kt * n]);
+            for i in 0..m {
+                let xrow = &x[i * kd + k0..i * kd + k0 + kt];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (kk, &av) in xrow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    for (slot, &lev) in lut[..kmax].iter_mut().zip(self.levels.iter()) {
+                        *slot = av * lev;
+                    }
+                    let crow = &tile[kk * n..(kk + 1) * n];
+                    for (o, &c) in orow.iter_mut().zip(crow.iter()) {
+                        *o += lut[c as usize];
+                    }
+                }
+            }
+            k0 += kt;
+        }
+    }
+
+    /// Materialize the dense f32 matrix (test/debug reference; the whole
+    /// point of the engine is to never call this on the hot path).
+    pub fn dequantize_dense(&self) -> Vec<f32> {
+        let mut codes = vec![0u8; self.rows * self.cols];
+        self.packed.unpack_range_u8(0, &mut codes);
+        codes.iter().map(|&c| self.levels[c as usize]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul_into;
+    use crate::util::check::assert_close;
+    use crate::util::rng::Pcg64;
+
+    fn random_layer(rng: &mut Pcg64, rows: usize, cols: usize, bits: u8) -> LutLayer {
+        let k = 1usize << bits;
+        let levels: Vec<f32> = (0..k)
+            .map(|i| -0.3 + 0.6 * i as f32 / (k - 1).max(1) as f32)
+            .collect();
+        let codes: Vec<u32> = (0..rows * cols).map(|_| rng.below(k) as u32).collect();
+        LutLayer::new("w_test", rows, cols, &codes, levels, bits).unwrap()
+    }
+
+    #[test]
+    fn matches_dense_gemm_all_bit_widths() {
+        let mut rng = Pcg64::seed(11);
+        for bits in 1..=8u8 {
+            // rows deliberately not a multiple of TILE_K
+            let (m, rows, cols) = (3usize, 2 * TILE_K + 5, 33usize);
+            let layer = random_layer(&mut rng, rows, cols, bits);
+            let x: Vec<f32> = (0..m * rows).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut lut_out = vec![0f32; m * cols];
+            layer.matmul_into(&x, &mut lut_out, m);
+            let dense = layer.dequantize_dense();
+            let mut ref_out = vec![0f32; m * cols];
+            matmul_into(&x, &dense, &mut ref_out, m, rows, cols);
+            assert_eq!(lut_out, ref_out, "bits={bits}: LUT GEMM must be bit-exact");
+        }
+    }
+
+    #[test]
+    fn accumulates_into_preloaded_output() {
+        let mut rng = Pcg64::seed(12);
+        let layer = random_layer(&mut rng, 8, 4, 2);
+        let x = vec![1.0f32; 8];
+        let mut out = vec![10.0f32; 4];
+        let mut delta = vec![0f32; 4];
+        layer.matmul_into(&x, &mut delta, 1);
+        layer.matmul_into(&x, &mut out, 1);
+        for (o, d) in out.iter().zip(delta.iter()) {
+            assert!((o - (10.0 + d)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn zero_activations_skip_cleanly() {
+        let mut rng = Pcg64::seed(13);
+        let layer = random_layer(&mut rng, 20, 6, 3);
+        let mut x = vec![0f32; 20];
+        x[7] = 0.5;
+        let mut out = vec![0f32; 6];
+        layer.matmul_into(&x, &mut out, 1);
+        let dense = layer.dequantize_dense();
+        let expect: Vec<f32> = (0..6).map(|j| 0.5 * dense[7 * 6 + j]).collect();
+        assert_close(&out, &expect, 1e-6, 1e-7);
+    }
+
+    #[test]
+    fn from_model_roundtrips_weights() {
+        use crate::model::spec::ModelSpec;
+        use crate::quant::{quantize_model, QuantMethod};
+        let spec = ModelSpec::default_spec();
+        let theta = spec.init_theta(&mut Pcg64::seed(14));
+        let qm = quantize_model(&spec, &theta, QuantMethod::Ot, 3);
+        let l = LutLayer::from_model(&qm, "w_t").unwrap();
+        assert_eq!(l.rows * l.cols, spec.layer("w_t").unwrap().size());
+        // dense reconstruction equals the model's own dequantization
+        let deq = qm.dequantize();
+        let want = deq.layer(&spec, "w_t");
+        assert_eq!(l.dequantize_dense(), want);
+        // 3-bit payload is ~10x smaller than f32
+        assert!(l.byte_len() * 9 < l.rows * l.cols * 4);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(LutLayer::new("w", 2, 2, &[0, 1, 2], vec![0.0, 1.0], 1).is_err()); // wrong len
+        assert!(LutLayer::new("w", 1, 2, &[0, 1], vec![], 1).is_err()); // empty codebook
+        assert!(LutLayer::new("w", 1, 2, &[0, 5], vec![0.0, 1.0], 3).is_err()); // code too big
+    }
+}

@@ -1,0 +1,275 @@
+//! Native low-bit inference engine.
+//!
+//! Execution backends for the velocity network behind one [`Engine`]
+//! interface, so the sampler and the serving layer are engine-agnostic:
+//!
+//! * [`lut`] — LUT-GEMM kernels that run matmuls **directly over packed
+//!   b-bit codes** (no dense weight materialization, ever);
+//! * [`forward`] — the fused quantized forward built on those kernels,
+//!   bit-exact against `flow/cpu_ref.rs`;
+//! * [`pool`] — a std-thread worker pool that shards sample batches
+//!   across cores for the Euler/Heun loop;
+//! * [`EngineKind`] — the `--engine` selector (`cpu-ref` | `lut` |
+//!   `runtime`) dispatched by `flow/sampler.rs`, `coordinator/server.rs`
+//!   and `main.rs`.
+//!
+//! The `runtime` kind routes to the compiled-HLO PJRT path in
+//! [`crate::runtime`] (feature-gated); it has no `Engine` impl here
+//! because its sessions are batch-shaped and device-resident — the
+//! serving layer adapts it through the same `StepBackend` seam instead.
+
+pub mod forward;
+pub mod lut;
+pub mod pool;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::model::params::ParamStore;
+use crate::model::quantized::QuantizedModel;
+use crate::model::spec::ModelSpec;
+
+pub use forward::LutModel;
+pub use lut::LutLayer;
+pub use pool::Pool;
+
+/// A velocity-network execution backend. Implementations are `Sync` so
+/// one engine instance serves concurrent batches.
+pub trait Engine: Send + Sync {
+    /// Short human-readable backend name (for logs and benches).
+    fn name(&self) -> &'static str;
+
+    fn spec(&self) -> &ModelSpec;
+
+    /// v = f(x, t): x flat [B, D], t [B] → v flat [B, D].
+    fn velocity(&self, x: &[f32], t: &[f32]) -> Result<Vec<f32>>;
+
+    /// One Euler step (signed dt), shared t across the batch.
+    fn step(&self, x: &[f32], t: f32, dt: f32) -> Result<Vec<f32>> {
+        let d = self.spec().d;
+        assert_eq!(x.len() % d, 0, "x must be flat [B, D]");
+        let b = x.len() / d;
+        let tb = vec![t; b];
+        let v = self.velocity(x, &tb)?;
+        Ok(x.iter()
+            .zip(v.iter())
+            .map(|(&xi, &vi)| xi + dt * vi)
+            .collect())
+    }
+}
+
+/// Which execution backend to use. Parsed from `--engine`; `auto`
+/// (absence of a choice) is represented as `None` at call sites and
+/// resolved by the serving layer: `runtime` when artifacts are loaded,
+/// else `lut` for quantized variants and `cpu-ref` for fp32.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    /// Dequantize-then-dense-GEMM reference (`flow/cpu_ref.rs`).
+    CpuRef,
+    /// Native LUT-GEMM over packed codes (this module).
+    Lut,
+    /// Compiled-HLO PJRT artifacts (`runtime`, feature-gated).
+    Runtime,
+}
+
+impl EngineKind {
+    pub const ALL: [EngineKind; 3] = [EngineKind::CpuRef, EngineKind::Lut, EngineKind::Runtime];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::CpuRef => "cpu-ref",
+            EngineKind::Lut => "lut",
+            EngineKind::Runtime => "runtime",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.iter().copied().find(|k| k.name() == s)
+    }
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Self::parse(s).ok_or_else(|| anyhow!("unknown engine '{s}' (use cpu-ref|lut|runtime)"))
+    }
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+enum CpuVariant<'a> {
+    Fp32 {
+        spec: &'a ModelSpec,
+        theta: &'a ParamStore,
+    },
+    Quantized(&'a QuantizedModel),
+}
+
+/// The dequantize-then-dense-GEMM reference path wrapped as an [`Engine`]
+/// (numerics identical to calling `cpu_ref` directly).
+pub struct CpuRefEngine<'a> {
+    inner: CpuVariant<'a>,
+}
+
+impl<'a> CpuRefEngine<'a> {
+    pub fn fp32(spec: &'a ModelSpec, theta: &'a ParamStore) -> Self {
+        Self {
+            inner: CpuVariant::Fp32 { spec, theta },
+        }
+    }
+
+    pub fn quantized(qm: &'a QuantizedModel) -> Self {
+        Self {
+            inner: CpuVariant::Quantized(qm),
+        }
+    }
+}
+
+impl Engine for CpuRefEngine<'_> {
+    fn name(&self) -> &'static str {
+        "cpu-ref"
+    }
+
+    fn spec(&self) -> &ModelSpec {
+        match &self.inner {
+            CpuVariant::Fp32 { spec, .. } => spec,
+            CpuVariant::Quantized(qm) => &qm.spec,
+        }
+    }
+
+    fn velocity(&self, x: &[f32], t: &[f32]) -> Result<Vec<f32>> {
+        Ok(match &self.inner {
+            CpuVariant::Fp32 { spec, theta } => crate::flow::cpu_ref::velocity(spec, theta, x, t),
+            CpuVariant::Quantized(qm) => crate::flow::cpu_ref::qvelocity(qm, x, t),
+        })
+    }
+}
+
+/// The native quantized engine: packed-code LUT-GEMM forward, batch
+/// shards fanned across a worker pool. Owns its (compressed) weights, so
+/// it is `'static` and cheap to keep per serving variant.
+pub struct LutEngine {
+    model: LutModel,
+    pool: Pool,
+}
+
+impl LutEngine {
+    /// Pack a quantized model for execution, using all available cores.
+    pub fn new(qm: &QuantizedModel) -> Result<Self> {
+        Self::with_pool(qm, Pool::new(0))
+    }
+
+    pub fn with_pool(qm: &QuantizedModel, pool: Pool) -> Result<Self> {
+        Ok(Self {
+            model: LutModel::new(qm)?,
+            pool,
+        })
+    }
+
+    pub fn model(&self) -> &LutModel {
+        &self.model
+    }
+
+    pub fn pool(&self) -> &Pool {
+        &self.pool
+    }
+}
+
+impl Engine for LutEngine {
+    fn name(&self) -> &'static str {
+        "lut"
+    }
+
+    fn spec(&self) -> &ModelSpec {
+        &self.model.spec
+    }
+
+    fn velocity(&self, x: &[f32], t: &[f32]) -> Result<Vec<f32>> {
+        let d = self.model.spec.d;
+        self.pool
+            .map_rows(x, t, d, |xs, ts| Ok(self.model.velocity(xs, ts)))
+    }
+}
+
+/// Build an engine for a quantized model by kind. `Runtime` is rejected
+/// here — its device-resident sessions live behind `StepBackend` in the
+/// serving layer, not behind `Engine`.
+pub fn build_quantized(kind: EngineKind, qm: &QuantizedModel) -> Result<Box<dyn Engine + '_>> {
+    match kind {
+        EngineKind::CpuRef => Ok(Box::new(CpuRefEngine::quantized(qm))),
+        EngineKind::Lut => Ok(Box::new(LutEngine::new(qm)?)),
+        EngineKind::Runtime => {
+            bail!("runtime engine is driven through the artifact sessions, not Engine")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize_model, QuantMethod};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in EngineKind::ALL {
+            assert_eq!(EngineKind::parse(k.name()), Some(k));
+            assert_eq!(k.name().parse::<EngineKind>().unwrap(), k);
+        }
+        assert_eq!(EngineKind::parse("gpu"), None);
+        assert!("nope".parse::<EngineKind>().is_err());
+    }
+
+    #[test]
+    fn lut_engine_matches_cpu_ref_engine() {
+        let spec = crate::model::spec::ModelSpec::default_spec();
+        let theta = spec.init_theta(&mut Pcg64::seed(31));
+        let qm = quantize_model(&spec, &theta, QuantMethod::Ot, 4);
+        let lut = LutEngine::with_pool(&qm, Pool::serial()).unwrap();
+        let cref = CpuRefEngine::quantized(&qm);
+        let mut rng = Pcg64::seed(32);
+        let x: Vec<f32> = (0..3 * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let t = [0.1, 0.5, 0.9];
+        assert_eq!(
+            lut.velocity(&x, &t).unwrap(),
+            cref.velocity(&x, &t).unwrap()
+        );
+        assert_eq!(
+            lut.step(&x, 0.5, 0.0625).unwrap(),
+            cref.step(&x, 0.5, 0.0625).unwrap()
+        );
+    }
+
+    #[test]
+    fn pooled_velocity_is_deterministic_across_thread_counts() {
+        let spec = crate::model::spec::ModelSpec::default_spec();
+        let theta = spec.init_theta(&mut Pcg64::seed(33));
+        let qm = quantize_model(&spec, &theta, QuantMethod::Uniform, 3);
+        let serial = LutEngine::with_pool(&qm, Pool::serial()).unwrap();
+        let pooled = LutEngine::with_pool(&qm, Pool::new(4)).unwrap();
+        let mut rng = Pcg64::seed(34);
+        let b = 9usize;
+        let x: Vec<f32> = (0..b * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let t: Vec<f32> = (0..b).map(|i| i as f32 / b as f32).collect();
+        assert_eq!(
+            serial.velocity(&x, &t).unwrap(),
+            pooled.velocity(&x, &t).unwrap()
+        );
+    }
+
+    #[test]
+    fn build_quantized_selector() {
+        let spec = crate::model::spec::ModelSpec::default_spec();
+        let theta = spec.init_theta(&mut Pcg64::seed(35));
+        let qm = quantize_model(&spec, &theta, QuantMethod::Log2, 2);
+        assert_eq!(build_quantized(EngineKind::Lut, &qm).unwrap().name(), "lut");
+        assert_eq!(
+            build_quantized(EngineKind::CpuRef, &qm).unwrap().name(),
+            "cpu-ref"
+        );
+        assert!(build_quantized(EngineKind::Runtime, &qm).is_err());
+    }
+}

@@ -18,10 +18,17 @@ fn silu(x: f32) -> f32 {
 
 /// Sinusoidal time features, matching `model.time_features`:
 /// freqs geometric in [1, FREQ_MAX], feats = [sin(t·f) ‖ cos(t·f)].
+/// A single-frequency embedding (`temb_freqs == 1`) degenerates to
+/// freq = 1 — the geometric ladder's start — instead of the 0/0 → NaN the
+/// naive `i / (f - 1)` interpolation would produce.
 pub fn time_features(spec: &ModelSpec, t: &[f32]) -> Vec<f32> {
     let f = spec.temb_freqs;
+    // denominator (f-1) is only meaningful for f >= 2; clamping to 1 makes
+    // the f == 1 exponent exactly 0 (freq = e^0 = 1) and changes nothing
+    // for f >= 2
+    let denom = (f as f32 - 1.0).max(1.0);
     let freqs: Vec<f32> = (0..f)
-        .map(|i| ((i as f32 / (f as f32 - 1.0)) * spec.freq_max.ln()).exp())
+        .map(|i| ((i as f32 / denom) * spec.freq_max.ln()).exp())
         .collect();
     let mut out = vec![0f32; t.len() * 2 * f];
     for (b, &tb) in t.iter().enumerate() {
@@ -242,6 +249,20 @@ mod tests {
         // last freq = FREQ_MAX
         let last = ((tf - 1) as f32 / (tf as f32 - 1.0) * spec.freq_max.ln()).exp();
         assert!((last - spec.freq_max).abs() < 1e-2);
+    }
+
+    #[test]
+    fn time_features_single_frequency_is_finite() {
+        // regression: temb_freqs == 1 used to hit (f-1) == 0 -> 0/0 -> NaN
+        // frequencies that poisoned the whole forward
+        let mut spec = ModelSpec::default_spec();
+        spec.temb_freqs = 1;
+        let f = time_features(&spec, &[0.0, 0.3, 1.0]);
+        assert_eq!(f.len(), 3 * 2);
+        assert!(f.iter().all(|v| v.is_finite()), "{f:?}");
+        // the lone frequency degenerates to 1.0: feats = [sin(t), cos(t)]
+        assert!((f[2] - 0.3f32.sin()).abs() < 1e-6);
+        assert!((f[3] - 0.3f32.cos()).abs() < 1e-6);
     }
 
     #[test]

@@ -8,14 +8,36 @@
 //!   contribution, [`quant`]), theory calculator ([`theory`]), synthetic
 //!   datasets ([`data`]), metrics ([`metrics`]), training/sampling drivers
 //!   ([`flow`]), experiment sweeps and a serving layer ([`coordinator`]).
-//! * **Layer 2/1 (build-time python)** — the flow-matching velocity network
-//!   and the Pallas `qmm`/`assign` kernels, AOT-lowered to HLO text and
-//!   executed through the PJRT C API by [`runtime`]. Python never runs on
-//!   the request path.
+//! * **Native inference ([`engine`])** — the low-bit serving hot path:
+//!   LUT-GEMM kernels that execute the velocity network **directly from
+//!   packed codebook indices** (no dense f32 dequantization), plus a
+//!   std-thread pool that shards sample batches across cores.
+//! * **Layer 2/1 (build-time python, `pjrt` feature)** — the flow-matching
+//!   velocity network and the Pallas `qmm`/`assign` kernels, AOT-lowered
+//!   to HLO text and executed through the PJRT C API by [`runtime`].
+//!   Python never runs on the request path; without the feature a stub
+//!   keeps the API and everything falls back to the native engines.
+//!
+//! ## Execution-path layering
+//!
+//! ```text
+//!  request ──> coordinator::server ──> coordinator::batcher ─┐
+//!                                                            │ one batch
+//!                                                            v
+//!                         flow::sampler (StepBackend / EngineStep)
+//!                           │                │               │
+//!                 EngineKind::CpuRef   EngineKind::Lut   EngineKind::Runtime
+//!                           │                │               │
+//!                  flow::cpu_ref      engine::forward    runtime::artifacts
+//!                  (dequant + dense   (LUT-GEMM over     (compiled HLO via
+//!                   f32 GEMM)          packed codes,      PJRT, `pjrt`
+//!                                      engine::pool)      feature)
+//! ```
 //!
 //! Quickstart (see `examples/quickstart.rs`):
 //!
 //! ```no_run
+//! use fmq::engine::{Engine, LutEngine};
 //! use fmq::model::spec::ModelSpec;
 //! use fmq::quant::{QuantMethod, quantize_model};
 //! use fmq::util::rng::Pcg64;
@@ -25,11 +47,17 @@
 //! let theta = spec.init_theta(&mut rng);
 //! let qm = quantize_model(&spec, &theta, QuantMethod::Ot, 4);
 //! println!("W2 err = {}", qm.total_w2_error());
+//! // serve straight from the packed codes — no dense dequantization
+//! let eng = LutEngine::new(&qm).unwrap();
+//! let x = vec![0.0f32; spec.d];
+//! let v = eng.velocity(&x, &[0.5]).unwrap();
+//! assert_eq!(v.len(), spec.d);
 //! ```
 
 pub mod bench;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod flow;
 pub mod linalg;
 pub mod metrics;

@@ -21,6 +21,7 @@ use fmq::coordinator::registry::Registry;
 use fmq::coordinator::report;
 use fmq::coordinator::server::{serve, ServerConfig};
 use fmq::data::Dataset;
+use fmq::engine::EngineKind;
 use fmq::flow::train::{train, TrainConfig};
 use fmq::model::checkpoint;
 use fmq::model::params::ParamStore;
@@ -107,6 +108,14 @@ fn theta_for(
     } else {
         checkpoint::load_theta(Path::new(ckpt), spec)
     }
+}
+
+/// Parse `--engine`: `auto` (None — let the layer pick) or a concrete kind.
+fn parse_engine(args: &fmq::util::cli::Args) -> Result<Option<EngineKind>> {
+    if args.get("engine") == "auto" {
+        return Ok(None);
+    }
+    Ok(Some(args.get_parse::<EngineKind>("engine")?))
 }
 
 fn parse_bits(args: &fmq::util::cli::Args) -> Result<Vec<u8>> {
@@ -218,6 +227,7 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         .flag("n", "16", "number of samples")
         .flag("steps", "32", "euler steps")
         .flag("seed", "7", "rng seed")
+        .flag("engine", "auto", "execution backend: auto|cpu-ref|lut|runtime")
         .flag("out", "results/samples.ppm", "output grid");
     let a = cmd.parse(argv)?;
     let spec = ModelSpec::default_spec();
@@ -230,6 +240,7 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         steps: a.get_usize("steps")?,
         n: a.get_usize("n")?,
         seed: a.get_u64("seed")?,
+        engine: parse_engine(&a)?,
     };
     let x0 = ctx.start_noise();
     let imgs = if !a.get("qckpt").is_empty() {
@@ -253,6 +264,7 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
         .flag("steps", "16", "euler steps")
         .flag("n", "32", "samples per point")
         .flag("seed", "7", "rng seed")
+        .flag("engine", "auto", "quantized-path backend: auto|cpu-ref|lut|runtime")
         .flag("ckpt-dir", "checkpoints", "per-dataset checkpoints (model-<ds>.fmq)")
         .flag("out", "results", "output directory");
     let a = cmd.parse(argv)?;
@@ -264,6 +276,7 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
         steps: a.get_usize("steps")?,
         n: a.get_usize("n")?,
         seed: a.get_u64("seed")?,
+        engine: parse_engine(&a)?,
     };
     let methods = parse_methods(&a)?;
     let bits = parse_bits(&a)?;
@@ -305,6 +318,7 @@ fn cmd_latent(argv: &[String]) -> Result<()> {
         .flag("steps", "16", "euler steps")
         .flag("n", "32", "images per point")
         .flag("seed", "7", "rng seed")
+        .flag("engine", "auto", "quantized-path backend: auto|cpu-ref|lut|runtime")
         .flag("ckpt-dir", "checkpoints", "per-dataset checkpoints")
         .flag("out", "results", "output directory");
     let a = cmd.parse(argv)?;
@@ -316,6 +330,7 @@ fn cmd_latent(argv: &[String]) -> Result<()> {
         steps: a.get_usize("steps")?,
         n: a.get_usize("n")?,
         seed: a.get_u64("seed")?,
+        engine: parse_engine(&a)?,
     };
     let methods = parse_methods(&a)?;
     let bits = parse_bits(&a)?;
@@ -355,6 +370,7 @@ fn cmd_grid(argv: &[String]) -> Result<()> {
         .flag("steps", "32", "euler steps")
         .flag("n", "16", "samples per grid")
         .flag("seed", "7", "rng seed")
+        .flag("engine", "auto", "quantized-path backend: auto|cpu-ref|lut|runtime")
         .flag("ckpt-dir", "checkpoints", "per-dataset checkpoints")
         .flag("out", "results", "output directory");
     let a = cmd.parse(argv)?;
@@ -366,6 +382,7 @@ fn cmd_grid(argv: &[String]) -> Result<()> {
         steps: a.get_usize("steps")?,
         n: a.get_usize("n")?,
         seed: a.get_u64("seed")?,
+        engine: parse_engine(&a)?,
     };
     let out = PathBuf::from(a.get("out"));
     let bits = parse_bits(&a)?;
@@ -481,7 +498,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .flag("dataset", "synth-celeba", "dataset for pseudo weights")
         .flag("methods", "ot,uniform", "variants to build")
         .flag("bits", "2,4,8", "bit-widths to build")
-        .flag("steps", "16", "euler steps per sample");
+        .flag("steps", "16", "euler steps per sample")
+        .flag("engine", "auto", "execution backend: auto|cpu-ref|lut|runtime");
     let a = cmd.parse(argv)?;
     let spec = ModelSpec::default_spec();
     let dataset = Dataset::parse(a.get("dataset"))
@@ -492,16 +510,19 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     println!("building variant fleet ({} methods x {} bits + fp32) ...", methods.len(), bits.len());
     let registry = Arc::new(Registry::build_fleet(&spec, &theta, &methods, &bits));
     let art = load_art(false)?.map(|a| Arc::new(fmq::runtime::SharedArtifacts::new(a)));
+    let engine = parse_engine(&a)?;
     let cfg = ServerConfig {
         addr: a.get("addr").to_string(),
         steps: a.get_usize("steps")?,
+        engine,
         ..Default::default()
     };
     let server = serve(registry.clone(), art, cfg)?;
     println!(
-        "serving {} variants on {} — ops: generate/models/ping/shutdown",
+        "serving {} variants on {} (engine: {}) — ops: generate/models/ping/shutdown",
         registry.len(),
-        server.addr
+        server.addr,
+        engine.map(|k| k.name()).unwrap_or("auto")
     );
     // block until shutdown op flips the flag
     loop {

@@ -66,6 +66,36 @@ impl PackedCodes {
         (v & mask) as u32
     }
 
+    /// Sequential unpack of `out.len()` codes starting at element `start`
+    /// into a `u8` buffer — the engine's LUT-GEMM feed. Requires
+    /// `bits <= 8` (codes fit a byte) and `start + out.len() <= n`.
+    /// Decodes with one running bit cursor instead of per-element division
+    /// by recomputing `get(i)`, which is what makes tile-wise streaming of
+    /// the codes cheap enough to sit inside a GEMM.
+    pub fn unpack_range_u8(&self, start: usize, out: &mut [u8]) {
+        assert!(self.bits <= 8, "unpack_range_u8 needs bits <= 8, got {}", self.bits);
+        assert!(
+            start + out.len() <= self.n,
+            "unpack_range_u8 range {}..{} out of {} codes",
+            start,
+            start + out.len(),
+            self.n
+        );
+        let bits = self.bits as usize;
+        let mask: u64 = (1u64 << bits) - 1;
+        let mut bitpos = start * bits;
+        for slot in out.iter_mut() {
+            let word = bitpos / 64;
+            let off = bitpos % 64;
+            let mut v = self.words[word] >> off;
+            if off + bits > 64 {
+                v |= self.words[word + 1] << (64 - off);
+            }
+            *slot = (v & mask) as u8;
+            bitpos += bits;
+        }
+    }
+
     /// Payload size in bytes.
     pub fn byte_len(&self) -> usize {
         self.words.len() * 8
@@ -118,6 +148,26 @@ mod tests {
         assert!(p3.compression_ratio() > 10.0, "{}", p3.compression_ratio());
         let p8 = PackedCodes::pack(&codes, 8).unwrap();
         assert!((p8.compression_ratio() - 4.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn unpack_range_u8_matches_get_at_every_bit_width() {
+        forall("unpack_range_u8 == get", 100, |g| {
+            let bits = g.usize_in(1..=8) as u8;
+            // deliberately non-multiples of the 64-bit word so ranges
+            // start and end mid-word
+            let n = g.len(1..=300);
+            let max = 1u32 << bits;
+            let codes: Vec<u32> = (0..n).map(|_| g.rng().below(max as usize) as u32).collect();
+            let p = PackedCodes::pack(&codes, bits).unwrap();
+            let start = g.rng().below(n);
+            let len = g.rng().below(n - start + 1);
+            let mut out = vec![0u8; len];
+            p.unpack_range_u8(start, &mut out);
+            out.iter()
+                .enumerate()
+                .all(|(i, &c)| c as u32 == codes[start + i])
+        });
     }
 
     #[test]

@@ -4,11 +4,24 @@
 //! Interchange is HLO *text* (see `python/compile/aot.py` — jax ≥ 0.5
 //! emits 64-bit instruction-id protos that xla_extension 0.5.1 rejects;
 //! the text parser reassigns ids). Python never runs here.
+//!
+//! The whole PJRT path sits behind the `pjrt` cargo feature: the default
+//! build swaps in [`stub`](stub/index.html) (same public surface, always
+//! reports artifacts unavailable), so every caller compiles and falls back
+//! to the native CPU engines in [`crate::engine`] / [`crate::flow`].
 
+#[cfg(feature = "pjrt")]
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod exec;
+
+#[cfg(not(feature = "pjrt"))]
+#[path = "stub.rs"]
+pub mod artifacts;
+
 pub mod shared;
 
 pub use artifacts::ArtifactSet;
+#[cfg(feature = "pjrt")]
 pub use exec::Executable;
 pub use shared::SharedArtifacts;

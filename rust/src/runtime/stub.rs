@@ -1,0 +1,165 @@
+//! API-compatible stand-in for `runtime::artifacts` when the `pjrt`
+//! feature is off (the default, pure-Rust build).
+//!
+//! Every signature mirrors the real module so callers compile unchanged;
+//! [`available`] always answers `false` and [`ArtifactSet::load`] always
+//! errors, so no `ArtifactSet` value can ever exist in a stub build — the
+//! method bodies are unreachable by construction and exist only to
+//! satisfy the type checker. All sampling/serving paths therefore fall
+//! back to the native CPU engines ([`crate::engine`], [`crate::flow`]).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use crate::model::params::ParamStore;
+use crate::model::quantized::QuantizedModel;
+use crate::model::spec::ModelSpec;
+use crate::util::json::Json;
+
+const NO_PJRT: &str =
+    "built without the `pjrt` feature — compiled-HLO execution is unavailable \
+     (rebuild with `--features pjrt` and the vendored xla bindings)";
+
+/// Shape info the real manifest would carry; never instantiated here.
+pub struct ArtifactSet {
+    pub spec: ModelSpec,
+    pub manifest: Json,
+    pub b_train: usize,
+    pub b_sample: usize,
+    pub assign_chunk: usize,
+}
+
+/// Default artifact directory (same env override as the real module, so
+/// `fmq info` prints a truthful path either way).
+pub fn default_dir() -> PathBuf {
+    std::env::var("FMQ_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Always `false`: without PJRT the artifacts cannot be executed, so they
+/// are reported unavailable even if the HLO files exist on disk. Callers
+/// gate on this and fall back to the CPU engines.
+pub fn available(_dir: &Path) -> bool {
+    false
+}
+
+impl ArtifactSet {
+    pub fn load(_dir: &Path) -> Result<Self> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn velocity(&self, _theta: &ParamStore, _x: &[f32], _t: &[f32]) -> Result<Vec<f32>> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn sample_step(
+        &self,
+        _theta: &ParamStore,
+        _x: &[f32],
+        _t: f32,
+        _dt: f32,
+    ) -> Result<Vec<f32>> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn qsample_step(
+        &self,
+        _codes: &[i32],
+        _biases: &[f32],
+        _codebooks_padded: &[f32],
+        _x: &[f32],
+        _t: f32,
+        _dt: f32,
+    ) -> Result<Vec<f32>> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn sample_session(&self, _theta: &ParamStore) -> Result<SampleSession<'_>> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn qsample_session(&self, _qm: &QuantizedModel) -> Result<QSampleSession<'_>> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn qsample_session_dequant(&self, _qm: &QuantizedModel) -> Result<SampleSession<'_>> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn dequantize(&self, _qm: &QuantizedModel) -> Result<Vec<f32>> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn qsample_step_model(
+        &self,
+        _qm: &QuantizedModel,
+        _x: &[f32],
+        _t: f32,
+        _dt: f32,
+    ) -> Result<Vec<f32>> {
+        bail!(NO_PJRT)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &self,
+        _theta: &ParamStore,
+        _m: &[f32],
+        _v: &[f32],
+        _step: f32,
+        _x1: &[f32],
+        _x0: &[f32],
+        _t: &[f32],
+        _lr: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, f32)> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn assign_chunk_exec(&self, _vals: &[f32], _centroids_padded: &[f32]) -> Result<Vec<i32>> {
+        bail!(NO_PJRT)
+    }
+}
+
+/// Mirrors the real device-resident fp32 session; never instantiated.
+pub struct SampleSession<'a> {
+    _art: &'a ArtifactSet,
+}
+
+impl SampleSession<'_> {
+    pub fn integrate(&self, _x: &[f32], _t0: f32, _t1: f32, _steps: usize) -> Result<Vec<f32>> {
+        bail!(NO_PJRT)
+    }
+}
+
+/// Mirrors the real device-resident quantized session; never instantiated.
+pub struct QSampleSession<'a> {
+    _art: &'a ArtifactSet,
+}
+
+impl QSampleSession<'_> {
+    pub fn integrate(&self, _x: &[f32], _t0: f32, _t1: f32, _steps: usize) -> Result<Vec<f32>> {
+        bail!(NO_PJRT)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable_and_refuses_load() {
+        assert!(!available(&default_dir()));
+        let err = ArtifactSet::load(&default_dir()).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn default_dir_honors_env_contract() {
+        // matches the real module: bare "artifacts" unless FMQ_ARTIFACTS set
+        if std::env::var("FMQ_ARTIFACTS").is_err() {
+            assert_eq!(default_dir(), PathBuf::from("artifacts"));
+        }
+    }
+}

@@ -49,6 +49,18 @@ impl Args {
         Ok(self.get(name).parse()?)
     }
 
+    /// Parse a value flag into any `FromStr` type (enum selectors like
+    /// `--engine`, numeric flags, ...), with the flag name in the error.
+    pub fn get_parse<T>(&self, name: &str) -> Result<T>
+    where
+        T: std::str::FromStr,
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.get(name);
+        raw.parse()
+            .map_err(|e: T::Err| anyhow::anyhow!("--{name} {raw}: {e}"))
+    }
+
     pub fn switch(&self, name: &str) -> bool {
         *self
             .switches
@@ -197,6 +209,16 @@ mod tests {
         assert_eq!(a.get_usize("steps").unwrap(), 64);
         assert!(a.switch("fast"));
         assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn get_parse_typed_flags() {
+        let a = cmd().parse(&sv(&["--steps", "48"])).unwrap();
+        let n: usize = a.get_parse("steps").unwrap();
+        assert_eq!(n, 48);
+        let bad = cmd().parse(&sv(&["--steps", "many"])).unwrap();
+        let e = bad.get_parse::<usize>("steps").unwrap_err().to_string();
+        assert!(e.contains("--steps"), "{e}");
     }
 
     #[test]

@@ -1,0 +1,211 @@
+//! Engine-layer integration: the native LUT-GEMM engine must reproduce
+//! the dequantize-then-GEMM CPU reference — per element, for every
+//! quantization method, at every serving bit-width — and stay exact
+//! through the pool sharding, the sampler adapter and the serving layer.
+
+use fmq::engine::{build_quantized, CpuRefEngine, Engine, EngineKind, LutEngine, LutModel, Pool};
+use fmq::flow::cpu_ref;
+use fmq::flow::sampler::{self, CpuQStep, EngineStep};
+use fmq::model::params::ParamStore;
+use fmq::model::spec::{Layer, ModelSpec};
+use fmq::quant::{quantize_model, QuantMethod};
+use fmq::util::rng::Pcg64;
+
+fn setup() -> (ModelSpec, ParamStore) {
+    let spec = ModelSpec::default_spec();
+    let mut rng = Pcg64::seed(41);
+    let theta = spec.init_theta(&mut rng);
+    (spec, theta)
+}
+
+/// A structurally-identical but small velocity net, so the exhaustive
+/// (method x bits) equivalence grid — including the Lloyd-refined OT
+/// quantizer — stays fast in debug-mode `cargo test`. The kernels are
+/// size-agnostic; the full-size spec is spot-checked separately below.
+fn small_spec() -> ModelSpec {
+    let (d, hidden, temb_freqs, blocks) = (24usize, 32usize, 4usize, 2usize);
+    let mut layers = Vec::new();
+    let mut off = 0usize;
+    let mut add = |layers: &mut Vec<Layer>, name: &str, shape: Vec<usize>| {
+        let l = Layer {
+            name: name.to_string(),
+            shape,
+            offset: off,
+        };
+        off += l.size();
+        layers.push(l);
+    };
+    add(&mut layers, "w_in", vec![d, hidden]);
+    add(&mut layers, "b_in", vec![hidden]);
+    add(&mut layers, "w_t", vec![2 * temb_freqs, hidden]);
+    add(&mut layers, "b_t", vec![hidden]);
+    for i in 0..blocks {
+        add(&mut layers, &format!("w1_{i}"), vec![hidden, hidden]);
+        add(&mut layers, &format!("b1_{i}"), vec![hidden]);
+        add(&mut layers, &format!("w2_{i}"), vec![hidden, hidden]);
+        add(&mut layers, &format!("b2_{i}"), vec![hidden]);
+    }
+    add(&mut layers, "w_out", vec![hidden, d]);
+    add(&mut layers, "b_out", vec![d]);
+    ModelSpec {
+        layers,
+        d,
+        hidden,
+        blocks,
+        temb_freqs,
+        k_max: 256,
+        freq_max: 1000.0,
+    }
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+/// The acceptance pin: |engine − cpu_ref| < 1e-5 per element for all
+/// `QuantMethod`s at 2/3/4/8 bits. (In practice the kernels are written
+/// to be *bit-exact*; the tolerance guards against platform-specific
+/// float contraction.)
+#[test]
+fn lut_engine_equals_cpu_ref_all_methods_all_bits() {
+    let spec = small_spec();
+    let mut rng = Pcg64::seed(41);
+    let theta = spec.init_theta(&mut rng);
+    let mut rng = Pcg64::seed(42);
+    let b = 3usize;
+    let x: Vec<f32> = (0..b * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let t = [0.1f32, 0.55, 0.95];
+    for method in QuantMethod::ALL {
+        for bits in [2u8, 3, 4, 8] {
+            let qm = quantize_model(&spec, &theta, method, bits);
+            let engine = LutEngine::new(&qm).unwrap();
+            let v_eng = engine.velocity(&x, &t).unwrap();
+            let v_ref = cpu_ref::qvelocity(&qm, &x, &t);
+            let d = max_abs_diff(&v_eng, &v_ref);
+            assert!(
+                d < 1e-5,
+                "{method:?} @ {bits} bits: max |engine - cpu_ref| = {d}"
+            );
+        }
+    }
+}
+
+/// Same pin at the full default architecture (2.4M params), one paper
+/// method per bit-width to keep debug-mode test time sane.
+#[test]
+fn lut_engine_equals_cpu_ref_full_size_model() {
+    let (spec, theta) = setup();
+    let mut rng = Pcg64::seed(47);
+    let x: Vec<f32> = (0..2 * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let t = [0.35f32, 0.8];
+    for (method, bits) in [
+        (QuantMethod::Ot, 2u8),
+        (QuantMethod::Uniform, 3),
+        (QuantMethod::Pwl, 4),
+        (QuantMethod::Log2, 8),
+    ] {
+        let qm = quantize_model(&spec, &theta, method, bits);
+        let engine = LutEngine::new(&qm).unwrap();
+        let d = max_abs_diff(&engine.velocity(&x, &t).unwrap(), &cpu_ref::qvelocity(&qm, &x, &t));
+        assert!(d < 1e-5, "{method:?} @ {bits} bits full-size: {d}");
+    }
+}
+
+/// Euler steps through the Engine trait match the reference step.
+#[test]
+fn engine_step_equals_cpu_ref_step() {
+    let (spec, theta) = setup();
+    let mut rng = Pcg64::seed(43);
+    let x: Vec<f32> = (0..2 * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    for bits in [2u8, 4] {
+        let qm = quantize_model(&spec, &theta, QuantMethod::Ot, bits);
+        let engine = LutEngine::new(&qm).unwrap();
+        let y_eng = engine.step(&x, 0.3, 0.0625).unwrap();
+        let y_ref = cpu_ref::qsample_step(&qm, &x, 0.3, 0.0625);
+        let d = max_abs_diff(&y_eng, &y_ref);
+        assert!(d < 1e-5, "bits={bits}: step diff {d}");
+    }
+}
+
+/// Pool sharding is numerically invisible at any thread count, including
+/// counts that don't divide the batch.
+#[test]
+fn pool_sharding_is_exact() {
+    let (spec, theta) = setup();
+    let qm = quantize_model(&spec, &theta, QuantMethod::Pwl, 3);
+    let model = LutModel::new(&qm).unwrap();
+    let mut rng = Pcg64::seed(44);
+    let b = 11usize;
+    let x: Vec<f32> = (0..b * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let t: Vec<f32> = (0..b).map(|i| (i as f32 + 0.5) / b as f32).collect();
+    let serial = model.velocity(&x, &t);
+    for threads in [2usize, 3, 8] {
+        let eng = LutEngine::with_pool(&qm, Pool::new(threads)).unwrap();
+        let pooled = eng.velocity(&x, &t).unwrap();
+        assert_eq!(pooled, serial, "threads={threads} must be bit-identical");
+    }
+}
+
+/// Full ODE integration through the sampler's EngineStep adapter matches
+/// the legacy CpuQStep backend image-for-image.
+#[test]
+fn generation_through_engine_adapter_matches_legacy_backend() {
+    let (spec, theta) = setup();
+    let qm = quantize_model(&spec, &theta, QuantMethod::Ot, 2);
+    let mut rng = Pcg64::seed(45);
+    let x0: Vec<f32> = (0..4 * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut legacy = CpuQStep { qm: &qm };
+    let want = sampler::generate_from(&mut legacy, &x0, 8).unwrap();
+    for kind in [EngineKind::CpuRef, EngineKind::Lut] {
+        let engine = build_quantized(kind, &qm).unwrap();
+        let mut be = EngineStep {
+            engine: engine.as_ref(),
+        };
+        let got = sampler::generate_from(&mut be, &x0, 8).unwrap();
+        assert_eq!(got, want, "kind={kind:?}");
+    }
+    // reverse encoding (the Fig. 4 path) through the adapter, too
+    let engine = LutEngine::new(&qm).unwrap();
+    let mut be = EngineStep { engine: &engine };
+    let lat_eng = sampler::encode(&mut be, &want, 8).unwrap();
+    let lat_ref = sampler::encode(&mut legacy, &want, 8).unwrap();
+    assert_eq!(lat_eng, lat_ref);
+}
+
+/// The packed engine never materializes dense weights: its resident
+/// footprint at low bits must be a small fraction of fp32, while output
+/// stays exact. This is the "compression is real at inference time" pin.
+#[test]
+fn resident_footprint_beats_fp32() {
+    let (spec, theta) = setup();
+    let fp32_bytes = spec.p() * 4;
+    for (bits, max_ratio) in [(2u8, 0.15), (3, 0.18), (4, 0.22)] {
+        let qm = quantize_model(&spec, &theta, QuantMethod::Ot, bits);
+        let model = LutModel::new(&qm).unwrap();
+        let ratio = model.resident_bytes() as f64 / fp32_bytes as f64;
+        assert!(
+            ratio < max_ratio,
+            "{bits}-bit resident ratio {ratio:.3} (limit {max_ratio})"
+        );
+    }
+}
+
+/// CpuRefEngine (fp32 flavor) matches the raw cpu_ref forward, so the
+/// serving layer can route full-precision variants through the same
+/// Engine interface.
+#[test]
+fn fp32_engine_matches_cpu_ref() {
+    let (spec, theta) = setup();
+    let engine = CpuRefEngine::fp32(&spec, &theta);
+    let mut rng = Pcg64::seed(46);
+    let x: Vec<f32> = (0..2 * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let t = [0.25, 0.75];
+    assert_eq!(
+        engine.velocity(&x, &t).unwrap(),
+        cpu_ref::velocity(&spec, &theta, &x, &t)
+    );
+}

@@ -17,6 +17,7 @@ fn ctx(spec: &ModelSpec) -> EvalContext<'static> {
         steps: 6,
         n: 8,
         seed: 3,
+        engine: None,
     }
 }
 

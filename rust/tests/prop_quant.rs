@@ -186,3 +186,66 @@ fn prop_scale_equivariance() {
         true
     });
 }
+
+/// Packing roundtrip at *every* bit-width 1..=8, with lengths chosen so
+/// the stream never ends on a word boundary (the straddle-heavy regime
+/// the engine's sequential u8 unpacker feeds on).
+#[test]
+fn prop_packing_roundtrip_every_bit_width() {
+    forall("pack/unpack all b, ragged lengths", 80, |g: &mut Gen| {
+        for bits in 1..=8u8 {
+            // force n*bits % 64 != 0 so the last word is partial
+            let mut n = g.usize_in(1..=700);
+            if (n * bits as usize) % 64 == 0 {
+                n += 1;
+            }
+            let max = 1u32 << bits;
+            let codes: Vec<u32> = (0..n)
+                .map(|_| g.rng().below(max as usize) as u32)
+                .collect();
+            let p = PackedCodes::pack(&codes, bits).unwrap();
+            if p.unpack() != codes {
+                return false;
+            }
+            // random access agrees with sequential u8 unpack
+            let i = g.rng().below(n);
+            let mut one = [0u8; 1];
+            p.unpack_range_u8(i, &mut one);
+            if p.get(i) != codes[i] || one[0] as u32 != codes[i] {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+/// Huffman encode -> decode is the identity on skewed code histograms
+/// (the uniform/log2 regime where entropy coding actually claws back
+/// storage), including degenerate single-symbol streams.
+#[test]
+fn prop_huffman_roundtrip_on_skewed_codes() {
+    use fmq::quant::huffman::{frequencies, HuffmanTable};
+    forall("huffman encode/decode identity", 60, |g: &mut Gen| {
+        let k = g.usize_in(1..=64);
+        // zipf-ish skew: weight 1/(rank+1)^2, so a few symbols dominate
+        let weights: Vec<f32> = (0..k).map(|i| 1.0 / ((i + 1) as f32).powi(2)).collect();
+        let n = g.usize_in(1..=4000);
+        let codes: Vec<u32> = (0..n).map(|_| g.rng().pick_weighted(&weights) as u32).collect();
+        let freqs = frequencies(&codes, k);
+        let table = match HuffmanTable::build(&freqs) {
+            Ok(t) => t,
+            Err(_) => return false,
+        };
+        let Ok((words, total_bits)) = table.encode(&codes) else {
+            return false;
+        };
+        let Ok(back) = table.decode(&words, total_bits, codes.len()) else {
+            return false;
+        };
+        // identity, and Huffman optimality: never worse than fixed-width
+        // (all-equal lengths are themselves a valid prefix code)
+        let ceil_log2_k = (usize::BITS - (k - 1).leading_zeros()) as usize;
+        let fixed_bits = codes.len() * ceil_log2_k.max(1);
+        back == codes && total_bits <= fixed_bits
+    });
+}

@@ -12,7 +12,9 @@ use fmq::quant::QuantMethod;
 use fmq::util::json::Json;
 use fmq::util::rng::Pcg64;
 
-fn start_server() -> (fmq::coordinator::server::Server, String) {
+fn start_server_with_engine(
+    engine: Option<fmq::engine::EngineKind>,
+) -> (fmq::coordinator::server::Server, String) {
     let spec = ModelSpec::default_spec();
     let theta = spec.init_theta(&mut Pcg64::seed(5));
     let registry = Arc::new(Registry::build_fleet(
@@ -25,10 +27,42 @@ fn start_server() -> (fmq::coordinator::server::Server, String) {
         addr: "127.0.0.1:0".to_string(), // ephemeral port
         steps: 2,                        // fast for tests
         linger: Duration::from_millis(3),
+        engine,
     };
     let server = serve(registry, None, cfg).expect("server start");
     let addr = server.addr.to_string();
     (server, addr)
+}
+
+fn start_server() -> (fmq::coordinator::server::Server, String) {
+    start_server_with_engine(None)
+}
+
+/// The LUT engine is bit-exact against the dequantize-then-GEMM reference,
+/// so two servers differing only in `--engine` must serve identical images
+/// for the same model + seed.
+#[test]
+fn explicit_engines_agree_over_tcp() {
+    use fmq::engine::EngineKind;
+    let (s_lut, addr_lut) = start_server_with_engine(Some(EngineKind::Lut));
+    let (s_ref, addr_ref) = start_server_with_engine(Some(EngineKind::CpuRef));
+    let a = Client::connect(&addr_lut)
+        .unwrap()
+        .generate("ot2", 2, 1234)
+        .unwrap();
+    let b = Client::connect(&addr_ref)
+        .unwrap()
+        .generate("ot2", 2, 1234)
+        .unwrap();
+    assert_eq!(a, b, "lut and cpu-ref engines must serve identical images");
+    // fp32 under the lut choice falls back to the reference and still works
+    let f = Client::connect(&addr_lut)
+        .unwrap()
+        .generate("fp32", 1, 7)
+        .unwrap();
+    assert_eq!(f.len(), ModelSpec::default_spec().d);
+    s_lut.stop();
+    s_ref.stop();
 }
 
 #[test]
