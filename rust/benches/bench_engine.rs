@@ -1,23 +1,60 @@
-//! PERF: the native LUT-GEMM engine vs dequantize-then-f32-GEMM vs the
-//! compiled HLO runtime, across serving bit-widths and batch sizes.
+//! PERF: the native LUT-GEMM engines (v1 `lut`, v2 `lut2`) vs
+//! dequantize-then-f32-GEMM vs the compiled HLO runtime, across serving
+//! bit-widths and batch sizes.
 //!
 //! The dequantize-then-GEMM path (`cpu_ref::qvelocity`) is what the serve
 //! stack did before `engine/` existed: reconstruct every weight matrix to
-//! dense f32, then dense matmul. The LUT engine runs the same math from
-//! the packed codes, so the delta is pure memory traffic + fused gather.
-//! Acceptance target (ISSUE 2): LUT >= 2x the dequantize path at b <= 4
-//! on batch 512.
+//! dense f32, then dense matmul. The v1 LUT engine runs the same math from
+//! the packed codes; the v2 engine adds bulk tile decode, fused multi-code
+//! lookup tables and tile autotuning (see `docs/BENCHMARKS.md`).
+//! Acceptance targets: LUT >= 2x dequantize at b <= 4, batch 512 (ISSUE 2);
+//! v2 >= 2x v1 at b in {2,3,4}, batch >= 64 (ISSUE 3).
 //!
 //!   cargo bench --bench bench_engine             # full grid
 //!   FMQ_BENCH_FAST=1 cargo bench --bench bench_engine   # CI smoke
+//!
+//! Besides the stdout table, the grid is dumped to
+//! `results/bench_engine.json` (field meanings in `docs/BENCHMARKS.md`).
 
 use fmq::bench::Bencher;
-use fmq::engine::{Engine, LutEngine, Pool};
+use fmq::engine::{Engine, LutEngine, LutV2Engine, Pool, Tuner};
 use fmq::flow::cpu_ref;
 use fmq::model::spec::ModelSpec;
 use fmq::quant::{quantize_model, QuantMethod};
 use fmq::runtime::{artifacts, ArtifactSet};
+use fmq::util::json::Json;
 use fmq::util::rng::Pcg64;
+
+/// One (bits, batch) cell of the engine grid, all times mean seconds.
+struct Cell {
+    bits: u8,
+    batch: usize,
+    dequant_s: f64,
+    lut_s: f64,
+    lut2_s: f64,
+    lut2_pooled_s: f64,
+}
+
+impl Cell {
+    fn v2_vs_v1(&self) -> f64 {
+        self.lut_s / self.lut2_s
+    }
+    fn v2_vs_dequant(&self) -> f64 {
+        self.dequant_s / self.lut2_s
+    }
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bits", Json::Num(self.bits as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+            ("dequant_gemm_s", Json::Num(self.dequant_s)),
+            ("lut_v1_s", Json::Num(self.lut_s)),
+            ("lut_v2_s", Json::Num(self.lut2_s)),
+            ("lut_v2_pooled_s", Json::Num(self.lut2_pooled_s)),
+            ("speedup_v2_vs_v1", Json::Num(self.v2_vs_v1())),
+            ("speedup_v2_vs_dequant", Json::Num(self.v2_vs_dequant())),
+        ])
+    }
+}
 
 fn main() {
     let fast = std::env::var("FMQ_BENCH_FAST").is_ok();
@@ -39,14 +76,16 @@ fn main() {
         b.note_throughput(bs as f64, "samples");
     }
 
-    let mut speedups: Vec<(u8, usize, f64)> = Vec::new();
+    let mut cells: Vec<Cell> = Vec::new();
     for &bits in &bit_widths {
         let qm = quantize_model(&spec, &theta, QuantMethod::Ot, bits);
-        let engine = LutEngine::with_pool(&qm, Pool::serial()).expect("pack model");
-        let pooled = LutEngine::new(&qm).expect("pack model");
+        let v1 = LutEngine::with_pool(&qm, Pool::serial()).expect("pack model");
+        let v2 = LutV2Engine::with_config(&qm, Pool::serial(), Tuner::measured())
+            .expect("pack model");
+        let v2_pooled = LutV2Engine::new(&qm).expect("pack model");
         println!(
             "-- ot{bits}: resident {} KB packed vs {} KB fp32",
-            engine.model().resident_bytes() / 1024,
+            v1.model().resident_bytes() / 1024,
             spec.p() * 4 / 1024
         );
         for &bs in batches {
@@ -58,33 +97,86 @@ fn main() {
                 })
                 .mean_s;
             let lut = b
-                .bench(&format!("lut-gemm    ot{bits} velocity (B={bs})"), || {
-                    engine.velocity(&x, &t).unwrap()
+                .bench(&format!("lut-gemm v1 ot{bits} velocity (B={bs})"), || {
+                    v1.velocity(&x, &t).unwrap()
+                })
+                .mean_s;
+            // warm the v2 autotune cache outside the timed region so the
+            // cells measure steady-state dispatch, not first-call tuning
+            let _ = v2.velocity(&x, &t).unwrap();
+            let lut2 = b
+                .bench(&format!("lut-gemm v2 ot{bits} velocity (B={bs})"), || {
+                    v2.velocity(&x, &t).unwrap()
                 })
                 .mean_s;
             b.note_throughput(bs as f64, "samples");
-            if bs > 1 {
-                b.bench(
+            let _ = v2_pooled.velocity(&x, &t).unwrap();
+            let lut2_pooled = b
+                .bench(
                     &format!(
-                        "lut-gemm    ot{bits} velocity (B={bs}, {} threads)",
-                        pooled.pool().threads()
+                        "lut-gemm v2 ot{bits} velocity (B={bs}, {} threads)",
+                        v2_pooled.pool().threads()
                     ),
-                    || pooled.velocity(&x, &t).unwrap(),
-                );
-                b.note_throughput(bs as f64, "samples");
-            }
-            speedups.push((bits, bs, dequant / lut));
+                    || v2_pooled.velocity(&x, &t).unwrap(),
+                )
+                .mean_s;
+            b.note_throughput(bs as f64, "samples");
+            cells.push(Cell {
+                bits,
+                batch: bs,
+                dequant_s: dequant,
+                lut_s: lut,
+                lut2_s: lut2,
+                lut2_pooled_s: lut2_pooled,
+            });
         }
     }
 
-    println!("\nLUT-GEMM speedup vs dequantize-then-GEMM (single thread):");
-    for (bits, bs, s) in &speedups {
-        let flag = if *bits <= 4 && *bs >= 512 && *s < 2.0 {
-            "  <-- BELOW 2x TARGET"
+    println!("\nspeedups (single thread), acceptance flags per docs/BENCHMARKS.md:");
+    println!(
+        "  {:<6} {:>6} {:>14} {:>14} {:>14}",
+        "bits", "batch", "v1/dequant", "v2/v1", "v2/dequant"
+    );
+    for c in &cells {
+        let v1_vs_dequant = c.dequant_s / c.lut_s;
+        let mut misses: Vec<&str> = Vec::new();
+        if c.bits <= 4 && c.batch >= 512 && v1_vs_dequant < 2.0 {
+            misses.push("v1 BELOW 2x vs dequant");
+        }
+        if c.bits <= 4 && c.batch >= 64 && c.v2_vs_v1() < 2.0 {
+            misses.push("v2 BELOW 2x vs v1");
+        }
+        let flag = if misses.is_empty() {
+            String::new()
         } else {
-            ""
+            format!("  <-- {}", misses.join("; "))
         };
-        println!("  ot{bits} B={bs:<4} {s:>6.2}x{flag}");
+        println!(
+            "  ot{:<4} {:>6} {:>13.2}x {:>13.2}x {:>13.2}x{flag}",
+            c.bits,
+            c.batch,
+            v1_vs_dequant,
+            c.v2_vs_v1(),
+            c.v2_vs_dequant()
+        );
+    }
+
+    // machine-readable trajectory for docs/BENCHMARKS.md and CI archiving
+    let json = Json::obj(vec![
+        ("bench", Json::Str("bench_engine".into())),
+        ("fast_mode", Json::Bool(fast)),
+        ("model_params", Json::Num(spec.p() as f64)),
+        (
+            "cells",
+            Json::Arr(cells.iter().map(Cell::to_json).collect()),
+        ),
+    ]);
+    if let Err(e) = std::fs::create_dir_all("results")
+        .and_then(|_| std::fs::write("results/bench_engine.json", json.to_string()))
+    {
+        eprintln!("(could not write results/bench_engine.json: {e})");
+    } else {
+        println!("\n-> results/bench_engine.json");
     }
 
     // compiled HLO runtime, when artifacts exist (the `runtime` engine)

@@ -2,8 +2,8 @@
 //!
 //! Adaptive: calibrates iterations to a target measurement window, then
 //! reports mean / p50 / p95 / min plus derived throughput. All `cargo
-//! bench` targets (`benches/*.rs`, `harness = false`) use this, and the
-//! `§Perf` numbers in EXPERIMENTS.md come straight from its output format.
+//! bench` targets (`benches/*.rs`, `harness = false`) use this; see
+//! docs/BENCHMARKS.md for how to run them and read the output.
 
 use std::time::Instant;
 

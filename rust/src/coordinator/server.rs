@@ -20,7 +20,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::batcher::{distribute, Batcher, GenRequest};
 use crate::coordinator::registry::{Registry, Variant};
-use crate::engine::{CpuRefEngine, Engine, EngineKind, LutEngine};
+use crate::engine::{CpuRefEngine, Engine, EngineKind, LutEngine, LutV2Engine, Tuner};
 use crate::flow::sampler::{self, EngineStep, HloQStep, HloStep};
 use crate::model::spec::ModelSpec;
 use crate::runtime::SharedArtifacts;
@@ -78,8 +78,16 @@ fn resolve_engine<'a>(
             // unpackable model (e.g. >8 bits): serve correct, just slower
             Err(_) => Some(Box::new(CpuRefEngine::quantized(qm))),
         },
-        // the LUT engine is quantized-only; fp32 serves via the reference
-        (EngineKind::Lut, Variant::FullPrecision(theta)) => {
+        // v2: measured autotuning warms up on the first batches per GEMM
+        // shape, then dispatches cached tile plans
+        (EngineKind::Lut2, Variant::Quantized(qm)) => {
+            match LutV2Engine::with_config(qm, pool, Tuner::measured()) {
+                Ok(e) => Some(Box::new(e)),
+                Err(_) => Some(Box::new(CpuRefEngine::quantized(qm))),
+            }
+        }
+        // the LUT engines are quantized-only; fp32 serves via the reference
+        (EngineKind::Lut | EngineKind::Lut2, Variant::FullPrecision(theta)) => {
             Some(Box::new(CpuRefEngine::fp32(spec, theta)))
         }
         (EngineKind::CpuRef, Variant::FullPrecision(theta)) => {

@@ -3,18 +3,33 @@
 //! → residual blocks → output, with **no dense weight materialization
 //! anywhere**.
 //!
-//! The op sequence, bias handling and accumulation order mirror
-//! `flow/cpu_ref.rs::forward` exactly, and every multiply is the same
-//! `activation × codebook-level` product, so the output is bit-exact
-//! against [`crate::flow::cpu_ref::qvelocity`] (pinned by
-//! `tests/engine_integration.rs`).
+//! One op sequence (`LutModel::forward_with`, private) serves two
+//! kernel generations:
+//!
+//! * [`LutModel::velocity`] — the v1 per-activation-LUT kernel, bit-exact
+//!   against [`crate::flow::cpu_ref::qvelocity`] (same multiply, same
+//!   accumulation order — pinned by `tests/engine_integration.rs`);
+//! * [`LutModel::velocity_v2`] — the blocked fused-group kernel from
+//!   [`crate::engine::blocked`], dispatched through a
+//!   [`crate::engine::tune::Tuner`], with intra-layer column sharding
+//!   when the batch is too small to feed the pool. Equivalent to v1
+//!   within the 1e-5 harness (group fusion re-associates sums), and
+//!   bit-identical to *itself* across tile plans, thread counts and
+//!   sharding axes.
 
 use anyhow::{bail, Result};
 
+use crate::engine::blocked::{self, Scratch};
 use crate::engine::lut::LutLayer;
+use crate::engine::pool::Pool;
+use crate::engine::tune::Tuner;
 use crate::flow::cpu_ref::time_features;
 use crate::model::quantized::QuantizedModel;
 use crate::model::spec::ModelSpec;
+
+/// Minimum output columns per shard before column sharding engages —
+/// below this the scoped-spawn overhead outweighs the stripe work.
+const COL_SHARD_MIN: usize = 64;
 
 #[inline]
 fn silu(x: f32) -> f32 {
@@ -26,7 +41,9 @@ fn silu(x: f32) -> f32 {
 /// once (cheap, ~b/32 of the f32 model size); after that the model serves
 /// from ~`P·b/8` bytes instead of `P·4`.
 pub struct LutModel {
+    /// The architecture this model executes.
     pub spec: ModelSpec,
+    /// Code bit-width (1..=8).
     pub bits: u8,
     /// Ordered as `spec.weight_layers()`.
     layers: Vec<LutLayer>,
@@ -35,6 +52,7 @@ pub struct LutModel {
 }
 
 impl LutModel {
+    /// Pack a quantized model's codes into executable form.
     pub fn new(qm: &QuantizedModel) -> Result<Self> {
         if qm.bits > 8 {
             bail!("LUT engine supports 1..=8 bit codes, got {}", qm.bits);
@@ -74,8 +92,73 @@ impl LutModel {
         codes + cbs + self.biases.len() * 4
     }
 
-    /// Velocity forward: x flat [B, D], t [B] → v flat [B, D].
+    /// Velocity forward: x flat [B, D], t [B] → v flat [B, D], through
+    /// the v1 per-activation-LUT kernel (bit-exact vs `cpu_ref`).
     pub fn velocity(&self, x: &[f32], t: &[f32]) -> Vec<f32> {
+        self.forward_with(x, t, &mut |l: &LutLayer, xs: &[f32], out: &mut [f32], m: usize| {
+            l.matmul_into(xs, out, m)
+        })
+    }
+
+    /// Velocity forward through the v2 blocked fused-group kernel.
+    /// `tuner` picks tile plans (see [`crate::engine::tune`]); `pool`
+    /// supplies the intra-layer column-sharding axis used when the batch
+    /// is smaller than the thread count (the caller handles batch
+    /// sharding — see `LutV2Engine::velocity`). Scratch buffers —
+    /// serial and one slot per column shard — are reused across all
+    /// layers and tiles of the call, so the hot path performs no
+    /// per-element unpacking and no per-tile allocation (only the stripe
+    /// result buffers are allocated per sharded GEMM).
+    pub fn velocity_v2(&self, x: &[f32], t: &[f32], tuner: &Tuner, pool: &Pool) -> Vec<f32> {
+        let threads = pool.threads();
+        let mut scratch = Scratch::new();
+        // per-shard scratch slots, reused across every sharded layer GEMM
+        // of this call; each shard index locks only its own slot, so the
+        // mutexes are uncontended
+        let shard_scratch: Vec<std::sync::Mutex<Scratch>> =
+            (0..threads).map(|_| std::sync::Mutex::new(Scratch::new())).collect();
+        self.forward_with(x, t, &mut |l: &LutLayer, xs: &[f32], out: &mut [f32], m: usize| {
+            let n = l.cols;
+            if threads > 1 && m < threads && n >= 2 * COL_SHARD_MIN {
+                // latency-bound regime: shard output columns; stripes are
+                // bit-identical to the full-width kernel, so the scatter
+                // below reassembles the exact serial result
+                let stripes = pool.map_shards(n, COL_SHARD_MIN, |idx, c0, c1| {
+                    let mut s = shard_scratch[idx]
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner());
+                    let mut stripe = vec![0f32; m * (c1 - c0)];
+                    let plan = blocked::plan_stripe(l, tuner, xs, m, c0, c1, &mut s);
+                    blocked::matmul_stripe(l, xs, &mut stripe, m, c0, c1, plan, &mut s);
+                    stripe
+                });
+                for (c0, c1, stripe) in stripes {
+                    let wst = c1 - c0;
+                    for i in 0..m {
+                        let orow = &mut out[i * n + c0..i * n + c1];
+                        for (o, &v) in orow.iter_mut().zip(stripe[i * wst..(i + 1) * wst].iter()) {
+                            *o += v;
+                        }
+                    }
+                }
+            } else {
+                let plan = blocked::plan_stripe(l, tuner, xs, m, 0, n, &mut scratch);
+                blocked::matmul_stripe(l, xs, out, m, 0, n, plan, &mut scratch);
+            }
+        })
+    }
+
+    /// The shared op sequence — time embedding, input projection,
+    /// residual blocks, output head — parameterized over the matmul
+    /// kernel. Bias handling and op order mirror `flow/cpu_ref.rs::
+    /// forward` exactly; `mm` must *accumulate* `x @ W` into its zeroed
+    /// output, which both kernel generations do.
+    fn forward_with(
+        &self,
+        x: &[f32],
+        t: &[f32],
+        mm: &mut dyn FnMut(&LutLayer, &[f32], &mut [f32], usize),
+    ) -> Vec<f32> {
         let spec = &self.spec;
         let b = t.len();
         let (d, h_dim) = (spec.d, spec.hidden);
@@ -84,7 +167,7 @@ impl LutModel {
         // ht = silu(temb @ w_t + b_t)
         let temb = time_features(spec, t);
         let mut ht = vec![0f32; b * h_dim];
-        self.layer("w_t").matmul_into(&temb, &mut ht, b);
+        mm(self.layer("w_t"), &temb, &mut ht, b);
         let b_t = self.bias("b_t");
         for r in ht.chunks_mut(h_dim) {
             for (v, &bb) in r.iter_mut().zip(b_t.iter()) {
@@ -94,7 +177,7 @@ impl LutModel {
 
         // h = x @ w_in + b_in + ht
         let mut h = vec![0f32; b * h_dim];
-        self.layer("w_in").matmul_into(x, &mut h, b);
+        mm(self.layer("w_in"), x, &mut h, b);
         let b_in = self.bias("b_in");
         for (r, rt) in h.chunks_mut(h_dim).zip(ht.chunks(h_dim)) {
             for ((v, &bb), &tv) in r.iter_mut().zip(b_in.iter()).zip(rt.iter()) {
@@ -107,7 +190,7 @@ impl LutModel {
         let mut r2 = vec![0f32; b * h_dim];
         for i in 0..spec.blocks {
             u.iter_mut().for_each(|v| *v = 0.0);
-            self.layer(&format!("w1_{i}")).matmul_into(&h, &mut u, b);
+            mm(self.layer(&format!("w1_{i}")), &h, &mut u, b);
             let b1 = self.bias(&format!("b1_{i}"));
             for r in u.chunks_mut(h_dim) {
                 for (v, &bb) in r.iter_mut().zip(b1.iter()) {
@@ -115,7 +198,7 @@ impl LutModel {
                 }
             }
             r2.iter_mut().for_each(|v| *v = 0.0);
-            self.layer(&format!("w2_{i}")).matmul_into(&u, &mut r2, b);
+            mm(self.layer(&format!("w2_{i}")), &u, &mut r2, b);
             let b2 = self.bias(&format!("b2_{i}"));
             for (hr, rr) in h.chunks_mut(h_dim).zip(r2.chunks(h_dim)) {
                 for ((v, &rv), &bb) in hr.iter_mut().zip(rr.iter()).zip(b2.iter()) {
@@ -126,7 +209,7 @@ impl LutModel {
 
         // v = h @ w_out + b_out
         let mut out = vec![0f32; b * d];
-        self.layer("w_out").matmul_into(&h, &mut out, b);
+        mm(self.layer("w_out"), &h, &mut out, b);
         let b_out = self.bias("b_out");
         for r in out.chunks_mut(d) {
             for (v, &bb) in r.iter_mut().zip(b_out.iter()) {

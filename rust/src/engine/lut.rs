@@ -29,6 +29,7 @@ pub const TILE_K: usize = 16;
 /// codes at `packed.bits` bits each, plus the sorted codebook levels.
 #[derive(Clone, Debug)]
 pub struct LutLayer {
+    /// Weight layer name (matches the model spec's layer table).
     pub name: String,
     /// Fan-in (k dimension of x[m,k] @ W[k,n]).
     pub rows: usize,
@@ -36,6 +37,7 @@ pub struct LutLayer {
     pub cols: usize,
     /// Codebook levels; every packed code indexes into this.
     pub levels: Vec<f32>,
+    /// The packed b-bit code stream (row-major `[rows, cols]`).
     pub packed: PackedCodes,
 }
 

@@ -3,24 +3,37 @@
 //! Execution backends for the velocity network behind one [`Engine`]
 //! interface, so the sampler and the serving layer are engine-agnostic:
 //!
-//! * [`lut`] — LUT-GEMM kernels that run matmuls **directly over packed
-//!   b-bit codes** (no dense weight materialization, ever);
-//! * [`forward`] — the fused quantized forward built on those kernels,
-//!   bit-exact against `flow/cpu_ref.rs`;
-//! * [`pool`] — a std-thread worker pool that shards sample batches
-//!   across cores for the Euler/Heun loop;
+//! * [`lut`] — v1 LUT-GEMM kernels that run matmuls **directly over
+//!   packed b-bit codes** (no dense weight materialization, ever);
+//! * [`blocked`] — the v2 blocked kernel: bulk tile decode, fused
+//!   multi-code lookup tables (one table load per `⌊8/b⌋` weights) and
+//!   register-paired output sweeps;
+//! * [`tune`] — the kernel-dispatch/autotune layer that picks v2 tile
+//!   plans per (bits, M, N, K) shape, by heuristic or by measurement;
+//! * [`forward`] — the fused quantized forward built on those kernels;
+//!   v1 is bit-exact against `flow/cpu_ref.rs`, v2 is equivalent within
+//!   the 1e-5 harness;
+//! * [`pool`] — a std-thread worker pool with two parallelism axes:
+//!   batch (row) sharding for throughput, and intra-layer output-column
+//!   sharding for the latency-bound small-batch regime;
 //! * [`EngineKind`] — the `--engine` selector (`cpu-ref` | `lut` |
-//!   `runtime`) dispatched by `flow/sampler.rs`, `coordinator/server.rs`
-//!   and `main.rs`.
+//!   `lut2` | `runtime`) dispatched by `flow/sampler.rs`,
+//!   `coordinator/server.rs` and `main.rs`.
 //!
 //! The `runtime` kind routes to the compiled-HLO PJRT path in
 //! [`crate::runtime`] (feature-gated); it has no `Engine` impl here
 //! because its sessions are batch-shaped and device-resident — the
 //! serving layer adapts it through the same `StepBackend` seam instead.
+//!
+//! See `docs/ARCHITECTURE.md` for the end-to-end pipeline walkthrough
+//! and `docs/BENCHMARKS.md` for how the engines are measured.
+#![warn(missing_docs)]
 
+pub mod blocked;
 pub mod forward;
 pub mod lut;
 pub mod pool;
+pub mod tune;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -31,13 +44,37 @@ use crate::model::spec::ModelSpec;
 pub use forward::LutModel;
 pub use lut::LutLayer;
 pub use pool::Pool;
+pub use tune::{TilePlan, Tuner};
 
 /// A velocity-network execution backend. Implementations are `Sync` so
 /// one engine instance serves concurrent batches.
+///
+/// The forward contract: `velocity` maps a flat row-major batch
+/// `x[B, D]` plus per-row times `t[B]` to the velocity field `v[B, D]`,
+/// and every engine for the same model must agree within the 1e-5
+/// equivalence harness (`tests/engine_integration.rs`). Example, running
+/// the forward through the native v2 engine:
+///
+/// ```
+/// use fmq::engine::{Engine, LutV2Engine};
+/// use fmq::model::spec::ModelSpec;
+/// use fmq::quant::{quantize_model, QuantMethod};
+/// use fmq::util::rng::Pcg64;
+///
+/// let spec = ModelSpec::default_spec();
+/// let theta = spec.init_theta(&mut Pcg64::seed(7));
+/// let qm = quantize_model(&spec, &theta, QuantMethod::Uniform, 4);
+/// let engine = LutV2Engine::new(&qm)?;
+/// let x = vec![0.1f32; 2 * spec.d];        // batch of two samples
+/// let v = engine.velocity(&x, &[0.25, 0.75])?;
+/// assert_eq!(v.len(), 2 * spec.d);
+/// # anyhow::Ok(())
+/// ```
 pub trait Engine: Send + Sync {
     /// Short human-readable backend name (for logs and benches).
     fn name(&self) -> &'static str;
 
+    /// The architecture this engine executes.
     fn spec(&self) -> &ModelSpec;
 
     /// v = f(x, t): x flat [B, D], t [B] → v flat [B, D].
@@ -65,23 +102,34 @@ pub trait Engine: Send + Sync {
 pub enum EngineKind {
     /// Dequantize-then-dense-GEMM reference (`flow/cpu_ref.rs`).
     CpuRef,
-    /// Native LUT-GEMM over packed codes (this module).
+    /// Native v1 LUT-GEMM over packed codes ([`lut`]).
     Lut,
+    /// Blocked, autotuned v2 LUT-GEMM ([`blocked`] + [`tune`]).
+    Lut2,
     /// Compiled-HLO PJRT artifacts (`runtime`, feature-gated).
     Runtime,
 }
 
 impl EngineKind {
-    pub const ALL: [EngineKind; 3] = [EngineKind::CpuRef, EngineKind::Lut, EngineKind::Runtime];
+    /// Every selectable backend, in `--engine` help order.
+    pub const ALL: [EngineKind; 4] = [
+        EngineKind::CpuRef,
+        EngineKind::Lut,
+        EngineKind::Lut2,
+        EngineKind::Runtime,
+    ];
 
+    /// The `--engine` flag value for this backend.
     pub fn name(&self) -> &'static str {
         match self {
             EngineKind::CpuRef => "cpu-ref",
             EngineKind::Lut => "lut",
+            EngineKind::Lut2 => "lut2",
             EngineKind::Runtime => "runtime",
         }
     }
 
+    /// Inverse of [`EngineKind::name`]; `None` for unknown strings.
     pub fn parse(s: &str) -> Option<Self> {
         Self::ALL.iter().copied().find(|k| k.name() == s)
     }
@@ -90,7 +138,8 @@ impl EngineKind {
 impl std::str::FromStr for EngineKind {
     type Err = anyhow::Error;
     fn from_str(s: &str) -> Result<Self> {
-        Self::parse(s).ok_or_else(|| anyhow!("unknown engine '{s}' (use cpu-ref|lut|runtime)"))
+        Self::parse(s)
+            .ok_or_else(|| anyhow!("unknown engine '{s}' (use cpu-ref|lut|lut2|runtime)"))
     }
 }
 
@@ -115,12 +164,14 @@ pub struct CpuRefEngine<'a> {
 }
 
 impl<'a> CpuRefEngine<'a> {
+    /// Full-precision reference over raw theta.
     pub fn fp32(spec: &'a ModelSpec, theta: &'a ParamStore) -> Self {
         Self {
             inner: CpuVariant::Fp32 { spec, theta },
         }
     }
 
+    /// Dequantize-then-GEMM reference over a quantized model.
     pub fn quantized(qm: &'a QuantizedModel) -> Self {
         Self {
             inner: CpuVariant::Quantized(qm),
@@ -162,6 +213,7 @@ impl LutEngine {
         Self::with_pool(qm, Pool::new(0))
     }
 
+    /// Pack a quantized model with an explicit worker pool.
     pub fn with_pool(qm: &QuantizedModel, pool: Pool) -> Result<Self> {
         Ok(Self {
             model: LutModel::new(qm)?,
@@ -169,10 +221,12 @@ impl LutEngine {
         })
     }
 
+    /// The packed model this engine executes.
     pub fn model(&self) -> &LutModel {
         &self.model
     }
 
+    /// The worker pool batches are sharded across.
     pub fn pool(&self) -> &Pool {
         &self.pool
     }
@@ -194,6 +248,81 @@ impl Engine for LutEngine {
     }
 }
 
+/// The v2 engine: blocked fused-group LUT-GEMM forward with measured
+/// tile autotuning, batch sharding for large batches and intra-layer
+/// column sharding for small ones. Selected with `--engine lut2`.
+///
+/// v2 output is deterministic and bit-identical across thread counts,
+/// sharding axes and tile plans (only the bit-width-derived `group`
+/// affects accumulation order — see [`tune`]); versus the v1/`cpu-ref`
+/// order it re-associates sums, staying within the 1e-5 harness.
+pub struct LutV2Engine {
+    model: LutModel,
+    pool: Pool,
+    tuner: Tuner,
+}
+
+impl LutV2Engine {
+    /// Pack a quantized model for v2 execution: all cores, measured
+    /// autotuning (first call per GEMM shape times the candidate tiles).
+    pub fn new(qm: &QuantizedModel) -> Result<Self> {
+        Self::with_config(qm, Pool::new(0), Tuner::measured())
+    }
+
+    /// Full control over the pool and plan policy (tests, benches).
+    pub fn with_config(qm: &QuantizedModel, pool: Pool, tuner: Tuner) -> Result<Self> {
+        Ok(Self {
+            model: LutModel::new(qm)?,
+            pool,
+            tuner,
+        })
+    }
+
+    /// The packed model this engine executes.
+    pub fn model(&self) -> &LutModel {
+        &self.model
+    }
+
+    /// The worker pool supplying both parallelism axes.
+    pub fn pool(&self) -> &Pool {
+        &self.pool
+    }
+
+    /// The tile-plan policy in use.
+    pub fn tuner(&self) -> &Tuner {
+        &self.tuner
+    }
+}
+
+impl Engine for LutV2Engine {
+    fn name(&self) -> &'static str {
+        "lut2"
+    }
+
+    fn spec(&self) -> &ModelSpec {
+        &self.model.spec
+    }
+
+    fn velocity(&self, x: &[f32], t: &[f32]) -> Result<Vec<f32>> {
+        let d = self.model.spec.d;
+        let b = t.len();
+        let threads = self.pool.threads();
+        if threads > 1 && b >= threads {
+            // throughput regime: row-shard the batch, run each shard's
+            // forward serially (column sharding would oversubscribe)
+            self.pool.map_rows(x, t, d, |xs, ts| {
+                Ok(self
+                    .model
+                    .velocity_v2(xs, ts, &self.tuner, &Pool::serial()))
+            })
+        } else {
+            // latency regime: parallelism comes from column sharding
+            // inside each layer GEMM
+            Ok(self.model.velocity_v2(x, t, &self.tuner, &self.pool))
+        }
+    }
+}
+
 /// Build an engine for a quantized model by kind. `Runtime` is rejected
 /// here — its device-resident sessions live behind `StepBackend` in the
 /// serving layer, not behind `Engine`.
@@ -201,6 +330,7 @@ pub fn build_quantized(kind: EngineKind, qm: &QuantizedModel) -> Result<Box<dyn 
     match kind {
         EngineKind::CpuRef => Ok(Box::new(CpuRefEngine::quantized(qm))),
         EngineKind::Lut => Ok(Box::new(LutEngine::new(qm)?)),
+        EngineKind::Lut2 => Ok(Box::new(LutV2Engine::new(qm)?)),
         EngineKind::Runtime => {
             bail!("runtime engine is driven through the artifact sessions, not Engine")
         }
@@ -267,9 +397,55 @@ mod tests {
         let qm = quantize_model(&spec, &theta, QuantMethod::Log2, 2);
         assert_eq!(build_quantized(EngineKind::Lut, &qm).unwrap().name(), "lut");
         assert_eq!(
+            build_quantized(EngineKind::Lut2, &qm).unwrap().name(),
+            "lut2"
+        );
+        assert_eq!(
             build_quantized(EngineKind::CpuRef, &qm).unwrap().name(),
             "cpu-ref"
         );
         assert!(build_quantized(EngineKind::Runtime, &qm).is_err());
+    }
+
+    #[test]
+    fn v2_engine_matches_v1_within_harness_tolerance() {
+        let spec = crate::model::spec::ModelSpec::default_spec();
+        let theta = spec.init_theta(&mut Pcg64::seed(36));
+        let qm = quantize_model(&spec, &theta, QuantMethod::Ot, 3);
+        let v1 = LutEngine::with_pool(&qm, Pool::serial()).unwrap();
+        let v2 = LutV2Engine::with_config(&qm, Pool::serial(), Tuner::Heuristic).unwrap();
+        let mut rng = Pcg64::seed(37);
+        let x: Vec<f32> = (0..2 * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let t = [0.3, 0.7];
+        let a = v1.velocity(&x, &t).unwrap();
+        let b = v2.velocity(&x, &t).unwrap();
+        crate::util::check::assert_close(&a, &b, 1e-5, 1e-6);
+    }
+
+    #[test]
+    fn v2_engine_is_bit_identical_across_thread_counts_and_tuners() {
+        let spec = crate::model::spec::ModelSpec::default_spec();
+        let theta = spec.init_theta(&mut Pcg64::seed(38));
+        let qm = quantize_model(&spec, &theta, QuantMethod::Uniform, 2);
+        let mut rng = Pcg64::seed(39);
+        // b = 2 exercises column sharding (b < threads); b = 9 row sharding
+        for b in [2usize, 9] {
+            let x: Vec<f32> = (0..b * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let t: Vec<f32> = (0..b).map(|i| (i as f32 + 0.5) / b as f32).collect();
+            let serial = LutV2Engine::with_config(&qm, Pool::serial(), Tuner::Heuristic)
+                .unwrap()
+                .velocity(&x, &t)
+                .unwrap();
+            for threads in [3usize, 8] {
+                for tuner in [Tuner::Heuristic, Tuner::measured()] {
+                    let eng = LutV2Engine::with_config(&qm, Pool::new(threads), tuner).unwrap();
+                    assert_eq!(
+                        eng.velocity(&x, &t).unwrap(),
+                        serial,
+                        "b={b} threads={threads}"
+                    );
+                }
+            }
+        }
     }
 }

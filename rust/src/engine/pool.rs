@@ -1,18 +1,29 @@
-//! Batch-sharding worker pool for the sampling loop.
+//! Worker pool with two parallelism axes for the serving hot path.
 //!
-//! The velocity network is row-independent (each sample's output depends
-//! only on its own input — pinned by `cpu_ref::tests::batch_independence`),
-//! so a batch of B samples splits into contiguous row shards that run on
-//! std threads with zero synchronization beyond the final join. Scoped
-//! threads borrow the input slices directly — no copies in, one ordered
-//! concatenation out — so sharding is numerically invisible.
+//! **Batch sharding** ([`Pool::map_rows`]): the velocity network is
+//! row-independent (each sample's output depends only on its own input —
+//! pinned by `cpu_ref::tests::batch_independence`), so a batch of B
+//! samples splits into contiguous row shards that run on std threads with
+//! zero synchronization beyond the final join. Scoped threads borrow the
+//! input slices directly — no copies in, one ordered concatenation out —
+//! so sharding is numerically invisible.
+//!
+//! **Intra-layer column sharding** ([`Pool::map_shards`]): when the batch
+//! is too small to feed every core (the latency-bound B=1 regime), the v2
+//! engine splits each layer GEMM's *output columns* across threads
+//! instead. Each output column's accumulation is independent of every
+//! other column, so this axis is also bit-exact — pinned by
+//! `blocked::tests::column_stripes_compose_to_full_width` and the engine
+//! integration tests.
 //!
 //! Threads are scoped *per call* (shard 0 runs on the caller, so an
 //! N-way split spawns N−1). A spawn is ~tens of µs; one Euler step on a
 //! 16-sample batch is ~tens of ms of GEMM, so the overhead stays well
 //! under 1% — persistent workers would buy little at the cost of
-//! `'static` plumbing. The serving layer additionally divides cores
-//! across variant workers so concurrent batches don't oversubscribe.
+//! `'static` plumbing. Each serving variant worker gets an all-cores
+//! pool: a lone hot variant saturates the machine, and when several
+//! variants batch at once their scoped threads simply time-share under
+//! the OS scheduler (see `coordinator/server.rs::worker_loop`).
 
 use anyhow::{anyhow, Result};
 
@@ -43,6 +54,7 @@ impl Pool {
         Self { threads: 1 }
     }
 
+    /// Worker thread count this pool shards across.
     pub fn threads(&self) -> usize {
         self.threads
     }
@@ -99,6 +111,57 @@ impl Pool {
         }
         Ok(out)
     }
+
+    /// Split `0..n` into at most `threads` contiguous ranges of at least
+    /// `min_per_shard` items each and run `f(shard_idx, lo, hi)` on every
+    /// range — range 0 on the calling thread, the rest on scoped spawns.
+    /// Results come back in range order; `shard_idx < threads` is the
+    /// range's position, so callers can address per-shard state (e.g.
+    /// reusable kernel scratch) without synchronization beyond a slot
+    /// lock. This is the second parallelism axis: the v2 engine uses it
+    /// to shard a layer's output columns when the batch is too small for
+    /// row sharding to help.
+    pub fn map_shards<T, F>(&self, n: usize, min_per_shard: usize, f: F) -> Vec<(usize, usize, T)>
+    where
+        F: Fn(usize, usize, usize) -> T + Sync,
+        T: Send,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        let min = min_per_shard.max(1);
+        let shards = self.threads.min(n.div_ceil(min)).max(1);
+        if shards <= 1 {
+            return vec![(0, n, f(0, 0, n))];
+        }
+        let per = n.div_ceil(shards);
+        let mut ranges = Vec::with_capacity(shards);
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + per).min(n);
+            ranges.push((lo, hi));
+            lo = hi;
+        }
+        let fref = &f;
+        let mut outs: Vec<(usize, usize, T)> = Vec::with_capacity(ranges.len());
+        std::thread::scope(|s| {
+            let (first, rest) = ranges.split_first().expect("at least one shard");
+            let handles: Vec<_> = rest
+                .iter()
+                .enumerate()
+                .map(|(i, &(lo, hi))| s.spawn(move || (lo, hi, fref(i + 1, lo, hi))))
+                .collect();
+            let (lo, hi) = *first;
+            outs.push((lo, hi, fref(0, lo, hi)));
+            for h in handles {
+                match h.join() {
+                    Ok(v) => outs.push(v),
+                    Err(p) => std::panic::resume_unwind(p),
+                }
+            }
+        });
+        outs
+    }
 }
 
 #[cfg(test)]
@@ -151,5 +214,37 @@ mod tests {
     fn empty_batch_is_empty() {
         let out = Pool::new(4).map_rows(&[], &[], 2, double_rows).unwrap();
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn map_shards_covers_range_in_order() {
+        for (threads, n, min) in [(4usize, 100usize, 1usize), (3, 7, 2), (8, 5, 1), (2, 64, 64)] {
+            let shards = Pool::new(threads).map_shards(n, min, |idx, lo, hi| (idx, hi - lo));
+            // ordered, contiguous, exhaustive, with positional indices
+            let mut expect_lo = 0usize;
+            for (pos, &(lo, hi, (idx, w))) in shards.iter().enumerate() {
+                assert_eq!(lo, expect_lo);
+                assert_eq!(w, hi - lo);
+                assert_eq!(idx, pos, "shard index must be its position");
+                assert!(hi - lo >= 1);
+                expect_lo = hi;
+            }
+            assert_eq!(expect_lo, n, "threads={threads} n={n}");
+            assert!(shards.len() <= threads);
+            if min > 1 {
+                // every shard except possibly the last meets the minimum
+                for &(lo, hi, _) in &shards[..shards.len() - 1] {
+                    assert!(hi - lo >= min, "shard {lo}..{hi} under min {min}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn map_shards_single_thread_runs_inline() {
+        let shards = Pool::serial().map_shards(10, 1, |idx, lo, hi| (idx, lo, hi));
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0], (0, 10, (0, 0, 10)));
+        assert!(Pool::new(4).map_shards(0, 1, |_, _, _| 0).is_empty());
     }
 }

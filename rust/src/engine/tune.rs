@@ -1,0 +1,265 @@
+//! Kernel dispatch / autotune for the v2 blocked LUT-GEMM.
+//!
+//! The blocked kernel in [`crate::engine::blocked`] is parameterized by a
+//! [`TilePlan`]. Two of its knobs behave very differently:
+//!
+//! * **`group`** — how many adjacent weight rows fuse into one lookup
+//!   index — changes floating-point association, so it is a *pure
+//!   function of the bit-width* (see [`max_group`]) and is never tuned.
+//!   This keeps every plan numerically identical.
+//! * **`k_tile`** — how many weight rows decode per tile — only moves
+//!   work between loops. Because the kernel aligns tiles to `group`
+//!   boundaries, the accumulation order per output element is invariant
+//!   in `k_tile`, which makes it safe to pick by *measurement* without
+//!   giving up bit-for-bit reproducibility.
+//!
+//! [`Tuner`] is the dispatch policy: a fixed plan (tests), a shape
+//! heuristic (zero-cost startup), or measured autotuning that times the
+//! candidate tiles once per (bits, M-bucket, N, K) shape on the real
+//! data and caches the winner for the lifetime of the engine.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Largest number of codes that can fuse into one 8-bit lookup index at
+/// `bits` per code: `max_group(2) == 4`, `max_group(3) == 2`,
+/// `max_group(4) == 2`, `max_group(b >= 5) == 1`.
+pub fn max_group(bits: u8) -> usize {
+    (8 / bits.clamp(1, 8) as usize).max(1)
+}
+
+/// Tile shape for one blocked LUT-GEMM invocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TilePlan {
+    /// Weight rows decoded per tile. The kernel rounds this up to a
+    /// multiple of `2 * group` so quad/pair boundaries land on the same
+    /// absolute k positions for every plan (numeric invariance).
+    pub k_tile: usize,
+    /// Codes fused per lookup index (`group * bits <= 8`). Must equal
+    /// [`max_group`] of the layer's bit-width for full fusion; smaller
+    /// values are legal but slower and change accumulation order.
+    pub group: usize,
+}
+
+impl TilePlan {
+    /// Deterministic shape heuristic: full fusion, and a tile size that
+    /// keeps the decoded tile + fused indices comfortably L1-resident
+    /// for small batches while amortizing decode for large ones.
+    pub fn heuristic(bits: u8, m: usize, _n: usize, k: usize) -> TilePlan {
+        let group = max_group(bits);
+        let base = if m >= 16 { 64 } else { 32 };
+        let align = 2 * group;
+        let k_tile = base.min(k.max(1)).div_ceil(align) * align;
+        TilePlan { k_tile, group }
+    }
+
+    /// The candidate tile sizes measured autotuning chooses between.
+    pub fn candidates(bits: u8, k: usize) -> Vec<TilePlan> {
+        let group = max_group(bits);
+        let align = 2 * group;
+        let mut out: Vec<TilePlan> = Vec::new();
+        for kt in [16usize, 32, 64, 128] {
+            let kt = kt.min(k.max(1)).div_ceil(align) * align;
+            let plan = TilePlan { k_tile: kt, group };
+            if !out.contains(&plan) {
+                out.push(plan);
+            }
+        }
+        out
+    }
+}
+
+/// Cache key for measured plans. `m` is bucketed so a serving engine
+/// does not re-tune for every batch size the batcher produces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ShapeKey {
+    /// Code bit-width.
+    pub bits: u8,
+    /// Batch-size bucket: 0 for M=1, then doubling ranges.
+    pub m_bucket: u8,
+    /// Output columns of the GEMM (stripe width under column sharding).
+    pub n: u32,
+    /// Fan-in rows of the GEMM.
+    pub k: u32,
+}
+
+impl ShapeKey {
+    /// Bucket `m` logarithmically: 1 → 0, 2–3 → 1, 4–7 → 2, ...
+    pub fn new(bits: u8, m: usize, n: usize, k: usize) -> Self {
+        let m_bucket = usize::BITS - m.max(1).leading_zeros() - 1;
+        Self {
+            bits,
+            m_bucket: m_bucket as u8,
+            n: n as u32,
+            k: k as u32,
+        }
+    }
+}
+
+/// Plan-selection policy for the v2 kernel. All variants produce
+/// numerically identical results (only `k_tile` varies — see the module
+/// docs), so the choice is purely a speed/startup-cost trade-off.
+pub enum Tuner {
+    /// One plan for every shape. Used by tests that pin the numeric
+    /// invariance across tile sizes.
+    Fixed(TilePlan),
+    /// [`TilePlan::heuristic`] per shape; no measurement.
+    Heuristic,
+    /// Measure each candidate once per [`ShapeKey`] on the live inputs
+    /// and cache the fastest. First call per shape pays a few extra
+    /// kernel runs; every later call dispatches from the cache.
+    Measured(Mutex<HashMap<ShapeKey, TilePlan>>),
+}
+
+impl Tuner {
+    /// A fresh measured autotuner with an empty plan cache.
+    pub fn measured() -> Self {
+        Tuner::Measured(Mutex::new(HashMap::new()))
+    }
+
+    /// Resolve the plan for a (bits, m, n, k) GEMM shape. `measure` runs
+    /// one kernel invocation with the given plan and returns its wall
+    /// time in seconds; it is only called by the `Measured` variant on a
+    /// cache miss.
+    pub fn plan(
+        &self,
+        bits: u8,
+        m: usize,
+        n: usize,
+        k: usize,
+        mut measure: impl FnMut(TilePlan) -> f64,
+    ) -> TilePlan {
+        match self {
+            Tuner::Fixed(p) => *p,
+            Tuner::Heuristic => TilePlan::heuristic(bits, m, n, k),
+            Tuner::Measured(cache) => {
+                let key = ShapeKey::new(bits, m, n, k);
+                if let Some(p) = cache
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .get(&key)
+                {
+                    return *p;
+                }
+                // measure with the lock released so concurrent shards
+                // keep computing during warm-up; a racing thread may
+                // measure the same shape once more, which is harmless
+                // (every plan is numerically identical) — first insert
+                // wins so later dispatches stay consistent
+                let mut best = TilePlan::heuristic(bits, m, n, k);
+                let mut best_t = f64::INFINITY;
+                for cand in TilePlan::candidates(bits, k) {
+                    let t = measure(cand);
+                    if t < best_t {
+                        best_t = t;
+                        best = cand;
+                    }
+                }
+                *cache
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .entry(key)
+                    .or_insert(best)
+            }
+        }
+    }
+
+    /// Short policy name for logs and benches.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tuner::Fixed(_) => "fixed",
+            Tuner::Heuristic => "heuristic",
+            Tuner::Measured(_) => "measured",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_group_respects_index_width() {
+        for bits in 1..=8u8 {
+            let g = max_group(bits);
+            assert!(g >= 1);
+            assert!(g * bits as usize <= 8, "bits={bits} group={g}");
+            // full fusion: adding one more code would overflow the index
+            assert!((g + 1) * bits as usize > 8, "bits={bits} group={g}");
+        }
+        assert_eq!(max_group(2), 4);
+        assert_eq!(max_group(3), 2);
+        assert_eq!(max_group(4), 2);
+        assert_eq!(max_group(8), 1);
+    }
+
+    #[test]
+    fn heuristic_and_candidates_are_aligned() {
+        for bits in 1..=8u8 {
+            for k in [1usize, 5, 16, 100, 512] {
+                for m in [1usize, 8, 64] {
+                    let p = TilePlan::heuristic(bits, m, 512, k);
+                    assert_eq!(p.group, max_group(bits));
+                    assert!(p.k_tile >= p.group);
+                    assert_eq!(p.k_tile % (2 * p.group), 0, "bits={bits} k={k}");
+                }
+                for c in TilePlan::candidates(bits, k) {
+                    assert_eq!(c.k_tile % (2 * c.group), 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shape_key_buckets_batch_sizes() {
+        assert_eq!(ShapeKey::new(4, 1, 8, 8).m_bucket, 0);
+        assert_eq!(ShapeKey::new(4, 2, 8, 8).m_bucket, 1);
+        assert_eq!(ShapeKey::new(4, 3, 8, 8).m_bucket, 1);
+        assert_eq!(ShapeKey::new(4, 64, 8, 8).m_bucket, 6);
+        assert_eq!(
+            ShapeKey::new(4, 65, 8, 8).m_bucket,
+            ShapeKey::new(4, 127, 8, 8).m_bucket
+        );
+    }
+
+    #[test]
+    fn measured_tuner_caches_the_winner() {
+        let tuner = Tuner::measured();
+        let mut calls = 0usize;
+        let plan = tuner.plan(2, 4, 64, 512, |p| {
+            calls += 1;
+            // pretend tile 32 is fastest
+            if p.k_tile == 32 {
+                1.0
+            } else {
+                2.0
+            }
+        });
+        assert_eq!(plan.k_tile, 32);
+        assert!(calls >= 2, "should have measured multiple candidates");
+        // second resolve: served from cache, no measurement
+        let plan2 = tuner.plan(2, 4, 64, 512, |_| {
+            panic!("cache hit must not re-measure")
+        });
+        assert_eq!(plan, plan2);
+        // different shape -> fresh measurement
+        let mut again = 0usize;
+        tuner.plan(2, 4, 64, 256, |_| {
+            again += 1;
+            1.0
+        });
+        assert!(again >= 1);
+    }
+
+    #[test]
+    fn fixed_and_heuristic_never_measure() {
+        let fixed = Tuner::Fixed(TilePlan { k_tile: 16, group: 2 });
+        let p = fixed.plan(3, 1, 8, 8, |_| panic!("fixed must not measure"));
+        assert_eq!(p.k_tile, 16);
+        let h = Tuner::Heuristic;
+        let p = h.plan(3, 1, 8, 8, |_| panic!("heuristic must not measure"));
+        assert_eq!(p.group, max_group(3));
+        assert_eq!(h.name(), "heuristic");
+        assert_eq!(Tuner::measured().name(), "measured");
+    }
+}

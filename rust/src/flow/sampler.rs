@@ -64,8 +64,9 @@ impl StepBackend for CpuQStep<'_> {
 /// Any [`crate::engine::Engine`] adapted to the step-backend seam, so the
 /// generation/encoding drivers below (and everything layered on them —
 /// the batcher workers, the sweep runner) are engine-agnostic: the native
-/// LUT engine, the dequantize-then-GEMM reference and future backends all
-/// integrate through this one adapter.
+/// LUT engines (v1 `lut` and the blocked autotuned `lut2`), the
+/// dequantize-then-GEMM reference and future backends all integrate
+/// through this one adapter.
 pub struct EngineStep<'a> {
     pub engine: &'a dyn crate::engine::Engine,
 }
@@ -289,20 +290,26 @@ mod tests {
 
     #[test]
     fn engine_step_matches_cpu_backend() {
-        use crate::engine::{CpuRefEngine, LutEngine};
+        use crate::engine::{CpuRefEngine, LutEngine, LutV2Engine};
         use crate::quant::{quantize_model, QuantMethod};
         let (spec, theta) = setup();
         let qm = quantize_model(&spec, &theta, QuantMethod::Ot, 3);
         let x0 = vec![0.25f32; 2 * spec.d];
         let mut direct = CpuQStep { qm: &qm };
         let want = generate_from(&mut direct, &x0, 6).unwrap();
-        // the same model through both Engine impls and the adapter
+        // the same model through the Engine impls and the adapter
         let cref = CpuRefEngine::quantized(&qm);
         let mut be = EngineStep { engine: &cref };
         assert_eq!(generate_from(&mut be, &x0, 6).unwrap(), want);
         let lut = LutEngine::new(&qm).unwrap();
         let mut be = EngineStep { engine: &lut };
         assert_eq!(generate_from(&mut be, &x0, 6).unwrap(), want);
+        // the v2 blocked kernel re-associates sums: equal within the
+        // integration harness tolerance, not bit-for-bit
+        let lut2 = LutV2Engine::new(&qm).unwrap();
+        let mut be = EngineStep { engine: &lut2 };
+        let got = generate_from(&mut be, &x0, 6).unwrap();
+        crate::util::check::assert_close(&got, &want, 1e-4, 1e-5);
     }
 
     #[test]

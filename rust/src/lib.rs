@@ -9,9 +9,12 @@
 //!   datasets ([`data`]), metrics ([`metrics`]), training/sampling drivers
 //!   ([`flow`]), experiment sweeps and a serving layer ([`coordinator`]).
 //! * **Native inference ([`engine`])** — the low-bit serving hot path:
-//!   LUT-GEMM kernels that execute the velocity network **directly from
-//!   packed codebook indices** (no dense f32 dequantization), plus a
-//!   std-thread pool that shards sample batches across cores.
+//!   two generations of LUT-GEMM kernels that execute the velocity
+//!   network **directly from packed codebook indices** (no dense f32
+//!   dequantization) — v1 (`lut`, per-activation tables, bit-exact vs
+//!   the reference) and v2 (`lut2`, cache-blocked with fused multi-code
+//!   tables and measured tile autotuning) — plus a std-thread pool with
+//!   batch-sharding and intra-layer column-sharding axes.
 //! * **Layer 2/1 (build-time python, `pjrt` feature)** — the flow-matching
 //!   velocity network and the Pallas `qmm`/`assign` kernels, AOT-lowered
 //!   to HLO text and executed through the PJRT C API by [`runtime`].
@@ -24,15 +27,25 @@
 //!  request ──> coordinator::server ──> coordinator::batcher ─┐
 //!                                                            │ one batch
 //!                                                            v
-//!                         flow::sampler (StepBackend / EngineStep)
-//!                           │                │               │
-//!                 EngineKind::CpuRef   EngineKind::Lut   EngineKind::Runtime
-//!                           │                │               │
-//!                  flow::cpu_ref      engine::forward    runtime::artifacts
-//!                  (dequant + dense   (LUT-GEMM over     (compiled HLO via
-//!                   f32 GEMM)          packed codes,      PJRT, `pjrt`
-//!                                      engine::pool)      feature)
+//!                     flow::sampler (StepBackend / EngineStep)
+//!                 │             │             │               │
+//!             EngineKind::  EngineKind::  EngineKind::   EngineKind::
+//!               CpuRef         Lut           Lut2          Runtime
+//!                 │             │             │               │
+//!          flow::cpu_ref  engine::lut   engine::blocked  runtime::artifacts
+//!          (dequant +     (v1 LUT-GEMM  (v2 blocked,     (compiled HLO via
+//!           dense f32      over packed   fused tables,    PJRT, `pjrt`
+//!           GEMM)          codes)        engine::tune)    feature)
+//!                 \             │             │
+//!                  \       engine::forward (one op sequence)
+//!                   \           │             │
+//!                    `────── engine::pool (rows ∥ columns) ──────'
 //! ```
+//!
+//! The prose walkthrough of this diagram — train → quantize → pack →
+//! engine → batcher/server, including the `Engine` trait contract and
+//! where the v2 dispatch plugs in — lives in `docs/ARCHITECTURE.md`;
+//! how to measure every stage is in `docs/BENCHMARKS.md`.
 //!
 //! Quickstart (see `examples/quickstart.rs`):
 //!

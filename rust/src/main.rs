@@ -1,6 +1,7 @@
 //! fmq — CLI for the OT-quantization flow-matching system.
 //!
-//! Subcommands map one-to-one onto the paper's experiments (DESIGN.md §5):
+//! Subcommands map one-to-one onto the paper's experiments (pipeline
+//! walkthrough in docs/ARCHITECTURE.md):
 //!   train     train a velocity net on a synthetic dataset (AOT train_step)
 //!   quantize  post-training-quantize a checkpoint at (method, bits)
 //!   generate  sample images from a checkpoint / quantized model
@@ -227,7 +228,7 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         .flag("n", "16", "number of samples")
         .flag("steps", "32", "euler steps")
         .flag("seed", "7", "rng seed")
-        .flag("engine", "auto", "execution backend: auto|cpu-ref|lut|runtime")
+        .flag("engine", "auto", "execution backend: auto|cpu-ref|lut|lut2|runtime")
         .flag("out", "results/samples.ppm", "output grid");
     let a = cmd.parse(argv)?;
     let spec = ModelSpec::default_spec();
@@ -264,7 +265,7 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
         .flag("steps", "16", "euler steps")
         .flag("n", "32", "samples per point")
         .flag("seed", "7", "rng seed")
-        .flag("engine", "auto", "quantized-path backend: auto|cpu-ref|lut|runtime")
+        .flag("engine", "auto", "quantized-path backend: auto|cpu-ref|lut|lut2|runtime")
         .flag("ckpt-dir", "checkpoints", "per-dataset checkpoints (model-<ds>.fmq)")
         .flag("out", "results", "output directory");
     let a = cmd.parse(argv)?;
@@ -318,7 +319,7 @@ fn cmd_latent(argv: &[String]) -> Result<()> {
         .flag("steps", "16", "euler steps")
         .flag("n", "32", "images per point")
         .flag("seed", "7", "rng seed")
-        .flag("engine", "auto", "quantized-path backend: auto|cpu-ref|lut|runtime")
+        .flag("engine", "auto", "quantized-path backend: auto|cpu-ref|lut|lut2|runtime")
         .flag("ckpt-dir", "checkpoints", "per-dataset checkpoints")
         .flag("out", "results", "output directory");
     let a = cmd.parse(argv)?;
@@ -370,7 +371,7 @@ fn cmd_grid(argv: &[String]) -> Result<()> {
         .flag("steps", "32", "euler steps")
         .flag("n", "16", "samples per grid")
         .flag("seed", "7", "rng seed")
-        .flag("engine", "auto", "quantized-path backend: auto|cpu-ref|lut|runtime")
+        .flag("engine", "auto", "quantized-path backend: auto|cpu-ref|lut|lut2|runtime")
         .flag("ckpt-dir", "checkpoints", "per-dataset checkpoints")
         .flag("out", "results", "output directory");
     let a = cmd.parse(argv)?;
@@ -499,7 +500,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .flag("methods", "ot,uniform", "variants to build")
         .flag("bits", "2,4,8", "bit-widths to build")
         .flag("steps", "16", "euler steps per sample")
-        .flag("engine", "auto", "execution backend: auto|cpu-ref|lut|runtime");
+        .flag("engine", "auto", "execution backend: auto|cpu-ref|lut|lut2|runtime");
     let a = cmd.parse(argv)?;
     let spec = ModelSpec::default_spec();
     let dataset = Dataset::parse(a.get("dataset"))

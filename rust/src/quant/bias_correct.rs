@@ -30,6 +30,9 @@ pub struct Calibration {
     pub mean_inputs: Vec<Vec<f32>>,
 }
 
+/// Collect per-layer mean inputs by running the fp32 forward on
+/// `n_samples` draws from the sampling distribution (x ~ N(0,I),
+/// t ~ U\[0,1\]).
 pub fn calibrate(
     spec: &ModelSpec,
     theta: &ParamStore,

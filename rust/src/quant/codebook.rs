@@ -8,6 +8,7 @@
 /// K_MAX=256 artifact input (mirrors `arch.CODEBOOK_PAD` on the python side).
 pub const CODEBOOK_PAD: f32 = 1.0e30;
 
+/// A quantizer's representative levels plus assignment logic.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Codebook {
     /// Sorted representative levels (deduplicated).
@@ -26,6 +27,7 @@ impl Codebook {
         Self { levels, bits }
     }
 
+    /// Number of distinct levels (K ≤ 2^bits after deduplication).
     pub fn k(&self) -> usize {
         self.levels.len()
     }

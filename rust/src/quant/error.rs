@@ -12,9 +12,11 @@ pub struct QuantError {
     pub sup: f64,
     /// signed mean error (bias) — should be ~0 for centroid codebooks.
     pub bias: f64,
+    /// Number of weights measured.
     pub n: usize,
 }
 
+/// Measure one tensor's quantization error against a codebook.
 pub fn tensor_error(w: &[f32], cb: &Codebook) -> QuantError {
     let mut sq = 0.0f64;
     let mut sup = 0.0f64;

@@ -9,6 +9,8 @@
 
 use super::codebook::Codebook;
 
+/// Build the logarithmic codebook: an explicit zero plus ±2^e pairs on
+/// a descending exponent grid from the weight range's ceiling.
 pub fn log2_codebook(w: &[f32], bits: u8) -> Codebook {
     let k = 1usize << bits;
     let max_abs = w.iter().fold(0.0f32, |m, &x| m.max(x.abs())).max(1e-12);

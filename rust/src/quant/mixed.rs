@@ -20,16 +20,21 @@ use crate::model::spec::ModelSpec;
 use crate::quant::codebook::Codebook;
 use crate::quant::QuantMethod;
 
+/// Smallest per-layer bit-width the allocator may assign.
 pub const MIN_BITS: u8 = 2;
+/// Largest per-layer bit-width the allocator may assign.
 pub const MAX_BITS: u8 = 8;
 
 /// Per-layer distortion table D_l(b) (mean squared error per weight).
 pub struct DistortionTable {
     /// [layer][bits - MIN_BITS]
     pub d: Vec<Vec<f64>>,
+    /// Parameter count per layer (the allocator's cost weights).
     pub sizes: Vec<usize>,
 }
 
+/// Build the distortion table by quantizing every layer at every
+/// candidate bit-width and measuring the resulting W₂²/MSE.
 pub fn measure_distortions(
     spec: &ModelSpec,
     theta: &ParamStore,

@@ -14,6 +14,7 @@
 //! [`packing`] stores codes at b bits each in a dense bitstream, giving the
 //! real compression ratio; [`error`] computes the W₂²/MSE error the theory
 //! section bounds.
+#![warn(missing_docs)]
 
 pub mod bias_correct;
 pub mod codebook;
@@ -37,14 +38,20 @@ use codebook::Codebook;
 /// "codebook efficiency" item; the true 1-D W₂ optimum).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum QuantMethod {
+    /// Equal-mass optimal-transport quantization (Algorithm 1).
     Ot,
+    /// Equal-mass OT followed by Lloyd refinement (1-D W₂ optimum).
     OtLloyd,
+    /// Symmetric uniform PTQ over [-R, R].
     Uniform,
+    /// Piecewise-linear: dense core grid, sparse tails.
     Pwl,
+    /// Logarithmic: sign × power-of-two magnitudes.
     Log2,
 }
 
 impl QuantMethod {
+    /// Every implemented method, in `--methods` help order.
     pub const ALL: [QuantMethod; 5] = [
         QuantMethod::Ot,
         QuantMethod::OtLloyd,
@@ -61,6 +68,7 @@ impl QuantMethod {
         QuantMethod::Log2,
     ];
 
+    /// The `--method` flag value for this scheme.
     pub fn name(&self) -> &'static str {
         match self {
             QuantMethod::Ot => "ot",
@@ -71,6 +79,7 @@ impl QuantMethod {
         }
     }
 
+    /// Inverse of [`QuantMethod::name`]; `None` for unknown strings.
     pub fn parse(s: &str) -> Option<Self> {
         Self::ALL.iter().copied().find(|m| m.name() == s)
     }
@@ -96,7 +105,21 @@ pub fn quantize_tensor(method: QuantMethod, w: &[f32], bits: u8) -> (Codebook, V
 
 /// Quantize every weight matrix of a model (per-tensor codebooks; biases
 /// stay fp32, standard PTQ practice — also what the serving artifact
-/// expects). Returns the full quantized-model container.
+/// expects). Returns the full quantized-model container, ready for any
+/// execution engine:
+///
+/// ```
+/// use fmq::model::spec::ModelSpec;
+/// use fmq::quant::{quantize_model, QuantMethod};
+/// use fmq::util::rng::Pcg64;
+///
+/// let spec = ModelSpec::default_spec();
+/// let theta = spec.init_theta(&mut Pcg64::seed(1));
+/// let qm = quantize_model(&spec, &theta, QuantMethod::Uniform, 3);
+/// assert_eq!(qm.codes.len(), spec.pw());        // one code per weight
+/// assert_eq!(qm.biases.len(), spec.pb());       // biases stay fp32
+/// assert!(qm.compression_ratio() > 8.0);        // 3-bit codes vs f32
+/// ```
 pub fn quantize_model(
     spec: &ModelSpec,
     theta: &ParamStore,

@@ -10,8 +10,11 @@ use anyhow::{bail, Result};
 /// Packed code stream.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PackedCodes {
+    /// Bits per code (1..=32).
     pub bits: u8,
+    /// Number of packed codes.
     pub n: usize,
+    /// Little-endian bit stream, `n * bits` bits used.
     pub words: Vec<u64>,
 }
 
@@ -96,6 +99,54 @@ impl PackedCodes {
         }
     }
 
+    /// Bulk sequential decode of `out.len()` codes starting at element
+    /// `start` — the v2 engine's tile feed. Same contract as
+    /// [`PackedCodes::unpack_range_u8`] (`bits <= 8`, range in bounds),
+    /// same output, different cost model: instead of recomputing the
+    /// word/offset split per element, a 64-bit buffer is refilled once
+    /// per word and codes are shifted out of it, so the per-code cost
+    /// drops to a shift + mask for the ~`64/b − 1` codes that do not
+    /// straddle a word boundary. A property test pins this against the
+    /// element-wise decoder for every bit-width and ragged range.
+    pub fn unpack_bulk_u8(&self, start: usize, out: &mut [u8]) {
+        assert!(self.bits <= 8, "unpack_bulk_u8 needs bits <= 8, got {}", self.bits);
+        assert!(
+            start + out.len() <= self.n,
+            "unpack_bulk_u8 range {}..{} out of {} codes",
+            start,
+            start + out.len(),
+            self.n
+        );
+        if out.is_empty() {
+            return;
+        }
+        let bits = self.bits as usize;
+        let mask: u64 = (1u64 << bits) - 1;
+        let bitpos = start * bits;
+        let mut wi = bitpos / 64;
+        let off = bitpos % 64;
+        // `buf` holds the unread suffix of word `wi`, low-aligned;
+        // `avail` counts its valid low bits.
+        let mut buf = self.words[wi] >> off;
+        let mut avail = 64 - off;
+        for slot in out.iter_mut() {
+            if avail >= bits {
+                *slot = (buf & mask) as u8;
+                buf >>= bits;
+                avail -= bits;
+            } else {
+                // code straddles into the next word (or the buffer is
+                // exactly drained): splice `avail` low bits with the
+                // next word's low bits
+                wi += 1;
+                let next = self.words[wi];
+                *slot = ((buf | (next << avail)) & mask) as u8;
+                buf = next >> (bits - avail);
+                avail = 64 - (bits - avail);
+            }
+        }
+    }
+
     /// Payload size in bytes.
     pub fn byte_len(&self) -> usize {
         self.words.len() * 8
@@ -168,6 +219,46 @@ mod tests {
                 .enumerate()
                 .all(|(i, &c)| c as u32 == codes[start + i])
         });
+    }
+
+    /// Satellite pin: the word-buffered bulk decoder must agree with the
+    /// element-wise decoder for every serving bit-width on ragged ranges
+    /// (starts/ends mid-word, lengths not multiples of anything).
+    #[test]
+    fn unpack_bulk_u8_matches_elementwise_at_every_bit_width() {
+        forall("unpack_bulk_u8 == unpack_range_u8", 200, |g| {
+            let bits = g.usize_in(1..=8) as u8;
+            let n = g.len(1..=400);
+            let max = 1u32 << bits;
+            let codes: Vec<u32> = (0..n).map(|_| g.rng().below(max as usize) as u32).collect();
+            let p = PackedCodes::pack(&codes, bits).unwrap();
+            let start = g.rng().below(n);
+            let len = g.rng().below(n - start + 1);
+            let mut bulk = vec![0u8; len];
+            p.unpack_bulk_u8(start, &mut bulk);
+            let mut elem = vec![0u8; len];
+            p.unpack_range_u8(start, &mut elem);
+            bulk == elem
+        });
+    }
+
+    #[test]
+    fn unpack_bulk_u8_word_boundary_cases() {
+        // 3-bit codes straddle a word every 64/3 elements; 8-bit codes
+        // drain the buffer to exactly zero bits before each refill.
+        for bits in [3u8, 8] {
+            let n = 129usize;
+            let codes: Vec<u32> = (0..n).map(|i| (i as u32) % (1 << bits)).collect();
+            let p = PackedCodes::pack(&codes, bits).unwrap();
+            let mut out = vec![0u8; n];
+            p.unpack_bulk_u8(0, &mut out);
+            assert!(out.iter().enumerate().all(|(i, &c)| c as u32 == codes[i]));
+            // a range that starts exactly at a word boundary
+            let start = 64 / bits as usize + 1;
+            let mut tail = vec![0u8; n - start];
+            p.unpack_bulk_u8(start, &mut tail);
+            assert!(tail.iter().enumerate().all(|(i, &c)| c as u32 == codes[start + i]));
+        }
     }
 
     #[test]

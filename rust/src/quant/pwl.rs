@@ -10,6 +10,8 @@
 use super::codebook::Codebook;
 use crate::stats::{quantile_sorted, sorted_copy};
 
+/// Build the piecewise-linear codebook: 3/4 of the levels on a dense
+/// grid over the 2.5%–97.5% quantile core, the rest over the tails.
 pub fn pwl_codebook(w: &[f32], bits: u8) -> Codebook {
     let k = 1usize << bits;
     let s = sorted_copy(w);

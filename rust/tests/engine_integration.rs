@@ -1,9 +1,13 @@
-//! Engine-layer integration: the native LUT-GEMM engine must reproduce
-//! the dequantize-then-GEMM CPU reference — per element, for every
-//! quantization method, at every serving bit-width — and stay exact
-//! through the pool sharding, the sampler adapter and the serving layer.
+//! Engine-layer integration: the native LUT-GEMM engines (v1 `lut`, v2
+//! `lut2`) must reproduce the dequantize-then-GEMM CPU reference — per
+//! element, for every quantization method, at every serving bit-width —
+//! and stay exact through the pool sharding (both axes), the sampler
+//! adapter and the serving layer.
 
-use fmq::engine::{build_quantized, CpuRefEngine, Engine, EngineKind, LutEngine, LutModel, Pool};
+use fmq::engine::{
+    build_quantized, CpuRefEngine, Engine, EngineKind, LutEngine, LutModel, LutV2Engine, Pool,
+    TilePlan, Tuner,
+};
 use fmq::flow::cpu_ref;
 use fmq::flow::sampler::{self, CpuQStep, EngineStep};
 use fmq::model::params::ParamStore;
@@ -67,11 +71,12 @@ fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
 }
 
 /// The acceptance pin: |engine − cpu_ref| < 1e-5 per element for all
-/// `QuantMethod`s at 2/3/4/8 bits. (In practice the kernels are written
-/// to be *bit-exact*; the tolerance guards against platform-specific
-/// float contraction.)
+/// `QuantMethod`s at 2/3/4/8 bits — for **both** kernel generations.
+/// (The v1 kernel is written to be *bit-exact*; the v2 blocked kernel
+/// re-associates sums through its fused group tables, and the tolerance
+/// also guards against platform-specific float contraction.)
 #[test]
-fn lut_engine_equals_cpu_ref_all_methods_all_bits() {
+fn lut_engines_equal_cpu_ref_all_methods_all_bits() {
     let spec = small_spec();
     let mut rng = Pcg64::seed(41);
     let theta = spec.init_theta(&mut rng);
@@ -82,14 +87,16 @@ fn lut_engine_equals_cpu_ref_all_methods_all_bits() {
     for method in QuantMethod::ALL {
         for bits in [2u8, 3, 4, 8] {
             let qm = quantize_model(&spec, &theta, method, bits);
-            let engine = LutEngine::new(&qm).unwrap();
-            let v_eng = engine.velocity(&x, &t).unwrap();
             let v_ref = cpu_ref::qvelocity(&qm, &x, &t);
-            let d = max_abs_diff(&v_eng, &v_ref);
-            assert!(
-                d < 1e-5,
-                "{method:?} @ {bits} bits: max |engine - cpu_ref| = {d}"
-            );
+            for kind in [EngineKind::Lut, EngineKind::Lut2] {
+                let engine = build_quantized(kind, &qm).unwrap();
+                let v_eng = engine.velocity(&x, &t).unwrap();
+                let d = max_abs_diff(&v_eng, &v_ref);
+                assert!(
+                    d < 1e-5,
+                    "{method:?} @ {bits} bits ({kind:?}): max |engine - cpu_ref| = {d}"
+                );
+            }
         }
     }
 }
@@ -109,9 +116,13 @@ fn lut_engine_equals_cpu_ref_full_size_model() {
         (QuantMethod::Log2, 8),
     ] {
         let qm = quantize_model(&spec, &theta, method, bits);
+        let v_ref = cpu_ref::qvelocity(&qm, &x, &t);
         let engine = LutEngine::new(&qm).unwrap();
-        let d = max_abs_diff(&engine.velocity(&x, &t).unwrap(), &cpu_ref::qvelocity(&qm, &x, &t));
+        let d = max_abs_diff(&engine.velocity(&x, &t).unwrap(), &v_ref);
         assert!(d < 1e-5, "{method:?} @ {bits} bits full-size: {d}");
+        let v2 = LutV2Engine::new(&qm).unwrap();
+        let d = max_abs_diff(&v2.velocity(&x, &t).unwrap(), &v_ref);
+        assert!(d < 1e-5, "{method:?} @ {bits} bits full-size (v2): {d}");
     }
 }
 
@@ -129,6 +140,67 @@ fn engine_step_equals_cpu_ref_step() {
         let d = max_abs_diff(&y_eng, &y_ref);
         assert!(d < 1e-5, "bits={bits}: step diff {d}");
     }
+}
+
+/// v2 determinism pin: output is bit-identical across thread counts —
+/// in both the row-sharding (batch >= threads) and the column-sharding
+/// (batch < threads) regime — and across tile plans and tuner policies.
+/// Only `group` (a pure function of bits) affects accumulation order.
+#[test]
+fn v2_sharding_and_tile_plans_are_exact() {
+    let (spec, theta) = setup();
+    let qm = quantize_model(&spec, &theta, QuantMethod::Ot, 2);
+    let mut rng = Pcg64::seed(48);
+    for b in [2usize, 11] {
+        let x: Vec<f32> = (0..b * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let t: Vec<f32> = (0..b).map(|i| (i as f32 + 0.5) / b as f32).collect();
+        let serial = LutV2Engine::with_config(&qm, Pool::serial(), Tuner::Heuristic)
+            .unwrap()
+            .velocity(&x, &t)
+            .unwrap();
+        for threads in [2usize, 3, 8] {
+            let eng =
+                LutV2Engine::with_config(&qm, Pool::new(threads), Tuner::measured()).unwrap();
+            assert_eq!(
+                eng.velocity(&x, &t).unwrap(),
+                serial,
+                "b={b} threads={threads} must be bit-identical"
+            );
+        }
+        // explicit tile plans: k_tile is numerically invisible
+        for k_tile in [16usize, 64, 128] {
+            let plan = TilePlan { k_tile, group: fmq::engine::tune::max_group(2) };
+            let eng =
+                LutV2Engine::with_config(&qm, Pool::serial(), Tuner::Fixed(plan)).unwrap();
+            assert_eq!(eng.velocity(&x, &t).unwrap(), serial, "k_tile={k_tile}");
+        }
+    }
+}
+
+/// v2 through the sampler adapter and `build_quantized` selector: the
+/// full generation/encoding loop agrees with the legacy backend within
+/// the integration tolerance (amplified per Euler step).
+#[test]
+fn v2_generation_through_adapter_tracks_legacy_backend() {
+    let (spec, theta) = setup();
+    let qm = quantize_model(&spec, &theta, QuantMethod::Uniform, 4);
+    let mut rng = Pcg64::seed(49);
+    let x0: Vec<f32> = (0..3 * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut legacy = CpuQStep { qm: &qm };
+    let want = sampler::generate_from(&mut legacy, &x0, 8).unwrap();
+    let engine = build_quantized(EngineKind::Lut2, &qm).unwrap();
+    assert_eq!(engine.name(), "lut2");
+    let mut be = EngineStep {
+        engine: engine.as_ref(),
+    };
+    let got = sampler::generate_from(&mut be, &x0, 8).unwrap();
+    let d = max_abs_diff(&got, &want);
+    assert!(d < 1e-4, "v2 generation drift vs legacy: {d}");
+    // reverse encoding (the Fig. 4 path) through the same adapter
+    let lat_v2 = sampler::encode(&mut be, &want, 8).unwrap();
+    let lat_ref = sampler::encode(&mut legacy, &want, 8).unwrap();
+    let d = max_abs_diff(&lat_v2, &lat_ref);
+    assert!(d < 1e-3, "v2 encoding drift vs legacy: {d}");
 }
 
 /// Pool sharding is numerically invisible at any thread count, including

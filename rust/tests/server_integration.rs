@@ -65,6 +65,33 @@ fn explicit_engines_agree_over_tcp() {
     s_ref.stop();
 }
 
+/// The v2 blocked engine re-associates sums through its fused tables,
+/// so it serves *equivalent* (not bit-identical) images: per-pixel drift
+/// vs the reference stays tiny after the Euler loop.
+#[test]
+fn v2_engine_serves_equivalent_images_over_tcp() {
+    use fmq::engine::EngineKind;
+    let (s_v2, addr_v2) = start_server_with_engine(Some(EngineKind::Lut2));
+    let (s_ref, addr_ref) = start_server_with_engine(Some(EngineKind::CpuRef));
+    let a = Client::connect(&addr_v2)
+        .unwrap()
+        .generate("ot2", 2, 77)
+        .unwrap();
+    let b = Client::connect(&addr_ref)
+        .unwrap()
+        .generate("ot2", 2, 77)
+        .unwrap();
+    assert_eq!(a.len(), b.len());
+    let max = a
+        .iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max < 1e-3, "lut2 vs cpu-ref drift over TCP: {max}");
+    s_v2.stop();
+    s_ref.stop();
+}
+
 #[test]
 fn ping_models_and_generate() {
     let (server, addr) = start_server();
