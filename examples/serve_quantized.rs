@@ -54,6 +54,7 @@ fn main() -> anyhow::Result<()> {
             steps: 8,
             linger: Duration::from_millis(4),
             engine: None,
+            ..Default::default()
         },
     )?;
     let addr = server.addr.to_string();
@@ -109,6 +110,36 @@ fn main() -> anyhow::Result<()> {
                 .batches
                 .load(std::sync::atomic::Ordering::Relaxed)
                 .max(1) as f64
+    );
+
+    // ---- exact-n slicing + determinism --------------------------------
+    // a 40-sample request exceeds the model batch (16): the server slices
+    // it across super-batches and reassembles exactly 40 rows, and the
+    // reply is a pure function of (model, n, seed) — rerunning it, even
+    // co-batched with other traffic, is bit-identical
+    let mut cli = Client::connect(&addr)?;
+    let a = cli.generate("ot4", 40, 4242)?;
+    let b = cli.generate("ot4", 40, 4242)?;
+    assert_eq!(a.len(), 40 * 768);
+    assert_eq!(a, b);
+    println!("\nexact-n: 40 samples (model batch 16) sliced + reassembled, bit-deterministic");
+
+    // ---- encode: reverse-ODE latent extraction (paper Fig. 4) ---------
+    let imgs = cli.generate("ot4", 2, 7)?;
+    let latents = cli.encode("ot4", &imgs)?;
+    let var = latents.iter().map(|v| (v * v) as f64).sum::<f64>() / latents.len() as f64;
+    let enc_n = imgs.len() / 768;
+    println!("encode: {enc_n} images -> latents, E[z^2] = {var:.3} (~1 when stable)");
+
+    // ---- stats op ------------------------------------------------------
+    let s = cli.stats()?;
+    println!(
+        "stats op: requests={} batches={} samples={} encodes={} queue_depth={}",
+        s.req("requests")?.as_f64().unwrap_or(0.0),
+        s.req("batches")?.as_f64().unwrap_or(0.0),
+        s.req("samples")?.as_f64().unwrap_or(0.0),
+        s.req("encodes")?.as_f64().unwrap_or(0.0),
+        s.req("queue_depth")?.as_f64().unwrap_or(0.0),
     );
 
     server.stop();

@@ -1,6 +1,8 @@
 //! PERF serving bench: end-to-end TCP request latency/throughput with the
-//! dynamic batcher, plus batching-efficiency accounting. §Perf target:
-//! batching overhead (non-compute latency) < 1 ms p50.
+//! dynamic batcher, plus batching-efficiency accounting and a serving
+//! determinism/exact-n smoke under concurrent load (the CI smoke runs
+//! this with FMQ_BENCH_FAST=1). §Perf target: batching overhead
+//! (non-compute latency) < 1 ms p50.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -39,6 +41,7 @@ fn main() -> anyhow::Result<()> {
             steps: if fast { 2 } else { 8 },
             linger: Duration::from_millis(3),
             engine: None,
+            ..Default::default()
         },
     )?;
     let addr = server.addr.to_string();
@@ -95,6 +98,43 @@ fn main() -> anyhow::Result<()> {
     println!(
         "batching: {reqs} requests -> {batches} batches ({:.2} req/batch)",
         reqs as f64 / batches.max(1) as f64
+    );
+
+    // determinism + exact-n smoke under load: the same (model, n, seed)
+    // must be bit-identical whether it runs alone or races a burst of
+    // co-batched traffic, and n > model batch must come back exact
+    let probe_n = if fast { 20 } else { 40 }; // > model batch (16): sliced
+    let solo = Client::connect(&addr)?.generate("ot4", probe_n, 4242)?;
+    assert_eq!(solo.len(), probe_n * 768, "exact-n delivery");
+    let mut handles = Vec::new();
+    let bg_clients: u64 = if fast { 3 } else { 6 };
+    for c in 0..bg_clients {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<f32>> {
+            let mut cli = Client::connect(&addr)?;
+            cli.generate("ot4", 2, 9000 + c)?; // background noise traffic
+            cli.generate("ot4", probe_n, 4242) // the probe, co-batched
+        }));
+    }
+    for h in handles {
+        let probe = h.join().unwrap()?;
+        assert_eq!(probe, solo, "co-batching changed a deterministic reply");
+    }
+    println!("determinism smoke: {probe_n}-sample probe bit-identical under load");
+
+    // encode round trip + stats op
+    let mut cli = Client::connect(&addr)?;
+    let imgs = cli.generate("ot4", 2, 7)?;
+    let latents = cli.encode("ot4", &imgs)?;
+    assert_eq!(latents.len(), imgs.len());
+    let s = cli.stats()?;
+    println!(
+        "stats op: requests={} batches={} samples={} encodes={} queue_depth={}",
+        s.req("requests")?.as_f64().unwrap_or(0.0),
+        s.req("batches")?.as_f64().unwrap_or(0.0),
+        s.req("samples")?.as_f64().unwrap_or(0.0),
+        s.req("encodes")?.as_f64().unwrap_or(0.0),
+        s.req("queue_depth")?.as_f64().unwrap_or(0.0),
     );
     server.stop();
     Ok(())

@@ -1,110 +1,344 @@
-//! Dynamic batcher: aggregates concurrent generation requests into
-//! fixed-size model batches (the artifact's B_SAMPLE), trading a small
-//! queue delay for full batch occupancy — the standard serving pattern
-//! (vLLM-style), implemented with std threads + channels.
+//! Slot-accounted dynamic batcher: aggregates concurrent generation and
+//! encoding requests into fixed-size model batches (the artifact's
+//! B_SAMPLE), trading a small queue delay for full batch occupancy — the
+//! standard serving pattern (vLLM-style), implemented with std threads +
+//! channels.
+//!
+//! Two properties the serving layer's determinism contract rests on:
+//!
+//! * **Per-request noise streams.** Every `generate` request draws its
+//!   noise rows from its own `Pcg64::seed(request seed)` — never from a
+//!   batch-level stream — so the rows a request integrates are the first
+//!   `n × d` normals of its seed regardless of which other requests share
+//!   the super-batch, where in the batch they landed, or how the request
+//!   was sliced. Combined with the row-independent forward (pinned by
+//!   `cpu_ref::tests::batch_independence`), results are a pure function
+//!   of `(model, n, seed, steps)`.
+//! * **Exact-n slicing.** A request larger than the model batch is not
+//!   clamped; it is sliced across consecutive super-batches by slot
+//!   accounting ([`Batcher::next_batch`] issues rows, [`Batcher::complete`]
+//!   reassembles them in order) and replied to only when all `n` rows are
+//!   done.
+//!
+//! Backpressure: submissions go through a bounded [`mpsc::sync_channel`],
+//! so connection handlers block (instead of the queue growing without
+//! bound) once `queue_cap` requests are in flight, and the batcher admits
+//! at most `queue_cap` requests into its active set at a time.
 
-use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::collections::VecDeque;
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
 use std::time::{Duration, Instant};
 
-/// One queued request: n samples wanted, seed, and a reply channel.
+use crate::flow::sampler::Direction;
+use crate::util::rng::Pcg64;
+
+/// What one request wants integrated.
+pub enum Work {
+    /// Forward ODE over exactly `n` rows of per-request seeded noise.
+    Generate {
+        /// Number of samples to generate.
+        n: usize,
+        /// Seed of the request's private noise stream.
+        seed: u64,
+    },
+    /// Reverse ODE over client-provided rows (flat `[n, d]`).
+    Encode {
+        /// Input rows, `rows.len() = n * d`.
+        rows: Vec<f32>,
+    },
+}
+
+/// Reply payload: the exact-n output rows, or an error message the
+/// protocol layer forwards to the client.
+pub type Reply = Result<Vec<f32>, String>;
+
+/// One queued request: the work plus its reply channel.
 pub struct GenRequest {
-    pub n: usize,
-    pub seed: u64,
-    pub reply: Sender<Vec<f32>>,
+    /// What to integrate.
+    pub work: Work,
+    /// Where the reassembled result (or error) goes.
+    pub reply: Sender<Reply>,
 }
 
-/// Batch assembled by the batcher: requests to fill one model batch.
-pub struct Batch {
-    pub requests: Vec<GenRequest>,
-    pub total: usize,
+/// An admitted request being served across one or more super-batches.
+struct Active {
+    id: u64,
+    dir: Direction,
+    n: usize,
+    /// Rows handed to super-batches so far (slot accounting).
+    issued: usize,
+    /// Rows reassembled into `out` so far.
+    done: usize,
+    src: Source,
+    out: Vec<f32>,
+    reply: Sender<Reply>,
 }
 
-impl Batch {
-    /// Sample count padded up to a whole number of model batches — the
-    /// size every execution engine is handed, regardless of backend
-    /// (fixed-shape HLO artifacts need exact batches; the CPU engines
-    /// just amortize better on full ones).
-    pub fn padded_total(&self, batch_size: usize) -> usize {
-        self.total.max(1).div_ceil(batch_size.max(1)) * batch_size.max(1)
-    }
+enum Source {
+    /// Lazy per-request noise: rows `[issued..]` continue this stream, so
+    /// the noise is independent of slicing boundaries.
+    Noise(Pcg64),
+    /// Encode input rows, consumed by the `issued` cursor.
+    Rows(Vec<f32>),
 }
 
-/// Batching queue with a linger window.
-pub struct Batcher {
-    tx: Sender<GenRequest>,
-    rx: Arc<Mutex<Receiver<GenRequest>>>,
-    pub max_batch: usize,
-    pub linger: Duration,
+/// One slice of a request scheduled into the current super-batch.
+struct Slice {
+    id: u64,
+    /// Row offset within the request this slice starts at.
+    at: usize,
+    /// Row offset within the super-batch.
+    batch_row: usize,
+    take: usize,
 }
 
-impl Batcher {
-    pub fn new(max_batch: usize, linger: Duration) -> Self {
-        let (tx, rx) = mpsc::channel();
+/// A homogeneous (single-direction) super-batch assembled by
+/// [`Batcher::next_batch`]: up to `max_batch` rows sliced from the oldest
+/// compatible requests, FIFO. Hand the integrated rows (same order) back
+/// via [`Batcher::complete`].
+pub struct SuperBatch {
+    /// Integration direction shared by every slice in this batch.
+    pub dir: Direction,
+    /// Input rows, flat `[rows, d]`, in slice order (no padding — the
+    /// worker pads only where the backend needs fixed shapes).
+    pub x0: Vec<f32>,
+    /// Number of real rows in `x0`.
+    pub rows: usize,
+    slices: Vec<Slice>,
+}
+
+impl SuperBatch {
+    fn empty() -> Self {
         Self {
-            tx,
-            rx: Arc::new(Mutex::new(rx)),
-            max_batch,
-            linger,
+            dir: Direction::Forward,
+            x0: Vec::new(),
+            rows: 0,
+            slices: Vec::new(),
         }
     }
 
-    pub fn submitter(&self) -> Sender<GenRequest> {
+    /// True for the idle-timeout batch (no work; re-check shutdown).
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Number of requests contributing rows to this batch.
+    pub fn requests(&self) -> usize {
+        self.slices.len()
+    }
+}
+
+/// Batching queue with a linger window, slot accounting and in-order
+/// reply reassembly. Owned by exactly one serving worker.
+pub struct Batcher {
+    tx: SyncSender<GenRequest>,
+    rx: Receiver<GenRequest>,
+    /// Super-batch row capacity (the model batch size).
+    pub max_batch: usize,
+    /// How long to wait for co-batchable requests before dispatching.
+    pub linger: Duration,
+    d: usize,
+    queue_cap: usize,
+    active: VecDeque<Active>,
+    next_id: u64,
+}
+
+impl Batcher {
+    /// `max_batch` rows per super-batch, `linger` accumulation window,
+    /// `d` row width. `queue_cap` bounds the channel and the admitted
+    /// active set each (so at most `2 * queue_cap` requests are held per
+    /// variant before submitters block).
+    pub fn new(max_batch: usize, linger: Duration, d: usize, queue_cap: usize) -> Self {
+        let cap = queue_cap.max(1);
+        let (tx, rx) = mpsc::sync_channel(cap);
+        Self {
+            tx,
+            rx,
+            max_batch: max_batch.max(1),
+            linger,
+            d: d.max(1),
+            queue_cap: cap,
+            active: VecDeque::new(),
+            next_id: 0,
+        }
+    }
+
+    /// A bounded submission handle; `send` blocks once `queue_cap`
+    /// requests are queued (backpressure on connection handlers).
+    pub fn submitter(&self) -> SyncSender<GenRequest> {
         self.tx.clone()
     }
 
-    /// Pull the next batch: waits (up to 200 ms) for one request, then
-    /// lingers up to `linger` (or until `max_batch` samples) to accumulate
-    /// more. Returns `Some(empty batch)` on the wait timeout so worker
-    /// loops can re-check their shutdown flag (the Batcher keeps a live
-    /// submitter internally, so a plain blocking recv would never
-    /// disconnect and `Server::stop` would deadlock on join); returns
-    /// None only when every submitter is gone.
-    pub fn next_batch(&self) -> Option<Batch> {
-        let rx = self.rx.lock().unwrap();
-        let first = match rx.recv_timeout(Duration::from_millis(200)) {
-            Ok(req) => req,
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                return Some(Batch {
-                    requests: Vec::new(),
-                    total: 0,
-                })
+    /// Rows admitted but not yet completed — the worker exports this as
+    /// the `queue_depth` stat.
+    pub fn backlog_rows(&self) -> usize {
+        self.active.iter().map(|a| a.n - a.done).sum()
+    }
+
+    /// Validate and admit one request into the active set; invalid
+    /// requests are failed immediately instead of being admitted.
+    fn admit(&mut self, req: GenRequest) {
+        let (dir, n, src) = match req.work {
+            Work::Generate { n, seed } => {
+                if n == 0 {
+                    let _ = req.reply.send(Err("n must be at least 1".into()));
+                    return;
+                }
+                (Direction::Forward, n, Source::Noise(Pcg64::seed(seed)))
             }
-            Err(mpsc::RecvTimeoutError::Disconnected) => return None,
+            Work::Encode { rows } => {
+                if rows.is_empty() || rows.len() % self.d != 0 {
+                    let _ = req.reply.send(Err(format!(
+                        "encode rows must be flat [n, d] with d={} (got {} values)",
+                        self.d,
+                        rows.len()
+                    )));
+                    return;
+                }
+                let n = rows.len() / self.d;
+                (Direction::Reverse, n, Source::Rows(rows))
+            }
         };
-        let mut total = first.n.min(self.max_batch);
-        let mut requests = vec![first];
+        self.next_id += 1;
+        self.active.push_back(Active {
+            id: self.next_id,
+            dir,
+            n,
+            issued: 0,
+            done: 0,
+            src,
+            out: vec![0.0; n * self.d],
+            reply: req.reply,
+        });
+    }
+
+    fn pending_rows(&self) -> usize {
+        self.active.iter().map(|a| a.n - a.issued).sum()
+    }
+
+    /// Pull the next super-batch. With no backlog, waits (up to 200 ms)
+    /// for one request; then lingers up to `linger` (or until `max_batch`
+    /// rows are pending) to accumulate more. Returns `Some(empty batch)`
+    /// on the wait timeout so worker loops can re-check their shutdown
+    /// flag (the Batcher keeps a live submitter internally, so a plain
+    /// blocking recv would never disconnect and `Server::stop` would
+    /// deadlock on join); returns `None` only when every submitter is
+    /// gone and no admitted work remains.
+    pub fn next_batch(&mut self) -> Option<SuperBatch> {
+        if self.pending_rows() == 0 {
+            match self.rx.recv_timeout(Duration::from_millis(200)) {
+                Ok(req) => self.admit(req),
+                Err(mpsc::RecvTimeoutError::Timeout) => return Some(SuperBatch::empty()),
+                Err(mpsc::RecvTimeoutError::Disconnected) => return None,
+            }
+        }
+        // linger: admit co-batchable requests until the batch is full,
+        // the admission cap is reached, or the window closes. A backlog
+        // of >= max_batch rows dispatches immediately, and so does the
+        // tail of a partially-issued (sliced) request — it already
+        // waited its linger when admitted; waiting again would add pure
+        // latency to every large request.
+        let mid_request = self.active.iter().any(|a| 0 < a.issued && a.issued < a.n);
         let deadline = Instant::now() + self.linger;
-        while total < self.max_batch {
+        while !mid_request
+            && self.pending_rows() < self.max_batch
+            && self.active.len() < self.queue_cap
+        {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(req) => {
-                    total += req.n;
-                    requests.push(req);
-                    if total >= self.max_batch {
-                        break;
-                    }
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(req) => self.admit(req),
+                Err(_) => break,
             }
         }
-        Some(Batch { requests, total })
+        // already-queued requests ride along for free (no waiting) —
+        // this is what fills the slots next to a sliced request's tail
+        while self.pending_rows() < self.max_batch && self.active.len() < self.queue_cap {
+            match self.rx.try_recv() {
+                Ok(req) => self.admit(req),
+                Err(_) => break,
+            }
+        }
+        Some(self.assemble())
     }
-}
 
-/// Split one generated super-batch back to the per-request repliers.
-/// `imgs` is flat [n_total_padded, d]; requests consume their n in order.
-pub fn distribute(batch: Batch, imgs: &[f32], d: usize) {
-    let mut off = 0usize;
-    for req in batch.requests {
-        let take = req.n.min((imgs.len() / d).saturating_sub(off));
-        let slice = imgs[off * d..(off + take) * d].to_vec();
-        off += take;
-        let _ = req.reply.send(slice); // receiver may have hung up; fine
+    /// Slice up to `max_batch` rows from the oldest unfinished requests
+    /// (FIFO, restricted to the oldest request's direction so every
+    /// super-batch integrates one way).
+    fn assemble(&mut self) -> SuperBatch {
+        let Some(dir) = self.active.iter().find(|a| a.issued < a.n).map(|a| a.dir) else {
+            return SuperBatch::empty();
+        };
+        let d = self.d;
+        let mut x0 = Vec::new();
+        let mut slices = Vec::new();
+        let mut batch_row = 0usize;
+        for a in self.active.iter_mut() {
+            if batch_row == self.max_batch {
+                break;
+            }
+            if a.dir != dir || a.issued >= a.n {
+                continue;
+            }
+            let take = (a.n - a.issued).min(self.max_batch - batch_row);
+            match &mut a.src {
+                Source::Noise(rng) => {
+                    for _ in 0..take * d {
+                        x0.push(rng.normal_f32(0.0, 1.0));
+                    }
+                }
+                Source::Rows(rows) => {
+                    x0.extend_from_slice(&rows[a.issued * d..(a.issued + take) * d]);
+                }
+            }
+            slices.push(Slice {
+                id: a.id,
+                at: a.issued,
+                batch_row,
+                take,
+            });
+            a.issued += take;
+            batch_row += take;
+        }
+        SuperBatch {
+            dir,
+            x0,
+            rows: batch_row,
+            slices,
+        }
+    }
+
+    /// Reassemble one integrated super-batch back into its requests (or
+    /// fail them): rows land at each request's recorded offset, and a
+    /// request replies the moment its last row arrives. On `Ok`, the
+    /// slice must hold at least `batch.rows * d` values in `x0` order;
+    /// on `Err`, every request sliced into the batch fails with the
+    /// message.
+    pub fn complete(&mut self, batch: SuperBatch, result: Result<&[f32], &str>) {
+        let d = self.d;
+        for s in batch.slices {
+            let Some(pos) = self.active.iter().position(|a| a.id == s.id) else {
+                continue;
+            };
+            match result {
+                Ok(rows) => {
+                    let a = &mut self.active[pos];
+                    a.out[s.at * d..(s.at + s.take) * d]
+                        .copy_from_slice(&rows[s.batch_row * d..(s.batch_row + s.take) * d]);
+                    a.done += s.take;
+                    if a.done == a.n {
+                        let a = self.active.remove(pos).unwrap();
+                        let _ = a.reply.send(Ok(a.out)); // receiver may have hung up; fine
+                    }
+                }
+                Err(msg) => {
+                    let a = self.active.remove(pos).unwrap();
+                    let _ = a.reply.send(Err(msg.to_string()));
+                }
+            }
+        }
     }
 }
 
@@ -113,100 +347,203 @@ mod tests {
     use super::*;
     use std::thread;
 
+    fn gen_req(n: usize, seed: u64) -> (GenRequest, mpsc::Receiver<Reply>) {
+        let (rtx, rrx) = mpsc::channel();
+        (
+            GenRequest {
+                work: Work::Generate { n, seed },
+                reply: rtx,
+            },
+            rrx,
+        )
+    }
+
+    /// The first n*d normals of the request's own seed — the noise
+    /// contract the server's determinism guarantee is built on.
+    fn expected_noise(seed: u64, n: usize, d: usize) -> Vec<f32> {
+        let mut rng = Pcg64::seed(seed);
+        (0..n * d).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
     #[test]
     fn batches_accumulate_within_linger() {
-        let b = Batcher::new(8, Duration::from_millis(50));
+        let d = 4;
+        let mut b = Batcher::new(8, Duration::from_millis(50), d, 64);
         let tx = b.submitter();
+        let mut rxs = Vec::new();
         for i in 0..3 {
-            let (rtx, _rrx) = mpsc::channel();
-            tx.send(GenRequest {
-                n: 2,
-                seed: i,
-                reply: rtx,
-            })
-            .unwrap();
+            let (req, rrx) = gen_req(2, i);
+            tx.send(req).unwrap();
+            rxs.push(rrx);
         }
         let batch = b.next_batch().unwrap();
-        assert_eq!(batch.requests.len(), 3);
-        assert_eq!(batch.total, 6);
+        assert_eq!(batch.requests(), 3);
+        assert_eq!(batch.rows, 6);
+        assert_eq!(batch.x0.len(), 6 * d);
+        assert_eq!(batch.dir, Direction::Forward);
     }
 
     #[test]
     fn full_batch_returns_immediately() {
-        let b = Batcher::new(4, Duration::from_secs(10)); // long linger
+        let mut b = Batcher::new(4, Duration::from_secs(10), 4, 64); // long linger
         let tx = b.submitter();
-        let (rtx, _rrx) = mpsc::channel();
-        tx.send(GenRequest {
-            n: 4,
-            seed: 0,
-            reply: rtx,
-        })
-        .unwrap();
+        let (req, _rrx) = gen_req(4, 0);
+        tx.send(req).unwrap();
         let t0 = Instant::now();
         let batch = b.next_batch().unwrap();
         assert!(t0.elapsed() < Duration::from_secs(1)); // didn't linger
-        assert_eq!(batch.total, 4);
+        assert_eq!(batch.rows, 4);
     }
 
     #[test]
-    fn padded_total_rounds_to_model_batches() {
-        let mk = |total| Batch {
-            requests: Vec::new(),
-            total,
-        };
-        assert_eq!(mk(1).padded_total(16), 16);
-        assert_eq!(mk(16).padded_total(16), 16);
-        assert_eq!(mk(17).padded_total(16), 32);
-        assert_eq!(mk(0).padded_total(16), 16); // empty batch still 1 slot
+    fn noise_is_per_request_and_independent_of_cobatching() {
+        let d = 3;
+        // alone
+        let mut b = Batcher::new(8, Duration::from_millis(5), d, 64);
+        let (req, _r) = gen_req(2, 42);
+        b.submitter().send(req).unwrap();
+        let alone = b.next_batch().unwrap();
+        // co-batched behind another request with a different seed
+        let mut b2 = Batcher::new(8, Duration::from_millis(5), d, 64);
+        let (other, _r2) = gen_req(3, 7);
+        let (req, _r3) = gen_req(2, 42);
+        b2.submitter().send(other).unwrap();
+        b2.submitter().send(req).unwrap();
+        let shared = b2.next_batch().unwrap();
+        assert_eq!(shared.rows, 5);
+        // rows 3.. of the shared batch are request 42's rows — identical
+        // to its solo noise, and equal to the seed's own stream
+        assert_eq!(&shared.x0[3 * d..], &alone.x0[..]);
+        assert_eq!(alone.x0, expected_noise(42, 2, d));
+        // two co-batched requests with the SAME seed get the same noise
+        // (the old xor-fold cancelled them to the base seed instead)
+        let mut b3 = Batcher::new(8, Duration::from_millis(5), d, 64);
+        let (ra, _ka) = gen_req(1, 9);
+        let (rb, _kb) = gen_req(1, 9);
+        b3.submitter().send(ra).unwrap();
+        b3.submitter().send(rb).unwrap();
+        let twin = b3.next_batch().unwrap();
+        assert_eq!(twin.rows, 2);
+        assert_eq!(twin.x0[..d], twin.x0[d..2 * d]);
     }
 
     #[test]
-    fn distribute_splits_in_order() {
-        let (tx1, rx1) = mpsc::channel();
-        let (tx2, rx2) = mpsc::channel();
-        let batch = Batch {
-            requests: vec![
-                GenRequest {
-                    n: 1,
-                    seed: 0,
-                    reply: tx1,
+    fn large_request_slices_across_batches_and_reassembles_exact_n() {
+        let d = 2;
+        let (n, max_batch) = (10usize, 4usize);
+        let mut b = Batcher::new(max_batch, Duration::from_millis(1), d, 64);
+        let (req, rrx) = gen_req(n, 5);
+        b.submitter().send(req).unwrap();
+        let mut sizes = Vec::new();
+        let mut noise = Vec::new();
+        for _ in 0..3 {
+            let batch = b.next_batch().unwrap();
+            sizes.push(batch.rows);
+            noise.extend_from_slice(&batch.x0);
+            // identity "integration": reply rows = input rows
+            let rows = batch.x0.clone();
+            b.complete(batch, Ok(&rows));
+        }
+        assert_eq!(sizes, vec![4, 4, 2]);
+        assert_eq!(b.backlog_rows(), 0);
+        let out = rrx.recv().unwrap().unwrap();
+        assert_eq!(out.len(), n * d, "exactly n rows delivered");
+        // in order, and slicing-invariant: the request's own noise stream
+        assert_eq!(out, noise);
+        assert_eq!(out, expected_noise(5, n, d));
+    }
+
+    #[test]
+    fn directions_are_not_mixed_in_one_batch() {
+        let d = 2;
+        let mut b = Batcher::new(8, Duration::from_millis(5), d, 64);
+        let (gtx, grx) = mpsc::channel();
+        let (etx, erx) = mpsc::channel();
+        b.submitter()
+            .send(GenRequest {
+                work: Work::Generate { n: 2, seed: 1 },
+                reply: gtx,
+            })
+            .unwrap();
+        b.submitter()
+            .send(GenRequest {
+                work: Work::Encode {
+                    rows: vec![0.5; 3 * d],
                 },
-                GenRequest {
-                    n: 2,
-                    seed: 0,
-                    reply: tx2,
-                },
-            ],
-            total: 3,
-        };
+                reply: etx,
+            })
+            .unwrap();
+        let first = b.next_batch().unwrap();
+        assert_eq!(first.dir, Direction::Forward);
+        assert_eq!(first.rows, 2);
+        let rows = first.x0.clone();
+        b.complete(first, Ok(&rows));
+        assert!(grx.try_recv().unwrap().is_ok());
+        let second = b.next_batch().unwrap();
+        assert_eq!(second.dir, Direction::Reverse);
+        assert_eq!(second.rows, 3);
+        assert_eq!(second.x0, vec![0.5; 3 * d]);
+        let rows = second.x0.clone();
+        b.complete(second, Ok(&rows));
+        assert_eq!(erx.recv().unwrap().unwrap(), vec![0.5; 3 * d]);
+    }
+
+    #[test]
+    fn failed_batch_fails_only_its_requests() {
+        let d = 2;
+        let mut b = Batcher::new(2, Duration::from_millis(1), d, 64);
+        let (req, rrx) = gen_req(2, 3);
+        b.submitter().send(req).unwrap();
+        let batch = b.next_batch().unwrap();
+        b.complete(batch, Err("engine exploded"));
+        let got = rrx.recv().unwrap();
+        assert_eq!(got.unwrap_err(), "engine exploded");
+        assert_eq!(b.backlog_rows(), 0);
+    }
+
+    #[test]
+    fn invalid_requests_fail_fast_without_admission() {
         let d = 4;
-        let imgs: Vec<f32> = (0..4 * d).map(|i| i as f32).collect(); // padded to 4
-        distribute(batch, &imgs, d);
-        assert_eq!(rx1.recv().unwrap(), vec![0.0, 1.0, 2.0, 3.0]);
-        assert_eq!(rx2.recv().unwrap().len(), 2 * d);
+        let mut b = Batcher::new(4, Duration::from_millis(1), d, 64);
+        let (ztx, zrx) = mpsc::channel();
+        b.submitter()
+            .send(GenRequest {
+                work: Work::Generate { n: 0, seed: 1 },
+                reply: ztx,
+            })
+            .unwrap();
+        let (etx, erx) = mpsc::channel();
+        b.submitter()
+            .send(GenRequest {
+                work: Work::Encode {
+                    rows: vec![0.0; d + 1], // not a whole number of rows
+                },
+                reply: etx,
+            })
+            .unwrap();
+        let batch = b.next_batch().unwrap();
+        assert!(batch.is_empty());
+        assert!(zrx.recv().unwrap().is_err());
+        assert!(erx.recv().unwrap().unwrap_err().contains("flat [n, d]"));
     }
 
     #[test]
-    fn next_batch_none_when_senders_dropped() {
-        let b = Batcher::new(4, Duration::from_millis(1));
-        let tx = b.submitter();
-        drop(tx);
-        // also drop the internal tx by moving b into a thread? the Batcher
-        // holds its own tx clone, so spawn a thread that sends one request
-        // then hang up — ensure we still get that batch.
-        let b = Batcher::new(4, Duration::from_millis(1));
+    fn next_batch_times_out_empty_when_idle() {
+        let mut b = Batcher::new(4, Duration::from_millis(1), 2, 64);
+        let batch = b.next_batch().unwrap();
+        assert!(batch.is_empty());
+        // a request sent from another thread still arrives
         let tx = b.submitter();
         let h = thread::spawn(move || {
             let (rtx, _r) = mpsc::channel();
             tx.send(GenRequest {
-                n: 1,
-                seed: 0,
+                work: Work::Generate { n: 1, seed: 0 },
                 reply: rtx,
             })
             .unwrap();
         });
         h.join().unwrap();
         let batch = b.next_batch().unwrap();
-        assert_eq!(batch.total, 1);
+        assert_eq!(batch.rows, 1);
     }
 }

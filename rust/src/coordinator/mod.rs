@@ -1,6 +1,7 @@
 //! The L3 coordinator: experiment sweeps (Figs. 2–4 + theory tables),
 //! report/figure writers, the model-variant registry and the serving layer
-//! (TCP JSON protocol with a dynamic batcher).
+//! (TCP JSON protocol over a slot-accounted dynamic batcher with
+//! per-request seeded noise — deterministic, exact-n replies).
 
 pub mod batcher;
 pub mod experiment;

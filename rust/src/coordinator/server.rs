@@ -2,30 +2,66 @@
 //! variant. Python never runs here — quantized sampling executes through
 //! the compiled HLO (or the CPU reference when artifacts are absent).
 //!
-//! Protocol (one JSON object per line):
-//!   -> {"op": "generate", "model": "ot4", "n": 2, "seed": 7, "steps": 16}
+//! Protocol (one JSON object per line; request lines are capped at
+//! [`MAX_LINE`] bytes, sized to the largest legal `encode` payload;
+//! `seed` is a JSON number, so it must stay below 2^53 — the f64
+//! integer-precision limit — to round-trip exactly):
+//!   -> {"op": "generate", "model": "ot4", "n": 2, "seed": 7}
 //!   <- {"ok": true, "model": "ot4", "n": 2, "d": 768, "images": [...]}
+//!   -> {"op": "encode", "model": "ot4", "images": [... n*d floats ...]}
+//!   <- {"ok": true, "model": "ot4", "n": 2, "d": 768, "latents": [...]}
+//!   -> {"op": "stats"}
+//!   <- {"ok": true, "requests": 9, "batches": 3, "samples": 18,
+//!       "encodes": 2, "queue_depth": 0}
 //!   -> {"op": "models"}
 //!   <- {"ok": true, "models": ["fp32", "ot2", ...]}
 //!   -> {"op": "ping"} / {"op": "shutdown"}
+//!
+//! Serving contracts:
+//!
+//! * **Determinism.** A `generate` reply is a pure function of
+//!   `(model, n, seed, steps)`: the request's noise comes from its own
+//!   `Pcg64::seed(seed)` stream (see `coordinator/batcher.rs`), and the
+//!   native engines are row-independent and bit-stable across batch
+//!   shapes, so co-batched traffic, request slicing and queue position
+//!   never change a single bit of the result. Under the `cpu-ref`/`lut`
+//!   engines (the no-artifact auto default) the reply is additionally
+//!   bit-identical to running `flow::sampler::generate` locally with
+//!   the same seed; `lut2`/`runtime` replies are equally deterministic
+//!   but match the reference sampler only within the 1e-5
+//!   engine-equivalence harness (v2 re-associates sums).
+//! * **Exact n.** Requests up to [`MAX_N`] samples are sliced across as
+//!   many super-batches as needed (slot accounting in the batcher) and
+//!   reassembled in order — never truncated to the model batch.
+//! * **Backpressure.** Each variant's queue is a bounded channel
+//!   (`ServerConfig::queue_cap`); connection handlers block on submit
+//!   once it fills instead of growing server memory.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::mpsc::{self, SyncSender};
+use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::coordinator::batcher::{distribute, Batcher, GenRequest};
+use crate::coordinator::batcher::{Batcher, GenRequest, Work};
 use crate::coordinator::registry::{Registry, Variant};
 use crate::engine::{CpuRefEngine, Engine, EngineKind, LutEngine, LutV2Engine, Tuner};
-use crate::flow::sampler::{self, EngineStep, HloQStep, HloStep};
+use crate::flow::sampler::{self, Direction, EngineStep, HloQStep, HloStep};
 use crate::model::spec::ModelSpec;
 use crate::runtime::SharedArtifacts;
 use crate::util::json::{parse, Json};
-use crate::util::rng::Pcg64;
+
+/// Protocol cap on samples per request (`generate` n, `encode` rows).
+pub const MAX_N: usize = 256;
+
+/// Request-line byte cap: a runaway (or malicious) client cannot grow
+/// server memory past this per connection. Sized so the largest legal
+/// `encode` request (MAX_N × d floats in decimal) still fits.
+pub const MAX_LINE: u64 = 16 * 1024 * 1024;
 
 /// Server configuration.
 pub struct ServerConfig {
@@ -36,6 +72,9 @@ pub struct ServerConfig {
     /// loaded, else the native LUT engine for quantized variants and the
     /// CPU reference for fp32).
     pub engine: Option<EngineKind>,
+    /// Bound on queued requests per model variant (backpressure: submits
+    /// block once the queue is full).
+    pub queue_cap: usize,
 }
 
 impl Default for ServerConfig {
@@ -45,6 +84,7 @@ impl Default for ServerConfig {
             steps: 16,
             linger: Duration::from_millis(5),
             engine: None,
+            queue_cap: 256,
         }
     }
 }
@@ -53,13 +93,20 @@ impl Default for ServerConfig {
 /// batch through the compiled-HLO artifact sessions" (the `Runtime`
 /// kind); `Some(engine)` is a native in-process backend. Built once per
 /// serving worker, so LUT packing happens at startup, never per request.
+///
+/// An *explicit* `--engine lut`/`lut2` choice that fails to pack is an
+/// error (the operator asked for a specific backend; silently serving
+/// through `cpu-ref` would misreport every benchmark run against it).
+/// Only `auto` (no choice) falls back to the reference on packing
+/// failure, because there it is a selection default, not an override.
 fn resolve_engine<'a>(
     choice: Option<EngineKind>,
     has_art: bool,
     variant: &'a Variant,
     spec: &'a ModelSpec,
     pool: crate::engine::Pool,
-) -> Option<Box<dyn Engine + 'a>> {
+) -> Result<Option<Box<dyn Engine + 'a>>> {
+    let explicit = choice.is_some();
     let kind = choice.unwrap_or(if has_art {
         EngineKind::Runtime
     } else if matches!(variant, Variant::Quantized(_)) {
@@ -68,43 +115,53 @@ fn resolve_engine<'a>(
         EngineKind::CpuRef
     });
     match (kind, variant) {
-        (EngineKind::Runtime, _) if has_art => None,
+        (EngineKind::Runtime, _) if has_art => Ok(None),
         // runtime resolved by auto without artifacts cannot happen (auto
         // never picks it then); an *explicit* runtime choice without
         // artifacts is rejected up front in `serve`. Defensive fallback:
         (EngineKind::Runtime, _) => resolve_engine(None, false, variant, spec, pool),
         (EngineKind::Lut, Variant::Quantized(qm)) => match LutEngine::with_pool(qm, pool) {
-            Ok(e) => Some(Box::new(e)),
-            // unpackable model (e.g. >8 bits): serve correct, just slower
-            Err(_) => Some(Box::new(CpuRefEngine::quantized(qm))),
+            Ok(e) => Ok(Some(Box::new(e))),
+            Err(e) if explicit => Err(e.context("--engine lut")),
+            // auto-picked on an unpackable model (e.g. >8 bits): serve
+            // correct, just slower
+            Err(_) => Ok(Some(Box::new(CpuRefEngine::quantized(qm)))),
         },
         // v2: measured autotuning warms up on the first batches per GEMM
         // shape, then dispatches cached tile plans
         (EngineKind::Lut2, Variant::Quantized(qm)) => {
             match LutV2Engine::with_config(qm, pool, Tuner::measured()) {
-                Ok(e) => Some(Box::new(e)),
-                Err(_) => Some(Box::new(CpuRefEngine::quantized(qm))),
+                Ok(e) => Ok(Some(Box::new(e))),
+                Err(e) if explicit => Err(e.context("--engine lut2")),
+                Err(_) => Ok(Some(Box::new(CpuRefEngine::quantized(qm)))),
             }
         }
         // the LUT engines are quantized-only; fp32 serves via the reference
         (EngineKind::Lut | EngineKind::Lut2, Variant::FullPrecision(theta)) => {
-            Some(Box::new(CpuRefEngine::fp32(spec, theta)))
+            Ok(Some(Box::new(CpuRefEngine::fp32(spec, theta))))
         }
         (EngineKind::CpuRef, Variant::FullPrecision(theta)) => {
-            Some(Box::new(CpuRefEngine::fp32(spec, theta)))
+            Ok(Some(Box::new(CpuRefEngine::fp32(spec, theta))))
         }
         (EngineKind::CpuRef, Variant::Quantized(qm)) => {
-            Some(Box::new(CpuRefEngine::quantized(qm)))
+            Ok(Some(Box::new(CpuRefEngine::quantized(qm))))
         }
     }
 }
 
-/// Metrics counters exposed for the bench harness.
+/// Metrics counters exposed for the bench harness and the `stats` op.
 #[derive(Default)]
 pub struct ServerStats {
+    /// Protocol requests handled (every op).
     pub requests: AtomicU64,
+    /// Super-batches executed.
     pub batches: AtomicU64,
+    /// Rows generated (forward ODE).
     pub samples: AtomicU64,
+    /// Rows encoded (reverse ODE).
+    pub encodes: AtomicU64,
+    /// Rows admitted but not yet completed, summed over variants (gauge).
+    pub queue_depth: AtomicU64,
 }
 
 /// The running server handle.
@@ -150,9 +207,10 @@ pub fn serve(
         .as_ref()
         .map(|a| a.with(|art| art.b_sample))
         .unwrap_or(16);
+    let d = registry.spec.d;
     let mut submitters = std::collections::BTreeMap::new();
     for name in registry.names() {
-        let batcher = Batcher::new(batch_size, cfg.linger);
+        let batcher = Batcher::new(batch_size, cfg.linger, d, cfg.queue_cap);
         submitters.insert(name.clone(), batcher.submitter());
         let reg = registry.clone();
         let art = art.clone();
@@ -202,7 +260,7 @@ fn worker_loop(
     name: &str,
     registry: Arc<Registry>,
     art: Option<Arc<SharedArtifacts>>,
-    batcher: Batcher,
+    mut batcher: Batcher,
     stats: Arc<ServerStats>,
     shutdown: Arc<AtomicBool>,
     steps: usize,
@@ -220,106 +278,165 @@ fn worker_loop(
     // when several variants batch at once the scoped worker threads
     // simply time-share.
     let pool = crate::engine::Pool::new(0);
-    let engine = resolve_engine(engine_choice, art.is_some(), variant, &registry.spec, pool);
+    let resolved = resolve_engine(engine_choice, art.is_some(), variant, &registry.spec, pool);
+    let engine = match resolved {
+        Ok(e) => e,
+        Err(err) => {
+            // an explicit engine choice this variant cannot satisfy:
+            // stay up and fail each request with the build error instead
+            // of silently serving through a different backend
+            let msg = format!("engine init failed for '{name}': {err:#}");
+            while !shutdown.load(Ordering::SeqCst) {
+                let Some(batch) = batcher.next_batch() else { return };
+                batcher.complete(batch, Err(&msg));
+            }
+            return;
+        }
+    };
     let d = registry.spec.d;
+    let mut gauge = 0u64; // this worker's last contribution to queue_depth
     while !shutdown.load(Ordering::SeqCst) {
         let Some(batch) = batcher.next_batch() else {
             // all submitters dropped -> server is shutting down
-            return;
+            break;
         };
-        if batch.requests.is_empty() {
+        if batch.is_empty() {
             continue; // wait timeout: loop to re-check the shutdown flag
         }
-        let total = batch.total.max(1);
-        let padded = batch.padded_total(batch_size);
-        // mix per-request seeds into the noise
-        let seed = batch
-            .requests
-            .iter()
-            .fold(0x5eed_u64, |acc, r| acc ^ r.seed.wrapping_mul(0x9E3779B97F4A7C15));
-        let mut rng = Pcg64::seed(seed);
-        let x0: Vec<f32> = (0..padded * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-
-        let imgs = run_generate(
+        let res = run_rows(
             engine.as_deref(),
             variant,
             art.as_deref(),
-            &x0,
+            &batch.x0,
+            batch.dir,
             steps,
             batch_size,
             d,
         );
-        match imgs {
-            Ok(imgs) => {
+        match res {
+            Ok(rows) => {
                 stats.batches.fetch_add(1, Ordering::Relaxed);
-                stats
-                    .samples
-                    .fetch_add(total as u64, Ordering::Relaxed);
-                distribute(batch, &imgs, d);
+                let counter = match batch.dir {
+                    Direction::Forward => &stats.samples,
+                    Direction::Reverse => &stats.encodes,
+                };
+                counter.fetch_add(batch.rows as u64, Ordering::Relaxed);
+                batcher.complete(batch, Ok(&rows));
             }
-            Err(_) => {
-                // reply with empty payloads so clients don't hang
-                distribute(batch, &[], d);
-            }
+            Err(e) => batcher.complete(batch, Err(&e.to_string())),
         }
+        // export backlog as a signed delta so the gauge sums over workers
+        let depth = batcher.backlog_rows() as u64;
+        stats
+            .queue_depth
+            .fetch_add(depth.wrapping_sub(gauge), Ordering::Relaxed);
+        gauge = depth;
     }
+    stats
+        .queue_depth
+        .fetch_add(0u64.wrapping_sub(gauge), Ordering::Relaxed);
 }
 
-/// Generate one padded super-batch. `engine = Some(..)` runs the native
-/// in-process backend through the [`EngineStep`] adapter; `engine = None`
-/// is the `Runtime` kind and drives the compiled-HLO sessions.
+/// Integrate one super-batch in the given direction. `engine = Some(..)`
+/// runs the native in-process backend through the [`EngineStep`] adapter
+/// on the exact rows; `engine = None` is the `Runtime` kind and drives
+/// the compiled-HLO sessions, which are fixed-shape — rows are padded
+/// with zeros up to whole model batches and the padding is cut before
+/// the batcher reassembles replies (rows are independent through the
+/// forward, so padding never changes a real row).
 #[allow(clippy::too_many_arguments)]
-fn run_generate(
+fn run_rows(
     engine: Option<&dyn Engine>,
     variant: &Variant,
     art: Option<&SharedArtifacts>,
     x0: &[f32],
+    dir: Direction,
     steps: usize,
     batch_size: usize,
     d: usize,
 ) -> Result<Vec<f32>> {
-    let mut out = Vec::with_capacity(x0.len());
-    for chunk in x0.chunks(batch_size * d) {
-        let imgs = match engine {
-            Some(eng) => {
-                let mut be = EngineStep { engine: eng };
-                sampler::generate_from(&mut be, chunk, steps)?
-            }
-            None => {
-                let sa = art.ok_or_else(|| anyhow!("runtime engine requires artifacts"))?;
-                match variant {
+    match engine {
+        Some(eng) => {
+            let mut be = EngineStep { engine: eng };
+            sampler::run_direction(&mut be, x0, dir, steps)
+        }
+        None => {
+            let sa = art.ok_or_else(|| anyhow!("runtime engine requires artifacts"))?;
+            let rows = x0.len() / d;
+            let padded = rows.max(1).div_ceil(batch_size.max(1)) * batch_size.max(1);
+            let mut xp = x0.to_vec();
+            xp.resize(padded * d, 0.0);
+            let mut out = Vec::with_capacity(padded * d);
+            for chunk in xp.chunks(batch_size.max(1) * d) {
+                let imgs = match variant {
                     Variant::FullPrecision(theta) => sa.with(|a| {
                         let mut be = HloStep { art: a, theta };
-                        sampler::generate_from(&mut be, chunk, steps)
+                        sampler::run_direction(&mut be, chunk, dir, steps)
                     })?,
                     Variant::Quantized(qm) => sa.with(|a| {
                         let mut be = HloQStep::new(a, qm);
-                        sampler::generate_from(&mut be, chunk, steps)
+                        sampler::run_direction(&mut be, chunk, dir, steps)
                     })?,
-                }
+                };
+                out.extend(imgs);
             }
-        };
-        out.extend(imgs);
+            out.truncate(rows * d);
+            Ok(out)
+        }
     }
-    Ok(out)
 }
 
 fn handle_conn(
     stream: TcpStream,
     registry: &Registry,
-    submitters: &std::collections::BTreeMap<String, mpsc::Sender<GenRequest>>,
+    submitters: &std::collections::BTreeMap<String, SyncSender<GenRequest>>,
     stats: &ServerStats,
     shutdown: &AtomicBool,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
-    let mut line = String::new();
+    let mut buf = Vec::new();
     loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
+        buf.clear();
+        // cap the request line so a client that never sends '\n' cannot
+        // grow server memory without bound; bytes (not read_line) so the
+        // limit cannot split a multi-byte character into an io error
+        if (&mut reader).take(MAX_LINE).read_until(b'\n', &mut buf)? == 0 {
             return Ok(());
         }
+        if buf.len() as u64 >= MAX_LINE && buf.last() != Some(&b'\n') {
+            // overlong line: report, then close (the stream cannot be
+            // resynchronized mid-line)
+            let reply = Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                (
+                    "error",
+                    Json::Str(format!("request line exceeds {MAX_LINE} bytes")),
+                ),
+            ]);
+            writer.write_all(reply.to_string().as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+            // best-effort drain of what the client already sent before
+            // closing: dropping the socket with unread bytes queued makes
+            // the kernel RST the connection, which would destroy the
+            // error reply before the client can read it
+            let _ = writer.shutdown(std::net::Shutdown::Write);
+            let _ = writer.set_read_timeout(Some(Duration::from_millis(500)));
+            let mut sink = [0u8; 8192];
+            let mut drained = 0usize;
+            while drained < 4 * MAX_LINE as usize {
+                match reader.read(&mut sink) {
+                    Ok(0) | Err(_) => break,
+                    Ok(k) => drained += k,
+                }
+            }
+            return Ok(());
+        }
+        // lossy conversion: invalid UTF-8 becomes a JSON parse error
+        // reply below instead of dropping the connection
+        let line = String::from_utf8_lossy(&buf);
         let trimmed = line.trim();
         if trimmed.is_empty() {
             continue;
@@ -340,10 +457,33 @@ fn handle_conn(
     }
 }
 
+/// Submit one unit of work to a variant's batcher and wait for the
+/// reassembled exact-n reply.
+fn submit(
+    submitters: &std::collections::BTreeMap<String, SyncSender<GenRequest>>,
+    model: &str,
+    work: Work,
+) -> Result<Vec<f32>> {
+    let tx = submitters
+        .get(model)
+        .ok_or_else(|| anyhow!("unknown model '{model}'"))?;
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(GenRequest { work, reply: rtx })
+        .map_err(|_| anyhow!("worker for '{model}' is gone"))?;
+    match rrx.recv_timeout(Duration::from_secs(600)) {
+        Ok(reply) => reply.map_err(|e| anyhow!(e)),
+        Err(mpsc::RecvTimeoutError::Timeout) => Err(anyhow!("generation timed out")),
+        // worker died (panic / shutdown race): report that, not a timeout
+        Err(mpsc::RecvTimeoutError::Disconnected) => {
+            Err(anyhow!("worker for '{model}' is gone"))
+        }
+    }
+}
+
 fn handle_request(
     line: &str,
     registry: &Registry,
-    submitters: &std::collections::BTreeMap<String, mpsc::Sender<GenRequest>>,
+    submitters: &std::collections::BTreeMap<String, SyncSender<GenRequest>>,
     stats: &ServerStats,
     shutdown: &AtomicBool,
 ) -> Result<Json> {
@@ -358,30 +498,54 @@ fn handle_request(
                 Json::Arr(registry.names().into_iter().map(Json::Str).collect()),
             ),
         ])),
+        "stats" => Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            (
+                "requests",
+                Json::Num(stats.requests.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "batches",
+                Json::Num(stats.batches.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "samples",
+                Json::Num(stats.samples.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "encodes",
+                Json::Num(stats.encodes.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "queue_depth",
+                Json::Num(stats.queue_depth.load(Ordering::Relaxed) as f64),
+            ),
+        ])),
         "shutdown" => {
             shutdown.store(true, Ordering::SeqCst);
             Ok(Json::obj(vec![("ok", Json::Bool(true))]))
         }
         "generate" => {
             let model = req.req_str("model")?;
-            let n = req.req_usize("n")?.clamp(1, 256);
-            let seed = req.get("seed").and_then(|j| j.as_f64()).unwrap_or(0.0) as u64;
-            let tx = submitters
-                .get(model)
-                .ok_or_else(|| anyhow!("unknown model '{model}'"))?;
-            let (rtx, rrx) = mpsc::channel();
-            tx.send(GenRequest {
-                n,
-                seed,
-                reply: rtx,
-            })
-            .map_err(|_| anyhow!("worker for '{model}' is gone"))?;
-            let imgs = rrx
-                .recv_timeout(Duration::from_secs(600))
-                .map_err(|_| anyhow!("generation timed out"))?;
-            if imgs.is_empty() {
-                return Err(anyhow!("generation failed"));
+            let n = req.req_usize("n")?;
+            if n == 0 || n > MAX_N {
+                bail!("n must be in 1..={MAX_N} (got {n})");
             }
+            // strict like n: a coerced seed would silently alias two
+            // distinct wire seeds onto one noise stream
+            let seed = match req.get("seed") {
+                None => 0u64,
+                Some(j) => {
+                    let s = j
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("seed must be a number"))?;
+                    if s < 0.0 || s.fract() != 0.0 || s >= 9_007_199_254_740_992.0 {
+                        bail!("seed must be an integer in 0..2^53 (got {s})");
+                    }
+                    s as u64
+                }
+            };
+            let imgs = submit(submitters, model, Work::Generate { n, seed })?;
             let d = registry.spec.d;
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
@@ -389,6 +553,29 @@ fn handle_request(
                 ("n", Json::Num((imgs.len() / d) as f64)),
                 ("d", Json::Num(d as f64)),
                 ("images", Json::from_f32s(&imgs)),
+            ]))
+        }
+        "encode" => {
+            let model = req.req_str("model")?;
+            let rows = req.req("images")?.to_f32s()?;
+            let d = registry.spec.d;
+            if rows.is_empty() || rows.len() % d != 0 {
+                bail!(
+                    "images must be flat [n, d] with d={d} (got {} values)",
+                    rows.len()
+                );
+            }
+            let n = rows.len() / d;
+            if n > MAX_N {
+                bail!("encode rows must be in 1..={MAX_N} (got {n})");
+            }
+            let latents = submit(submitters, model, Work::Encode { rows })?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("model", Json::Str(model.to_string())),
+                ("n", Json::Num(n as f64)),
+                ("d", Json::Num(d as f64)),
+                ("latents", Json::from_f32s(&latents)),
             ]))
         }
         other => Err(anyhow!("unknown op '{other}'")),
@@ -416,10 +603,25 @@ impl Client {
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
+        if self.reader.read_line(&mut line)? == 0 {
+            return Err(anyhow!("server closed connection"));
+        }
         parse(line.trim())
     }
 
+    fn checked(&mut self, req: &Json) -> Result<Json> {
+        let resp = self.call(req)?;
+        if resp.get("ok").and_then(|j| j.as_bool()) != Some(true) {
+            return Err(anyhow!(
+                "server error: {}",
+                resp.req_str("error").unwrap_or("unknown")
+            ));
+        }
+        Ok(resp)
+    }
+
+    /// Generate exactly `n` samples; deterministic in `(model, n, seed)`.
+    /// `seed` must be < 2^53 (it crosses the wire as a JSON number).
     pub fn generate(&mut self, model: &str, n: usize, seed: u64) -> Result<Vec<f32>> {
         let req = Json::obj(vec![
             ("op", Json::Str("generate".into())),
@@ -427,13 +629,50 @@ impl Client {
             ("n", Json::Num(n as f64)),
             ("seed", Json::Num(seed as f64)),
         ]);
-        let resp = self.call(&req)?;
-        if resp.get("ok").and_then(|j| j.as_bool()) != Some(true) {
-            return Err(anyhow!(
-                "server error: {}",
-                resp.req_str("error").unwrap_or("unknown")
-            ));
+        self.checked(&req)?.req("images")?.to_f32s()
+    }
+
+    /// Reverse-ODE encode: images (flat `[n, d]`) → latents.
+    pub fn encode(&mut self, model: &str, imgs: &[f32]) -> Result<Vec<f32>> {
+        let req = Json::obj(vec![
+            ("op", Json::Str("encode".into())),
+            ("model", Json::Str(model.into())),
+            ("images", Json::from_f32s(imgs)),
+        ]);
+        self.checked(&req)?.req("latents")?.to_f32s()
+    }
+
+    /// Server counters (`requests`/`batches`/`samples`/`encodes`/
+    /// `queue_depth`).
+    pub fn stats(&mut self) -> Result<Json> {
+        self.checked(&Json::obj(vec![("op", Json::Str("stats".into()))]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantMethod;
+    use crate::util::rng::Pcg64;
+
+    /// An explicit `--engine lut`/`lut2` on an unpackable model must
+    /// surface the packing error; `auto` falls back to the reference.
+    #[test]
+    fn explicit_lut_choice_errors_on_unpackable_model() {
+        let spec = ModelSpec::default_spec();
+        let theta = spec.init_theta(&mut Pcg64::seed(11));
+        // 9-bit codes exceed the LUT engines' 1..=8 packing range
+        let qm = crate::quant::quantize_model(&spec, &theta, QuantMethod::Uniform, 9);
+        let v = Variant::Quantized(qm);
+        for kind in [EngineKind::Lut, EngineKind::Lut2] {
+            let got = resolve_engine(Some(kind), false, &v, &spec, crate::engine::Pool::serial());
+            let err = got.err().expect("explicit unpackable choice must error");
+            assert!(format!("{err:#}").contains("1..=8"), "unexpected: {err:#}");
         }
-        resp.req("images")?.to_f32s()
+        // auto keeps the serve-correct fallback
+        let auto = resolve_engine(None, false, &v, &spec, crate::engine::Pool::serial())
+            .unwrap()
+            .expect("auto resolves a native engine");
+        assert_eq!(auto.name(), "cpu-ref");
     }
 }

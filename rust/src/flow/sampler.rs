@@ -217,6 +217,33 @@ pub fn encode(backend: &mut dyn StepBackend, imgs: &[f32], steps: usize) -> Resu
     Ok(out.into_iter().map(to_latent).collect())
 }
 
+/// Which way a batch integrates the probability-flow ODE. The serving
+/// layer schedules homogeneous super-batches by direction: `Forward` is
+/// the `generate` op ([`generate_from`], noise → images), `Reverse` is
+/// the `encode` op ([`encode`], images → latents, the paper's Fig. 4
+/// latent-extraction path).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// t: 0 → 1 (generation; output clamped to pixel range).
+    Forward,
+    /// t: 1 → 0 (encoding; output bounded by the latent sentinel).
+    Reverse,
+}
+
+/// Run a flat `[n, d]` batch through the ODE in the given direction —
+/// the single entry point the serving worker uses for both ops.
+pub fn run_direction(
+    backend: &mut dyn StepBackend,
+    rows: &[f32],
+    dir: Direction,
+    steps: usize,
+) -> Result<Vec<f32>> {
+    match dir {
+        Direction::Forward => generate_from(backend, rows, steps),
+        Direction::Reverse => encode(backend, rows, steps),
+    }
+}
+
 /// Fixed-step explicit Euler from t0 to t1 (delegates to the backend's
 /// `run`, which HLO backends override with device-resident sessions).
 pub fn integrate(
@@ -310,6 +337,21 @@ mod tests {
         let mut be = EngineStep { engine: &lut2 };
         let got = generate_from(&mut be, &x0, 6).unwrap();
         crate::util::check::assert_close(&got, &want, 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn run_direction_dispatches_generate_and_encode() {
+        let (spec, theta) = setup();
+        let mut be = CpuStep {
+            spec: &spec,
+            theta: &theta,
+        };
+        let x = vec![0.4f32; 2 * spec.d];
+        let fwd = run_direction(&mut be, &x, Direction::Forward, 4).unwrap();
+        assert_eq!(fwd, generate_from(&mut be, &x, 4).unwrap());
+        let rev = run_direction(&mut be, &x, Direction::Reverse, 4).unwrap();
+        assert_eq!(rev, encode(&mut be, &x, 4).unwrap());
+        assert_ne!(fwd, rev);
     }
 
     #[test]

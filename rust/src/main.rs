@@ -500,7 +500,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .flag("methods", "ot,uniform", "variants to build")
         .flag("bits", "2,4,8", "bit-widths to build")
         .flag("steps", "16", "euler steps per sample")
-        .flag("engine", "auto", "execution backend: auto|cpu-ref|lut|lut2|runtime");
+        .flag("engine", "auto", "execution backend: auto|cpu-ref|lut|lut2|runtime")
+        .flag("queue", "256", "per-variant request queue bound (backpressure)");
     let a = cmd.parse(argv)?;
     let spec = ModelSpec::default_spec();
     let dataset = Dataset::parse(a.get("dataset"))
@@ -516,11 +517,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         addr: a.get("addr").to_string(),
         steps: a.get_usize("steps")?,
         engine,
+        queue_cap: a.get_usize("queue")?.max(1),
         ..Default::default()
     };
     let server = serve(registry.clone(), art, cfg)?;
     println!(
-        "serving {} variants on {} (engine: {}) — ops: generate/models/ping/shutdown",
+        "serving {} variants on {} (engine: {}) — ops: \
+         generate/encode/stats/models/ping/shutdown \
+         (deterministic per (model, n, seed); n up to 256 sliced to exact count)",
         registry.len(),
         server.addr,
         engine.map(|k| k.name()).unwrap_or("auto")
@@ -536,12 +540,15 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                 % 1000
                 == 999
         {
-            // periodic stats line (cheap, approximate)
+            // periodic stats line (cheap, approximate; also served as
+            // the `stats` op)
             println!(
-                "requests={} batches={} samples={}",
+                "requests={} batches={} samples={} encodes={} queue_depth={}",
                 server.stats.requests.load(std::sync::atomic::Ordering::Relaxed),
                 server.stats.batches.load(std::sync::atomic::Ordering::Relaxed),
-                server.stats.samples.load(std::sync::atomic::Ordering::Relaxed)
+                server.stats.samples.load(std::sync::atomic::Ordering::Relaxed),
+                server.stats.encodes.load(std::sync::atomic::Ordering::Relaxed),
+                server.stats.queue_depth.load(std::sync::atomic::Ordering::Relaxed)
             );
         }
     }

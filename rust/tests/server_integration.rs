@@ -1,4 +1,5 @@
 //! Serving-layer integration: real TCP round trips, dynamic batching,
+//! determinism under co-batching, exact-n slicing, encode/stats ops,
 //! protocol errors, and concurrent clients (CPU backend; the HLO path is
 //! covered by runtime_integration + examples/serve_quantized).
 
@@ -7,35 +8,120 @@ use std::time::Duration;
 
 use fmq::coordinator::registry::Registry;
 use fmq::coordinator::server::{serve, Client, ServerConfig};
-use fmq::model::spec::ModelSpec;
-use fmq::quant::QuantMethod;
+use fmq::flow::sampler::{self, CpuQStep, CpuStep};
+use fmq::model::spec::{Layer, ModelSpec};
+use fmq::quant::{quantize_model, QuantMethod};
 use fmq::util::json::Json;
 use fmq::util::rng::Pcg64;
+
+/// Steps every test server integrates with (fast; part of the
+/// determinism tuple `(model, n, seed, steps)`).
+const STEPS: usize = 2;
+
+fn test_theta(spec: &ModelSpec) -> fmq::model::params::ParamStore {
+    spec.init_theta(&mut Pcg64::seed(5))
+}
+
+/// A tiny architecture with the full layer table shape, so the serving
+/// tests that push many rows (slicing, determinism under load) stay fast
+/// in debug builds — `cargo test -q` runs unoptimized.
+fn small_spec() -> ModelSpec {
+    let (d, hidden, temb_freqs, blocks) = (24usize, 32usize, 4usize, 2usize);
+    let mut layers = Vec::new();
+    let mut off = 0usize;
+    let mut add = |layers: &mut Vec<Layer>, name: &str, shape: Vec<usize>| {
+        let l = Layer {
+            name: name.to_string(),
+            shape,
+            offset: off,
+        };
+        off += l.size();
+        layers.push(l);
+    };
+    add(&mut layers, "w_in", vec![d, hidden]);
+    add(&mut layers, "b_in", vec![hidden]);
+    add(&mut layers, "w_t", vec![2 * temb_freqs, hidden]);
+    add(&mut layers, "b_t", vec![hidden]);
+    for i in 0..blocks {
+        add(&mut layers, &format!("w1_{i}"), vec![hidden, hidden]);
+        add(&mut layers, &format!("b1_{i}"), vec![hidden]);
+        add(&mut layers, &format!("w2_{i}"), vec![hidden, hidden]);
+        add(&mut layers, &format!("b2_{i}"), vec![hidden]);
+    }
+    add(&mut layers, "w_out", vec![hidden, d]);
+    add(&mut layers, "b_out", vec![d]);
+    ModelSpec {
+        layers,
+        d,
+        hidden,
+        blocks,
+        temb_freqs,
+        k_max: 256,
+        freq_max: 1000.0,
+    }
+}
+
+fn test_config(engine: Option<fmq::engine::EngineKind>) -> ServerConfig {
+    ServerConfig {
+        addr: "127.0.0.1:0".to_string(), // ephemeral port
+        steps: STEPS,
+        linger: Duration::from_millis(3),
+        engine,
+        ..Default::default()
+    }
+}
 
 fn start_server_with_engine(
     engine: Option<fmq::engine::EngineKind>,
 ) -> (fmq::coordinator::server::Server, String) {
     let spec = ModelSpec::default_spec();
-    let theta = spec.init_theta(&mut Pcg64::seed(5));
+    let theta = test_theta(&spec);
     let registry = Arc::new(Registry::build_fleet(
         &spec,
         &theta,
         &[QuantMethod::Ot],
         &[2, 8],
     ));
-    let cfg = ServerConfig {
-        addr: "127.0.0.1:0".to_string(), // ephemeral port
-        steps: 2,                        // fast for tests
-        linger: Duration::from_millis(3),
-        engine,
-    };
-    let server = serve(registry, None, cfg).expect("server start");
+    let server = serve(registry, None, test_config(engine)).expect("server start");
     let addr = server.addr.to_string();
     (server, addr)
 }
 
 fn start_server() -> (fmq::coordinator::server::Server, String) {
     start_server_with_engine(None)
+}
+
+/// Like `start_server`, on the small spec — for the row-heavy tests.
+fn start_small_server() -> (fmq::coordinator::server::Server, String) {
+    let spec = small_spec();
+    let theta = test_theta(&spec);
+    let registry = Arc::new(Registry::build_fleet(
+        &spec,
+        &theta,
+        &[QuantMethod::Ot],
+        &[2, 8],
+    ));
+    let server = serve(registry, None, test_config(None)).expect("server start");
+    let addr = server.addr.to_string();
+    (server, addr)
+}
+
+/// The serving determinism contract, computed offline: a `generate`
+/// reply for `(model, n, seed)` must equal `sampler::generate` run
+/// locally with the request's seed (the server's auto engines — `lut`
+/// for quantized, `cpu-ref` for fp32 — are bit-exact vs these backends).
+fn expected_images(spec: &ModelSpec, model: &str, n: usize, seed: u64) -> Vec<f32> {
+    let theta = test_theta(spec);
+    let mut rng = Pcg64::seed(seed);
+    if model == "fp32" {
+        let mut be = CpuStep { spec, theta: &theta };
+        sampler::generate(&mut be, &mut rng, n, STEPS).unwrap()
+    } else {
+        let bits: u8 = model.strip_prefix("ot").unwrap().parse().unwrap();
+        let qm = quantize_model(spec, &theta, QuantMethod::Ot, bits);
+        let mut be = CpuQStep { qm: &qm };
+        sampler::generate(&mut be, &mut rng, n, STEPS).unwrap()
+    }
 }
 
 /// The LUT engine is bit-exact against the dequantize-then-GEMM reference,
@@ -193,4 +279,250 @@ fn same_seed_same_images() {
     let b = c.generate("fp32", 1, 99).unwrap();
     assert_eq!(a, b, "generation must be deterministic per seed");
     server.stop();
+}
+
+/// The tentpole contract: a generate reply is a pure function of
+/// `(model, n, seed, steps)` — bit-identical to running the sampler
+/// locally with the request's seed, for fp32 and quantized variants.
+#[test]
+fn generate_is_pure_function_of_model_n_seed() {
+    let (server, addr) = start_small_server();
+    let spec = small_spec();
+    let mut c = Client::connect(&addr).unwrap();
+    for (model, n, seed) in [("fp32", 2, 7u64), ("ot2", 3, 41), ("ot8", 1, 0)] {
+        let got = c.generate(model, n, seed).unwrap();
+        assert_eq!(
+            got,
+            expected_images(&spec, model, n, seed),
+            "{model} n={n} seed={seed} must equal the offline sampler"
+        );
+    }
+    server.stop();
+}
+
+/// n larger than the model batch (16) is sliced across super-batches and
+/// reassembled: exactly n rows come back, still bit-identical to the
+/// offline sampler (slicing is invisible in the result).
+#[test]
+fn exact_n_delivery_across_super_batches() {
+    let (server, addr) = start_small_server();
+    let spec = small_spec();
+    let d = spec.d;
+    let mut c = Client::connect(&addr).unwrap();
+    for n in [1usize, 16, 17, 40] {
+        let imgs = c.generate("ot2", n, 1234).unwrap();
+        assert_eq!(imgs.len(), n * d, "exactly n rows for n={n}");
+    }
+    let big = c.generate("ot2", 40, 4321).unwrap();
+    assert_eq!(big, expected_images(&spec, "ot2", 40, 4321));
+    // prefix property of one noise stream: the first rows of a larger
+    // request equal a smaller request with the same seed
+    let small = c.generate("ot2", 3, 4321).unwrap();
+    assert_eq!(&big[..3 * d], &small[..]);
+    server.stop();
+}
+
+/// Determinism under load: the same `(model, n, seed)` returns identical
+/// bits whether the request runs alone or co-batched with arbitrary
+/// concurrent traffic — including another request with the *same* seed
+/// (the old xor-fold cancelled equal seeds to the base seed).
+#[test]
+fn cobatching_and_concurrency_do_not_change_samples() {
+    let (server, addr) = start_small_server();
+    let solo = Client::connect(&addr).unwrap().generate("ot2", 3, 123).unwrap();
+    let mut handles = Vec::new();
+    for i in 0..8u64 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            if i % 2 == 0 {
+                // the probe request, racing varied background traffic
+                ("probe", c.generate("ot2", 3, 123).unwrap())
+            } else if i % 4 == 1 {
+                // same-variant noise: co-batches with the probe on the
+                // ot2 batcher under a different seed
+                ("noise", c.generate("ot2", 2, 1000 + i).unwrap())
+            } else {
+                // cross-variant noise: concurrent load on another worker
+                ("noise", c.generate("ot8", 2, 1000 + i).unwrap())
+            }
+        }));
+    }
+    for h in handles {
+        let (kind, imgs) = h.join().unwrap();
+        if kind == "probe" {
+            assert_eq!(imgs, solo, "co-batching changed a deterministic reply");
+        }
+    }
+    server.stop();
+}
+
+/// The encode op runs the reverse ODE over client rows and matches the
+/// offline `sampler::encode` bit-for-bit (lut engine is bit-exact).
+#[test]
+fn encode_op_round_trips_over_tcp() {
+    let (server, addr) = start_small_server();
+    let spec = small_spec();
+    let mut c = Client::connect(&addr).unwrap();
+    let imgs = c.generate("ot8", 2, 11).unwrap();
+    let latents = c.encode("ot8", &imgs).unwrap();
+    assert_eq!(latents.len(), imgs.len());
+    let qm = quantize_model(&spec, &test_theta(&spec), QuantMethod::Ot, 8);
+    let mut be = CpuQStep { qm: &qm };
+    let want = sampler::encode(&mut be, &imgs, STEPS).unwrap();
+    assert_eq!(latents, want, "server encode must equal the offline sampler");
+    // malformed rows are rejected with a protocol error
+    let err = c.encode("ot8", &imgs[..spec.d + 1]).unwrap_err();
+    assert!(err.to_string().contains("flat [n, d]"), "got: {err}");
+    server.stop();
+}
+
+/// The stats op exposes the counters plus queue depth for the bench
+/// harness.
+#[test]
+fn stats_op_reports_counters() {
+    let (server, addr) = start_small_server();
+    let mut c = Client::connect(&addr).unwrap();
+    let imgs = c.generate("ot2", 2, 3).unwrap();
+    c.encode("ot2", &imgs).unwrap();
+    let s = c.stats().unwrap();
+    let get = |k: &str| s.req(k).unwrap().as_f64().unwrap();
+    assert!(get("requests") >= 2.0);
+    assert!(get("batches") >= 2.0);
+    assert!(get("samples") >= 2.0);
+    assert!(get("encodes") >= 2.0);
+    assert!(get("queue_depth") >= 0.0, "gauge must be present");
+    server.stop();
+}
+
+/// Out-of-range n is rejected explicitly (no silent clamping — the
+/// exact-n contract).
+#[test]
+fn out_of_range_n_is_rejected() {
+    let (server, addr) = start_small_server();
+    let mut c = Client::connect(&addr).unwrap();
+    for n in [0usize, 257] {
+        let resp = c
+            .call(&Json::obj(vec![
+                ("op", Json::Str("generate".into())),
+                ("model", Json::Str("ot2".into())),
+                ("n", Json::Num(n as f64)),
+            ]))
+            .unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        assert!(
+            resp.req_str("error").unwrap().contains("1..=256"),
+            "n={n}: {resp:?}"
+        );
+    }
+    // seeds that cannot round-trip the f64 wire format are rejected, not
+    // silently aliased onto another noise stream
+    for bad in [-1.0f64, 1.5, 9_007_199_254_740_992.0] {
+        let resp = c
+            .call(&Json::obj(vec![
+                ("op", Json::Str("generate".into())),
+                ("model", Json::Str("ot2".into())),
+                ("n", Json::Num(1.0)),
+                ("seed", Json::Num(bad)),
+            ]))
+            .unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        assert!(
+            resp.req_str("error").unwrap().contains("seed"),
+            "seed={bad}: {resp:?}"
+        );
+    }
+    server.stop();
+}
+
+/// A request line longer than the protocol cap gets an error reply and a
+/// closed connection instead of unbounded server-side buffering.
+#[test]
+fn oversized_request_line_is_rejected() {
+    use std::io::{BufRead, BufReader, Read, Write};
+    let (server, addr) = start_small_server();
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut r = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    // past the cap, no newline anywhere: the server stops reading at
+    // MAX_LINE, replies, and drains the excess so the reply survives
+    // (an un-drained close would RST the connection and destroy it)
+    let max = fmq::coordinator::server::MAX_LINE as usize;
+    let blob = vec![b'x'; max + 10_000];
+    w.write_all(&blob).unwrap();
+    w.flush().unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":false"), "got: {line}");
+    assert!(line.contains("exceeds"), "got: {line}");
+    // the server closed the connection after replying
+    let mut rest = Vec::new();
+    let _ = r.read_to_end(&mut rest);
+    assert!(rest.is_empty());
+    server.stop();
+}
+
+/// EOF from the server surfaces as a clear client error, not a JSON
+/// parse failure on an empty string. Uses a scripted peer that reads the
+/// request fully and then hangs up, so the client sees a clean FIN.
+#[test]
+fn client_reports_server_closed_connection() {
+    use std::io::BufRead;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let peer = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut r = std::io::BufReader::new(stream);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap(); // drain the request, reply nothing
+    });
+    let mut c = Client::connect(&addr).unwrap();
+    let err = c
+        .call(&Json::obj(vec![("op", Json::Str("ping".into()))]))
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("server closed connection"),
+        "got: {err}"
+    );
+    peer.join().unwrap();
+}
+
+/// An explicit `--engine lut` the model cannot satisfy (9-bit codes are
+/// beyond the packed-LUT range) errors per request instead of silently
+/// serving through cpu-ref; `auto` on the same fleet serves correctly
+/// via the reference fallback.
+#[test]
+fn explicit_engine_failure_surfaces_to_client() {
+    let spec = small_spec();
+    let theta = test_theta(&spec);
+    let mk_registry = || {
+        Arc::new(Registry::build_fleet(
+            &spec,
+            &theta,
+            &[QuantMethod::Uniform],
+            &[9],
+        ))
+    };
+    let strict = serve(
+        mk_registry(),
+        None,
+        test_config(Some(fmq::engine::EngineKind::Lut)),
+    )
+    .unwrap();
+    let err = Client::connect(&strict.addr.to_string())
+        .unwrap()
+        .generate("uniform9", 1, 1)
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("engine init failed"),
+        "got: {err}"
+    );
+    strict.stop();
+    let auto = serve(mk_registry(), None, test_config(None)).unwrap();
+    let imgs = Client::connect(&auto.addr.to_string())
+        .unwrap()
+        .generate("uniform9", 1, 1)
+        .unwrap();
+    assert_eq!(imgs.len(), spec.d);
+    auto.stop();
 }
