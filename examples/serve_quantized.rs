@@ -141,6 +141,14 @@ fn main() -> anyhow::Result<()> {
         s.req("encodes")?.as_f64().unwrap_or(0.0),
         s.req("queue_depth")?.as_f64().unwrap_or(0.0),
     );
+    // memory: packed model bytes resident in the engines vs the scratch
+    // high-water of the per-worker arenas (steady after the first batch
+    // of each step grid — the hot path reuses, never reallocates)
+    println!(
+        "memory: resident {:.1} KB packed model, workspace high-water {:.1} KB scratch",
+        s.req("resident_bytes")?.as_f64().unwrap_or(0.0) / 1024.0,
+        s.req("workspace_bytes")?.as_f64().unwrap_or(0.0) / 1024.0,
+    );
 
     server.stop();
     println!("server stopped cleanly");

@@ -1,6 +1,11 @@
 //! PERF: the native LUT-GEMM engines (v1 `lut`, v2 `lut2`) vs
 //! dequantize-then-f32-GEMM vs the compiled HLO runtime, across serving
-//! bit-widths and batch sizes.
+//! bit-widths and batch sizes — plus the **steady-state sampling
+//! section**: per-Euler-step latency and a heap-allocation count through
+//! the `EngineStep` hot loop, measured with a counting global allocator.
+//! After one warm-up run (arena growth + autotune + temb-cache fill) the
+//! `velocity_into` path must report **allocs/step = 0** for both LUT
+//! engines; any regression prints a flag on the table.
 //!
 //! The dequantize-then-GEMM path (`cpu_ref::qvelocity`) is what the serve
 //! stack did before `engine/` existed: reconstruct every weight matrix to
@@ -8,22 +13,60 @@
 //! the packed codes; the v2 engine adds bulk tile decode, fused multi-code
 //! lookup tables and tile autotuning (see `docs/BENCHMARKS.md`).
 //! Acceptance targets: LUT >= 2x dequantize at b <= 4, batch 512 (ISSUE 2);
-//! v2 >= 2x v1 at b in {2,3,4}, batch >= 64 (ISSUE 3).
+//! v2 >= 2x v1 at b in {2,3,4}, batch >= 64 (ISSUE 3); allocs/step = 0
+//! for lut and lut2 in steady state (ISSUE 5).
 //!
 //!   cargo bench --bench bench_engine             # full grid
 //!   FMQ_BENCH_FAST=1 cargo bench --bench bench_engine   # CI smoke
 //!
-//! Besides the stdout table, the grid is dumped to
-//! `results/bench_engine.json` (field meanings in `docs/BENCHMARKS.md`).
+//! Besides the stdout tables, the velocity grid is dumped to
+//! `results/bench_engine.json` and the steady-state sampling cells to
+//! `BENCH_engine.json` at the **repo root** (machine-readable perf
+//! trajectory; field meanings in `docs/BENCHMARKS.md`).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use fmq::bench::Bencher;
 use fmq::engine::{Engine, LutEngine, LutV2Engine, Pool, Tuner};
 use fmq::flow::cpu_ref;
+use fmq::flow::sampler::{EngineStep, StepBackend};
+use fmq::model::params::ParamStore;
 use fmq::model::spec::ModelSpec;
 use fmq::quant::{quantize_model, QuantMethod};
 use fmq::runtime::{artifacts, ArtifactSet};
 use fmq::util::json::Json;
 use fmq::util::rng::Pcg64;
+
+/// Bench-only counting allocator: every allocator entry that can hand
+/// out memory (alloc / alloc_zeroed / realloc) bumps one relaxed
+/// counter, so a snapshot around N Euler steps yields allocs/step.
+/// Deallocation is not counted (frees are paired with the allocations
+/// we already count).
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 /// One (bits, batch) cell of the engine grid, all times mean seconds.
 struct Cell {
@@ -33,6 +76,128 @@ struct Cell {
     lut_s: f64,
     lut2_s: f64,
     lut2_pooled_s: f64,
+}
+
+/// One steady-state sampling cell: serial engine, per-step latency and
+/// heap allocations per Euler step after a one-run warm-up.
+struct HotCell {
+    bits: u8,
+    batch: usize,
+    engine: &'static str,
+    step_s: f64,
+    allocs_per_step: f64,
+}
+
+impl HotCell {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bits", Json::Num(self.bits as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+            ("engine", Json::Str(self.engine.into())),
+            ("step_latency_s", Json::Num(self.step_s)),
+            ("allocs_per_step", Json::Num(self.allocs_per_step)),
+        ])
+    }
+}
+
+/// Measure the sampling hot loop (`EngineStep::run`) in steady state:
+/// one warm-up run grows the arenas, fills the per-step time-embedding
+/// cache and settles the autotuner; the measured run over the same
+/// t-grid is then timed and alloc-counted (the input clone happens
+/// outside the counted window, so every count is a hot-path alloc).
+fn hot_cell(
+    engine: &dyn Engine,
+    name: &'static str,
+    bits: u8,
+    x0: &[f32],
+    bs: usize,
+    steps: usize,
+) -> HotCell {
+    let mut be = EngineStep::new(engine);
+    let warm = be.run(x0.to_vec(), 0.0, 1.0, steps).expect("warm-up run");
+    std::hint::black_box(warm);
+    let x = x0.to_vec();
+    let a0 = ALLOC_CALLS.load(Ordering::Relaxed);
+    let t0 = std::time::Instant::now();
+    let out = be.run(x, 0.0, 1.0, steps).expect("measured run");
+    let wall = t0.elapsed().as_secs_f64();
+    let a1 = ALLOC_CALLS.load(Ordering::Relaxed);
+    std::hint::black_box(out);
+    HotCell {
+        bits,
+        batch: bs,
+        engine: name,
+        step_s: wall / steps as f64,
+        allocs_per_step: (a1 - a0) as f64 / steps as f64,
+    }
+}
+
+/// Run the steady-state grid and dump `BENCH_engine.json` at the repo
+/// root (the machine-readable allocs/step + latency trajectory).
+fn steady_state_section(
+    spec: &ModelSpec,
+    theta: &ParamStore,
+    rng: &mut Pcg64,
+    batches: &[usize],
+    bit_widths: &[u8],
+    fast: bool,
+) {
+    let hot_steps = if fast { 3 } else { 4 };
+    println!(
+        "\nsteady-state sampling (EngineStep::run, serial engines, \
+         {hot_steps} Euler steps after one warm-up run):"
+    );
+    println!(
+        "  {:<8} {:<6} {:>6} {:>14} {:>12}",
+        "engine", "bits", "batch", "step latency", "allocs/step"
+    );
+    let mut hot: Vec<HotCell> = Vec::new();
+    for &bits in bit_widths {
+        let qm = quantize_model(spec, theta, QuantMethod::Ot, bits);
+        let v1 = LutEngine::with_pool(&qm, Pool::serial()).expect("pack model");
+        let v2 = LutV2Engine::with_config(&qm, Pool::serial(), Tuner::measured())
+            .expect("pack model");
+        for &bs in batches {
+            let x0: Vec<f32> = (0..bs * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            for (name, engine) in [("lut", &v1 as &dyn Engine), ("lut2", &v2 as &dyn Engine)] {
+                let cell = hot_cell(engine, name, bits, &x0, bs, hot_steps);
+                let flag = if cell.allocs_per_step > 0.0 {
+                    "  <-- HOT PATH ALLOCATES (must be 0)"
+                } else {
+                    ""
+                };
+                println!(
+                    "  {:<8} {:<6} {:>6} {:>14} {:>12.2}{flag}",
+                    cell.engine,
+                    cell.bits,
+                    cell.batch,
+                    fmq::bench::fmt_time(cell.step_s),
+                    cell.allocs_per_step
+                );
+                hot.push(cell);
+            }
+        }
+        println!(
+            "  (ot{bits}: v2 autotuner settled on {} GEMM shapes)",
+            v2.tuner().cached_plans()
+        );
+    }
+    let json = Json::obj(vec![
+        ("bench", Json::Str("bench_engine".into())),
+        ("section", Json::Str("steady_state_sampling".into())),
+        ("fast_mode", Json::Bool(fast)),
+        ("steps", Json::Num(hot_steps as f64)),
+        ("cells", Json::Arr(hot.iter().map(HotCell::to_json).collect())),
+    ]);
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(std::path::Path::to_path_buf)
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    let path = root.join("BENCH_engine.json");
+    match std::fs::write(&path, json.to_string()) {
+        Ok(()) => println!("-> {}", path.display()),
+        Err(e) => eprintln!("(could not write {}: {e})", path.display()),
+    }
 }
 
 impl Cell {
@@ -178,6 +343,10 @@ fn main() {
     } else {
         println!("\n-> results/bench_engine.json");
     }
+
+    // steady-state sampling: allocs/step (must be 0) + per-step latency,
+    // dumped to BENCH_engine.json at the repo root
+    steady_state_section(&spec, &theta, &mut rng, batches, &bit_widths, fast);
 
     // compiled HLO runtime, when artifacts exist (the `runtime` engine)
     let dir = artifacts::default_dir();

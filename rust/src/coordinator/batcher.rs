@@ -266,14 +266,21 @@ impl Batcher {
 
     /// Slice up to `max_batch` rows from the oldest unfinished requests
     /// (FIFO, restricted to the oldest request's direction so every
-    /// super-batch integrates one way).
+    /// super-batch integrates one way). Consecutive super-batches of the
+    /// same step count replay the same ODE t-grid, so they ride the
+    /// worker's warm time-embedding cache (see `engine/workspace.rs`) —
+    /// the batcher never needs to know about it, it only has to keep
+    /// handing batches to the same persistent worker adapter.
     fn assemble(&mut self) -> SuperBatch {
         let Some(dir) = self.active.iter().find(|a| a.issued < a.n).map(|a| a.dir) else {
             return SuperBatch::empty();
         };
         let d = self.d;
-        let mut x0 = Vec::new();
-        let mut slices = Vec::new();
+        // size the buffers up front: one growth instead of log2(rows*d)
+        // doubling reallocations per super-batch on the noise-push path
+        let cap = self.max_batch.min(self.pending_rows());
+        let mut x0 = Vec::with_capacity(cap * d);
+        let mut slices = Vec::with_capacity(self.active.len().min(cap));
         let mut batch_row = 0usize;
         for a in self.active.iter_mut() {
             if batch_row == self.max_batch {

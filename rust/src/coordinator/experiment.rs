@@ -144,9 +144,7 @@ impl<'a> EvalContext<'a> {
             }
             Some(kind) => {
                 let engine = crate::engine::build_quantized(kind, qm)?;
-                let mut be = EngineStep {
-                    engine: engine.as_ref(),
-                };
+                let mut be = EngineStep::new(engine.as_ref());
                 self.run_batched(&mut be, x, reverse)
             }
         }

@@ -12,7 +12,8 @@
 //!   <- {"ok": true, "model": "ot4", "n": 2, "d": 768, "latents": [...]}
 //!   -> {"op": "stats"}
 //!   <- {"ok": true, "requests": 9, "batches": 3, "samples": 18,
-//!       "encodes": 2, "queue_depth": 0}
+//!       "encodes": 2, "queue_depth": 0,
+//!       "resident_bytes": 5443584, "workspace_bytes": 1245184}
 //!   -> {"op": "models"}
 //!   <- {"ok": true, "models": ["fp32", "ot2", ...]}
 //!   -> {"op": "ping"} / {"op": "shutdown"}
@@ -162,6 +163,13 @@ pub struct ServerStats {
     pub encodes: AtomicU64,
     /// Rows admitted but not yet completed, summed over variants (gauge).
     pub queue_depth: AtomicU64,
+    /// Model bytes resident across the native engines (packed codes +
+    /// codebooks + biases), summed over variant workers at startup.
+    pub resident_bytes: AtomicU64,
+    /// High-water scratch bytes across every worker's arenas (the
+    /// per-worker `EngineStep` workspace + the engine pool slots),
+    /// summed over variant workers (gauge, monotone per worker).
+    pub workspace_bytes: AtomicU64,
 }
 
 /// The running server handle.
@@ -294,7 +302,18 @@ fn worker_loop(
         }
     };
     let d = registry.spec.d;
+    // one step adapter per worker, built once and reused across every
+    // super-batch: its workspace arena (and the per-step time-embedding
+    // cache inside it) persists, so after the first batch of a given
+    // step grid the velocity hot path performs zero heap allocations
+    let mut native = engine.as_deref().map(EngineStep::new);
+    if let Some(e) = engine.as_deref() {
+        stats
+            .resident_bytes
+            .fetch_add(e.resident_bytes() as u64, Ordering::Relaxed);
+    }
     let mut gauge = 0u64; // this worker's last contribution to queue_depth
+    let mut ws_gauge = 0u64; // last contribution to workspace_bytes
     while !shutdown.load(Ordering::SeqCst) {
         let Some(batch) = batcher.next_batch() else {
             // all submitters dropped -> server is shutting down
@@ -304,7 +323,7 @@ fn worker_loop(
             continue; // wait timeout: loop to re-check the shutdown flag
         }
         let res = run_rows(
-            engine.as_deref(),
+            native.as_mut(),
             variant,
             art.as_deref(),
             &batch.x0,
@@ -331,22 +350,31 @@ fn worker_loop(
             .queue_depth
             .fetch_add(depth.wrapping_sub(gauge), Ordering::Relaxed);
         gauge = depth;
+        // arena high-water, same delta scheme (monotone per worker)
+        let hw = native
+            .as_ref()
+            .map(|be| be.workspace_bytes() + be.engine().workspace_bytes())
+            .unwrap_or(0) as u64;
+        stats
+            .workspace_bytes
+            .fetch_add(hw.wrapping_sub(ws_gauge), Ordering::Relaxed);
+        ws_gauge = hw;
     }
     stats
         .queue_depth
         .fetch_add(0u64.wrapping_sub(gauge), Ordering::Relaxed);
 }
 
-/// Integrate one super-batch in the given direction. `engine = Some(..)`
-/// runs the native in-process backend through the [`EngineStep`] adapter
-/// on the exact rows; `engine = None` is the `Runtime` kind and drives
-/// the compiled-HLO sessions, which are fixed-shape — rows are padded
-/// with zeros up to whole model batches and the padding is cut before
-/// the batcher reassembles replies (rows are independent through the
-/// forward, so padding never changes a real row).
+/// Integrate one super-batch in the given direction. `native = Some(..)`
+/// runs the worker's persistent [`EngineStep`] adapter (warm workspace +
+/// temb cache) on the exact rows; `native = None` is the `Runtime` kind
+/// and drives the compiled-HLO sessions, which are fixed-shape — rows
+/// are padded with zeros up to whole model batches and the padding is
+/// cut before the batcher reassembles replies (rows are independent
+/// through the forward, so padding never changes a real row).
 #[allow(clippy::too_many_arguments)]
 fn run_rows(
-    engine: Option<&dyn Engine>,
+    native: Option<&mut EngineStep>,
     variant: &Variant,
     art: Option<&SharedArtifacts>,
     x0: &[f32],
@@ -355,11 +383,8 @@ fn run_rows(
     batch_size: usize,
     d: usize,
 ) -> Result<Vec<f32>> {
-    match engine {
-        Some(eng) => {
-            let mut be = EngineStep { engine: eng };
-            sampler::run_direction(&mut be, x0, dir, steps)
-        }
+    match native {
+        Some(be) => sampler::run_direction(be, x0, dir, steps),
         None => {
             let sa = art.ok_or_else(|| anyhow!("runtime engine requires artifacts"))?;
             let rows = x0.len() / d;
@@ -520,6 +545,14 @@ fn handle_request(
                 "queue_depth",
                 Json::Num(stats.queue_depth.load(Ordering::Relaxed) as f64),
             ),
+            (
+                "resident_bytes",
+                Json::Num(stats.resident_bytes.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "workspace_bytes",
+                Json::Num(stats.workspace_bytes.load(Ordering::Relaxed) as f64),
+            ),
         ])),
         "shutdown" => {
             shutdown.store(true, Ordering::SeqCst);
@@ -643,7 +676,9 @@ impl Client {
     }
 
     /// Server counters (`requests`/`batches`/`samples`/`encodes`/
-    /// `queue_depth`).
+    /// `queue_depth`) plus the memory gauges: `resident_bytes` (packed
+    /// model bytes held by the native engines) and `workspace_bytes`
+    /// (high-water scratch across every worker's reusable arenas).
     pub fn stats(&mut self) -> Result<Json> {
         self.checked(&Json::obj(vec![("op", Json::Str("stats".into()))]))
     }

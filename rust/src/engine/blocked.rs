@@ -31,12 +31,20 @@
 
 use crate::engine::lut::LutLayer;
 use crate::engine::tune::{TilePlan, Tuner};
+use crate::engine::workspace::{take_zeroed, Kernel};
 use crate::quant::packing::PackedCodes;
 
+/// Output elements per unrolled sweep block. Eight f32 lanes = one AVX2
+/// register width; the fixed-size-array block below removes every bounds
+/// check so the compiler is free to vectorize the adds and interleave
+/// the (inherently scalar) table gathers.
+const LANES: usize = 8;
+
 /// Reusable scratch for the blocked kernel: decoded tile codes, fused
-/// group indices, and the per-batch-row product tables. One instance per
-/// worker thread; `resize` keeps capacity across calls so the hot path
-/// never allocates after warm-up.
+/// group indices, and the per-batch-row product tables. Lives inside a
+/// [`crate::engine::workspace::Workspace`] (one per worker thread);
+/// `resize` keeps capacity across calls so the hot path never allocates
+/// after warm-up.
 #[derive(Default)]
 pub struct Scratch {
     /// Decoded tile codes, row-major `[k_tile, width]`.
@@ -51,6 +59,12 @@ impl Scratch {
     /// Empty scratch (buffers grow on first use).
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Bytes currently held (== the high-water mark; buffers never
+    /// shrink). Part of the workspace accounting the `stats` op reports.
+    pub fn bytes(&self) -> usize {
+        self.codes.capacity() + self.fused.capacity() + self.tabs.capacity() * 4
     }
 }
 
@@ -147,14 +161,36 @@ pub fn matmul_stripe(
             let orow = &mut out[i * w..(i + 1) * w];
             let tabs = &scratch.tabs;
             let fused = &scratch.fused;
-            // paired sweep: two group tables per pass over the output row
+            // paired sweep: two group tables per pass over the output
+            // row, in 8-lane unrolled blocks. Converting each chunk to a
+            // fixed-size array (slice-pattern bounds-check elimination)
+            // gives the compiler a known trip count, so the adds
+            // vectorize and the two gather chains per lane overlap.
+            // Per-element accumulation order is unchanged vs the scalar
+            // loop — the blocking is numerically invisible.
             let mut q = 0usize;
             while q + 1 < nq {
                 let ta: &[f32; 256] = tabs[q * 256..(q + 1) * 256].try_into().unwrap();
                 let tb: &[f32; 256] = tabs[(q + 1) * 256..(q + 2) * 256].try_into().unwrap();
                 let fa = &fused[q * w..(q + 1) * w];
                 let fb = &fused[(q + 1) * w..(q + 2) * w];
-                for ((o, &ca), &cb) in orow.iter_mut().zip(fa.iter()).zip(fb.iter()) {
+                let mut oc = orow.chunks_exact_mut(LANES);
+                let mut ac = fa.chunks_exact(LANES);
+                let mut bc = fb.chunks_exact(LANES);
+                for ((o, ca), cb) in (&mut oc).zip(&mut ac).zip(&mut bc) {
+                    let o: &mut [f32; LANES] = o.try_into().unwrap();
+                    let ca: &[u8; LANES] = ca.try_into().unwrap();
+                    let cb: &[u8; LANES] = cb.try_into().unwrap();
+                    for ((ov, &a), &b) in o.iter_mut().zip(ca.iter()).zip(cb.iter()) {
+                        *ov += ta[a as usize] + tb[b as usize];
+                    }
+                }
+                for ((o, &ca), &cb) in oc
+                    .into_remainder()
+                    .iter_mut()
+                    .zip(ac.remainder().iter())
+                    .zip(bc.remainder().iter())
+                {
                     *o += ta[ca as usize] + tb[cb as usize];
                 }
                 q += 2;
@@ -162,7 +198,16 @@ pub fn matmul_stripe(
             if q < nq {
                 let ta: &[f32; 256] = tabs[q * 256..(q + 1) * 256].try_into().unwrap();
                 let fa = &fused[q * w..(q + 1) * w];
-                for (o, &ca) in orow.iter_mut().zip(fa.iter()) {
+                let mut oc = orow.chunks_exact_mut(LANES);
+                let mut ac = fa.chunks_exact(LANES);
+                for (o, ca) in (&mut oc).zip(&mut ac) {
+                    let o: &mut [f32; LANES] = o.try_into().unwrap();
+                    let ca: &[u8; LANES] = ca.try_into().unwrap();
+                    for (ov, &a) in o.iter_mut().zip(ca.iter()) {
+                        *ov += ta[a as usize];
+                    }
+                }
+                for (o, &ca) in oc.into_remainder().iter_mut().zip(ac.remainder().iter()) {
                     *o += ta[ca as usize];
                 }
             }
@@ -184,9 +229,10 @@ pub fn matmul_blocked(
 }
 
 /// Resolve the tile plan for a stripe through the [`Tuner`]. The measured
-/// policy times candidates on the live inputs into a throwaway output
-/// (one warm-up-sized run each) — results are unaffected because every
-/// plan is numerically identical.
+/// policy times candidates on the live inputs into the workspace's
+/// throwaway `tune_tmp` buffer (one warm-up-sized run each) — results
+/// are unaffected because every plan is numerically identical, and the
+/// cache-hit path (every call after warm-up) touches no scratch at all.
 pub fn plan_stripe(
     layer: &LutLayer,
     tuner: &Tuner,
@@ -194,12 +240,15 @@ pub fn plan_stripe(
     m: usize,
     c0: usize,
     c1: usize,
-    scratch: &mut Scratch,
+    kern: &mut Kernel,
 ) -> TilePlan {
+    let Kernel {
+        scratch, tune_tmp, ..
+    } = kern;
     tuner.plan(layer.packed.bits, m, c1 - c0, layer.rows, |p| {
-        let mut tmp = vec![0f32; m * (c1 - c0)];
+        let tmp = take_zeroed(tune_tmp, m * (c1 - c0));
         let t0 = std::time::Instant::now();
-        matmul_stripe(layer, x, &mut tmp, m, c0, c1, p, scratch);
+        matmul_stripe(layer, x, tmp, m, c0, c1, p, scratch);
         t0.elapsed().as_secs_f64()
     })
 }
@@ -354,12 +403,12 @@ mod tests {
         let layer = random_layer(&mut rng, 64, 32, 2, 4);
         let x: Vec<f32> = (0..2 * 64).map(|_| rng.normal_f32(0.0, 1.0)).collect();
         let tuner = Tuner::measured();
-        let mut scratch = Scratch::new();
-        let plan = plan_stripe(&layer, &tuner, &x, 2, 0, 32, &mut scratch);
+        let mut kern = Kernel::default();
+        let plan = plan_stripe(&layer, &tuner, &x, 2, 0, 32, &mut kern);
         assert_eq!(plan.group, crate::engine::tune::max_group(2));
         // tuned plan produces the same bits as any other plan
         let mut a = vec![0f32; 2 * 32];
-        matmul_blocked(&layer, &x, &mut a, 2, plan, &mut scratch);
+        matmul_blocked(&layer, &x, &mut a, 2, plan, &mut kern.scratch);
         let mut b = vec![0f32; 2 * 32];
         let other = TilePlan { k_tile: 16, group: plan.group };
         matmul_blocked(&layer, &x, &mut b, 2, other, &mut Scratch::new());

@@ -4,26 +4,34 @@
 //! anywhere**.
 //!
 //! One op sequence (`LutModel::forward_with`, private) serves two
-//! kernel generations:
+//! kernel generations, both writing into a caller-provided output with
+//! every intermediate drawn from a reusable
+//! [`crate::engine::workspace::Workspace`] arena (zero heap allocations
+//! in steady state — pinned by the `bench_engine` allocation counter):
 //!
-//! * [`LutModel::velocity`] — the v1 per-activation-LUT kernel, bit-exact
-//!   against [`crate::flow::cpu_ref::qvelocity`] (same multiply, same
-//!   accumulation order — pinned by `tests/engine_integration.rs`);
-//! * [`LutModel::velocity_v2`] — the blocked fused-group kernel from
-//!   [`crate::engine::blocked`], dispatched through a
+//! * [`LutModel::velocity_into`] — the v1 per-activation-LUT kernel,
+//!   bit-exact against [`crate::flow::cpu_ref::qvelocity`] (same
+//!   multiply, same accumulation order — pinned by
+//!   `tests/engine_integration.rs`);
+//! * [`LutModel::velocity_into_v2`] — the blocked fused-group kernel
+//!   from [`crate::engine::blocked`], dispatched through a
 //!   [`crate::engine::tune::Tuner`], with intra-layer column sharding
 //!   when the batch is too small to feed the pool. Equivalent to v1
 //!   within the 1e-5 harness (group fusion re-associates sums), and
 //!   bit-identical to *itself* across tile plans, thread counts and
 //!   sharding axes.
+//!
+//! Layer and bias references are resolved to indices/offsets once at
+//! construction, so the per-call path does no name lookups (the old
+//! `format!("w1_{i}")` strings were a per-step heap allocation).
 
 use anyhow::{bail, Result};
 
-use crate::engine::blocked::{self, Scratch};
+use crate::engine::blocked;
 use crate::engine::lut::LutLayer;
 use crate::engine::pool::Pool;
 use crate::engine::tune::Tuner;
-use crate::flow::cpu_ref::time_features;
+use crate::engine::workspace::{take_zeroed, Workspace};
 use crate::model::quantized::QuantizedModel;
 use crate::model::spec::ModelSpec;
 
@@ -34,6 +42,27 @@ const COL_SHARD_MIN: usize = 64;
 #[inline]
 fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
+}
+
+/// One residual block's resolved parameter references.
+struct BlockRefs {
+    w1: usize,
+    b1: (usize, usize),
+    w2: usize,
+    b2: (usize, usize),
+}
+
+/// Every layer/bias reference the op sequence needs, resolved to
+/// indices into `layers` and `(offset, len)` ranges into `biases` at
+/// construction time — the hot path never touches a layer name.
+struct OpRefs {
+    w_t: usize,
+    b_t: (usize, usize),
+    w_in: usize,
+    b_in: (usize, usize),
+    blocks: Vec<BlockRefs>,
+    w_out: usize,
+    b_out: (usize, usize),
 }
 
 /// A quantized model compiled to executable packed form: one [`LutLayer`]
@@ -49,6 +78,7 @@ pub struct LutModel {
     layers: Vec<LutLayer>,
     /// All biases packed contiguously (`spec.pb()`), fp32.
     biases: Vec<f32>,
+    refs: OpRefs,
 }
 
 impl LutModel {
@@ -57,31 +87,20 @@ impl LutModel {
         if qm.bits > 8 {
             bail!("LUT engine supports 1..=8 bit codes, got {}", qm.bits);
         }
-        let spec = qm.spec.clone();
+        let (spec, biases) = qm.adapter_base();
         let layers = spec
             .weight_layers()
             .iter()
             .map(|l| LutLayer::from_model(qm, &l.name))
             .collect::<Result<Vec<_>>>()?;
+        let refs = OpRefs::resolve(&spec, &layers);
         Ok(Self {
             spec,
             bits: qm.bits.max(1),
             layers,
-            biases: qm.biases.clone(),
+            biases,
+            refs,
         })
-    }
-
-    fn layer(&self, name: &str) -> &LutLayer {
-        self.layers
-            .iter()
-            .find(|l| l.name == name)
-            .unwrap_or_else(|| panic!("unknown weight layer {name}"))
-    }
-
-    fn bias(&self, name: &str) -> &[f32] {
-        let l = self.spec.layer(name).expect("bias layer");
-        let boff = self.spec.bias_offset(name);
-        &self.biases[boff..boff + l.size()]
     }
 
     /// Total packed bytes actually held (codes + codebooks + fp32 biases)
@@ -94,113 +113,151 @@ impl LutModel {
 
     /// Velocity forward: x flat [B, D], t [B] → v flat [B, D], through
     /// the v1 per-activation-LUT kernel (bit-exact vs `cpu_ref`).
+    /// Allocating wrapper over [`LutModel::velocity_into`].
     pub fn velocity(&self, x: &[f32], t: &[f32]) -> Vec<f32> {
-        self.forward_with(x, t, &mut |l: &LutLayer, xs: &[f32], out: &mut [f32], m: usize| {
-            l.matmul_into(xs, out, m)
-        })
+        let mut out = vec![0f32; t.len() * self.spec.d];
+        self.velocity_into(x, t, &mut out, &mut Workspace::new());
+        out
     }
 
-    /// Velocity forward through the v2 blocked fused-group kernel.
-    /// `tuner` picks tile plans (see [`crate::engine::tune`]); `pool`
-    /// supplies the intra-layer column-sharding axis used when the batch
-    /// is smaller than the thread count (the caller handles batch
-    /// sharding — see `LutV2Engine::velocity`). Scratch buffers —
-    /// serial and one slot per column shard — are reused across all
-    /// layers and tiles of the call, so the hot path performs no
-    /// per-element unpacking and no per-tile allocation (only the stripe
-    /// result buffers are allocated per sharded GEMM).
-    pub fn velocity_v2(&self, x: &[f32], t: &[f32], tuner: &Tuner, pool: &Pool) -> Vec<f32> {
-        let threads = pool.threads();
-        let mut scratch = Scratch::new();
-        // per-shard scratch slots, reused across every sharded layer GEMM
-        // of this call; each shard index locks only its own slot, so the
-        // mutexes are uncontended
-        let shard_scratch: Vec<std::sync::Mutex<Scratch>> =
-            (0..threads).map(|_| std::sync::Mutex::new(Scratch::new())).collect();
-        self.forward_with(x, t, &mut |l: &LutLayer, xs: &[f32], out: &mut [f32], m: usize| {
+    /// v1 velocity forward into a caller-provided output, with every
+    /// intermediate drawn from `ws`. Bit-identical to
+    /// [`LutModel::velocity`] regardless of how dirty the reused
+    /// workspace (or `out`) is — every buffer is size-set and zeroed
+    /// before use.
+    pub fn velocity_into(&self, x: &[f32], t: &[f32], out: &mut [f32], ws: &mut Workspace) {
+        let (act, kern) = ws.split();
+        let tile = &mut kern.tile;
+        self.forward_with(
+            x,
+            t,
+            out,
+            act,
+            &mut |l: &LutLayer, xs: &[f32], o: &mut [f32], m: usize| {
+                l.matmul_into_ws(xs, o, m, &mut *tile)
+            },
+        );
+    }
+
+    /// Velocity forward through the v2 blocked fused-group kernel, into
+    /// a caller-provided output. `tuner` picks tile plans (see
+    /// [`crate::engine::tune`]); `col_pool = Some(pool)` supplies the
+    /// intra-layer column-sharding axis used when the batch is smaller
+    /// than the thread count (the caller handles batch sharding — see
+    /// `LutV2Engine::velocity_into`), with each shard computing into its
+    /// own pool-slot arena; `None` runs every layer full-width in `ws`.
+    /// After warm-up (scratch growth + autotune) the path performs no
+    /// heap allocations and no per-element unpacking.
+    pub fn velocity_into_v2(
+        &self,
+        x: &[f32],
+        t: &[f32],
+        out: &mut [f32],
+        tuner: &Tuner,
+        col_pool: Option<&Pool>,
+        ws: &mut Workspace,
+    ) {
+        let (act, kern) = ws.split();
+        let mm = &mut |l: &LutLayer, xs: &[f32], o: &mut [f32], m: usize| {
             let n = l.cols;
-            if threads > 1 && m < threads && n >= 2 * COL_SHARD_MIN {
+            let sharded = col_pool
+                .filter(|p| p.threads() > 1 && m < p.threads() && n >= 2 * COL_SHARD_MIN);
+            if let Some(pool) = sharded {
                 // latency-bound regime: shard output columns; stripes are
                 // bit-identical to the full-width kernel, so the scatter
-                // below reassembles the exact serial result
+                // below reassembles the exact serial result. Each shard
+                // leases the stripe buffer out of its slot arena and the
+                // scatter hands it back, so capacity is reused across
+                // layers and calls.
                 let stripes = pool.map_shards(n, COL_SHARD_MIN, |idx, c0, c1| {
-                    let mut s = shard_scratch[idx]
-                        .lock()
-                        .unwrap_or_else(|e| e.into_inner());
-                    let mut stripe = vec![0f32; m * (c1 - c0)];
-                    let plan = blocked::plan_stripe(l, tuner, xs, m, c0, c1, &mut s);
-                    blocked::matmul_stripe(l, xs, &mut stripe, m, c0, c1, plan, &mut s);
-                    stripe
+                    let mut slot = pool.workspace(idx);
+                    let kern = slot.kernel();
+                    let mut stripe = std::mem::take(&mut kern.stripe);
+                    take_zeroed(&mut stripe, m * (c1 - c0));
+                    let plan = blocked::plan_stripe(l, tuner, xs, m, c0, c1, kern);
+                    blocked::matmul_stripe(l, xs, &mut stripe, m, c0, c1, plan, &mut kern.scratch);
+                    (idx, stripe)
                 });
-                for (c0, c1, stripe) in stripes {
+                for (c0, c1, (idx, stripe)) in stripes {
                     let wst = c1 - c0;
                     for i in 0..m {
-                        let orow = &mut out[i * n + c0..i * n + c1];
-                        for (o, &v) in orow.iter_mut().zip(stripe[i * wst..(i + 1) * wst].iter()) {
-                            *o += v;
+                        let orow = &mut o[i * n + c0..i * n + c1];
+                        for (ov, &v) in orow.iter_mut().zip(stripe[i * wst..(i + 1) * wst].iter()) {
+                            *ov += v;
                         }
                     }
+                    pool.workspace(idx).kernel().stripe = stripe;
                 }
             } else {
-                let plan = blocked::plan_stripe(l, tuner, xs, m, 0, n, &mut scratch);
-                blocked::matmul_stripe(l, xs, out, m, 0, n, plan, &mut scratch);
+                let plan = blocked::plan_stripe(l, tuner, xs, m, 0, n, &mut *kern);
+                blocked::matmul_stripe(l, xs, o, m, 0, n, plan, &mut kern.scratch);
             }
-        })
+        };
+        self.forward_with(x, t, out, act, mm);
     }
 
     /// The shared op sequence — time embedding, input projection,
     /// residual blocks, output head — parameterized over the matmul
     /// kernel. Bias handling and op order mirror `flow/cpu_ref.rs::
     /// forward` exactly; `mm` must *accumulate* `x @ W` into its zeroed
-    /// output, which both kernel generations do.
+    /// output, which both kernel generations do. `out` and every
+    /// activation buffer are zeroed here, so dirty reuse is safe.
     fn forward_with(
         &self,
         x: &[f32],
         t: &[f32],
+        out: &mut [f32],
+        act: &mut crate::engine::workspace::Activations,
         mm: &mut dyn FnMut(&LutLayer, &[f32], &mut [f32], usize),
-    ) -> Vec<f32> {
+    ) {
         let spec = &self.spec;
         let b = t.len();
         let (d, h_dim) = (spec.d, spec.hidden);
         assert_eq!(x.len(), b * d);
+        assert_eq!(out.len(), b * d);
+        let refs = &self.refs;
+        let bias = |(off, len): (usize, usize)| &self.biases[off..off + len];
+
+        // temb: one cached row broadcast when the batch shares t (every
+        // ODE step does), computed directly otherwise
+        act.fill_temb(spec, t);
 
         // ht = silu(temb @ w_t + b_t)
-        let temb = time_features(spec, t);
-        let mut ht = vec![0f32; b * h_dim];
-        mm(self.layer("w_t"), &temb, &mut ht, b);
-        let b_t = self.bias("b_t");
-        for r in ht.chunks_mut(h_dim) {
+        take_zeroed(&mut act.ht, b * h_dim);
+        mm(&self.layers[refs.w_t], &act.temb, &mut act.ht, b);
+        let b_t = bias(refs.b_t);
+        for r in act.ht.chunks_mut(h_dim) {
             for (v, &bb) in r.iter_mut().zip(b_t.iter()) {
                 *v = silu(*v + bb);
             }
         }
 
         // h = x @ w_in + b_in + ht
-        let mut h = vec![0f32; b * h_dim];
-        mm(self.layer("w_in"), x, &mut h, b);
-        let b_in = self.bias("b_in");
-        for (r, rt) in h.chunks_mut(h_dim).zip(ht.chunks(h_dim)) {
+        take_zeroed(&mut act.h, b * h_dim);
+        mm(&self.layers[refs.w_in], x, &mut act.h, b);
+        let b_in = bias(refs.b_in);
+        for (r, rt) in act.h.chunks_mut(h_dim).zip(act.ht.chunks(h_dim)) {
             for ((v, &bb), &tv) in r.iter_mut().zip(b_in.iter()).zip(rt.iter()) {
                 *v += bb + tv;
             }
         }
 
         // residual blocks: h += silu(h @ w1 + b1) @ w2 + b2
-        let mut u = vec![0f32; b * h_dim];
-        let mut r2 = vec![0f32; b * h_dim];
-        for i in 0..spec.blocks {
-            u.iter_mut().for_each(|v| *v = 0.0);
-            mm(self.layer(&format!("w1_{i}")), &h, &mut u, b);
-            let b1 = self.bias(&format!("b1_{i}"));
-            for r in u.chunks_mut(h_dim) {
+        take_zeroed(&mut act.u, b * h_dim);
+        take_zeroed(&mut act.r2, b * h_dim);
+        for blk in &refs.blocks {
+            act.u.iter_mut().for_each(|v| *v = 0.0);
+            mm(&self.layers[blk.w1], &act.h, &mut act.u, b);
+            let b1 = bias(blk.b1);
+            for r in act.u.chunks_mut(h_dim) {
                 for (v, &bb) in r.iter_mut().zip(b1.iter()) {
                     *v = silu(*v + bb);
                 }
             }
-            r2.iter_mut().for_each(|v| *v = 0.0);
-            mm(self.layer(&format!("w2_{i}")), &u, &mut r2, b);
-            let b2 = self.bias(&format!("b2_{i}"));
-            for (hr, rr) in h.chunks_mut(h_dim).zip(r2.chunks(h_dim)) {
+            act.r2.iter_mut().for_each(|v| *v = 0.0);
+            mm(&self.layers[blk.w2], &act.u, &mut act.r2, b);
+            let b2 = bias(blk.b2);
+            for (hr, rr) in act.h.chunks_mut(h_dim).zip(act.r2.chunks(h_dim)) {
                 for ((v, &rv), &bb) in hr.iter_mut().zip(rr.iter()).zip(b2.iter()) {
                     *v += rv + bb;
                 }
@@ -208,17 +265,49 @@ impl LutModel {
         }
 
         // v = h @ w_out + b_out
-        let mut out = vec![0f32; b * d];
-        mm(self.layer("w_out"), &h, &mut out, b);
-        let b_out = self.bias("b_out");
+        out.iter_mut().for_each(|v| *v = 0.0);
+        mm(&self.layers[refs.w_out], &act.h, out, b);
+        let b_out = bias(refs.b_out);
         for r in out.chunks_mut(d) {
             for (v, &bb) in r.iter_mut().zip(b_out.iter()) {
                 *v += bb;
             }
         }
-        out
     }
+}
 
+impl OpRefs {
+    /// Resolve every name the op sequence uses against the packed layer
+    /// list and the spec's bias table. Panics on a malformed spec (the
+    /// same condition the old per-call name lookups panicked on).
+    fn resolve(spec: &ModelSpec, layers: &[LutLayer]) -> Self {
+        let widx = |name: &str| {
+            layers
+                .iter()
+                .position(|l| l.name == name)
+                .unwrap_or_else(|| panic!("unknown weight layer {name}"))
+        };
+        let bref = |name: &str| {
+            let l = spec.layer(name).unwrap_or_else(|| panic!("bias layer {name}"));
+            (spec.bias_offset(name), l.size())
+        };
+        OpRefs {
+            w_t: widx("w_t"),
+            b_t: bref("b_t"),
+            w_in: widx("w_in"),
+            b_in: bref("b_in"),
+            blocks: (0..spec.blocks)
+                .map(|i| BlockRefs {
+                    w1: widx(&format!("w1_{i}")),
+                    b1: bref(&format!("b1_{i}")),
+                    w2: widx(&format!("w2_{i}")),
+                    b2: bref(&format!("b2_{i}")),
+                })
+                .collect(),
+            w_out: widx("w_out"),
+            b_out: bref("b_out"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -257,6 +346,29 @@ mod tests {
             lm.velocity(&x, &[0.4]),
             cpu_ref::qvelocity(&qm, &x, &[0.4])
         );
+    }
+
+    #[test]
+    fn velocity_into_dirty_workspace_and_output_are_invisible() {
+        let (spec, qm) = setup(QuantMethod::Ot, 2);
+        let lm = LutModel::new(&qm).unwrap();
+        let mut rng = Pcg64::seed(24);
+        let x: Vec<f32> = (0..3 * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let t = [0.25f32, 0.25, 0.25];
+        let want = lm.velocity(&x, &t);
+        // dirty the workspace with a different batch shape first, then a
+        // poisoned output buffer: both must be invisible
+        let mut ws = Workspace::new();
+        let mut junk = vec![0f32; spec.d];
+        lm.velocity_into(&x[..spec.d], &t[..1], &mut junk, &mut ws);
+        let mut out = vec![f32::NAN; 3 * spec.d];
+        lm.velocity_into(&x, &t, &mut out, &mut ws);
+        assert_eq!(out, want);
+        // v2 through the same dirty workspace, serial full-width
+        let mut out2 = vec![f32::INFINITY; 3 * spec.d];
+        lm.velocity_into_v2(&x, &t, &mut out2, &Tuner::Heuristic, None, &mut ws);
+        crate::util::check::assert_close(&out2, &want, 1e-5, 1e-6);
+        assert!(ws.high_water_bytes() > 0);
     }
 
     #[test]

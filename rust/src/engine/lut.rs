@@ -113,8 +113,18 @@ impl LutLayer {
     /// `out[m, cols] += x[m, rows] @ W` with W gathered from the packed
     /// codes. The caller zeroes (or pre-loads) `out`; accumulation matches
     /// `tensor::matmul_into` bit-for-bit (same multiply, same k order,
-    /// same zero-activation skip).
+    /// same zero-activation skip). Allocates its own tile scratch — the
+    /// hot path uses [`LutLayer::matmul_into_ws`] with a workspace
+    /// buffer instead.
     pub fn matmul_into(&self, x: &[f32], out: &mut [f32], m: usize) {
+        self.matmul_into_ws(x, out, m, &mut Vec::new())
+    }
+
+    /// [`LutLayer::matmul_into`] with the tile scratch drawn from a
+    /// reusable workspace buffer (`Kernel::tile`), so steady-state calls
+    /// perform zero heap allocations. Numerically identical to the
+    /// allocating wrapper.
+    pub fn matmul_into_ws(&self, x: &[f32], out: &mut [f32], m: usize, tile: &mut Vec<u8>) {
         let (kd, n) = (self.rows, self.cols);
         debug_assert_eq!(x.len(), m * kd);
         debug_assert_eq!(out.len(), m * n);
@@ -122,7 +132,8 @@ impl LutLayer {
         // 256-slot table: a u8 code can never index out of it, so the
         // inner-loop gather compiles without a bounds check.
         let mut lut = [0f32; 256];
-        let mut tile = vec![0u8; TILE_K.min(kd.max(1)) * n];
+        tile.clear();
+        tile.resize(TILE_K.min(kd.max(1)) * n, 0);
         let mut k0 = 0usize;
         while k0 < kd {
             let kt = TILE_K.min(kd - k0);

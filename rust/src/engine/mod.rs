@@ -15,7 +15,11 @@
 //!   the 1e-5 harness;
 //! * [`pool`] — a std-thread worker pool with two parallelism axes:
 //!   batch (row) sharding for throughput, and intra-layer output-column
-//!   sharding for the latency-bound small-batch regime;
+//!   sharding for the latency-bound small-batch regime — owning one
+//!   reusable scratch arena per worker slot;
+//! * [`workspace`] — the per-worker [`Workspace`] arena (named,
+//!   size-checked scratch buffers + the per-step time-embedding cache)
+//!   that makes the steady-state `velocity_into` path allocation-free;
 //! * [`EngineKind`] — the `--engine` selector (`cpu-ref` | `lut` |
 //!   `lut2` | `runtime`) dispatched by `flow/sampler.rs`,
 //!   `coordinator/server.rs` and `main.rs`.
@@ -34,6 +38,7 @@ pub mod forward;
 pub mod lut;
 pub mod pool;
 pub mod tune;
+pub mod workspace;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -45,6 +50,7 @@ pub use forward::LutModel;
 pub use lut::LutLayer;
 pub use pool::Pool;
 pub use tune::{TilePlan, Tuner};
+pub use workspace::Workspace;
 
 /// A velocity-network execution backend. Implementations are `Sync` so
 /// one engine instance serves concurrent batches.
@@ -80,6 +86,31 @@ pub trait Engine: Send + Sync {
     /// v = f(x, t): x flat [B, D], t [B] → v flat [B, D].
     fn velocity(&self, x: &[f32], t: &[f32]) -> Result<Vec<f32>>;
 
+    /// [`Engine::velocity`] into a caller-provided output, with every
+    /// intermediate drawn from the reusable `ws` arena — the
+    /// allocation-free serving hot path. Bit-identical to `velocity`
+    /// regardless of how dirty the reused workspace or `out` are
+    /// (pinned by `tests/engine_integration.rs::
+    /// velocity_into_reused_workspace_is_bit_identical`). The default
+    /// routes through the allocating `velocity`; the native LUT engines
+    /// override it (and engines sharding across a [`Pool`] draw
+    /// per-worker arenas from the pool, using `ws` for the serial part).
+    fn velocity_into(
+        &self,
+        x: &[f32],
+        t: &[f32],
+        out: &mut [f32],
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        let _ = ws;
+        let v = self.velocity(x, t)?;
+        if out.len() != v.len() {
+            bail!("velocity_into: out has {} values, need {}", out.len(), v.len());
+        }
+        out.copy_from_slice(&v);
+        Ok(())
+    }
+
     /// One Euler step (signed dt), shared t across the batch.
     fn step(&self, x: &[f32], t: f32, dt: f32) -> Result<Vec<f32>> {
         let d = self.spec().d;
@@ -91,6 +122,19 @@ pub trait Engine: Send + Sync {
             .zip(v.iter())
             .map(|(&xi, &vi)| xi + dt * vi)
             .collect())
+    }
+
+    /// Bytes of model data this engine holds resident (packed codes,
+    /// codebooks, biases — or the dense working set for the reference).
+    fn resident_bytes(&self) -> usize {
+        0
+    }
+
+    /// High-water scratch bytes across the engine's own per-worker
+    /// arenas (its pool slots). The workspace the *caller* threads
+    /// through [`Engine::velocity_into`] is accounted by the caller.
+    fn workspace_bytes(&self) -> usize {
+        0
     }
 }
 
@@ -197,6 +241,18 @@ impl Engine for CpuRefEngine<'_> {
             CpuVariant::Quantized(qm) => crate::flow::cpu_ref::qvelocity(qm, x, t),
         })
     }
+
+    fn resident_bytes(&self) -> usize {
+        match &self.inner {
+            // dense fp32 theta
+            CpuVariant::Fp32 { spec, .. } => spec.p() * 4,
+            // u32 codes + fp32 biases + codebook levels (held unpacked)
+            CpuVariant::Quantized(qm) => {
+                (qm.codes.len() + qm.biases.len()) * 4
+                    + qm.codebooks.iter().map(|c| c.levels.len() * 4).sum::<usize>()
+            }
+        }
+    }
 }
 
 /// The native quantized engine: packed-code LUT-GEMM forward, batch
@@ -242,9 +298,38 @@ impl Engine for LutEngine {
     }
 
     fn velocity(&self, x: &[f32], t: &[f32]) -> Result<Vec<f32>> {
+        let mut out = vec![0f32; t.len() * self.model.spec.d];
+        self.velocity_into(x, t, &mut out, &mut Workspace::new())?;
+        Ok(out)
+    }
+
+    fn velocity_into(
+        &self,
+        x: &[f32],
+        t: &[f32],
+        out: &mut [f32],
+        ws: &mut Workspace,
+    ) -> Result<()> {
         let d = self.model.spec.d;
-        self.pool
-            .map_rows(x, t, d, |xs, ts| Ok(self.model.velocity(xs, ts)))
+        if self.pool.threads() <= 1 || t.len() <= 1 {
+            self.model.velocity_into(x, t, out, ws);
+            return Ok(());
+        }
+        // row shards write into disjoint output windows, each computing
+        // in its own pool-slot arena
+        self.pool.map_rows_into(x, t, d, out, |idx, xs, ts, o| {
+            let mut slot = self.pool.workspace(idx);
+            self.model.velocity_into(xs, ts, o, &mut slot);
+            Ok(())
+        })
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.model.resident_bytes()
+    }
+
+    fn workspace_bytes(&self) -> usize {
+        self.pool.workspace_bytes()
     }
 }
 
@@ -304,22 +389,47 @@ impl Engine for LutV2Engine {
     }
 
     fn velocity(&self, x: &[f32], t: &[f32]) -> Result<Vec<f32>> {
+        let mut out = vec![0f32; t.len() * self.model.spec.d];
+        self.velocity_into(x, t, &mut out, &mut Workspace::new())?;
+        Ok(out)
+    }
+
+    fn velocity_into(
+        &self,
+        x: &[f32],
+        t: &[f32],
+        out: &mut [f32],
+        ws: &mut Workspace,
+    ) -> Result<()> {
         let d = self.model.spec.d;
         let b = t.len();
         let threads = self.pool.threads();
         if threads > 1 && b >= threads {
-            // throughput regime: row-shard the batch, run each shard's
-            // forward serially (column sharding would oversubscribe)
-            self.pool.map_rows(x, t, d, |xs, ts| {
-                Ok(self
-                    .model
-                    .velocity_v2(xs, ts, &self.tuner, &Pool::serial()))
+            // throughput regime: row-shard the batch; each shard's
+            // forward runs serially in its own pool-slot arena (column
+            // sharding would oversubscribe)
+            self.pool.map_rows_into(x, t, d, out, |idx, xs, ts, o| {
+                let mut slot = self.pool.workspace(idx);
+                self.model
+                    .velocity_into_v2(xs, ts, o, &self.tuner, None, &mut slot);
+                Ok(())
             })
         } else {
             // latency regime: parallelism comes from column sharding
-            // inside each layer GEMM
-            Ok(self.model.velocity_v2(x, t, &self.tuner, &self.pool))
+            // inside each layer GEMM; the column shards draw their
+            // scratch from the pool's arenas, the serial part from `ws`
+            self.model
+                .velocity_into_v2(x, t, out, &self.tuner, Some(&self.pool), ws);
+            Ok(())
         }
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.model.resident_bytes()
+    }
+
+    fn workspace_bytes(&self) -> usize {
+        self.pool.workspace_bytes()
     }
 }
 

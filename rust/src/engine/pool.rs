@@ -1,12 +1,14 @@
 //! Worker pool with two parallelism axes for the serving hot path.
 //!
-//! **Batch sharding** ([`Pool::map_rows`]): the velocity network is
-//! row-independent (each sample's output depends only on its own input —
-//! pinned by `cpu_ref::tests::batch_independence`), so a batch of B
-//! samples splits into contiguous row shards that run on std threads with
-//! zero synchronization beyond the final join. Scoped threads borrow the
-//! input slices directly — no copies in, one ordered concatenation out —
-//! so sharding is numerically invisible.
+//! **Batch sharding** ([`Pool::map_rows_into`]):
+//! the velocity network is row-independent (each sample's output depends
+//! only on its own input — pinned by `cpu_ref::tests::batch_independence`),
+//! so a batch of B samples splits into contiguous row shards that run on
+//! std threads with zero synchronization beyond the final join. Scoped
+//! threads borrow the input slices directly and every shard writes
+//! straight into its disjoint window of the caller's output — no copies
+//! in, no concatenation out — so sharding is numerically invisible
+//! *and* allocation-free.
 //!
 //! **Intra-layer column sharding** ([`Pool::map_shards`]): when the batch
 //! is too small to feed every core (the latency-bound B=1 regime), the v2
@@ -15,6 +17,14 @@
 //! other column, so this axis is also bit-exact — pinned by
 //! `blocked::tests::column_stripes_compose_to_full_width` and the engine
 //! integration tests.
+//!
+//! **Per-worker arenas**: a pool built with [`Pool::new`] owns one
+//! [`Workspace`] per worker slot. Shard `idx` leases slot `idx` (an
+//! uncontended mutex — shard indices are unique within a call), so both
+//! sharding axes reuse kernel scratch, activation buffers and stripe
+//! accumulators across every call for the lifetime of the engine.
+//! [`Pool::serial`] carries no slots (and allocates nothing): serial
+//! execution always runs in the caller's own workspace.
 //!
 //! Threads are scoped *per call* (shard 0 runs on the caller, so an
 //! N-way split spawns N−1). A spawn is ~tens of µs; one Euler step on a
@@ -25,14 +35,20 @@
 //! variants batch at once their scoped threads simply time-share under
 //! the OS scheduler (see `coordinator/server.rs::worker_loop`).
 
+use std::sync::{Mutex, MutexGuard};
+
 use anyhow::{anyhow, Result};
 
+use crate::engine::workspace::Workspace;
+
 /// A fixed-width worker pool (thread count chosen at construction;
-/// threads themselves are scoped per call, so the pool is trivially
-/// `Send + Sync` and free to share across serving workers).
-#[derive(Clone, Copy, Debug)]
+/// threads themselves are scoped per call, so the pool is `Send + Sync`
+/// and free to share across serving workers). Owns one reusable
+/// [`Workspace`] arena per worker slot.
 pub struct Pool {
     threads: usize,
+    /// One arena per worker slot; empty for [`Pool::serial`].
+    slots: Vec<Mutex<Workspace>>,
 }
 
 impl Pool {
@@ -45,13 +61,20 @@ impl Pool {
         } else {
             threads
         };
-        Self { threads }
+        Self {
+            threads,
+            slots: (0..threads).map(|_| Mutex::new(Workspace::new())).collect(),
+        }
     }
 
     /// Single-threaded pool (the degenerate case, used for determinism
-    /// baselines in tests).
+    /// baselines in tests). Holds no arenas and performs no allocation —
+    /// serial callers supply their own workspace.
     pub fn serial() -> Self {
-        Self { threads: 1 }
+        Self {
+            threads: 1,
+            slots: Vec::new(),
+        }
     }
 
     /// Worker thread count this pool shards across.
@@ -59,68 +82,89 @@ impl Pool {
         self.threads
     }
 
-    /// Run `f` over row shards of `x` (flat `[B, d]`) and `t` (`[B]`),
-    /// concatenating the per-shard outputs in row order. `f` must map a
-    /// row sub-batch to one output `Vec` row-for-row (any output width).
-    /// With one thread or one row this degenerates to a direct call.
-    pub fn map_rows<F>(&self, x: &[f32], t: &[f32], d: usize, f: F) -> Result<Vec<f32>>
+    /// Lease worker slot `idx`'s arena. Shard indices are unique within
+    /// a call, so the lock is uncontended; it only serializes against
+    /// concurrent *calls* reusing the same engine. Panics for a
+    /// [`Pool::serial`] pool (which has no slots) or `idx >= threads()`.
+    pub fn workspace(&self, idx: usize) -> MutexGuard<'_, Workspace> {
+        self.slots[idx].lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// High-water scratch bytes summed across every worker-slot arena —
+    /// the pool's contribution to the `stats` op's `workspace_bytes`.
+    pub fn workspace_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .map(|s| s.lock().unwrap_or_else(|e| e.into_inner()).high_water_bytes())
+            .sum()
+    }
+
+    /// Allocation-free row sharding: run `f(shard_idx, xs, ts, out_shard)`
+    /// over contiguous row shards of `x` (flat `[B, d]`) and `t` (`[B]`),
+    /// each shard writing directly into its disjoint window of `out`
+    /// (same row width `d` in and out — the velocity forward's shape).
+    /// Shard 0 runs on the calling thread while the rest are scoped
+    /// spawns, so an N-way split costs N−1 spawns. `shard_idx <
+    /// threads()` addresses the pool's per-worker arena via
+    /// [`Pool::workspace`]. With one thread or one row this degenerates
+    /// to a direct call with `shard_idx = 0`.
+    pub fn map_rows_into<F>(
+        &self,
+        x: &[f32],
+        t: &[f32],
+        d: usize,
+        out: &mut [f32],
+        f: F,
+    ) -> Result<()>
     where
-        F: Fn(&[f32], &[f32]) -> Result<Vec<f32>> + Sync,
+        F: Fn(usize, &[f32], &[f32], &mut [f32]) -> Result<()> + Sync,
     {
         let b = t.len();
         assert_eq!(x.len(), b * d, "x rows must match t length");
+        assert_eq!(out.len(), b * d, "out rows must match t length");
         let shards = self.threads.min(b.max(1));
         if shards <= 1 {
-            return f(x, t);
+            return f(0, x, t, out);
         }
         let per = b.div_ceil(shards);
-        let mut ranges = Vec::with_capacity(shards);
-        let mut r0 = 0usize;
-        while r0 < b {
-            let r1 = (r0 + per).min(b);
-            ranges.push((r0, r1));
-            r0 = r1;
-        }
-        // shard 0 runs on the calling thread while the rest are scoped
-        // spawns, so an N-way split costs N-1 spawns (and a 1-way split
-        // costs none — handled by the direct-call path above)
-        let (first, rest) = ranges.split_first().expect("at least one shard");
         let fref = &f;
-        let mut outs: Vec<Result<Vec<f32>>> = Vec::with_capacity(ranges.len());
+        let mut results: Vec<Result<()>> = Vec::with_capacity(shards);
         std::thread::scope(|s| {
-            let handles: Vec<_> = rest
-                .iter()
-                .map(|&(r0, r1)| {
-                    let xs = &x[r0 * d..r1 * d];
-                    let ts = &t[r0..r1];
-                    s.spawn(move || fref(xs, ts))
-                })
-                .collect();
-            let (r0, r1) = *first;
-            outs.push(fref(&x[r0 * d..r1 * d], &t[r0..r1]));
+            let b0 = per.min(b);
+            let (out0, mut tail) = out.split_at_mut(b0 * d);
+            let mut handles = Vec::with_capacity(shards - 1);
+            let mut lo = b0;
+            let mut idx = 1usize;
+            while lo < b {
+                let hi = (lo + per).min(b);
+                let (mid, rest) = tail.split_at_mut((hi - lo) * d);
+                tail = rest;
+                let xs = &x[lo * d..hi * d];
+                let ts = &t[lo..hi];
+                handles.push(s.spawn(move || fref(idx, xs, ts, mid)));
+                lo = hi;
+                idx += 1;
+            }
+            results.push(fref(0, &x[..b0 * d], &t[..b0], out0));
             for h in handles {
-                outs.push(
+                results.push(
                     h.join()
                         .unwrap_or_else(|_| Err(anyhow!("engine worker panicked"))),
                 );
             }
         });
-        let mut out = Vec::new();
-        for shard in outs {
-            out.extend(shard?);
-        }
-        Ok(out)
+        results.into_iter().collect()
     }
 
     /// Split `0..n` into at most `threads` contiguous ranges of at least
     /// `min_per_shard` items each and run `f(shard_idx, lo, hi)` on every
     /// range — range 0 on the calling thread, the rest on scoped spawns.
     /// Results come back in range order; `shard_idx < threads` is the
-    /// range's position, so callers can address per-shard state (e.g.
-    /// reusable kernel scratch) without synchronization beyond a slot
-    /// lock. This is the second parallelism axis: the v2 engine uses it
-    /// to shard a layer's output columns when the batch is too small for
-    /// row sharding to help.
+    /// range's position, so callers can address per-shard state (the
+    /// pool's own arenas via [`Pool::workspace`]) without synchronization
+    /// beyond a slot lock. This is the second parallelism axis: the v2
+    /// engine uses it to shard a layer's output columns when the batch
+    /// is too small for row sharding to help.
     pub fn map_shards<T, F>(&self, n: usize, min_per_shard: usize, f: F) -> Vec<(usize, usize, T)>
     where
         F: Fn(usize, usize, usize) -> T + Sync,
@@ -168,12 +212,27 @@ impl Pool {
 mod tests {
     use super::*;
 
-    fn double_rows(x: &[f32], t: &[f32]) -> Result<Vec<f32>> {
-        // width-2 rows in, width-2 rows out, plus the row's t
-        Ok(x.chunks(2)
-            .zip(t.iter())
-            .flat_map(|(r, &tv)| [r[0] * 2.0 + tv, r[1] * 2.0 + tv])
-            .collect())
+    /// Width-2 rows in, width-2 rows out, plus the row's t — a toy
+    /// row-local kernel for exercising the sharding.
+    fn double_rows(x: &[f32], t: &[f32], out: &mut [f32]) {
+        for ((r, &tv), o) in x.chunks(2).zip(t.iter()).zip(out.chunks_mut(2)) {
+            o[0] = r[0] * 2.0 + tv;
+            o[1] = r[1] * 2.0 + tv;
+        }
+    }
+
+    fn run_rows(pool: &Pool, x: &[f32], t: &[f32]) -> (Vec<f32>, Vec<usize>) {
+        let mut out = vec![f32::NAN; x.len()]; // dirty output window
+        let seen = std::sync::Mutex::new(Vec::new());
+        pool.map_rows_into(x, t, 2, &mut out, |idx, xs, ts, o| {
+            seen.lock().unwrap().push(idx);
+            double_rows(xs, ts, o);
+            Ok(())
+        })
+        .unwrap();
+        let mut seen = seen.into_inner().unwrap();
+        seen.sort_unstable();
+        (out, seen)
     }
 
     #[test]
@@ -181,11 +240,41 @@ mod tests {
         let b = 13usize; // deliberately not divisible by the thread count
         let x: Vec<f32> = (0..b * 2).map(|i| i as f32).collect();
         let t: Vec<f32> = (0..b).map(|i| 0.1 * i as f32).collect();
-        let serial = Pool::serial().map_rows(&x, &t, 2, double_rows).unwrap();
+        let (serial, seen) = run_rows(&Pool::serial(), &x, &t);
+        assert_eq!(seen, vec![0], "serial path runs inline as shard 0");
         for threads in [2, 3, 7, 32] {
-            let sharded = Pool::new(threads).map_rows(&x, &t, 2, double_rows).unwrap();
+            let (sharded, seen) = run_rows(&Pool::new(threads), &x, &t);
             assert_eq!(sharded, serial, "threads={threads}");
+            assert!(seen.iter().all(|&i| i < threads), "threads={threads}");
+            assert!(seen.len() <= threads.min(b), "threads={threads}");
         }
+    }
+
+    #[test]
+    fn map_rows_into_propagates_errors() {
+        let pool = Pool::new(4);
+        let mut out = vec![0.0; 8];
+        let r = pool.map_rows_into(&[0.0; 8], &[0.0; 4], 2, &mut out, |idx, _x, _t, _o| {
+            if idx == 0 {
+                Err(anyhow!("boom"))
+            } else {
+                Ok(())
+            }
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn per_worker_arenas_exist_and_report_bytes() {
+        let pool = Pool::new(3);
+        assert_eq!(pool.workspace_bytes(), 0);
+        pool.workspace(2)
+            .split()
+            .0
+            .fill_temb(&crate::model::spec::ModelSpec::default_spec(), &[0.5]);
+        assert!(pool.workspace_bytes() > 0);
+        // serial pools carry no arenas at all
+        assert_eq!(Pool::serial().workspace_bytes(), 0);
     }
 
     #[test]
@@ -196,24 +285,18 @@ mod tests {
 
     #[test]
     fn single_row_batch_works() {
-        let out = Pool::new(8)
-            .map_rows(&[1.0, 2.0], &[0.5], 2, double_rows)
-            .unwrap();
+        let (out, seen) = run_rows(&Pool::new(8), &[1.0, 2.0], &[0.5]);
         assert_eq!(out, vec![2.5, 4.5]);
-    }
-
-    #[test]
-    fn errors_propagate() {
-        let r = Pool::new(4).map_rows(&[0.0; 8], &[0.0; 4], 2, |_x, _t| {
-            Err(anyhow!("boom"))
-        });
-        assert!(r.is_err());
+        assert_eq!(seen, vec![0], "one row never spawns");
     }
 
     #[test]
     fn empty_batch_is_empty() {
-        let out = Pool::new(4).map_rows(&[], &[], 2, double_rows).unwrap();
-        assert!(out.is_empty());
+        let mut empty: Vec<f32> = Vec::new();
+        Pool::new(4)
+            .map_rows_into(&[], &[], 2, &mut empty, |_, _, _, _| Ok(()))
+            .unwrap();
+        assert!(empty.is_empty());
     }
 
     #[test]

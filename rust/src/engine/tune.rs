@@ -172,6 +172,17 @@ impl Tuner {
             Tuner::Measured(_) => "measured",
         }
     }
+
+    /// How many GEMM shapes the measured cache currently holds (0 for
+    /// the non-measuring policies). After warm-up this is stable, and
+    /// every later dispatch is a pure cache hit — the bench harness
+    /// prints it to confirm steady state before counting allocations.
+    pub fn cached_plans(&self) -> usize {
+        match self {
+            Tuner::Measured(cache) => cache.lock().unwrap_or_else(|e| e.into_inner()).len(),
+            _ => 0,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -249,6 +260,8 @@ mod tests {
             1.0
         });
         assert!(again >= 1);
+        assert_eq!(tuner.cached_plans(), 2, "one entry per tuned shape");
+        assert_eq!(Tuner::Heuristic.cached_plans(), 0);
     }
 
     #[test]

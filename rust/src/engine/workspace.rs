@@ -1,0 +1,276 @@
+//! Reusable per-worker scratch arenas for the inference hot path.
+//!
+//! Every `velocity` call used to heap-allocate its activation buffers
+//! (`ht`/`h`/`u`/`r2`/`out`), its kernel decode scratch and — under
+//! column sharding — a stripe buffer per shard, multiplied by
+//! `steps × super-batches × requests` on the serving path. A
+//! [`Workspace`] is the arena that replaces all of those: a set of
+//! named, size-checked scratch buffers (f32 activations, u8 code
+//! scratch, fused-table storage, stripe/tuning temporaries) that grow
+//! to their high-water size once and are then reused for the lifetime
+//! of the worker that owns them.
+//!
+//! Ownership model (see `docs/ARCHITECTURE.md` § Memory model):
+//!
+//! * the serving worker's `EngineStep` owns one workspace and threads
+//!   it through `Engine::velocity_into` — the serial path runs entirely
+//!   in that arena;
+//! * every [`crate::engine::Pool`] built with `Pool::new` owns one
+//!   workspace per worker slot, so row shards and column shards each
+//!   reuse a private arena across calls with no cross-thread sharing
+//!   beyond an uncontended slot mutex;
+//! * [`Workspace::new`] performs **no** heap allocation, so constructing
+//!   a throwaway workspace (the allocating `velocity` wrapper, the
+//!   serial `Pool`) is free until buffers are actually used.
+//!
+//! The arena also hosts the per-step time-embedding cache: the ODE
+//! integrators visit a fixed, deterministic t-grid
+//! ([`crate::flow::ode::StepGrid`]) and share one `t` across the batch,
+//! so the `time_features` row for each grid point is computed once,
+//! memoized by its exact bit pattern, and broadcast — across batch
+//! rows, steps, and super-batches of the same step count.
+
+use std::collections::HashMap;
+
+use crate::engine::blocked::Scratch;
+use crate::model::spec::ModelSpec;
+
+/// Rows kept in the time-embedding cache before it is reset. A serving
+/// worker sees at most `steps + 1` distinct t values per direction, so
+/// this bound only trips under pathological mixed-step traffic.
+const MAX_CACHED_TEMB_ROWS: usize = 4096;
+
+/// Resize-and-zero an f32 scratch buffer to exactly `len`, reusing its
+/// capacity: after the first growth this never touches the allocator.
+/// The returned slice is exactly `len` long, so downstream `zip`s and
+/// `chunks` are size-checked against the shape the caller asked for.
+pub fn take_zeroed(buf: &mut Vec<f32>, len: usize) -> &mut [f32] {
+    buf.clear();
+    buf.resize(len, 0.0);
+    &mut buf[..]
+}
+
+/// Per-step time-embedding rows, keyed by the exact f32 bit pattern of
+/// `t`. Valid for one (temb_freqs, freq_max) fingerprint at a time —
+/// reusing the workspace across architectures resets it.
+#[derive(Default)]
+struct TembCache {
+    /// (temb_freqs, freq_max bits) the cached rows were computed for.
+    fp: (usize, u32),
+    /// t bits → `time_features` row (`[2 * temb_freqs]`).
+    rows: HashMap<u32, Vec<f32>>,
+    /// Peak `rows` bytes ever held, surviving cache resets so the
+    /// arena's high-water accounting stays monotone.
+    hw_bytes: usize,
+}
+
+impl TembCache {
+    /// The `time_features` row for scalar `t`: cached after the first
+    /// computation, bit-identical to the uncached path (the row is a
+    /// pure function of `(spec.temb_freqs, spec.freq_max, t)`).
+    fn row(&mut self, spec: &ModelSpec, t: f32) -> &[f32] {
+        let fp = (spec.temb_freqs, spec.freq_max.to_bits());
+        if self.fp != fp {
+            self.reset();
+            self.fp = fp;
+        }
+        if self.rows.len() > MAX_CACHED_TEMB_ROWS {
+            self.reset();
+        }
+        self.rows
+            .entry(t.to_bits())
+            .or_insert_with(|| crate::flow::cpu_ref::time_features(spec, &[t]))
+    }
+
+    /// Clear the rows, folding their footprint into the high-water mark
+    /// first (the only place the cache ever shrinks).
+    fn reset(&mut self) {
+        self.hw_bytes = self.bytes();
+        self.rows.clear();
+    }
+
+    fn bytes(&self) -> usize {
+        self.hw_bytes
+            .max(self.rows.values().map(|r| r.capacity() * 4).sum())
+    }
+}
+
+/// Activation-side scratch for one forward pass: the op sequence's
+/// intermediate matrices plus the time-embedding cache. One instance
+/// serves any batch size / architecture — buffers are resized (never
+/// shrunk) per call.
+#[derive(Default)]
+pub struct Activations {
+    /// Time-feature matrix, flat `[B, 2 * temb_freqs]`.
+    pub temb: Vec<f32>,
+    /// `silu(temb @ w_t + b_t)`, flat `[B, hidden]`.
+    pub ht: Vec<f32>,
+    /// Running hidden state, flat `[B, hidden]`.
+    pub h: Vec<f32>,
+    /// Residual-block inner activation, flat `[B, hidden]`.
+    pub u: Vec<f32>,
+    /// Residual-block output before the skip add, flat `[B, hidden]`.
+    pub r2: Vec<f32>,
+    cache: TembCache,
+}
+
+impl Activations {
+    /// Fill `self.temb` with the `[B, 2f]` time-feature matrix for `t`.
+    /// When the batch shares a single `t` (every ODE step does), the row
+    /// is served from the per-step cache and broadcast; mixed-t batches
+    /// compute all rows directly. Either way the result is bit-identical
+    /// to `cpu_ref::time_features(spec, t)`.
+    pub fn fill_temb(&mut self, spec: &ModelSpec, t: &[f32]) {
+        let td = 2 * spec.temb_freqs;
+        let Self { temb, cache, .. } = self;
+        temb.clear();
+        if t.is_empty() || td == 0 {
+            return;
+        }
+        let t0 = t[0].to_bits();
+        if t.iter().all(|tv| tv.to_bits() == t0) {
+            // broadcast by appending: no zero-fill pass — every element
+            // is written exactly once (unlike the accumulator buffers,
+            // temb is never read before being fully overwritten)
+            let row = cache.row(spec, t[0]);
+            temb.reserve(t.len() * td);
+            for _ in 0..t.len() {
+                temb.extend_from_slice(row);
+            }
+        } else {
+            temb.resize(t.len() * td, 0.0);
+            crate::flow::cpu_ref::time_features_into(spec, t, temb);
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        (self.temb.capacity()
+            + self.ht.capacity()
+            + self.h.capacity()
+            + self.u.capacity()
+            + self.r2.capacity())
+            * 4
+            + self.cache.bytes()
+    }
+}
+
+/// Kernel-side scratch: everything the LUT-GEMM kernels need besides
+/// their inputs — the v1 tile buffer, the v2 decode/fuse/table
+/// [`Scratch`], the column-shard stripe accumulator and the autotuner's
+/// throwaway measurement output.
+#[derive(Default)]
+pub struct Kernel {
+    /// v2 blocked-kernel scratch (decoded codes, fused indices, tables).
+    pub scratch: Scratch,
+    /// v1 kernel's decoded tile rows (`[TILE_K, cols]` u8 codes).
+    pub tile: Vec<u8>,
+    /// Column-shard stripe accumulator (`[m, c1 - c0]`).
+    pub stripe: Vec<f32>,
+    /// Throwaway output for autotune measurement runs.
+    pub tune_tmp: Vec<f32>,
+}
+
+impl Kernel {
+    fn bytes(&self) -> usize {
+        self.scratch.bytes()
+            + self.tile.capacity()
+            + (self.stripe.capacity() + self.tune_tmp.capacity()) * 4
+    }
+}
+
+/// One worker's complete scratch arena: activation buffers + kernel
+/// scratch. See the module docs for the ownership model.
+#[derive(Default)]
+pub struct Workspace {
+    act: Activations,
+    kern: Kernel,
+}
+
+impl Workspace {
+    /// An empty workspace. Performs no heap allocation — buffers grow
+    /// on first use and then stay at their high-water size.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Split into the activation and kernel halves, so a forward pass
+    /// can hold the activation buffers while its matmul closure owns the
+    /// kernel scratch (disjoint borrows of one arena).
+    pub fn split(&mut self) -> (&mut Activations, &mut Kernel) {
+        (&mut self.act, &mut self.kern)
+    }
+
+    /// The kernel-scratch half alone (column-shard slots).
+    pub fn kernel(&mut self) -> &mut Kernel {
+        &mut self.kern
+    }
+
+    /// High-water bytes across every buffer in the arena — the number
+    /// the server's `stats` op aggregates as `workspace_bytes`. Scratch
+    /// buffers only ever grow (resize reuses capacity, nothing shrinks)
+    /// and the temb cache folds its peak into the mark before its rare
+    /// resets, so this is monotone over the workspace's lifetime.
+    pub fn high_water_bytes(&self) -> usize {
+        self.act.bytes() + self.kern.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_workspace_holds_no_memory() {
+        let ws = Workspace::new();
+        assert_eq!(ws.high_water_bytes(), 0);
+    }
+
+    #[test]
+    fn take_zeroed_reuses_capacity_and_zeroes() {
+        let mut buf = vec![1.0f32; 8];
+        let s = take_zeroed(&mut buf, 5);
+        assert_eq!(s, &[0.0; 5][..]);
+        let p0 = buf.as_ptr();
+        // shrinking then regrowing within capacity must not reallocate
+        take_zeroed(&mut buf, 3);
+        take_zeroed(&mut buf, 8);
+        assert_eq!(buf.as_ptr(), p0);
+        assert!(buf.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn temb_cache_matches_uncached_and_tracks_spec() {
+        let spec = ModelSpec::default_spec();
+        let mut act = Activations::default();
+        let t = [0.3125f32, 0.3125, 0.3125];
+        act.fill_temb(&spec, &t);
+        let want = crate::flow::cpu_ref::time_features(&spec, &t);
+        assert_eq!(act.temb, want, "broadcast cached row must be bit-identical");
+        // second fill: served from cache, still identical
+        act.fill_temb(&spec, &t);
+        assert_eq!(act.temb, want);
+        // mixed t falls back to the direct path
+        let tm = [0.1f32, 0.9];
+        act.fill_temb(&spec, &tm);
+        assert_eq!(act.temb, crate::flow::cpu_ref::time_features(&spec, &tm));
+        // a different architecture fingerprint invalidates the cache
+        let mut small = ModelSpec::default_spec();
+        small.temb_freqs = 4;
+        act.fill_temb(&small, &[0.3125, 0.3125]);
+        assert_eq!(
+            act.temb,
+            crate::flow::cpu_ref::time_features(&small, &[0.3125, 0.3125])
+        );
+    }
+
+    #[test]
+    fn high_water_is_monotone() {
+        let spec = ModelSpec::default_spec();
+        let mut ws = Workspace::new();
+        ws.split().0.fill_temb(&spec, &[0.5; 4]);
+        let after_big = ws.high_water_bytes();
+        assert!(after_big > 0);
+        ws.split().0.fill_temb(&spec, &[0.5]);
+        assert!(ws.high_water_bytes() >= after_big, "arena must never shrink");
+    }
+}

@@ -22,24 +22,31 @@ fn silu(x: f32) -> f32 {
 /// freq = 1 — the geometric ladder's start — instead of the 0/0 → NaN the
 /// naive `i / (f - 1)` interpolation would produce.
 pub fn time_features(spec: &ModelSpec, t: &[f32]) -> Vec<f32> {
+    let mut out = vec![0f32; t.len() * 2 * spec.temb_freqs];
+    time_features_into(spec, t, &mut out);
+    out
+}
+
+/// Allocation-free [`time_features`]: fills a caller-provided
+/// `[t.len(), 2 * temb_freqs]` buffer (the engine workspace's `temb`
+/// arena). Each frequency is derived once and applied column-wise, so
+/// no scratch is needed; the values written are bit-identical to the
+/// allocating version (same `freq`, same `sin`/`cos` arguments).
+pub fn time_features_into(spec: &ModelSpec, t: &[f32], out: &mut [f32]) {
     let f = spec.temb_freqs;
+    assert_eq!(out.len(), t.len() * 2 * f, "out must be [B, 2 * temb_freqs]");
     // denominator (f-1) is only meaningful for f >= 2; clamping to 1 makes
     // the f == 1 exponent exactly 0 (freq = e^0 = 1) and changes nothing
     // for f >= 2
     let denom = (f as f32 - 1.0).max(1.0);
-    let freqs: Vec<f32> = (0..f)
-        .map(|i| ((i as f32 / denom) * spec.freq_max.ln()).exp())
-        .collect();
-    let mut out = vec![0f32; t.len() * 2 * f];
-    for (b, &tb) in t.iter().enumerate() {
-        let row = &mut out[b * 2 * f..(b + 1) * 2 * f];
-        for i in 0..f {
-            let ang = tb * freqs[i];
-            row[i] = ang.sin();
-            row[f + i] = ang.cos();
+    for i in 0..f {
+        let freq = ((i as f32 / denom) * spec.freq_max.ln()).exp();
+        for (b, &tb) in t.iter().enumerate() {
+            let ang = tb * freq;
+            out[b * 2 * f + i] = ang.sin();
+            out[b * 2 * f + f + i] = ang.cos();
         }
     }
-    out
 }
 
 /// Weight accessor abstraction so the fp32 and quantized paths share one

@@ -10,6 +10,64 @@
 
 use anyhow::Result;
 
+/// The fixed t-grid every fixed-step integrator in this crate visits:
+/// `t₀, t₀+dt, t₀+2dt, …` for `steps` points, produced by **additive
+/// accumulation** (`t += dt`) — the sequence the sampler's step loop
+/// has always computed, which the serving determinism contract pins.
+/// ([`integrate`] below previously used the multiplicative
+/// `t0 + s·dt` grid and now adopts this shared contract; for dt values
+/// exactly representable in f32 — every dt its tests use — the two are
+/// bit-identical, otherwise the solver-level grids may differ by an ulp
+/// from pre-unification runs. Nothing pins integrate's bits.)
+///
+/// Centralizing the grid matters beyond deduplication: the engine
+/// workspace caches the per-step time-embedding row by the exact f32
+/// bit pattern of `t` (see `engine/workspace.rs`), so every integrator
+/// must visit bit-identical t values for a given `(t0, t1, steps)` —
+/// this iterator is that contract. Do not "simplify" it to
+/// `t0 + s as f32 * dt`: the bits differ and both determinism pins and
+/// cache hit rates depend on the accumulated sequence.
+#[derive(Clone, Copy, Debug)]
+pub struct StepGrid {
+    t: f32,
+    dt: f32,
+    left: usize,
+}
+
+impl StepGrid {
+    /// Grid from `t0` to `t1` in `steps` fixed steps (dt is signed).
+    pub fn new(t0: f32, t1: f32, steps: usize) -> Self {
+        assert!(steps > 0);
+        Self {
+            t: t0,
+            dt: (t1 - t0) / steps as f32,
+            left: steps,
+        }
+    }
+
+    /// The signed step size paired with the yielded t values.
+    pub fn dt(&self) -> f32 {
+        self.dt
+    }
+}
+
+impl Iterator for StepGrid {
+    type Item = f32;
+    fn next(&mut self) -> Option<f32> {
+        if self.left == 0 {
+            return None;
+        }
+        self.left -= 1;
+        let t = self.t;
+        self.t += self.dt;
+        Some(t)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.left, Some(self.left))
+    }
+}
+
 /// Velocity oracle: v = f(x, t) for a flat [n, d] batch with shared t.
 pub trait BatchVelocity {
     fn velocity(&mut self, x: &[f32], t: f32) -> Result<Vec<f32>>;
@@ -57,10 +115,9 @@ pub fn integrate(
     t1: f32,
     steps: usize,
 ) -> Result<Vec<f32>> {
-    assert!(steps > 0);
-    let dt = (t1 - t0) / steps as f32;
-    for s in 0..steps {
-        let t = t0 + s as f32 * dt;
+    let grid = StepGrid::new(t0, t1, steps);
+    let dt = grid.dt();
+    for t in grid {
         match solver {
             Solver::Euler => {
                 let v = f.velocity(&x, t)?;
@@ -124,6 +181,25 @@ mod tests {
         // Euler underestimates (left endpoint rule)
         let out_e = integrate(Solver::Euler, &mut f, vec![0.0], 0.0, 1.0, 4).unwrap();
         assert!(out_e[0] < 0.5 - 0.05);
+    }
+
+    /// The grid must reproduce `t += dt` accumulation bit-for-bit — the
+    /// contract the workspace's time-embedding cache keys on.
+    #[test]
+    fn step_grid_is_the_accumulated_sequence() {
+        let steps = 6usize; // dt = 1/6 is not exactly representable
+        let grid: Vec<f32> = StepGrid::new(0.0, 1.0, steps).collect();
+        assert_eq!(grid.len(), steps);
+        let dt = StepGrid::new(0.0, 1.0, steps).dt();
+        let mut t = 0.0f32;
+        for (s, &g) in grid.iter().enumerate() {
+            assert_eq!(g.to_bits(), t.to_bits(), "step {s}");
+            t += dt;
+        }
+        // reverse (encode) grid descends with signed dt
+        let rev: Vec<f32> = StepGrid::new(1.0, 0.0, 4).collect();
+        assert_eq!(rev, vec![1.0, 0.75, 0.5, 0.25]);
+        assert_eq!(StepGrid::new(1.0, 0.0, 4).dt(), -0.25);
     }
 
     #[test]

@@ -4,6 +4,8 @@
 
 use anyhow::Result;
 
+use crate::engine::workspace::{take_zeroed, Workspace};
+use crate::flow::ode::StepGrid;
 use crate::model::params::ParamStore;
 use crate::model::quantized::QuantizedModel;
 use crate::model::spec::ModelSpec;
@@ -15,18 +17,20 @@ pub trait StepBackend {
     fn step(&mut self, x: &[f32], t: f32, dt: f32) -> Result<Vec<f32>>;
     fn spec(&self) -> &ModelSpec;
 
-    /// Multi-step integration hook. The default loops [`StepBackend::step`]
-    /// (one host round trip per step); the HLO backends override it with
-    /// device-resident sessions where the state chains on device and the
-    /// weights/codes are staged once (§Perf optimization 1).
+    /// Multi-step integration hook over the shared [`StepGrid`] (the
+    /// accumulated t sequence every integrator visits). The default
+    /// loops [`StepBackend::step`] (one host round trip per step); the
+    /// HLO backends override it with device-resident sessions where the
+    /// state chains on device and the weights/codes are staged once
+    /// (§Perf optimization 1), and [`EngineStep`] overrides it with an
+    /// in-place, workspace-backed loop that performs zero heap
+    /// allocations per step.
     fn run(&mut self, x: Vec<f32>, t0: f32, t1: f32, steps: usize) -> Result<Vec<f32>> {
-        assert!(steps > 0);
-        let dt = (t1 - t0) / steps as f32;
-        let mut t = t0;
+        let grid = StepGrid::new(t0, t1, steps);
+        let dt = grid.dt();
         let mut x = x;
-        for _ in 0..steps {
+        for t in grid {
             x = self.step(&x, t, dt)?;
-            t += dt;
         }
         Ok(x)
     }
@@ -67,16 +71,86 @@ impl StepBackend for CpuQStep<'_> {
 /// LUT engines (v1 `lut` and the blocked autotuned `lut2`), the
 /// dequantize-then-GEMM reference and future backends all integrate
 /// through this one adapter.
+///
+/// The adapter owns the serving worker's scratch arena: one
+/// [`Workspace`] plus the velocity/t buffers its integration loop
+/// reuses. Construct it **once per worker** and reuse it across batches
+/// — the per-step time-embedding cache and the autotuned engine scratch
+/// then persist across every super-batch of the same step grid, and the
+/// steady-state `run` loop performs zero heap allocations (pinned by
+/// the `bench_engine` allocation counter).
 pub struct EngineStep<'a> {
-    pub engine: &'a dyn crate::engine::Engine,
+    engine: &'a dyn crate::engine::Engine,
+    ws: Workspace,
+    /// Velocity output of the current step, flat `[B, D]`.
+    v: Vec<f32>,
+    /// Shared per-step t broadcast to `[B]`.
+    tb: Vec<f32>,
+}
+
+impl<'a> EngineStep<'a> {
+    /// Wrap an engine. Allocation-free until the first step runs.
+    pub fn new(engine: &'a dyn crate::engine::Engine) -> Self {
+        Self {
+            engine,
+            ws: Workspace::new(),
+            v: Vec::new(),
+            tb: Vec::new(),
+        }
+    }
+
+    /// The wrapped engine.
+    pub fn engine(&self) -> &dyn crate::engine::Engine {
+        self.engine
+    }
+
+    /// High-water bytes of the adapter-owned scratch (its workspace plus
+    /// the step loop's velocity/t buffers). The engine's own pool arenas
+    /// are reported separately by `Engine::workspace_bytes`.
+    pub fn workspace_bytes(&self) -> usize {
+        self.ws.high_water_bytes() + (self.v.capacity() + self.tb.capacity()) * 4
+    }
 }
 
 impl StepBackend for EngineStep<'_> {
     fn step(&mut self, x: &[f32], t: f32, dt: f32) -> Result<Vec<f32>> {
-        self.engine.step(x, t, dt)
+        let d = self.engine.spec().d;
+        assert_eq!(x.len() % d, 0, "x must be flat [B, D]");
+        let b = x.len() / d;
+        self.tb.clear();
+        self.tb.resize(b, t);
+        take_zeroed(&mut self.v, b * d);
+        self.engine.velocity_into(x, &self.tb, &mut self.v, &mut self.ws)?;
+        Ok(x.iter()
+            .zip(self.v.iter())
+            .map(|(&xi, &vi)| xi + dt * vi)
+            .collect())
     }
+
     fn spec(&self) -> &ModelSpec {
         self.engine.spec()
+    }
+
+    fn run(&mut self, x: Vec<f32>, t0: f32, t1: f32, steps: usize) -> Result<Vec<f32>> {
+        let d = self.engine.spec().d;
+        assert_eq!(x.len() % d, 0, "x must be flat [B, D]");
+        let b = x.len() / d;
+        let grid = StepGrid::new(t0, t1, steps);
+        let dt = grid.dt();
+        let mut x = x;
+        for t in grid {
+            self.tb.clear();
+            self.tb.resize(b, t);
+            take_zeroed(&mut self.v, b * d);
+            self.engine
+                .velocity_into(&x, &self.tb, &mut self.v, &mut self.ws)?;
+            // in-place Euler update: same expression as the one-shot
+            // step path, so the result is bit-identical to it
+            for (xi, &vi) in x.iter_mut().zip(self.v.iter()) {
+                *xi += dt * vi;
+            }
+        }
+        Ok(x)
     }
 }
 
@@ -139,12 +213,15 @@ impl<'a> HloQStep<'a> {
     }
 
     fn build(art: &'a ArtifactSet, qm: &QuantizedModel, mode: QMode<'a>) -> Self {
+        // shared adapter setup (same base the packed LutModel starts
+        // from): private spec + fp32 biases, see QuantizedModel::adapter_base
+        let (spec, biases) = qm.adapter_base();
         Self {
             mode,
-            spec: qm.spec.clone(),
+            spec,
             art,
             codes: qm.codes_i32(),
-            biases: qm.biases.clone(),
+            biases,
             cbs: qm.codebooks_padded(),
         }
     }
@@ -326,15 +403,19 @@ mod tests {
         let want = generate_from(&mut direct, &x0, 6).unwrap();
         // the same model through the Engine impls and the adapter
         let cref = CpuRefEngine::quantized(&qm);
-        let mut be = EngineStep { engine: &cref };
+        let mut be = EngineStep::new(&cref);
         assert_eq!(generate_from(&mut be, &x0, 6).unwrap(), want);
         let lut = LutEngine::new(&qm).unwrap();
-        let mut be = EngineStep { engine: &lut };
+        let mut be = EngineStep::new(&lut);
         assert_eq!(generate_from(&mut be, &x0, 6).unwrap(), want);
+        // the adapter's reused workspace is warm now; a second run must
+        // be bit-identical to the first (dirty-arena invisibility)
+        assert_eq!(generate_from(&mut be, &x0, 6).unwrap(), want);
+        assert!(be.workspace_bytes() > 0);
         // the v2 blocked kernel re-associates sums: equal within the
         // integration harness tolerance, not bit-for-bit
         let lut2 = LutV2Engine::new(&qm).unwrap();
-        let mut be = EngineStep { engine: &lut2 };
+        let mut be = EngineStep::new(&lut2);
         let got = generate_from(&mut be, &x0, 6).unwrap();
         crate::util::check::assert_close(&got, &want, 1e-4, 1e-5);
     }

@@ -14,7 +14,9 @@
 //!   dequantization) — v1 (`lut`, per-activation tables, bit-exact vs
 //!   the reference) and v2 (`lut2`, cache-blocked with fused multi-code
 //!   tables and measured tile autotuning) — plus a std-thread pool with
-//!   batch-sharding and intra-layer column-sharding axes.
+//!   batch-sharding and intra-layer column-sharding axes, and per-worker
+//!   workspace arenas (`engine::workspace`) that make the steady-state
+//!   sampling path allocation-free.
 //! * **Layer 2/1 (build-time python, `pjrt` feature)** — the flow-matching
 //!   velocity network and the Pallas `qmm`/`assign` kernels, AOT-lowered
 //!   to HLO text and executed through the PJRT C API by [`runtime`].

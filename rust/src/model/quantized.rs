@@ -81,6 +81,14 @@ impl QuantizedModel {
         ParamStore::new(theta)
     }
 
+    /// Shared execution-adapter setup: every backend that outlives this
+    /// container (the packed `LutModel`, the HLO step backends) starts
+    /// from a private copy of the architecture and the fp32 biases.
+    /// One helper so the copies cannot drift apart per adapter.
+    pub fn adapter_base(&self) -> (ModelSpec, Vec<f32>) {
+        (self.spec.clone(), self.biases.clone())
+    }
+
     /// Codes as i32 for the artifact input.
     pub fn codes_i32(&self) -> Vec<i32> {
         self.codes.iter().map(|&c| c as i32).collect()

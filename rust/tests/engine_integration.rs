@@ -6,7 +6,7 @@
 
 use fmq::engine::{
     build_quantized, CpuRefEngine, Engine, EngineKind, LutEngine, LutModel, LutV2Engine, Pool,
-    TilePlan, Tuner,
+    TilePlan, Tuner, Workspace,
 };
 use fmq::flow::cpu_ref;
 use fmq::flow::sampler::{self, CpuQStep, EngineStep};
@@ -166,6 +166,19 @@ fn v2_sharding_and_tile_plans_are_exact() {
                 serial,
                 "b={b} threads={threads} must be bit-identical"
             );
+            // again on the SAME engine: the pool-slot arenas (and, for
+            // b < threads, the leased column-shard stripe buffers) are
+            // now dirty from the first call — reuse must not change a
+            // bit. This pins the dirty-arena property on the stripe
+            // lease/scatter path, which small_spec layers (cols < 2 *
+            // COL_SHARD_MIN) can never reach.
+            let mut ws = fmq::engine::Workspace::new();
+            let mut out = vec![f32::NAN; b * spec.d];
+            eng.velocity_into(&x, &t, &mut out, &mut ws).unwrap();
+            assert_eq!(
+                out, serial,
+                "b={b} threads={threads}: dirty pool arenas must be invisible"
+            );
         }
         // explicit tile plans: k_tile is numerically invisible
         for k_tile in [16usize, 64, 128] {
@@ -190,9 +203,7 @@ fn v2_generation_through_adapter_tracks_legacy_backend() {
     let want = sampler::generate_from(&mut legacy, &x0, 8).unwrap();
     let engine = build_quantized(EngineKind::Lut2, &qm).unwrap();
     assert_eq!(engine.name(), "lut2");
-    let mut be = EngineStep {
-        engine: engine.as_ref(),
-    };
+    let mut be = EngineStep::new(engine.as_ref());
     let got = sampler::generate_from(&mut be, &x0, 8).unwrap();
     let d = max_abs_diff(&got, &want);
     assert!(d < 1e-4, "v2 generation drift vs legacy: {d}");
@@ -201,6 +212,66 @@ fn v2_generation_through_adapter_tracks_legacy_backend() {
     let lat_ref = sampler::encode(&mut legacy, &want, 8).unwrap();
     let d = max_abs_diff(&lat_v2, &lat_ref);
     assert!(d < 1e-3, "v2 encoding drift vs legacy: {d}");
+}
+
+/// The zero-allocation entry point is numerically invisible: for every
+/// quant method × serving bit-width × kernel generation × pool thread
+/// count × tile plan, `velocity_into` through one continuously-reused
+/// (dirty) workspace — and a dirty output buffer — is bit-identical to
+/// the fresh-allocation `velocity` path. This is the property the
+/// workspace arena refactor must uphold.
+#[test]
+fn velocity_into_reused_workspace_is_bit_identical() {
+    let spec = small_spec();
+    let mut rng = Pcg64::seed(52);
+    let theta = spec.init_theta(&mut rng);
+    let b = 5usize;
+    let x: Vec<f32> = (0..b * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let t: Vec<f32> = (0..b).map(|i| (i as f32 + 0.5) / b as f32).collect();
+    // one workspace reused (never cleared) across every configuration:
+    // whatever state a previous model/shape left behind must not leak
+    let mut ws = Workspace::new();
+    for method in QuantMethod::ALL {
+        for bits in [2u8, 3, 4, 8] {
+            let qm = quantize_model(&spec, &theta, method, bits);
+            let mut engines: Vec<(String, Box<dyn Engine>)> = Vec::new();
+            for threads in [1usize, 3] {
+                engines.push((
+                    format!("lut/{threads}t"),
+                    Box::new(LutEngine::with_pool(&qm, Pool::new(threads)).unwrap()),
+                ));
+                engines.push((
+                    format!("lut2/{threads}t"),
+                    Box::new(
+                        LutV2Engine::with_config(&qm, Pool::new(threads), Tuner::measured())
+                            .unwrap(),
+                    ),
+                ));
+            }
+            for k_tile in [16usize, 64] {
+                let plan = TilePlan {
+                    k_tile,
+                    group: fmq::engine::tune::max_group(bits),
+                };
+                engines.push((
+                    format!("lut2/fixed{k_tile}"),
+                    Box::new(
+                        LutV2Engine::with_config(&qm, Pool::serial(), Tuner::Fixed(plan)).unwrap(),
+                    ),
+                ));
+            }
+            for (name, engine) in &engines {
+                let want = engine.velocity(&x, &t).unwrap();
+                let mut out = vec![f32::NAN; b * spec.d]; // poisoned output
+                engine.velocity_into(&x, &t, &mut out, &mut ws).unwrap();
+                assert_eq!(
+                    out, want,
+                    "{method:?} @ {bits} bits ({name}): dirty-workspace drift"
+                );
+            }
+        }
+    }
+    assert!(ws.high_water_bytes() > 0, "the arena must have been used");
 }
 
 /// Pool sharding is numerically invisible at any thread count, including
@@ -234,15 +305,13 @@ fn generation_through_engine_adapter_matches_legacy_backend() {
     let want = sampler::generate_from(&mut legacy, &x0, 8).unwrap();
     for kind in [EngineKind::CpuRef, EngineKind::Lut] {
         let engine = build_quantized(kind, &qm).unwrap();
-        let mut be = EngineStep {
-            engine: engine.as_ref(),
-        };
+        let mut be = EngineStep::new(engine.as_ref());
         let got = sampler::generate_from(&mut be, &x0, 8).unwrap();
         assert_eq!(got, want, "kind={kind:?}");
     }
     // reverse encoding (the Fig. 4 path) through the adapter, too
     let engine = LutEngine::new(&qm).unwrap();
-    let mut be = EngineStep { engine: &engine };
+    let mut be = EngineStep::new(&engine);
     let lat_eng = sampler::encode(&mut be, &want, 8).unwrap();
     let lat_ref = sampler::encode(&mut legacy, &want, 8).unwrap();
     assert_eq!(lat_eng, lat_ref);

@@ -392,6 +392,17 @@ fn stats_op_reports_counters() {
     assert!(get("samples") >= 2.0);
     assert!(get("encodes") >= 2.0);
     assert!(get("queue_depth") >= 0.0, "gauge must be present");
+    // memory gauges: every native-engine worker reports its packed
+    // resident footprint at startup, and the reusable scratch arenas
+    // report a positive high-water once a batch has run
+    assert!(
+        get("resident_bytes") > 0.0,
+        "native engines must report resident model bytes"
+    );
+    assert!(
+        get("workspace_bytes") > 0.0,
+        "warm worker arenas must report high-water scratch bytes"
+    );
     server.stop();
 }
 
