@@ -1,0 +1,33 @@
+//! Marker attributes for the `fmq` workspace, consumed by `cargo xtask lint`.
+//!
+//! The attributes expand to their input unchanged — they carry no runtime
+//! behavior. Their only job is to make invariants *visible in the source*
+//! so the xtask static-analysis pass (and human readers) can find them:
+//!
+//! - [`macro@no_alloc`] marks a function as part of the zero-allocation
+//!   hot path (PR 4's contract: 0 heap allocations per ODE step in steady
+//!   state). `cargo xtask lint` walks the local call graph from every
+//!   marked function and rejects `vec!`/`collect`/`clone`/`format!`/
+//!   `Box::new`/… anywhere reachable. See `docs/STATIC_ANALYSIS.md`.
+//!
+//! The crate deliberately has **zero dependencies** (no `syn`, no
+//! `quote`): the expansion is the identity, so nothing needs parsing, and
+//! the workspace keeps building in offline environments.
+//!
+//! Note: stable Rust only guarantees attribute macros on module-level
+//! items, so `#[fmq_macros::no_alloc]` is applied to *free functions*
+//! (e.g. the blocked-sweep kernels); methods inside `impl` blocks are
+//! enrolled via the `[no_alloc] roots` list in `lint.toml` instead. Both
+//! spellings feed the same lint set.
+
+use proc_macro::TokenStream;
+
+/// Marks a function as belonging to the zero-allocation hot path.
+///
+/// Pass-through: the annotated item is returned unchanged. The attribute
+/// is read back out of the source text by `cargo xtask lint`, which
+/// enforces alloc-freedom transitively over the local call graph.
+#[proc_macro_attribute]
+pub fn no_alloc(_attr: TokenStream, item: TokenStream) -> TokenStream {
+    item
+}

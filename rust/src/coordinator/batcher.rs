@@ -297,6 +297,7 @@ impl Batcher {
                     }
                 }
                 Source::Rows(rows) => {
+                    // fmq-lint: allow(panic_safety) -- admit() pins rows.len() == n*d and issued+take <= n
                     x0.extend_from_slice(&rows[a.issued * d..(a.issued + take) * d]);
                 }
             }
@@ -331,18 +332,41 @@ impl Batcher {
             };
             match result {
                 Ok(rows) => {
-                    let a = &mut self.active[pos];
-                    a.out[s.at * d..(s.at + s.take) * d]
-                        .copy_from_slice(&rows[s.batch_row * d..(s.batch_row + s.take) * d]);
-                    a.done += s.take;
-                    if a.done == a.n {
-                        let a = self.active.remove(pos).unwrap();
-                        let _ = a.reply.send(Ok(a.out)); // receiver may have hung up; fine
+                    // re-slice defensively: a worker handing back fewer
+                    // rows than the super-batch asked for must fail the
+                    // request, never panic the batcher thread (a panic
+                    // here would strand every queued client)
+                    let Some(a) = self.active.get_mut(pos) else {
+                        continue;
+                    };
+                    let src = rows.get(s.batch_row * d..(s.batch_row + s.take) * d);
+                    let dst = a.out.get_mut(s.at * d..(s.at + s.take) * d);
+                    let copied = match (src, dst) {
+                        (Some(src), Some(dst)) => {
+                            dst.copy_from_slice(src);
+                            true
+                        }
+                        _ => false,
+                    };
+                    if copied {
+                        a.done += s.take;
+                        let finished = a.done == a.n;
+                        if finished {
+                            if let Some(a) = self.active.remove(pos) {
+                                // receiver may have hung up; fine
+                                let _ = a.reply.send(Ok(a.out));
+                            }
+                        }
+                    } else if let Some(a) = self.active.remove(pos) {
+                        let _ = a
+                            .reply
+                            .send(Err("worker result shorter than super-batch".to_string()));
                     }
                 }
                 Err(msg) => {
-                    let a = self.active.remove(pos).unwrap();
-                    let _ = a.reply.send(Err(msg.to_string()));
+                    if let Some(a) = self.active.remove(pos) {
+                        let _ = a.reply.send(Err(msg.to_string()));
+                    }
                 }
             }
         }

@@ -73,6 +73,7 @@ impl Scratch {
 /// stride `c1 - c0`; the caller zeroes (or pre-loads) it. The full-width
 /// case is `c0 = 0, c1 = layer.cols`.
 #[allow(clippy::too_many_arguments)]
+#[fmq_macros::no_alloc]
 pub fn matmul_stripe(
     layer: &LutLayer,
     x: &[f32],
@@ -217,6 +218,7 @@ pub fn matmul_stripe(
 }
 
 /// Full-width blocked matmul: `out[m, cols] += x[m, rows] @ W`.
+#[fmq_macros::no_alloc]
 pub fn matmul_blocked(
     layer: &LutLayer,
     x: &[f32],

@@ -153,7 +153,12 @@ impl Pool {
                 );
             }
         });
-        results.into_iter().collect()
+        // first error wins, in shard order; no collect — this path is
+        // inside the zero-alloc steady-state contract
+        for r in results {
+            r?;
+        }
+        Ok(())
     }
 
     /// Split `0..n` into at most `threads` contiguous ranges of at least
@@ -171,12 +176,14 @@ impl Pool {
         T: Send,
     {
         if n == 0 {
-            return Vec::new();
+            return Vec::with_capacity(0);
         }
         let min = min_per_shard.max(1);
         let shards = self.threads.min(n.div_ceil(min)).max(1);
         if shards <= 1 {
-            return vec![(0, n, f(0, 0, n))];
+            let mut one = Vec::with_capacity(1);
+            one.push((0, n, f(0, 0, n)));
+            return one;
         }
         let per = n.div_ceil(shards);
         let mut ranges = Vec::with_capacity(shards);
@@ -189,13 +196,11 @@ impl Pool {
         let fref = &f;
         let mut outs: Vec<(usize, usize, T)> = Vec::with_capacity(ranges.len());
         std::thread::scope(|s| {
-            let (first, rest) = ranges.split_first().expect("at least one shard");
-            let handles: Vec<_> = rest
-                .iter()
-                .enumerate()
-                .map(|(i, &(lo, hi))| s.spawn(move || (lo, hi, fref(i + 1, lo, hi))))
-                .collect();
-            let (lo, hi) = *first;
+            let mut handles = Vec::with_capacity(ranges.len() - 1);
+            for (i, &(lo, hi)) in ranges[1..].iter().enumerate() {
+                handles.push(s.spawn(move || (lo, hi, fref(i + 1, lo, hi))));
+            }
+            let (lo, hi) = ranges[0];
             outs.push((lo, hi, fref(0, lo, hi)));
             for h in handles {
                 match h.join() {

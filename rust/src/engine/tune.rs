@@ -18,7 +18,10 @@
 //! candidate tiles once per (bits, M-bucket, N, K) shape on the real
 //! data and caches the winner for the lifetime of the engine.
 
-use std::collections::HashMap;
+// BTreeMap (not HashMap): tuning keys feed kernel dispatch, and the
+// determinism lint requires ordered containers anywhere iteration order
+// could reach observable behavior. See docs/STATIC_ANALYSIS.md.
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 /// Largest number of codes that can fuse into one 8-bit lookup index at
@@ -71,7 +74,9 @@ impl TilePlan {
 
 /// Cache key for measured plans. `m` is bucketed so a serving engine
 /// does not re-tune for every batch size the batcher produces.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+/// Ordered (`Ord`) so the plan cache can be a `BTreeMap` with
+/// reproducible iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub struct ShapeKey {
     /// Code bit-width.
     pub bits: u8,
@@ -108,13 +113,13 @@ pub enum Tuner {
     /// Measure each candidate once per [`ShapeKey`] on the live inputs
     /// and cache the fastest. First call per shape pays a few extra
     /// kernel runs; every later call dispatches from the cache.
-    Measured(Mutex<HashMap<ShapeKey, TilePlan>>),
+    Measured(Mutex<BTreeMap<ShapeKey, TilePlan>>),
 }
 
 impl Tuner {
     /// A fresh measured autotuner with an empty plan cache.
     pub fn measured() -> Self {
-        Tuner::Measured(Mutex::new(HashMap::new()))
+        Tuner::Measured(Mutex::new(BTreeMap::new()))
     }
 
     /// Resolve the plan for a (bits, m, n, k) GEMM shape. `measure` runs

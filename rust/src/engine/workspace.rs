@@ -30,7 +30,11 @@
 //! memoized by its exact bit pattern, and broadcast — across batch
 //! rows, steps, and super-batches of the same step count.
 
-use std::collections::HashMap;
+// BTreeMap (not HashMap): the determinism lint denies unordered
+// containers in engine state so no iteration order can leak into
+// observable behavior (see docs/STATIC_ANALYSIS.md). Keying by f32 bit
+// pattern keeps the ordering total.
+use std::collections::BTreeMap;
 
 use crate::engine::blocked::Scratch;
 use crate::model::spec::ModelSpec;
@@ -44,6 +48,7 @@ const MAX_CACHED_TEMB_ROWS: usize = 4096;
 /// capacity: after the first growth this never touches the allocator.
 /// The returned slice is exactly `len` long, so downstream `zip`s and
 /// `chunks` are size-checked against the shape the caller asked for.
+#[fmq_macros::no_alloc]
 pub fn take_zeroed(buf: &mut Vec<f32>, len: usize) -> &mut [f32] {
     buf.clear();
     buf.resize(len, 0.0);
@@ -58,7 +63,7 @@ struct TembCache {
     /// (temb_freqs, freq_max bits) the cached rows were computed for.
     fp: (usize, u32),
     /// t bits → `time_features` row (`[2 * temb_freqs]`).
-    rows: HashMap<u32, Vec<f32>>,
+    rows: BTreeMap<u32, Vec<f32>>,
     /// Peak `rows` bytes ever held, surviving cache resets so the
     /// arena's high-water accounting stays monotone.
     hw_bytes: usize,

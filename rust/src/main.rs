@@ -46,7 +46,7 @@ fn run() -> Result<()> {
         print_help();
         return Ok(());
     };
-    let rest = &argv[1..];
+    let rest = argv.get(1..).unwrap_or(&[]);
     match sub.as_str() {
         "train" => cmd_train(rest),
         "quantize" => cmd_quantize(rest),
@@ -135,7 +135,7 @@ fn parse_methods(args: &fmq::util::cli::Args) -> Result<Vec<QuantMethod>> {
 
 fn parse_datasets(args: &fmq::util::cli::Args) -> Result<Vec<Dataset>> {
     let list = args.get_list("datasets");
-    if list.len() == 1 && list[0] == "all" {
+    if list.len() == 1 && list.first().is_some_and(|s| *s == "all") {
         return Ok(Dataset::ALL.to_vec());
     }
     list.iter()
@@ -155,7 +155,8 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     let a = cmd.parse(argv)?;
     let dataset = Dataset::parse(a.get("dataset"))
         .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
-    let art = load_art(true)?.unwrap();
+    let art = load_art(true)?
+        .ok_or_else(|| anyhow::anyhow!("AOT artifacts required for training (build them first)"))?;
     let cfg = TrainConfig {
         steps: a.get_usize("steps")?,
         lr: a.get_f32("lr")?,
@@ -252,7 +253,8 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         ctx.generate_fp32(&theta, &x0)?
     };
     let out = PathBuf::from(a.get("out"));
-    report::write_image_grid(&out, &imgs[..ctx.n.min(imgs.len() / spec.d) * spec.d], 8)?;
+    let keep = ctx.n.min(imgs.len() / spec.d) * spec.d;
+    report::write_image_grid(&out, imgs.get(..keep).unwrap_or(&[]), 8)?;
     println!("{} samples -> {out:?}", ctx.n);
     Ok(())
 }

@@ -1,0 +1,117 @@
+//! Loom model of the workspace-slot lease protocol, exploring *real*
+//! atomics/mutex interleavings (including spurious wakeups and weak
+//! orderings the in-process checker in `tests/slot_interleavings.rs`
+//! cannot model).
+//!
+//! The whole file is gated behind `--cfg loom` because loom is not a
+//! default dev-dependency: this workspace builds offline and keeps
+//! `anyhow` as its only external crate (same policy as the vendored-xla
+//! `pjrt` feature in Cargo.toml). To run the model locally:
+//!
+//! 1. add under `[dev-dependencies]` in `rust/Cargo.toml`:
+//!        loom = "0.7"
+//! 2. run just this test with the cfg enabled:
+//!        RUSTFLAGS="--cfg loom" cargo test --release --test loom_lease
+//!
+//! Without step 1 the cfg stays off and the file compiles to nothing, so
+//! plain `cargo test` is unaffected. `check-cfg` for `cfg(loom)` is
+//! declared in the workspace lints table.
+#![cfg(loom)]
+
+use loom::sync::{Arc, Mutex};
+use loom::thread;
+
+/// Model of one pool slot: the arena is a grow-only Vec guarded by the
+/// slot mutex, exactly like `Pool`'s `Mutex<Workspace>`.
+type Slot = Arc<Mutex<Vec<usize>>>;
+
+/// The pool's real protocol: hold the guard across the whole compute.
+/// Loom explores every schedule; in all of them both threads' writes
+/// must land and each thread's writes must be contiguous.
+#[test]
+fn guard_held_lease_is_exclusive_and_lossless() {
+    loom::model(|| {
+        let slot: Slot = Arc::new(Mutex::new(Vec::new()));
+        let handles: Vec<_> = (0..2)
+            .map(|tid| {
+                let slot = Arc::clone(&slot);
+                thread::spawn(move || {
+                    let mut ws = slot.lock().unwrap();
+                    // two-step compute under the guard: another thread
+                    // interleaving here would break contiguity
+                    ws.push(tid);
+                    ws.push(tid);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let buf = slot.lock().unwrap();
+        assert_eq!(buf.len(), 4, "every write survives: {buf:?}");
+        assert!(
+            buf[0] == buf[1] && buf[2] == buf[3] && buf[0] != buf[2],
+            "writes of each thread stay contiguous under the guard: {buf:?}"
+        );
+    });
+}
+
+/// Two shards leasing *different* slots (the pool's actual sharded
+/// layout: shard `idx` leases slot `idx`) never contend: both computes
+/// land in their own arena in every schedule.
+#[test]
+fn disjoint_slots_never_interfere() {
+    loom::model(|| {
+        let slots: Vec<Slot> = (0..2).map(|_| Arc::new(Mutex::new(Vec::new()))).collect();
+        let handles: Vec<_> = slots
+            .iter()
+            .enumerate()
+            .map(|(tid, slot)| {
+                let slot = Arc::clone(slot);
+                thread::spawn(move || {
+                    let mut ws = slot.lock().unwrap();
+                    ws.push(tid);
+                    ws.push(tid);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        for (tid, slot) in slots.iter().enumerate() {
+            assert_eq!(*slot.lock().unwrap(), vec![tid, tid]);
+        }
+    });
+}
+
+/// The batcher handoff shape: the worker takes owned work out under the
+/// lock (`mem::take`, as `next_batch` moves `x0` out of the active set),
+/// computes outside the lock, and hands the result back under the lock.
+/// The hand-back must *merge* (extend), not overwrite — loom finds the
+/// lost-update schedule if this is replaced with an assignment, which is
+/// exactly the hazard `tests/slot_interleavings.rs` demonstrates.
+#[test]
+fn take_compute_merge_back_loses_nothing() {
+    loom::model(|| {
+        let slot: Slot = Arc::new(Mutex::new(Vec::new()));
+        let handles: Vec<_> = (0..2)
+            .map(|tid| {
+                let slot = Arc::clone(&slot);
+                thread::spawn(move || {
+                    // lease: take owned work out under the lock
+                    let mut local = std::mem::take(&mut *slot.lock().unwrap());
+                    // compute outside the lock
+                    local.push(tid);
+                    // hand back: merge into whatever is there now
+                    slot.lock().unwrap().extend(local);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut buf = slot.lock().unwrap().clone();
+        buf.sort_unstable();
+        assert_eq!(buf, vec![0, 1], "merge-back must keep both results");
+    });
+}

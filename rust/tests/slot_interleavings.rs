@@ -1,0 +1,390 @@
+//! Deterministic concurrency tests for the serving layer's two handoff
+//! protocols, exhaustively enumerating thread interleavings with a small
+//! in-process model checker (no loom, no extra dependencies — this runs
+//! under plain `cargo test` as part of tier-1). The loom twin of the
+//! pool model lives in `tests/loom_lease.rs` behind `--cfg loom`.
+//!
+//! Part A — workspace-slot leasing ([`fmq::engine::Pool::workspace`]):
+//! a DFS scheduler drives every interleaving of two logical threads
+//! against a model of the slot mutex, checking exclusivity and
+//! buffer-possession invariants after every step. Two protocols are
+//! modeled: the one the pool actually uses (guard held across the
+//! compute), which keeps the arena's growth monotone in every
+//! interleaving, and the tempting take/compute-outside/put-back variant,
+//! for which the checker *finds* the interleaving that silently discards
+//! one thread's arena growth — the reason the pool holds its guard.
+//!
+//! Part B — batcher slot accounting ([`fmq::coordinator::batcher`]):
+//! super-batches are assembled up front and completed in **every
+//! permutation** of their hand-back order, over a grid of
+//! (max_batch, n1, n2). Replies must be exact-n, bit-identical to the
+//! request's private noise stream regardless of slicing or completion
+//! order, and the backlog must drain to zero.
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use fmq::coordinator::batcher::{Batcher, GenRequest, Reply, SuperBatch, Work};
+use fmq::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------
+// Part A: exhaustive interleavings of the slot-lease protocol.
+// ---------------------------------------------------------------------
+
+/// One atomic step of a modeled thread.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Step {
+    /// Acquire the slot mutex (blocks while another thread holds it).
+    Lock,
+    /// `mem::take` the buffer out of the slot (requires the lock).
+    TakeBuf,
+    /// Append to the slot's buffer in place (requires the lock).
+    ComputeInSlot,
+    /// Append to the thread's taken-out buffer (no lock required).
+    ComputeLocal,
+    /// Put the taken buffer back into the slot (requires the lock).
+    PutBuf,
+    /// Release the slot mutex.
+    Unlock,
+}
+
+#[derive(Clone, Debug)]
+struct Model {
+    /// Which thread holds the slot mutex.
+    holder: Option<usize>,
+    /// The slot's buffer; `None` while taken out by some thread.
+    slot: Option<Vec<usize>>,
+    /// Per-thread taken-out buffer.
+    local: Vec<Option<Vec<usize>>>,
+    /// Per-thread program counter.
+    pc: Vec<usize>,
+}
+
+impl Model {
+    fn new(threads: usize) -> Self {
+        Model {
+            holder: None,
+            slot: Some(Vec::new()),
+            local: vec![None; threads],
+            pc: vec![0; threads],
+        }
+    }
+}
+
+/// Can a thread execute `step` now? Only `Lock` ever blocks; the other
+/// steps are protocol-guaranteed to run under the lock and are asserted
+/// (not blocked) in `apply`.
+fn enabled(m: &Model, step: Step) -> bool {
+    match step {
+        Step::Lock => m.holder.is_none(),
+        _ => true,
+    }
+}
+
+fn apply(m: &mut Model, t: usize, step: Step) {
+    match step {
+        Step::Lock => {
+            assert!(m.holder.is_none(), "lock acquired while held");
+            m.holder = Some(t);
+        }
+        Step::TakeBuf => {
+            assert_eq!(m.holder, Some(t), "take without holding the lock");
+            // mem::take semantics: a second taker gets a fresh default
+            m.local[t] = Some(m.slot.take().unwrap_or_default());
+        }
+        Step::ComputeInSlot => {
+            assert_eq!(m.holder, Some(t), "in-slot compute without the lock");
+            m.slot
+                .as_mut()
+                .expect("guard-held protocol never takes the buffer out")
+                .push(t);
+        }
+        Step::ComputeLocal => {
+            m.local[t]
+                .as_mut()
+                .expect("local compute before take")
+                .push(t);
+        }
+        Step::PutBuf => {
+            assert_eq!(m.holder, Some(t), "put without holding the lock");
+            // overwrites whatever is in the slot — this is the hazard
+            m.slot = m.local[t].take();
+        }
+        Step::Unlock => {
+            assert_eq!(m.holder, Some(t), "unlock by non-holder");
+            m.holder = None;
+        }
+    }
+}
+
+/// Invariants that must hold in every reachable state.
+fn check_state(m: &Model) {
+    if m.slot.is_none() {
+        assert!(
+            m.local.iter().any(|l| l.is_some()),
+            "buffer vanished: not in the slot and not taken by any thread"
+        );
+    }
+}
+
+/// DFS over every interleaving; returns the slot buffer of each distinct
+/// complete schedule (one entry per schedule, duplicates preserved).
+fn explore(threads: &[&[Step]], m: &Model, out: &mut Vec<Vec<usize>>) {
+    let runnable: Vec<usize> = (0..threads.len())
+        .filter(|&t| {
+            let steps = threads[t];
+            m.pc[t] < steps.len() && enabled(m, steps[m.pc[t]])
+        })
+        .collect();
+    if runnable.is_empty() {
+        let done = (0..threads.len()).all(|t| m.pc[t] == threads[t].len());
+        assert!(done, "deadlock: no runnable thread but work remains: {m:?}");
+        assert!(m.holder.is_none(), "terminated with the lock held");
+        let finals = m.slot.clone().expect("buffer must be handed back");
+        out.push(finals);
+        return;
+    }
+    for t in runnable {
+        let mut next = m.clone();
+        apply(&mut next, t, threads[t][next.pc[t]]);
+        next.pc[t] += 1;
+        check_state(&next);
+        explore(threads, &next, out);
+    }
+}
+
+/// The pool's real protocol: the `MutexGuard` from `Pool::workspace` is
+/// held across the whole compute. Exhaustive check: the mutex serializes
+/// the two critical sections (exactly two schedules), both threads'
+/// writes always survive, and each thread's writes are contiguous.
+#[test]
+fn guard_held_lease_keeps_every_threads_growth() {
+    let prog: &[Step] = &[
+        Step::Lock,
+        Step::ComputeInSlot,
+        Step::ComputeInSlot,
+        Step::Unlock,
+    ];
+    let mut outcomes = Vec::new();
+    explore(&[prog, prog], &Model::new(2), &mut outcomes);
+    assert_eq!(
+        outcomes.len(),
+        2,
+        "the guard must serialize the critical sections (A-first / B-first)"
+    );
+    for buf in &outcomes {
+        assert_eq!(buf.len(), 4, "all four writes must survive: {buf:?}");
+        assert!(
+            buf[..2] != buf[2..] && buf[0] == buf[1] && buf[2] == buf[3],
+            "each thread's writes must be contiguous (mutual exclusion): {buf:?}"
+        );
+    }
+}
+
+/// The tempting alternative — take the buffer out, compute outside the
+/// lock, put it back — admits an interleaving where the second taker
+/// receives a fresh default buffer and its put-back discards the first
+/// thread's growth. The checker must find both the lossless and the
+/// lossy schedules; this is the documented reason `Pool::workspace`
+/// holds its guard across the compute instead.
+#[test]
+fn take_compute_put_lease_can_lose_growth() {
+    let prog: &[Step] = &[
+        Step::Lock,
+        Step::TakeBuf,
+        Step::Unlock,
+        Step::ComputeLocal,
+        Step::Lock,
+        Step::PutBuf,
+        Step::Unlock,
+    ];
+    let mut outcomes = Vec::new();
+    explore(&[prog, prog], &Model::new(2), &mut outcomes);
+    assert!(
+        outcomes.len() > 2,
+        "unlocking during the compute must admit extra schedules, got {}",
+        outcomes.len()
+    );
+    let lens: Vec<usize> = outcomes.iter().map(|b| b.len()).collect();
+    assert!(
+        lens.contains(&2),
+        "serialized schedules keep both writes: {lens:?}"
+    );
+    assert!(
+        lens.contains(&1),
+        "the overlapping schedule must drop one thread's growth: {lens:?}"
+    );
+    assert!(
+        lens.iter().all(|&l| l == 1 || l == 2),
+        "no schedule may fabricate or lose more than the overlap: {lens:?}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Part B: batcher slot accounting under every completion order.
+// ---------------------------------------------------------------------
+
+fn gen_req(n: usize, seed: u64) -> (GenRequest, mpsc::Receiver<Reply>) {
+    let (rtx, rrx) = mpsc::channel();
+    (
+        GenRequest {
+            work: Work::Generate { n, seed },
+            reply: rtx,
+        },
+        rrx,
+    )
+}
+
+fn encode_req(rows: Vec<f32>) -> (GenRequest, mpsc::Receiver<Reply>) {
+    let (rtx, rrx) = mpsc::channel();
+    (
+        GenRequest {
+            work: Work::Encode { rows },
+            reply: rtx,
+        },
+        rrx,
+    )
+}
+
+/// The first `n*d` normals of the request's own seed — the noise stream
+/// the determinism contract pins regardless of co-batching.
+fn expected_noise(seed: u64, n: usize, d: usize) -> Vec<f32> {
+    let mut rng = Pcg64::seed(seed);
+    (0..n * d).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+}
+
+/// Stand-in for the integrator: a row-independent marker transform, so
+/// reassembly errors (wrong offset, wrong slice) change the output.
+fn integrate(x: &[f32]) -> Vec<f32> {
+    x.iter().map(|v| v.mul_add(2.0, 1.0)).collect()
+}
+
+fn permutations(n: usize) -> Vec<Vec<usize>> {
+    if n == 0 {
+        return vec![Vec::new()];
+    }
+    let mut out = Vec::new();
+    for p in permutations(n - 1) {
+        for at in 0..=p.len() {
+            let mut q = p.clone();
+            q.insert(at, n - 1);
+            out.push(q);
+        }
+    }
+    out
+}
+
+/// Drain exactly the batches needed to issue every pending row. Panics
+/// (test failure) if the batcher stops producing rows early.
+fn drain_batches(b: &mut Batcher, total_rows: usize) -> Vec<SuperBatch> {
+    let mut got = 0;
+    let mut batches = Vec::new();
+    while got < total_rows {
+        let batch = b.next_batch().expect("batcher alive");
+        assert!(!batch.is_empty(), "batcher idled with rows still pending");
+        got += batch.rows;
+        batches.push(batch);
+    }
+    assert_eq!(got, total_rows, "issued rows must match admitted rows");
+    batches
+}
+
+/// Two generate requests over a grid of batch sizes, completed in every
+/// possible hand-back order: replies must be exact-n, equal to the
+/// integrate() of each request's private noise stream (independent of
+/// slicing and completion order), and the backlog must drain to zero.
+#[test]
+fn completion_order_grid_reassembles_exact_n() {
+    let d = 3;
+    let grid = [(2usize, 3usize, 2usize), (1, 2, 3), (3, 7, 2), (4, 4, 4), (8, 3, 2)];
+    for (max_batch, n1, n2) in grid {
+        let n_batches = (n1 + n2).div_ceil(max_batch);
+        for perm in permutations(n_batches) {
+            let mut b = Batcher::new(max_batch, Duration::ZERO, d, 8);
+            let tx = b.submitter();
+            let (r1, rx1) = gen_req(n1, 41);
+            let (r2, rx2) = gen_req(n2, 42);
+            tx.send(r1).expect("queue_cap accommodates both");
+            tx.send(r2).expect("queue_cap accommodates both");
+
+            let batches = drain_batches(&mut b, n1 + n2);
+            assert_eq!(batches.len(), n_batches, "slot accounting drives batch count");
+            for batch in &batches {
+                assert!(batch.rows <= max_batch, "assemble must respect max_batch");
+            }
+
+            let mut handed: Vec<Option<SuperBatch>> = batches.into_iter().map(Some).collect();
+            for &i in &perm {
+                let batch = handed[i].take().expect("each batch completed once");
+                let out = integrate(&batch.x0);
+                b.complete(batch, Ok(&out));
+            }
+
+            for (rx, n, seed) in [(&rx1, n1, 41u64), (&rx2, n2, 42u64)] {
+                let got = rx
+                    .try_recv()
+                    .expect("reply must be ready once all rows are back")
+                    .expect("reply must be Ok");
+                assert_eq!(got.len(), n * d, "exact-n reply");
+                assert_eq!(
+                    got,
+                    integrate(&expected_noise(seed, n, d)),
+                    "noise stream must be private to the request \
+                     (max_batch={max_batch}, perm={perm:?})"
+                );
+            }
+            assert_eq!(b.backlog_rows(), 0, "backlog must drain to zero");
+        }
+    }
+}
+
+/// Encode requests ride the same slot accounting: client rows come back
+/// transformed in order, sliced or not.
+#[test]
+fn encode_rows_reassemble_in_order() {
+    let d = 2;
+    let n = 5;
+    let rows: Vec<f32> = (0..n * d).map(|i| i as f32).collect();
+    for max_batch in [2usize, 5, 8] {
+        let mut b = Batcher::new(max_batch, Duration::ZERO, d, 4);
+        let tx = b.submitter();
+        let (req, rrx) = encode_req(rows.clone());
+        tx.send(req).expect("queue has room");
+        let batches = drain_batches(&mut b, n);
+        for batch in batches {
+            let out = integrate(&batch.x0);
+            b.complete(batch, Ok(&out));
+        }
+        let got = rrx.try_recv().expect("reply ready").expect("Ok reply");
+        assert_eq!(got, integrate(&rows), "max_batch={max_batch}");
+        assert_eq!(b.backlog_rows(), 0);
+    }
+}
+
+/// A generate and an encode request never share a super-batch (each
+/// batch integrates one direction), and both still reply exactly.
+#[test]
+fn directions_split_but_both_reply() {
+    let d = 2;
+    let (n1, n2) = (3usize, 2usize);
+    let rows: Vec<f32> = (0..n2 * d).map(|i| 10.0 + i as f32).collect();
+    let mut b = Batcher::new(8, Duration::ZERO, d, 4);
+    let tx = b.submitter();
+    let (g, grx) = gen_req(n1, 7);
+    let (e, erx) = encode_req(rows.clone());
+    tx.send(g).expect("room");
+    tx.send(e).expect("room");
+    let batches = drain_batches(&mut b, n1 + n2);
+    assert_eq!(batches.len(), 2, "directions must not mix in one batch");
+    assert_ne!(batches[0].dir, batches[1].dir);
+    // hand back in reverse order to cross the directions' completions
+    for batch in batches.into_iter().rev() {
+        let out = integrate(&batch.x0);
+        b.complete(batch, Ok(&out));
+    }
+    let got_g = grx.try_recv().expect("ready").expect("Ok");
+    assert_eq!(got_g, integrate(&expected_noise(7, n1, d)));
+    let got_e = erx.try_recv().expect("ready").expect("Ok");
+    assert_eq!(got_e, integrate(&rows));
+    assert_eq!(b.backlog_rows(), 0);
+}

@@ -1,0 +1,210 @@
+//! `lint.toml` loading.
+//!
+//! Parses the minimal TOML subset the config actually uses — `[section]`
+//! headers, `key = "string"`, and (possibly multiline) `key = ["a", "b"]`
+//! string arrays, with `#` comments — so xtask needs no TOML crate and
+//! keeps building offline. Unknown sections/keys are rejected so typos in
+//! `lint.toml` fail loudly instead of silently disabling a rule.
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed lint configuration. Field groups mirror `lint.toml` sections.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    /// Directories (repo-relative) whose `.rs` files are linted.
+    pub scan_roots: Vec<String>,
+
+    /// no_alloc: functions enrolled by qualified (`Type::name`) or bare
+    /// name, in addition to `#[fmq_macros::no_alloc]` annotations.
+    pub no_alloc_roots: Vec<String>,
+    /// no_alloc: trusted leaf functions the transitive walk does not
+    /// enter (documented cold paths: cache fill, autotune warm-up).
+    pub no_alloc_allow: Vec<String>,
+    /// no_alloc: forbidden method/function call names (`collect`, ...).
+    pub no_alloc_forbidden_calls: Vec<String>,
+    /// no_alloc: forbidden macro names (`vec`, `format`).
+    pub no_alloc_forbidden_macros: Vec<String>,
+    /// no_alloc: forbidden `Type::fn` paths (`Vec::new`, `Box::new`).
+    pub no_alloc_forbidden_paths: Vec<String>,
+
+    /// determinism: files whose iteration order reaches packed artifacts,
+    /// tuning keys, or the wire — `HashMap`/`HashSet` are denied there.
+    pub det_ordered: Vec<String>,
+    /// determinism: path prefixes where float reductions are checked.
+    pub det_reduction_scope: Vec<String>,
+    /// determinism: functions allowed to use `.sum()`/`.fold()` (integer
+    /// byte counts and other order-independent reductions).
+    pub det_reduction_allow: Vec<String>,
+
+    /// panic_safety: files where unwrap/expect/panic!/indexing are denied.
+    pub panic_paths: Vec<String>,
+
+    /// lock_hygiene: files scanned for guards held across blocking calls.
+    pub lock_paths: Vec<String>,
+    /// lock_hygiene: methods that return a guard (`lock`, `workspace`).
+    pub lock_guard_fns: Vec<String>,
+    /// lock_hygiene: blocking call names (`send`, `recv`, `join`, ...).
+    pub lock_blocking: Vec<String>,
+}
+
+impl Config {
+    /// Parse a `lint.toml` document.
+    pub fn parse(src: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        let mut lines = src.lines().enumerate().peekable();
+        while let Some((ln, raw)) = lines.next() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    bail!("lint.toml:{}: malformed section header", ln + 1);
+                };
+                section = name.trim().to_string();
+                match section.as_str() {
+                    "scan" | "no_alloc" | "determinism" | "panic_safety" | "lock_hygiene" => {}
+                    other => bail!("lint.toml:{}: unknown section [{other}]", ln + 1),
+                }
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                bail!("lint.toml:{}: expected `key = value`", ln + 1);
+            };
+            let key = line[..eq].trim().to_string();
+            let mut value = line[eq + 1..].trim().to_string();
+            // multiline array: keep consuming until the closing bracket
+            if value.starts_with('[') {
+                while !value.contains(']') {
+                    let Some((_, more)) = lines.next() else {
+                        bail!("lint.toml:{}: unterminated array for `{key}`", ln + 1);
+                    };
+                    value.push(' ');
+                    value.push_str(strip_comment(more).trim());
+                }
+            }
+            let items = parse_value(&value)
+                .with_context(|| format!("lint.toml:{}: bad value for `{key}`", ln + 1))?;
+            let slot = match (section.as_str(), key.as_str()) {
+                ("scan", "roots") => &mut cfg.scan_roots,
+                ("no_alloc", "roots") => &mut cfg.no_alloc_roots,
+                ("no_alloc", "allow") => &mut cfg.no_alloc_allow,
+                ("no_alloc", "forbidden_calls") => &mut cfg.no_alloc_forbidden_calls,
+                ("no_alloc", "forbidden_macros") => &mut cfg.no_alloc_forbidden_macros,
+                ("no_alloc", "forbidden_paths") => &mut cfg.no_alloc_forbidden_paths,
+                ("determinism", "ordered") => &mut cfg.det_ordered,
+                ("determinism", "reduction_scope") => &mut cfg.det_reduction_scope,
+                ("determinism", "reduction_allow") => &mut cfg.det_reduction_allow,
+                ("panic_safety", "paths") => &mut cfg.panic_paths,
+                ("lock_hygiene", "paths") => &mut cfg.lock_paths,
+                ("lock_hygiene", "guard_fns") => &mut cfg.lock_guard_fns,
+                ("lock_hygiene", "blocking") => &mut cfg.lock_blocking,
+                (s, k) => bail!("lint.toml:{}: unknown key `{k}` in [{s}]", ln + 1),
+            };
+            slot.extend(items);
+        }
+        Ok(cfg)
+    }
+
+    /// Does `path` (repo-relative, `/`-separated) fall under any entry of
+    /// `pats`? An entry ending in `/` is a directory prefix; otherwise it
+    /// must match the path exactly or be its suffix (so fixtures can use
+    /// short labels).
+    pub fn path_in(path: &str, pats: &[String]) -> bool {
+        pats.iter().any(|p| {
+            if p.ends_with('/') {
+                path.starts_with(p.as_str())
+            } else {
+                path == p || path.ends_with(&format!("/{p}")) || path.starts_with(p.as_str())
+            }
+        })
+    }
+}
+
+/// Drop a `#` comment, respecting `"` quoting.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse `"x"` or `["a", "b", ...]` into a list of strings.
+fn parse_value(v: &str) -> Result<Vec<String>> {
+    let v = v.trim();
+    if let Some(body) = v.strip_prefix('[') {
+        let Some(body) = body.strip_suffix(']') else {
+            bail!("unterminated array");
+        };
+        let mut out = Vec::new();
+        for item in body.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            out.push(unquote(item)?);
+        }
+        return Ok(out);
+    }
+    Ok(vec![unquote(v)?])
+}
+
+fn unquote(s: &str) -> Result<String> {
+    let s = s.trim();
+    match s.strip_prefix('"').and_then(|r| r.strip_suffix('"')) {
+        Some(inner) => Ok(inner.to_string()),
+        None => bail!("expected a double-quoted string, got `{s}`"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_scalars_and_multiline_arrays() {
+        let src = r#"
+# comment
+[scan]
+roots = ["rust/src"]
+
+[no_alloc]
+roots = [
+    "LutModel::velocity_into",  # trailing comment
+    "matmul_stripe",
+]
+allow = ["row"]
+
+[panic_safety]
+paths = ["rust/src/main.rs"]
+"#;
+        let c = Config::parse(src).unwrap();
+        assert_eq!(c.scan_roots, vec!["rust/src"]);
+        assert_eq!(
+            c.no_alloc_roots,
+            vec!["LutModel::velocity_into", "matmul_stripe"]
+        );
+        assert_eq!(c.no_alloc_allow, vec!["row"]);
+        assert_eq!(c.panic_paths, vec!["rust/src/main.rs"]);
+    }
+
+    #[test]
+    fn unknown_keys_fail_loudly() {
+        assert!(Config::parse("[scan]\nrootz = [\"x\"]").is_err());
+        assert!(Config::parse("[nope]\n").is_err());
+    }
+
+    #[test]
+    fn path_matching_prefix_and_exact() {
+        let pats = vec!["rust/src/engine/".to_string(), "rust/src/main.rs".to_string()];
+        assert!(Config::path_in("rust/src/engine/pool.rs", &pats));
+        assert!(Config::path_in("rust/src/main.rs", &pats));
+        assert!(!Config::path_in("rust/src/flow/ode.rs", &pats));
+    }
+}

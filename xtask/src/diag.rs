@@ -1,0 +1,90 @@
+//! Structured lint diagnostics.
+
+use std::fmt;
+
+/// One finding: rule name, location, human-readable message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diag {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub msg: String,
+}
+
+impl Diag {
+    pub fn new(rule: &'static str, file: &str, line: u32, msg: impl Into<String>) -> Self {
+        Self {
+            rule,
+            file: file.to_string(),
+            line,
+            msg: msg.into(),
+        }
+    }
+
+    /// One-line JSON encoding (stable key order, hand-escaped).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"rule\":\"{}\",\"file\":\"{}\",\"line\":{},\"msg\":\"{}\"}}",
+            esc(self.rule),
+            esc(&self.file),
+            self.line,
+            esc(&self.msg)
+        )
+    }
+}
+
+impl fmt::Display for Diag {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Sort findings for stable output: by file, then line, then rule.
+pub fn sort(diags: &mut [Diag]) {
+    diags.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_json_roundtrip_shape() {
+        let d = Diag::new("no_alloc", "rust/src/a.rs", 7, "calls `vec!`");
+        assert_eq!(d.to_string(), "rust/src/a.rs:7: [no_alloc] calls `vec!`");
+        assert_eq!(
+            d.to_json(),
+            "{\"rule\":\"no_alloc\",\"file\":\"rust/src/a.rs\",\"line\":7,\"msg\":\"calls `vec!`\"}"
+        );
+    }
+
+    #[test]
+    fn sort_orders_by_file_line_rule() {
+        let mut v = vec![
+            Diag::new("b", "z.rs", 1, ""),
+            Diag::new("a", "a.rs", 9, ""),
+            Diag::new("a", "a.rs", 2, ""),
+        ];
+        sort(&mut v);
+        assert_eq!(v[0].file, "a.rs");
+        assert_eq!(v[0].line, 2);
+        assert_eq!(v[2].file, "z.rs");
+    }
+}

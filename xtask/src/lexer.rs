@@ -1,0 +1,383 @@
+//! A small Rust lexer: source text -> significant tokens.
+//!
+//! This is *not* a full parser — it is the minimum tokenization the lint
+//! rules need: identifiers, punctuation, literals and lifetimes, each
+//! carrying a 1-based line number, with comments/strings/chars stripped so
+//! rules never match inside them. Building on tokens (instead of regexes
+//! over raw text) is what lets rules tell `.unwrap()` from `.unwrap_or()`,
+//! skip `vec!` inside a string literal, and track brace depth reliably.
+//!
+//! Inline suppressions are collected here too: a comment of the form
+//! `// fmq-lint: allow(rule_a, rule_b)` records the named rules for its
+//! own line, and applies to diagnostics on that line or the next.
+
+/// What kind of token a [`Tok`] is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `Vec`, `unwrap`, ...).
+    Ident,
+    /// Single punctuation character (`.`, `{`, `!`, ...).
+    Punct,
+    /// Number literal (the text is kept but rarely inspected).
+    Literal,
+    /// Lifetime (`'a`) — kept distinct so `<'a>` never looks like a char.
+    Lifetime,
+}
+
+/// One significant token with its source line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    /// True if this token is the punctuation character `c`.
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == 1 && self.text.as_bytes()[0] == c as u8
+    }
+
+    /// True if this token is the identifier `s`.
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+}
+
+/// Lexed file: tokens plus inline `fmq-lint: allow(...)` markers
+/// (`(line, rule)` pairs).
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub allows: Vec<(u32, String)>,
+}
+
+impl Lexed {
+    /// True if `rule` is suppressed at `line` (marker on the same line or
+    /// the line above).
+    pub fn allowed(&self, rule: &str, line: u32) -> bool {
+        self.allows
+            .iter()
+            .any(|(l, r)| r == rule && (*l == line || *l + 1 == line))
+    }
+}
+
+/// Extract `fmq-lint: allow(a, b)` rule names from a comment body.
+fn scan_allow_marker(comment: &str, line: u32, out: &mut Vec<(u32, String)>) {
+    let Some(at) = comment.find("fmq-lint:") else {
+        return;
+    };
+    let rest = &comment[at + "fmq-lint:".len()..];
+    let rest = rest.trim_start();
+    let Some(body) = rest.strip_prefix("allow(") else {
+        return;
+    };
+    let Some(end) = body.find(')') else {
+        return;
+    };
+    for rule in body[..end].split(',') {
+        let rule = rule.trim();
+        if !rule.is_empty() {
+            out.push((line, rule.to_string()));
+        }
+    }
+}
+
+/// Tokenize `src`. Never fails: unterminated constructs just consume to
+/// end-of-file (the lint is best-effort on malformed input; `cargo build`
+/// is the authority on syntax).
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let mut allows = Vec::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    let n = b.len();
+
+    // Helper closures would need captures; keep it a plain loop.
+    while i < n {
+        let c = b[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_whitespace() => i += 1,
+            '/' if i + 1 < n && b[i + 1] == '/' => {
+                // line comment (incl. doc comments): consume to newline,
+                // harvesting allow-markers
+                let start = i + 2;
+                let mut j = start;
+                while j < n && b[j] != '\n' {
+                    j += 1;
+                }
+                let body: String = b[start..j].iter().collect();
+                scan_allow_marker(&body, line, &mut allows);
+                i = j;
+            }
+            '/' if i + 1 < n && b[i + 1] == '*' => {
+                // block comment, nesting per Rust rules
+                let mut depth = 1u32;
+                let mut j = i + 2;
+                while j < n && depth > 0 {
+                    if b[j] == '\n' {
+                        line += 1;
+                        j += 1;
+                    } else if b[j] == '/' && j + 1 < n && b[j + 1] == '*' {
+                        depth += 1;
+                        j += 2;
+                    } else if b[j] == '*' && j + 1 < n && b[j + 1] == '/' {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                }
+                i = j;
+            }
+            '"' => {
+                // string literal with escapes
+                let mut j = i + 1;
+                while j < n {
+                    match b[j] {
+                        '\\' => j += 2,
+                        '"' => {
+                            j += 1;
+                            break;
+                        }
+                        '\n' => {
+                            line += 1;
+                            j += 1;
+                        }
+                        _ => j += 1,
+                    }
+                }
+                i = j;
+            }
+            '\'' => {
+                // lifetime or char literal
+                let is_lifetime = i + 1 < n
+                    && (b[i + 1].is_alphabetic() || b[i + 1] == '_')
+                    && {
+                        // 'a  -> lifetime unless closed by another quote ('a')
+                        let mut j = i + 2;
+                        while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                            j += 1;
+                        }
+                        !(j < n && b[j] == '\'')
+                    };
+                if is_lifetime {
+                    let start = i;
+                    let mut j = i + 1;
+                    while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                        j += 1;
+                    }
+                    toks.push(Tok {
+                        kind: TokKind::Lifetime,
+                        text: b[start..j].iter().collect(),
+                        line,
+                    });
+                    i = j;
+                } else {
+                    // char literal: '\n', 'x', '\'', '\u{1F600}'
+                    let mut j = i + 1;
+                    while j < n {
+                        match b[j] {
+                            '\\' => j += 2,
+                            '\'' => {
+                                j += 1;
+                                break;
+                            }
+                            '\n' => {
+                                line += 1;
+                                j += 1;
+                            }
+                            _ => j += 1,
+                        }
+                    }
+                    i = j;
+                }
+            }
+            'r' | 'b' if is_raw_or_byte_string(&b, i) => {
+                i = consume_raw_or_byte_string(&b, i, &mut line);
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                let start = i;
+                let mut j = i;
+                while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                    j += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Ident,
+                    text: b[start..j].iter().collect(),
+                    line,
+                });
+                i = j;
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                let mut j = i;
+                while j < n {
+                    let d = b[j];
+                    if d.is_alphanumeric() || d == '_' {
+                        j += 1;
+                    } else if d == '.' && j + 1 < n && b[j + 1].is_ascii_digit() {
+                        // 1.5 continues the literal; 0..n does not
+                        j += 1;
+                    } else {
+                        break;
+                    }
+                }
+                toks.push(Tok {
+                    kind: TokKind::Literal,
+                    text: b[start..j].iter().collect(),
+                    line,
+                });
+                i = j;
+            }
+            _ => {
+                toks.push(Tok {
+                    kind: TokKind::Punct,
+                    text: c.to_string(),
+                    line,
+                });
+                i += 1;
+            }
+        }
+    }
+    Lexed { toks, allows }
+}
+
+/// Does `b[i..]` start a raw string (`r"`, `r#"`) or byte string (`b"`,
+/// `br"`, `br#"`)? Plain identifiers starting with r/b fall through.
+fn is_raw_or_byte_string(b: &[char], i: usize) -> bool {
+    let n = b.len();
+    let mut j = i;
+    if b[j] == 'b' {
+        j += 1;
+        if j < n && b[j] == 'r' {
+            j += 1;
+        }
+    } else if b[j] == 'r' {
+        j += 1;
+    }
+    while j < n && b[j] == '#' {
+        j += 1;
+    }
+    j < n && b[j] == '"' && j > i
+}
+
+/// Consume a raw/byte string starting at `i`; returns the index just past
+/// it. Tracks newlines into `line`.
+fn consume_raw_or_byte_string(b: &[char], i: usize, line: &mut u32) -> usize {
+    let n = b.len();
+    let mut j = i;
+    let mut raw = false;
+    if b[j] == 'b' {
+        j += 1;
+    }
+    if j < n && b[j] == 'r' {
+        raw = true;
+        j += 1;
+    }
+    let mut hashes = 0usize;
+    while j < n && b[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    debug_assert!(j < n && b[j] == '"');
+    j += 1; // opening quote
+    while j < n {
+        match b[j] {
+            '\n' => {
+                *line += 1;
+                j += 1;
+            }
+            '\\' if !raw => j += 2,
+            '"' => {
+                // need `hashes` trailing #s to close a raw string
+                let mut k = j + 1;
+                let mut seen = 0usize;
+                while k < n && b[k] == '#' && seen < hashes {
+                    seen += 1;
+                    k += 1;
+                }
+                if seen == hashes {
+                    return k;
+                }
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_stripped() {
+        let src = r##"
+            // vec! in a comment
+            /* unwrap() in /* nested */ block */
+            let s = "vec![1] .unwrap()";
+            let r = r#"format!("x")"#;
+            let c = '"';
+            real_ident();
+        "##;
+        let ids = idents(src);
+        assert!(ids.contains(&"real_ident".to_string()));
+        assert!(!ids.contains(&"vec".to_string()));
+        assert!(!ids.contains(&"unwrap".to_string()));
+        assert!(!ids.contains(&"format".to_string()));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x }";
+        let l = lex(src);
+        assert!(l.toks.iter().any(|t| t.kind == TokKind::Lifetime));
+        // the str idents after the lifetimes must survive
+        assert_eq!(idents(src).iter().filter(|s| *s == "str").count(), 3);
+    }
+
+    #[test]
+    fn allow_markers_are_recorded() {
+        let src = "// fmq-lint: allow(panic_safety, no_alloc)\nlet x = v[0];";
+        let l = lex(src);
+        assert!(l.allowed("panic_safety", 1));
+        assert!(l.allowed("panic_safety", 2)); // next line too
+        assert!(l.allowed("no_alloc", 2));
+        assert!(!l.allowed("determinism", 2));
+        assert!(!l.allowed("panic_safety", 3));
+    }
+
+    #[test]
+    fn line_numbers_track_newlines() {
+        let src = "a\nb\n  c";
+        let l = lex(src);
+        let lines: Vec<u32> = l.toks.iter().map(|t| t.line).collect();
+        assert_eq!(lines, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn number_literals_do_not_eat_ranges() {
+        let src = "for i in 0..10 { x[i] = 1.5e-3; }";
+        let l = lex(src);
+        // 0 and 10 are separate literals with two dots between them
+        let dots = l.toks.iter().filter(|t| t.is_punct('.')).count();
+        assert_eq!(dots, 2);
+        assert!(l.toks.iter().any(|t| t.text == "1.5e"));
+    }
+}

@@ -1,0 +1,96 @@
+//! `xtask` — repo automation for the fmq workspace.
+//!
+//! The only subcommand today is `cargo xtask lint`: a static-analysis
+//! pass that enforces the repo's *unwritten-by-the-compiler* invariants
+//! (alloc-freedom of the hot path, deterministic ordering on artifact
+//! paths, panic-free request handling, lock hygiene) as structured
+//! `file:line` diagnostics. Rules and their configuration live in
+//! `lint.toml` at the repo root; rationale and annotation how-to in
+//! `docs/STATIC_ANALYSIS.md`.
+//!
+//! Design constraint: the linter parses Rust with its own token scanner
+//! (`lexer.rs` + `parse.rs`) instead of `syn`, so the workspace keeps a
+//! single external dependency (`anyhow`) and builds in offline
+//! environments. The scanner is exact about the things the rules need
+//! (comments/strings stripped, brace-matched fn bodies, qualified names,
+//! `#[cfg(test)]` scoping) and deliberately nothing more; `cargo build`
+//! remains the authority on syntax.
+
+pub mod config;
+pub mod diag;
+pub mod lexer;
+pub mod parse;
+pub mod rules;
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub use config::Config;
+pub use diag::Diag;
+
+/// Lint in-memory sources (`(repo-relative path, content)` pairs).
+/// Pure function of its inputs — the fixture tests drive this directly.
+pub fn lint_sources(files: &[(String, String)], cfg: &Config) -> Vec<Diag> {
+    let parsed: Vec<parse::ParsedFile> = files
+        .iter()
+        .map(|(path, src)| parse::parse(path, lexer::lex(src)))
+        .collect();
+    let mut diags = Vec::new();
+    diags.extend(rules::no_alloc::run(&parsed, cfg));
+    diags.extend(rules::determinism::run(&parsed, cfg));
+    diags.extend(rules::panic_safety::run(&parsed, cfg));
+    diags.extend(rules::lock_hygiene::run(&parsed, cfg));
+    diag::sort(&mut diags);
+    diags
+}
+
+/// Collect every `.rs` file under `root`-relative `scan_roots`, returning
+/// `(repo-relative path, content)` pairs sorted by path (stable output).
+pub fn collect_files(root: &Path, scan_roots: &[String]) -> Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    for sr in scan_roots {
+        let dir = root.join(sr);
+        walk(&dir, root, &mut out)
+            .with_context(|| format!("scanning `{}`", dir.display()))?;
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn walk(dir: &Path, root: &Path, out: &mut Vec<(String, String)>) -> Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)
+        .with_context(|| format!("read_dir `{}`", dir.display()))?
+        .collect::<std::io::Result<_>>()?;
+    entries.sort_by_key(|e| e.path());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            walk(&p, root, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .to_string_lossy()
+                .replace('\\', "/");
+            let src =
+                fs::read_to_string(&p).with_context(|| format!("read `{}`", p.display()))?;
+            out.push((rel, src));
+        }
+    }
+    Ok(())
+}
+
+/// Find the repo root: the nearest ancestor of `start` containing
+/// `lint.toml`.
+pub fn find_root(start: &Path) -> Option<std::path::PathBuf> {
+    let mut cur = Some(start);
+    while let Some(d) = cur {
+        if d.join("lint.toml").is_file() {
+            return Some(d.to_path_buf());
+        }
+        cur = d.parent();
+    }
+    None
+}

@@ -1,0 +1,96 @@
+//! CLI entry point: `cargo xtask lint [--json] [--config <path>]`.
+//!
+//! Exit codes: 0 clean, 1 findings, 2 usage/configuration error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+use xtask::{collect_files, find_root, lint_sources, Config};
+
+const USAGE: &str = "\
+usage: cargo xtask <command>
+
+commands:
+  lint [--json] [--config <path>]
+        run the invariant lint over the workspace (see lint.toml and
+        docs/STATIC_ANALYSIS.md). --json emits one JSON object per line.
+";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(clean) => {
+            if clean {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::from(1)
+            }
+        }
+        Err(e) => {
+            eprintln!("xtask: error: {e:#}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run(args: &[String]) -> Result<bool> {
+    let Some((cmd, rest)) = args.split_first() else {
+        bail!("missing command\n\n{USAGE}");
+    };
+    match cmd.as_str() {
+        "lint" => lint(rest),
+        "--help" | "-h" | "help" => {
+            println!("{USAGE}");
+            Ok(true)
+        }
+        other => bail!("unknown command `{other}`\n\n{USAGE}"),
+    }
+}
+
+fn lint(args: &[String]) -> Result<bool> {
+    let mut json = false;
+    let mut config_path: Option<PathBuf> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--json" => json = true,
+            "--config" => {
+                let p = it.next().context("--config needs a path")?;
+                config_path = Some(PathBuf::from(p));
+            }
+            other => bail!("unknown argument `{other}`\n\n{USAGE}"),
+        }
+    }
+
+    let cwd = std::env::current_dir().context("getcwd")?;
+    let root = find_root(&cwd)
+        .or_else(|| {
+            // `cargo xtask` may run from anywhere in the workspace; fall
+            // back to the directory containing this crate's manifest
+            let m = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+            m.parent().map(|p| p.to_path_buf())
+        })
+        .context("could not locate repo root (no lint.toml found)")?;
+    let cfg_path = config_path.unwrap_or_else(|| root.join("lint.toml"));
+    let cfg_src = std::fs::read_to_string(&cfg_path)
+        .with_context(|| format!("reading `{}`", cfg_path.display()))?;
+    let cfg = Config::parse(&cfg_src)?;
+
+    let files = collect_files(&root, &cfg.scan_roots)?;
+    let diags = lint_sources(&files, &cfg);
+    for d in &diags {
+        if json {
+            println!("{}", d.to_json());
+        } else {
+            println!("{d}");
+        }
+    }
+    if diags.is_empty() {
+        eprintln!("xtask lint: clean ({} files, 4 rules)", files.len());
+        Ok(true)
+    } else {
+        eprintln!("xtask lint: {} finding(s)", diags.len());
+        Ok(false)
+    }
+}

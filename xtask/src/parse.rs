@@ -1,0 +1,438 @@
+//! Item-level scan over a lexed file: function definitions with their
+//! body extents, enclosing `impl`/`trait` type (for qualified names like
+//! `LutModel::velocity_into`), attributes, and test scoping
+//! (`#[test]` functions and `#[cfg(test)]` modules are excluded from
+//! every rule).
+//!
+//! This is a single linear pass with a brace-context stack — deliberately
+//! far short of a real parser, but exact enough for the four lint rules:
+//! bodies are delimited by matching braces, and the only name resolution
+//! rules need is "which `fn` items exist, and what type owns them".
+
+use crate::lexer::{Lexed, Tok, TokKind};
+
+/// One `fn` item found in a file.
+#[derive(Clone, Debug)]
+pub struct FnDef {
+    /// Bare name (`velocity_into`).
+    pub name: String,
+    /// Qualified name: `Type::name` inside `impl`/`trait` blocks, else the
+    /// bare name.
+    pub qual: String,
+    /// 1-based line of the `fn` keyword.
+    pub line: u32,
+    /// Token index range of the body, **inclusive of both braces**.
+    /// `None` for bodyless trait-method signatures.
+    pub body: Option<(usize, usize)>,
+    /// True if this is test code: `#[test]`, or inside `#[cfg(test)]`.
+    pub is_test: bool,
+    /// Attribute names seen on the item (`no_alloc`, `inline`, `test`...).
+    /// For path attributes (`#[fmq_macros::no_alloc]`) the last segment is
+    /// recorded.
+    pub attrs: Vec<String>,
+}
+
+/// A parsed file: the lexed tokens plus the item index built over them.
+#[derive(Debug)]
+pub struct ParsedFile {
+    pub path: String,
+    pub lexed: Lexed,
+    pub fns: Vec<FnDef>,
+    /// Token index ranges (inclusive braces) of `#[cfg(test)]` modules.
+    pub test_ranges: Vec<(usize, usize)>,
+}
+
+impl ParsedFile {
+    /// Is the token at `idx` inside test-only code (a `#[cfg(test)]`
+    /// module or a `#[test]` function body)?
+    pub fn in_test_code(&self, idx: usize) -> bool {
+        self.test_ranges.iter().any(|&(a, b)| idx > a && idx < b)
+            || self.fns.iter().any(|f| {
+                f.is_test && f.body.is_some_and(|(a, b)| idx >= a && idx <= b)
+            })
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum CtxKind {
+    /// `impl T { .. }`, `impl Tr for T { .. }`, `trait Tr { .. }`
+    TypeBlock,
+    /// `mod m { .. }`
+    Module,
+    /// a fn body (index into `fns`)
+    FnBody(usize),
+    /// any other brace pair (struct literal, match, block, ...)
+    Other,
+}
+
+struct Ctx {
+    kind: CtxKind,
+    /// Type name for TypeBlock, used to qualify member fns.
+    type_name: String,
+    /// This context (and so everything inside it) is test-only.
+    is_test: bool,
+    /// Token index of the opening `{`.
+    open: usize,
+}
+
+/// Scan a lexed file into its `fn` items.
+pub fn parse(path: &str, lexed: Lexed) -> ParsedFile {
+    let toks = &lexed.toks;
+    let n = toks.len();
+    let mut fns: Vec<FnDef> = Vec::new();
+    let mut test_ranges: Vec<(usize, usize)> = Vec::new();
+    let mut stack: Vec<Ctx> = Vec::new();
+    // Attributes waiting for the item they decorate.
+    let mut pending_attrs: Vec<String> = Vec::new();
+    let mut pending_cfg_test = false;
+    let mut i = 0usize;
+
+    let in_test = |stack: &[Ctx]| stack.iter().any(|c| c.is_test);
+    let type_name = |stack: &[Ctx]| {
+        stack
+            .iter()
+            .rev()
+            .find(|c| c.kind == CtxKind::TypeBlock)
+            .map(|c| c.type_name.clone())
+    };
+
+    while i < n {
+        let t = &toks[i];
+        if t.is_punct('#') && i + 1 < n && toks[i + 1].is_punct('[') {
+            // attribute: collect idents up to the matching ]
+            let (names, is_cfg_test, end) = scan_attr(toks, i + 1);
+            pending_attrs.extend(names);
+            pending_cfg_test |= is_cfg_test;
+            i = end;
+            continue;
+        }
+        if t.kind == TokKind::Ident {
+            match t.text.as_str() {
+                "fn" => {
+                    let (def, next) = scan_fn(
+                        toks,
+                        i,
+                        &pending_attrs,
+                        pending_cfg_test || in_test(&stack),
+                        type_name(&stack),
+                    );
+                    pending_attrs.clear();
+                    pending_cfg_test = false;
+                    if let Some((body_open, _)) = def.body {
+                        fns.push(def);
+                        let idx = fns.len() - 1;
+                        stack.push(Ctx {
+                            kind: CtxKind::FnBody(idx),
+                            type_name: String::new(),
+                            is_test: false,
+                            open: body_open,
+                        });
+                        i = body_open + 1;
+                    } else {
+                        fns.push(def);
+                        i = next;
+                    }
+                    continue;
+                }
+                "impl" | "trait" => {
+                    let (name, open) = scan_type_block_header(toks, i);
+                    let is_test = pending_cfg_test;
+                    pending_attrs.clear();
+                    pending_cfg_test = false;
+                    match open {
+                        Some(open) => {
+                            stack.push(Ctx {
+                                kind: CtxKind::TypeBlock,
+                                type_name: name,
+                                is_test,
+                                open,
+                            });
+                            i = open + 1;
+                        }
+                        None => i += 1,
+                    }
+                    continue;
+                }
+                "mod" => {
+                    // `mod name {` opens a module; `mod name;` declares one
+                    let is_test = pending_cfg_test;
+                    pending_attrs.clear();
+                    pending_cfg_test = false;
+                    let mut j = i + 1;
+                    while j < n && !toks[j].is_punct('{') && !toks[j].is_punct(';') {
+                        j += 1;
+                    }
+                    if j < n && toks[j].is_punct('{') {
+                        stack.push(Ctx {
+                            kind: CtxKind::Module,
+                            type_name: String::new(),
+                            is_test,
+                            open: j,
+                        });
+                        i = j + 1;
+                    } else {
+                        i = j + 1;
+                    }
+                    continue;
+                }
+                // items that terminate a pending attribute run
+                "struct" | "enum" | "use" | "static" | "const" | "type" | "let"
+                | "macro_rules" => {
+                    pending_attrs.clear();
+                    pending_cfg_test = false;
+                }
+                _ => {}
+            }
+        }
+        if t.is_punct('{') {
+            stack.push(Ctx {
+                kind: CtxKind::Other,
+                type_name: String::new(),
+                is_test: false,
+                open: i,
+            });
+        } else if t.is_punct('}') {
+            if let Some(ctx) = stack.pop() {
+                if let CtxKind::FnBody(idx) = ctx.kind {
+                    if let Some((open, _)) = fns[idx].body {
+                        fns[idx].body = Some((open, i));
+                    }
+                }
+                if ctx.is_test {
+                    test_ranges.push((ctx.open, i));
+                }
+            }
+        } else if t.is_punct(';') {
+            pending_attrs.clear();
+            pending_cfg_test = false;
+        }
+        i += 1;
+    }
+
+    ParsedFile {
+        path: path.to_string(),
+        lexed,
+        fns,
+        test_ranges,
+    }
+}
+
+/// Scan an attribute starting at the `[` token; returns (attr names,
+/// is-exactly-cfg(test), index past the closing `]`).
+fn scan_attr(toks: &[Tok], open: usize) -> (Vec<String>, bool, usize) {
+    let n = toks.len();
+    let mut depth = 0i32;
+    let mut j = open;
+    let mut idents: Vec<String> = Vec::new();
+    while j < n {
+        let t = &toks[j];
+        if t.is_punct('[') {
+            depth += 1;
+        } else if t.is_punct(']') {
+            depth -= 1;
+            if depth == 0 {
+                j += 1;
+                break;
+            }
+        } else if t.kind == TokKind::Ident {
+            idents.push(t.text.clone());
+        }
+        j += 1;
+    }
+    // `#[cfg(test)]` exactly: idents == [cfg, test]
+    let is_cfg_test = idents.len() == 2 && idents[0] == "cfg" && idents[1] == "test";
+    // attribute "name" for matching: every ident (so both `no_alloc` and
+    // the `fmq_macros` prefix land in attrs; rules match on `no_alloc`)
+    (idents, is_cfg_test, j)
+}
+
+/// Scan `impl ... {` / `trait Name {`; returns (type name, index of `{`).
+fn scan_type_block_header(toks: &[Tok], at: usize) -> (String, Option<usize>) {
+    let n = toks.len();
+    let mut j = at + 1;
+    let mut angle = 0i32;
+    let mut in_where = false;
+    let mut name = String::new();
+    while j < n {
+        let t = &toks[j];
+        if t.is_punct('<') {
+            angle += 1;
+        } else if t.is_punct('>') {
+            angle = (angle - 1).max(0);
+        } else if t.is_punct('{') && angle == 0 {
+            return (name, Some(j));
+        } else if t.is_punct(';') && angle == 0 {
+            return (name, None);
+        } else if t.kind == TokKind::Ident && angle == 0 && !in_where {
+            match t.text.as_str() {
+                // `impl Trait for Type`: the type after `for` wins
+                "for" => name.clear(),
+                // bounds after `where` never name the implemented type
+                "where" => in_where = true,
+                "dyn" | "mut" | "unsafe" | "pub" => {}
+                _ => {
+                    if name.is_empty() {
+                        name = t.text.clone();
+                    } else if j > 0 && toks[j - 1].is_punct(':') {
+                        // path segment `a::B` — keep the last segment
+                        name = t.text.clone();
+                    }
+                }
+            }
+        }
+        j += 1;
+    }
+    (name, None)
+}
+
+/// Scan a `fn` item starting at the `fn` keyword. Returns the def (body
+/// filled with `(open, open)` placeholder; the caller patches the close)
+/// and the index to resume at when there is no body.
+fn scan_fn(
+    toks: &[Tok],
+    at: usize,
+    pending_attrs: &[String],
+    is_test_ctx: bool,
+    owner: Option<String>,
+) -> (FnDef, usize) {
+    let n = toks.len();
+    let name = toks
+        .get(at + 1)
+        .filter(|t| t.kind == TokKind::Ident)
+        .map(|t| t.text.clone())
+        .unwrap_or_default();
+    let qual = match &owner {
+        Some(t) if !t.is_empty() => format!("{t}::{name}"),
+        _ => name.clone(),
+    };
+    let is_test = is_test_ctx || pending_attrs.iter().any(|a| a == "test");
+    let mut def = FnDef {
+        name,
+        qual,
+        line: toks[at].line,
+        body: None,
+        is_test,
+        attrs: pending_attrs.to_vec(),
+    };
+    // find the body `{` at paren/bracket depth 0, or `;` (no body)
+    let mut paren = 0i32;
+    let mut bracket = 0i32;
+    let mut j = at + 1;
+    while j < n {
+        let t = &toks[j];
+        if t.is_punct('(') {
+            paren += 1;
+        } else if t.is_punct(')') {
+            paren -= 1;
+        } else if t.is_punct('[') {
+            bracket += 1;
+        } else if t.is_punct(']') {
+            bracket -= 1;
+        } else if paren == 0 && bracket == 0 {
+            if t.is_punct('{') {
+                def.body = Some((j, j)); // close patched by caller on pop
+                return (def, j + 1);
+            }
+            if t.is_punct(';') {
+                return (def, j + 1);
+            }
+        }
+        j += 1;
+    }
+    (def, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    fn parse_src(src: &str) -> ParsedFile {
+        parse("test.rs", lex(src))
+    }
+
+    #[test]
+    fn finds_free_and_impl_fns_with_quals() {
+        let src = r#"
+            pub fn free_one(x: u32) -> u32 { x + 1 }
+            impl Widget {
+                pub fn method_a(&self) {}
+            }
+            impl Render for Widget {
+                fn draw(&self) { self.method_a() }
+            }
+            trait Render {
+                fn draw(&self);
+                fn clear(&self) { }
+            }
+        "#;
+        let p = parse_src(src);
+        let quals: Vec<&str> = p.fns.iter().map(|f| f.qual.as_str()).collect();
+        assert_eq!(
+            quals,
+            vec![
+                "free_one",
+                "Widget::method_a",
+                "Widget::draw",
+                "Render::draw",
+                "Render::clear"
+            ]
+        );
+        // bodyless trait signature has no body; default method does
+        assert!(p.fns[3].body.is_none());
+        assert!(p.fns[4].body.is_some());
+    }
+
+    #[test]
+    fn cfg_test_modules_and_test_fns_are_marked() {
+        let src = r#"
+            fn prod() {}
+            #[cfg(test)]
+            mod tests {
+                fn helper() {}
+                #[test]
+                fn check_it() {}
+            }
+            #[test]
+            fn top_level_test() {}
+        "#;
+        let p = parse_src(src);
+        let by_name = |n: &str| p.fns.iter().find(|f| f.name == n).unwrap();
+        assert!(!by_name("prod").is_test);
+        assert!(by_name("helper").is_test);
+        assert!(by_name("check_it").is_test);
+        assert!(by_name("top_level_test").is_test);
+    }
+
+    #[test]
+    fn attrs_are_attached_including_path_attrs() {
+        let src = r#"
+            #[inline]
+            #[fmq_macros::no_alloc]
+            pub fn hot(x: &mut [f32]) { x[0] = 0.0; }
+        "#;
+        let p = parse_src(src);
+        assert!(p.fns[0].attrs.iter().any(|a| a == "no_alloc"));
+        assert!(p.fns[0].attrs.iter().any(|a| a == "inline"));
+    }
+
+    #[test]
+    fn body_ranges_cover_matching_braces() {
+        let src = "fn a() { if x { y() } } fn b() {}";
+        let p = parse_src(src);
+        let (o1, c1) = p.fns[0].body.unwrap();
+        let (o2, c2) = p.fns[1].body.unwrap();
+        assert!(p.lexed.toks[o1].is_punct('{') && p.lexed.toks[c1].is_punct('}'));
+        assert!(o2 > c1 && c2 > o2);
+        // nested braces stay inside fn a's range
+        assert!(c1 - o1 > 4);
+    }
+
+    #[test]
+    fn array_types_in_signatures_do_not_derail_body_finding() {
+        let src = "fn f(x: [u8; 4]) -> [u8; 2] { [x[0], x[1]] }";
+        let p = parse_src(src);
+        assert!(p.fns[0].body.is_some());
+        assert_eq!(p.fns[0].name, "f");
+    }
+}

@@ -1,0 +1,105 @@
+//! Rule `determinism` — replies and artifacts are pure functions of
+//! (model, n, seed, steps); see PR 3's bit-identical serving contract and
+//! the packed-artifact byte layout.
+//!
+//! Two sub-checks:
+//!
+//! 1. **Ordered containers**: files listed under `[determinism] ordered`
+//!    feed packing, tuning keys, artifact serialization, or wire output.
+//!    `HashMap`/`HashSet` there iterate in randomized order, so any use
+//!    (even a `use` statement) is denied — `BTreeMap`/`BTreeSet` give the
+//!    same API with sorted, reproducible iteration.
+//! 2. **Float reductions**: within `[determinism] reduction_scope`,
+//!    `.sum()` / `.fold()` / `.product()` pin an accumulation order that
+//!    silently changes results if iteration order or sharding changes.
+//!    Kernels accumulate explicitly (indexed loops); the only allowed
+//!    reductions are the functions named in `reduction_allow` (integer
+//!    byte/row counts, order-independent by construction).
+
+use crate::config::Config;
+use crate::diag::Diag;
+use crate::lexer::TokKind;
+use crate::parse::ParsedFile;
+
+const RULE: &str = "determinism";
+
+const UNORDERED: &[&str] = &["HashMap", "HashSet"];
+const REDUCTIONS: &[&str] = &["sum", "fold", "product"];
+
+pub fn run(files: &[ParsedFile], cfg: &Config) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    for f in files {
+        if Config::path_in(&f.path, &cfg.det_ordered) {
+            check_ordered(f, &mut diags);
+        }
+        if Config::path_in(&f.path, &cfg.det_reduction_scope) {
+            check_reductions(f, cfg, &mut diags);
+        }
+    }
+    diags
+}
+
+fn check_ordered(f: &ParsedFile, diags: &mut Vec<Diag>) {
+    for (j, t) in f.lexed.toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || !UNORDERED.contains(&t.text.as_str()) {
+            continue;
+        }
+        if f.in_test_code(j) || f.lexed.allowed(RULE, t.line) {
+            continue;
+        }
+        diags.push(Diag::new(
+            RULE,
+            &f.path,
+            t.line,
+            format!(
+                "`{}` in ordered-output code: iteration order is randomized \
+                 per-process; use `BTree{}` so packed artifacts, tuning keys \
+                 and wire output stay reproducible",
+                t.text,
+                &t.text[4..]
+            ),
+        ));
+    }
+}
+
+fn check_reductions(f: &ParsedFile, cfg: &Config, diags: &mut Vec<Diag>) {
+    let toks = &f.lexed.toks;
+    for d in &f.fns {
+        if d.is_test {
+            continue;
+        }
+        let Some((a, b)) = d.body else { continue };
+        if cfg.det_reduction_allow.iter().any(|n| *n == d.name) {
+            continue;
+        }
+        for j in a..=b.min(toks.len().saturating_sub(1)) {
+            let t = &toks[j];
+            if t.kind != TokKind::Ident || !REDUCTIONS.contains(&t.text.as_str()) {
+                continue;
+            }
+            // method position: `.sum(`, `.sum::<T>(`, `.fold(`
+            let prev_dot = j > 0 && toks[j - 1].is_punct('.');
+            let next_opens = toks.get(j + 1).is_some_and(|n| n.is_punct('('))
+                || (toks.get(j + 1).is_some_and(|n| n.is_punct(':'))
+                    && toks.get(j + 2).is_some_and(|n| n.is_punct(':')));
+            if !prev_dot || !next_opens {
+                continue;
+            }
+            if f.lexed.allowed(RULE, t.line) {
+                continue;
+            }
+            diags.push(Diag::new(
+                RULE,
+                &f.path,
+                t.line,
+                format!(
+                    "float reduction `.{}()` in `{}` pins an accumulation \
+                     order; accumulate explicitly in the kernel, or add the \
+                     function to `reduction_allow` if it is order-independent \
+                     (integer counts)",
+                    t.text, d.qual
+                ),
+            ));
+        }
+    }
+}

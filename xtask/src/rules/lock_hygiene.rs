@@ -1,0 +1,115 @@
+//! Rule `lock_hygiene` — no Mutex guard held across a blocking call.
+//!
+//! In the files listed under `[lock_hygiene] paths`, a `let`-bound guard
+//! obtained from a guard-returning method (`.lock()`, or the pool's
+//! `.workspace()` slot lease) must not stay live across `send`/`recv`/
+//! `join`/`sleep`/other blocking calls: the blocked thread would hold the
+//! slot and starve every other worker (or deadlock outright if the peer
+//! needs the same lock to make progress).
+//!
+//! Detection is lexical: from the guard's `let` statement to the end of
+//! its enclosing block (or an explicit `drop(guard)`), any call whose
+//! name is in `[lock_hygiene] blocking` is flagged. Temporary guards
+//! (`m.lock().unwrap().field = x;`) end their borrow within the
+//! statement and are not tracked.
+
+use crate::config::Config;
+use crate::diag::Diag;
+use crate::lexer::TokKind;
+use crate::parse::ParsedFile;
+
+const RULE: &str = "lock_hygiene";
+
+pub fn run(files: &[ParsedFile], cfg: &Config) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    for f in files {
+        if !Config::path_in(&f.path, &cfg.lock_paths) {
+            continue;
+        }
+        let toks = &f.lexed.toks;
+        for d in &f.fns {
+            if d.is_test {
+                continue;
+            }
+            let Some((a, b)) = d.body else { continue };
+            let hi = b.min(toks.len().saturating_sub(1));
+            for j in a..=hi {
+                let t = &toks[j];
+                if t.kind != TokKind::Ident
+                    || !cfg.lock_guard_fns.iter().any(|g| *g == t.text)
+                    || !(j > 0 && toks[j - 1].is_punct('.'))
+                    || !toks.get(j + 1).is_some_and(|n| n.is_punct('('))
+                {
+                    continue;
+                }
+                // statement start: walk back to the nearest `;`/`{`/`}`
+                let mut k = j;
+                while k > a
+                    && !(toks[k - 1].is_punct(';')
+                        || toks[k - 1].is_punct('{')
+                        || toks[k - 1].is_punct('}'))
+                {
+                    k -= 1;
+                }
+                // only `let`-bound guards outlive their statement
+                if !toks[k].is_ident("let") {
+                    continue;
+                }
+                let mut name_at = k + 1;
+                if toks.get(name_at).is_some_and(|t| t.is_ident("mut")) {
+                    name_at += 1;
+                }
+                let Some(guard) = toks.get(name_at).filter(|t| t.kind == TokKind::Ident)
+                else {
+                    continue;
+                };
+                let guard_name = guard.text.clone();
+                let guard_line = guard.line;
+                // guard scope: end of the let statement -> end of the
+                // enclosing block, or an explicit drop(guard)
+                let mut m = j;
+                while m <= hi && !toks[m].is_punct(';') {
+                    m += 1;
+                }
+                let mut depth = 0i32;
+                let mut mm = m + 1;
+                while mm <= hi {
+                    let u = &toks[mm];
+                    if u.is_punct('{') {
+                        depth += 1;
+                    } else if u.is_punct('}') {
+                        depth -= 1;
+                        if depth < 0 {
+                            break;
+                        }
+                    } else if u.is_ident("drop")
+                        && toks.get(mm + 1).is_some_and(|n| n.is_punct('('))
+                        && toks.get(mm + 2).is_some_and(|n| n.is_ident(&guard_name))
+                    {
+                        break;
+                    } else if u.kind == TokKind::Ident
+                        && cfg.lock_blocking.iter().any(|bn| *bn == u.text)
+                        && toks.get(mm + 1).is_some_and(|n| n.is_punct('('))
+                        && !f.lexed.allowed(RULE, u.line)
+                    {
+                        diags.push(Diag::new(
+                            RULE,
+                            &f.path,
+                            u.line,
+                            format!(
+                                "blocking call `{}()` while guard `{}` \
+                                 (line {}) is held in `{}`: drop the guard \
+                                 first, or move the blocking call out of \
+                                 the critical section",
+                                u.text, guard_name, guard_line, d.qual
+                            ),
+                        ));
+                        break; // one finding per guard is enough
+                    }
+                    mm += 1;
+                }
+            }
+        }
+    }
+    diags
+}

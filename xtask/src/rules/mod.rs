@@ -1,0 +1,124 @@
+//! The four lint rules, plus token-level helpers they share.
+//!
+//! Each rule is a pure function `(files, config) -> Vec<Diag>`; the
+//! driver in `lib.rs` concatenates and sorts the results.
+
+pub mod determinism;
+pub mod lock_hygiene;
+pub mod no_alloc;
+pub mod panic_safety;
+
+use crate::lexer::{Tok, TokKind};
+
+/// A call-looking site inside a token stream: `name(...)`, `.name(...)`,
+/// `Type::name(...)`, or `name!(...)`.
+#[derive(Debug)]
+pub struct Call {
+    /// Last path segment (`new` in `Vec::new`).
+    pub name: String,
+    /// `Type::name` when the call is written as a two-segment path.
+    pub qual: Option<String>,
+    /// `name!(...)` — macro invocation.
+    pub is_macro: bool,
+    /// Preceded by `.` (a method call).
+    pub is_method: bool,
+    /// Token index of the name.
+    pub at: usize,
+    pub line: u32,
+}
+
+/// Keywords that look like `ident (` but are not calls.
+const NON_CALL_KEYWORDS: &[&str] = &[
+    "if", "while", "match", "return", "for", "in", "fn", "move", "as", "let", "else", "loop",
+    "ref", "mut", "pub", "use", "where", "impl", "break", "continue", "unsafe", "dyn",
+];
+
+/// Extract call sites from `toks[range]` (an fn body, braces included).
+pub fn calls_in(toks: &[Tok], range: (usize, usize)) -> Vec<Call> {
+    let (a, b) = range;
+    let mut out = Vec::new();
+    let mut j = a;
+    while j <= b && j < toks.len() {
+        let t = &toks[j];
+        if t.kind == TokKind::Ident && !NON_CALL_KEYWORDS.contains(&t.text.as_str()) {
+            let next = toks.get(j + 1);
+            let is_macro = next.is_some_and(|n| n.is_punct('!'));
+            // macro bodies still get scanned (their tokens are in the
+            // stream); the macro *name* is its own call site
+            let opens_call = if is_macro {
+                toks.get(j + 2)
+                    .is_some_and(|n| n.is_punct('(') || n.is_punct('[') || n.is_punct('{'))
+            } else {
+                // plain call, or turbofish `name::<T>(`
+                next.is_some_and(|n| n.is_punct('('))
+                    || (next.is_some_and(|n| n.is_punct(':'))
+                        && toks.get(j + 2).is_some_and(|n| n.is_punct(':'))
+                        && toks.get(j + 3).is_some_and(|n| n.is_punct('<')))
+            };
+            if opens_call {
+                let prev = j.checked_sub(1).map(|p| &toks[p]);
+                let is_method = prev.is_some_and(|p| p.is_punct('.'));
+                // two-segment path call: `Type :: name (`
+                let qual = if !is_method
+                    && j >= 3
+                    && toks[j - 1].is_punct(':')
+                    && toks[j - 2].is_punct(':')
+                    && toks[j - 3].kind == TokKind::Ident
+                {
+                    Some(format!("{}::{}", toks[j - 3].text, t.text))
+                } else {
+                    None
+                };
+                out.push(Call {
+                    name: t.text.clone(),
+                    qual,
+                    is_macro,
+                    is_method,
+                    at: j,
+                    line: t.line,
+                });
+            }
+        }
+        j += 1;
+    }
+    out
+}
+
+/// Does `toks[j..]` start the sequence `First :: last` (a two-segment
+/// forbidden path like `Vec::new`)?
+pub fn path_at(toks: &[Tok], j: usize, first: &str, last: &str) -> bool {
+    toks.get(j).is_some_and(|t| t.is_ident(first))
+        && toks.get(j + 1).is_some_and(|t| t.is_punct(':'))
+        && toks.get(j + 2).is_some_and(|t| t.is_punct(':'))
+        && toks.get(j + 3).is_some_and(|t| t.is_ident(last))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    #[test]
+    fn extracts_methods_paths_and_macros() {
+        let l = lex("fn f() { x.collect(); Vec::new(); vec![1]; g::<u8>(); if x { } }");
+        let all = calls_in(&l.toks, (0, l.toks.len() - 1));
+        let names: Vec<&str> = all.iter().map(|c| c.name.as_str()).collect();
+        assert!(names.contains(&"collect"));
+        assert!(names.contains(&"new"));
+        assert!(names.contains(&"vec"));
+        assert!(names.contains(&"g"));
+        assert!(!names.contains(&"if"));
+        let newc = all.iter().find(|c| c.name == "new").unwrap();
+        assert_eq!(newc.qual.as_deref(), Some("Vec::new"));
+        assert!(all.iter().find(|c| c.name == "vec").unwrap().is_macro);
+        assert!(all.iter().find(|c| c.name == "collect").unwrap().is_method);
+    }
+
+    #[test]
+    fn unwrap_or_is_not_unwrap() {
+        let l = lex("fn f() { x.unwrap_or(3); }");
+        let all = calls_in(&l.toks, (0, l.toks.len() - 1));
+        assert!(all.iter().any(|c| c.name == "unwrap_or"));
+        assert!(!all.iter().any(|c| c.name == "unwrap"));
+    }
+}

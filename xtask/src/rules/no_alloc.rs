@@ -1,0 +1,205 @@
+//! Rule `no_alloc` — alloc-freedom of the velocity hot path (PR 4's
+//! zero-allocations-per-ODE-step contract).
+//!
+//! Functions enter the checked set by carrying `#[fmq_macros::no_alloc]`
+//! or by being listed under `[no_alloc] roots` in `lint.toml` (qualified
+//! `Type::name` entries disambiguate trait methods from allocating
+//! same-name fallbacks). Inside the set, the rule denies:
+//!
+//! - forbidden macros (`vec!`, `format!`),
+//! - forbidden constructor paths (`Vec::new`, `Box::new`, ...),
+//! - forbidden calls (`collect`, `to_vec`, `clone`, ...),
+//!
+//! and walks the **local call graph** transitively: a call to a local
+//! function outside the set is followed into that function's body (all
+//! same-name candidates, conservatively), so allocation hidden behind a
+//! helper is still caught. Calls whose name belongs to the set are
+//! skipped (each member is checked on its own), and `[no_alloc] allow`
+//! names mark audited cold paths (cache fill, autotune warm-up) the walk
+//! must not enter. Capacity-reusing methods (`with_capacity`, `resize`,
+//! `clear`, `push`) are deliberately permitted: the contract is
+//! steady-state freedom, which reuse provides.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::config::Config;
+use crate::diag::Diag;
+use crate::parse::ParsedFile;
+use crate::rules::{calls_in, path_at};
+
+const RULE: &str = "no_alloc";
+
+type DefId = (usize, usize); // (file index, fn index)
+
+pub fn run(files: &[ParsedFile], cfg: &Config) -> Vec<Diag> {
+    let mut by_name: BTreeMap<&str, Vec<DefId>> = BTreeMap::new();
+    let mut by_qual: BTreeMap<&str, Vec<DefId>> = BTreeMap::new();
+    for (fi, f) in files.iter().enumerate() {
+        for (di, d) in f.fns.iter().enumerate() {
+            if d.is_test || d.body.is_none() {
+                continue;
+            }
+            by_name.entry(&d.name).or_default().push((fi, di));
+            by_qual.entry(&d.qual).or_default().push((fi, di));
+        }
+    }
+
+    // the checked set: annotated or rooted
+    let mut check: Vec<DefId> = Vec::new();
+    for (fi, f) in files.iter().enumerate() {
+        for (di, d) in f.fns.iter().enumerate() {
+            if d.is_test || d.body.is_none() {
+                continue;
+            }
+            let rooted = cfg.no_alloc_roots.iter().any(|r| {
+                if r.contains("::") {
+                    *r == d.qual
+                } else {
+                    *r == d.name
+                }
+            });
+            if rooted || d.attrs.iter().any(|a| a == "no_alloc") {
+                check.push((fi, di));
+            }
+        }
+    }
+
+    let member_names: BTreeSet<&str> = check
+        .iter()
+        .map(|&(fi, di)| files[fi].fns[di].name.as_str())
+        .chain(cfg.no_alloc_allow.iter().map(|s| s.as_str()))
+        .collect();
+    let forbidden_paths: Vec<(&str, &str)> = cfg
+        .no_alloc_forbidden_paths
+        .iter()
+        .filter_map(|p| p.split_once("::"))
+        .collect();
+
+    let mut diags = Vec::new();
+    let mut reported: BTreeSet<(String, u32, String)> = BTreeSet::new();
+    for &root in &check {
+        let mut visited: BTreeSet<DefId> = BTreeSet::new();
+        visited.insert(root);
+        let mut chain = vec![files[root.0].fns[root.1].qual.clone()];
+        scan_def(
+            files,
+            cfg,
+            &by_name,
+            &by_qual,
+            &member_names,
+            &forbidden_paths,
+            root,
+            &mut visited,
+            &mut chain,
+            &mut reported,
+            &mut diags,
+        );
+    }
+    diags
+}
+
+#[allow(clippy::too_many_arguments)]
+fn scan_def(
+    files: &[ParsedFile],
+    cfg: &Config,
+    by_name: &BTreeMap<&str, Vec<DefId>>,
+    by_qual: &BTreeMap<&str, Vec<DefId>>,
+    member_names: &BTreeSet<&str>,
+    forbidden_paths: &[(&str, &str)],
+    id: DefId,
+    visited: &mut BTreeSet<DefId>,
+    chain: &mut Vec<String>,
+    reported: &mut BTreeSet<(String, u32, String)>,
+    diags: &mut Vec<Diag>,
+) {
+    let f = &files[id.0];
+    let d = &f.fns[id.1];
+    let Some((a, b)) = d.body else { return };
+    let toks = &f.lexed.toks;
+
+    let mut report = |line: u32,
+                      what: &str,
+                      chain: &[String],
+                      reported: &mut BTreeSet<(String, u32, String)>,
+                      diags: &mut Vec<Diag>| {
+        if f.lexed.allowed(RULE, line) {
+            return;
+        }
+        if !reported.insert((f.path.clone(), line, what.to_string())) {
+            return;
+        }
+        let via = if chain.len() > 1 {
+            format!(" (path: {})", chain.join(" -> "))
+        } else {
+            String::new()
+        };
+        diags.push(Diag::new(
+            RULE,
+            &f.path,
+            line,
+            format!("`{}` uses {what} on the no_alloc hot path{via}", d.qual),
+        ));
+    };
+
+    // forbidden two-segment constructor paths: Vec::new, Box::new, ...
+    for j in a..=b.min(toks.len().saturating_sub(1)) {
+        for &(first, last) in forbidden_paths {
+            if path_at(toks, j, first, last) {
+                report(
+                    toks[j].line,
+                    &format!("`{first}::{last}`"),
+                    chain,
+                    reported,
+                    diags,
+                );
+            }
+        }
+    }
+
+    for call in calls_in(toks, (a, b)) {
+        if call.is_macro {
+            if cfg.no_alloc_forbidden_macros.iter().any(|m| *m == call.name) {
+                report(call.line, &format!("`{}!`", call.name), chain, reported, diags);
+            }
+            continue;
+        }
+        if cfg.no_alloc_forbidden_calls.iter().any(|m| *m == call.name) {
+            report(call.line, &format!("`{}()`", call.name), chain, reported, diags);
+            continue;
+        }
+        if member_names.contains(call.name.as_str()) {
+            // in-set callees are checked on their own; allow-listed
+            // callees are audited cold paths
+            continue;
+        }
+        // transitive walk into local definitions; a qualified call that
+        // resolves nowhere locally is external (std) and is skipped
+        // rather than falling back to every same-named local fn
+        let targets: Option<&Vec<DefId>> = match &call.qual {
+            Some(q) => by_qual.get(q.as_str()),
+            None => by_name.get(call.name.as_str()),
+        };
+        let Some(targets) = targets else { continue };
+        let targets = targets.clone();
+        for &t in &targets {
+            if !visited.insert(t) {
+                continue;
+            }
+            chain.push(files[t.0].fns[t.1].qual.clone());
+            scan_def(
+                files,
+                cfg,
+                by_name,
+                by_qual,
+                member_names,
+                forbidden_paths,
+                t,
+                visited,
+                chain,
+                reported,
+                diags,
+            );
+            chain.pop();
+        }
+    }
+}

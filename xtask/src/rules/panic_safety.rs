@@ -1,0 +1,105 @@
+//! Rule `panic_safety` — a panicking worker strands queued clients.
+//!
+//! In the files listed under `[panic_safety] paths` (the serving stack's
+//! request paths and the CLI entry point), non-test code may not:
+//!
+//! - call `.unwrap()` / `.expect(...)`,
+//! - invoke `panic!` / `unreachable!` / `todo!` / `unimplemented!`,
+//! - index with `[...]` (slice/array indexing panics on out-of-bounds;
+//!   use `get`/`get_mut` and turn a miss into an error reply).
+//!
+//! Indexing whose bounds are pinned by construction can carry an inline
+//! `// fmq-lint: allow(panic_safety)` marker with a justification;
+//! `assert!`-style contract checks are left to review (they fail loudly
+//! at startup, not per-request).
+
+use crate::config::Config;
+use crate::diag::Diag;
+use crate::lexer::TokKind;
+use crate::parse::ParsedFile;
+
+const RULE: &str = "panic_safety";
+
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+pub fn run(files: &[ParsedFile], cfg: &Config) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    for f in files {
+        if !Config::path_in(&f.path, &cfg.panic_paths) {
+            continue;
+        }
+        let toks = &f.lexed.toks;
+        for d in &f.fns {
+            if d.is_test {
+                continue;
+            }
+            let Some((a, b)) = d.body else { continue };
+            for j in a..=b.min(toks.len().saturating_sub(1)) {
+                let t = &toks[j];
+                if f.lexed.allowed(RULE, t.line) {
+                    continue;
+                }
+                match t.kind {
+                    TokKind::Ident => {
+                        let next_bang = toks.get(j + 1).is_some_and(|n| n.is_punct('!'));
+                        let next_paren = toks.get(j + 1).is_some_and(|n| n.is_punct('('));
+                        let prev_dot = j > 0 && toks[j - 1].is_punct('.');
+                        if next_bang && PANIC_MACROS.contains(&t.text.as_str()) {
+                            diags.push(Diag::new(
+                                RULE,
+                                &f.path,
+                                t.line,
+                                format!(
+                                    "`{}!` in `{}`: a panicking request path \
+                                     strands queued clients; return an error \
+                                     reply instead",
+                                    t.text, d.qual
+                                ),
+                            ));
+                        } else if prev_dot
+                            && next_paren
+                            && (t.text == "unwrap" || t.text == "expect")
+                        {
+                            diags.push(Diag::new(
+                                RULE,
+                                &f.path,
+                                t.line,
+                                format!(
+                                    "`.{}()` in `{}`: convert to an error \
+                                     reply (`ok_or_else`/`let ... else`) so \
+                                     the worker survives bad input",
+                                    t.text, d.qual
+                                ),
+                            ));
+                        }
+                    }
+                    TokKind::Punct if t.is_punct('[') => {
+                        // index expression: `expr[...]` — the `[` directly
+                        // follows an ident, `)`, or `]`
+                        let indexes = j > a
+                            && (toks[j - 1].kind == TokKind::Ident
+                                || toks[j - 1].is_punct(')')
+                                || toks[j - 1].is_punct(']'));
+                        if indexes {
+                            diags.push(Diag::new(
+                                RULE,
+                                &f.path,
+                                t.line,
+                                format!(
+                                    "slice indexing in `{}` panics on \
+                                     out-of-bounds; use `get`/`get_mut`, or \
+                                     justify with `// fmq-lint: \
+                                     allow(panic_safety)` when bounds are \
+                                     pinned by construction",
+                                    d.qual
+                                ),
+                            ));
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+    diags
+}

@@ -1,0 +1,8 @@
+//! Fixture: a float reduction (`.fold`) inside the reduction-checked
+//! scope, in a function not on the allowlist. Expected: exactly one
+//! `determinism` diagnostic.
+
+pub fn mean(xs: &[f32]) -> f32 {
+    let total = xs.iter().fold(0.0f32, |a, b| a + b);
+    total / xs.len().max(1) as f32
+}

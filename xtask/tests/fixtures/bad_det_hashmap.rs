@@ -1,0 +1,9 @@
+//! Fixture: an unordered container in a file whose iteration order
+//! reaches artifacts/wire. Expected: exactly one `determinism`
+//! diagnostic (at the single `HashMap` mention).
+
+pub type TileCache = std::collections::HashMap<u32, u32>;
+
+pub fn lookup(cache: &TileCache, k: u32) -> Option<u32> {
+    cache.get(&k).copied()
+}

@@ -1,0 +1,12 @@
+//! Fixture: a `MutexGuard` held across a channel `send` — the classic
+//! shape that deadlocks when the receiver needs the same lock. Expected:
+//! exactly one `lock_hygiene` diagnostic.
+
+use std::sync::mpsc::Sender;
+use std::sync::Mutex;
+
+pub fn pump(queue: &Mutex<Vec<u32>>, tx: &Sender<u32>) {
+    let guard = queue.lock().unwrap_or_else(|p| p.into_inner());
+    let n = guard.len() as u32;
+    let _ = tx.send(n);
+}

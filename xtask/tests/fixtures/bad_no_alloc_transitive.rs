@@ -1,0 +1,16 @@
+//! Fixture: the enrolled root `hot_entry` is itself alloc-free, but it
+//! calls a local helper that allocates with `Vec::new`. Expected: exactly
+//! one `no_alloc` diagnostic, located at the helper's allocation and
+//! attributed through the call chain.
+
+pub fn hot_entry(out: &mut [f32]) {
+    helper(out);
+}
+
+fn helper(out: &mut [f32]) {
+    let mut acc: Vec<f32> = Vec::new();
+    acc.extend_from_slice(out);
+    for (o, a) in out.iter_mut().zip(&acc) {
+        *o = *a;
+    }
+}

@@ -1,0 +1,10 @@
+//! Fixture: a `#[fmq_macros::no_alloc]` function that allocates via the
+//! `vec!` macro. Expected: exactly one `no_alloc` diagnostic.
+
+#[fmq_macros::no_alloc]
+pub fn hot_step(out: &mut [f32]) {
+    let scratch = vec![0.0f32; out.len()];
+    for (o, s) in out.iter_mut().zip(&scratch) {
+        *o += *s;
+    }
+}

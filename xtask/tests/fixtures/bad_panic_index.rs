@@ -1,0 +1,7 @@
+//! Fixture: direct slice indexing on a request-handling path (panics on
+//! out-of-bounds input). Expected: exactly one `panic_safety` diagnostic.
+
+pub fn first_row(rows: &[f32], d: usize) -> f32 {
+    let head = rows[d];
+    head
+}

@@ -1,0 +1,7 @@
+//! Fixture: `.unwrap()` on a request-handling path. Expected: exactly
+//! one `panic_safety` diagnostic.
+
+pub fn parse_header(line: &str) -> u32 {
+    let n: u32 = line.trim().parse().unwrap();
+    n
+}

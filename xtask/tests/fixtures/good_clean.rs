@@ -1,0 +1,44 @@
+//! Fixture: near-misses for every rule. Expected: zero diagnostics.
+//!
+//! Exercises: `unwrap_or*` (not `unwrap`), an annotated hot fn that is
+//! genuinely alloc-free, an allowlisted integer reduction, a suppressed
+//! `HashMap` with an inline `fmq-lint: allow(...)` marker, a guard
+//! dropped before the blocking call, and panicky code confined to
+//! `#[cfg(test)]`.
+
+use std::sync::mpsc::Sender;
+use std::sync::Mutex;
+
+// fmq-lint: allow(determinism) -- scratch map, never iterated or serialized
+pub type Scratch = std::collections::HashMap<u32, u32>;
+
+#[fmq_macros::no_alloc]
+pub fn add_into(out: &mut [f32], x: &[f32]) {
+    for (o, v) in out.iter_mut().zip(x) {
+        *o += *v;
+    }
+}
+
+pub fn parse_or_zero(line: &str) -> u32 {
+    line.trim().parse().unwrap_or(0)
+}
+
+pub fn ok_bytes(rows: &[Vec<f32>]) -> usize {
+    rows.iter().map(|r| r.capacity() * 4).sum::<usize>()
+}
+
+pub fn pump(counter: &Mutex<u32>, tx: &Sender<u32>) {
+    let guard = counter.lock().unwrap_or_else(|p| p.into_inner());
+    let n = *guard;
+    drop(guard);
+    let _ = tx.send(n);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn panicky_test_code_is_exempt() {
+        let v = vec![1u32, 2, 3];
+        assert_eq!(v[0], *v.first().unwrap());
+    }
+}

@@ -1,0 +1,172 @@
+//! Fixture tests: each known-bad snippet under `tests/fixtures/` must
+//! trip *exactly one* diagnostic of the expected rule, and the clean
+//! fixture (all near-misses) must trip none. The fixtures are lint
+//! inputs, not compiled code — they live in a subdirectory so cargo
+//! does not build them as test targets.
+
+use xtask::{lint_sources, Config, Diag};
+
+fn strs(xs: &[&str]) -> Vec<String> {
+    xs.iter().map(|x| x.to_string()).collect()
+}
+
+/// A self-contained config scoped to the fixture pseudo-paths, mirroring
+/// the shape of the real `lint.toml`.
+fn fixture_cfg() -> Config {
+    Config {
+        scan_roots: strs(&["fix"]),
+        no_alloc_roots: strs(&["hot_entry"]),
+        no_alloc_allow: vec![],
+        no_alloc_forbidden_calls: strs(&["to_vec", "collect", "clone", "to_owned", "to_string"]),
+        no_alloc_forbidden_macros: strs(&["vec", "format"]),
+        no_alloc_forbidden_paths: strs(&["Vec::new", "Box::new", "String::new", "Vec::from"]),
+        det_ordered: strs(&["fix/bad_det_hashmap.rs", "fix/good_clean.rs"]),
+        det_reduction_scope: strs(&["fix/"]),
+        det_reduction_allow: strs(&["ok_bytes"]),
+        panic_paths: strs(&[
+            "fix/bad_panic_unwrap.rs",
+            "fix/bad_panic_index.rs",
+            "fix/good_clean.rs",
+        ]),
+        lock_paths: strs(&["fix/bad_lock_send.rs", "fix/good_clean.rs"]),
+        lock_guard_fns: strs(&["lock"]),
+        lock_blocking: strs(&["send", "recv"]),
+    }
+}
+
+fn lint_one(path: &str, src: &str) -> Vec<Diag> {
+    lint_sources(&[(path.to_string(), src.to_string())], &fixture_cfg())
+}
+
+/// Assert the fixture trips exactly one diagnostic of `rule`, and that
+/// its message mentions `needle`.
+fn expect_one(path: &str, src: &str, rule: &str, needle: &str) -> Diag {
+    let diags = lint_one(path, src);
+    assert_eq!(
+        diags.len(),
+        1,
+        "{path}: expected exactly one diagnostic, got: {diags:#?}"
+    );
+    let d = diags.into_iter().next().expect("len checked above");
+    assert_eq!(d.rule, rule, "{path}: wrong rule: {d}");
+    assert!(
+        d.msg.contains(needle),
+        "{path}: message should mention `{needle}`: {d}"
+    );
+    d
+}
+
+#[test]
+fn no_alloc_vec_macro_in_annotated_fn() {
+    let d = expect_one(
+        "fix/bad_no_alloc_vec.rs",
+        include_str!("fixtures/bad_no_alloc_vec.rs"),
+        "no_alloc",
+        "`vec!`",
+    );
+    assert_eq!(d.line, 6, "diagnostic should anchor at the vec! line");
+}
+
+#[test]
+fn no_alloc_transitive_callee_allocation() {
+    let d = expect_one(
+        "fix/bad_no_alloc_transitive.rs",
+        include_str!("fixtures/bad_no_alloc_transitive.rs"),
+        "no_alloc",
+        "`Vec::new`",
+    );
+    assert!(
+        d.msg.contains("hot_entry") && d.msg.contains("helper"),
+        "message should show the call chain from the root: {d}"
+    );
+}
+
+#[test]
+fn determinism_hashmap_in_ordered_file() {
+    let d = expect_one(
+        "fix/bad_det_hashmap.rs",
+        include_str!("fixtures/bad_det_hashmap.rs"),
+        "determinism",
+        "BTreeMap",
+    );
+    assert_eq!(d.line, 5);
+}
+
+#[test]
+fn determinism_float_fold_in_scope() {
+    expect_one(
+        "fix/bad_det_float_fold.rs",
+        include_str!("fixtures/bad_det_float_fold.rs"),
+        "determinism",
+        "fold",
+    );
+}
+
+#[test]
+fn panic_safety_unwrap() {
+    expect_one(
+        "fix/bad_panic_unwrap.rs",
+        include_str!("fixtures/bad_panic_unwrap.rs"),
+        "panic_safety",
+        "unwrap",
+    );
+}
+
+#[test]
+fn panic_safety_slice_indexing() {
+    let d = expect_one(
+        "fix/bad_panic_index.rs",
+        include_str!("fixtures/bad_panic_index.rs"),
+        "panic_safety",
+        "indexing",
+    );
+    assert_eq!(d.line, 5);
+}
+
+#[test]
+fn lock_hygiene_guard_across_send() {
+    let d = expect_one(
+        "fix/bad_lock_send.rs",
+        include_str!("fixtures/bad_lock_send.rs"),
+        "lock_hygiene",
+        "send",
+    );
+    assert!(d.msg.contains("guard"), "message should name the guard: {d}");
+}
+
+#[test]
+fn clean_fixture_with_near_misses_is_clean() {
+    let diags = lint_one("fix/good_clean.rs", include_str!("fixtures/good_clean.rs"));
+    assert!(
+        diags.is_empty(),
+        "good_clean.rs must lint clean, got: {diags:#?}"
+    );
+}
+
+/// The bad fixtures are single-purpose: no fixture may trip a *second*
+/// rule, or the "exactly one" contract above silently weakens.
+#[test]
+fn bad_fixtures_trip_only_their_own_rule() {
+    let all = [
+        ("fix/bad_no_alloc_vec.rs", include_str!("fixtures/bad_no_alloc_vec.rs"), "no_alloc"),
+        (
+            "fix/bad_no_alloc_transitive.rs",
+            include_str!("fixtures/bad_no_alloc_transitive.rs"),
+            "no_alloc",
+        ),
+        ("fix/bad_det_hashmap.rs", include_str!("fixtures/bad_det_hashmap.rs"), "determinism"),
+        (
+            "fix/bad_det_float_fold.rs",
+            include_str!("fixtures/bad_det_float_fold.rs"),
+            "determinism",
+        ),
+        ("fix/bad_panic_unwrap.rs", include_str!("fixtures/bad_panic_unwrap.rs"), "panic_safety"),
+        ("fix/bad_panic_index.rs", include_str!("fixtures/bad_panic_index.rs"), "panic_safety"),
+        ("fix/bad_lock_send.rs", include_str!("fixtures/bad_lock_send.rs"), "lock_hygiene"),
+    ];
+    for (path, src, rule) in all {
+        for d in lint_one(path, src) {
+            assert_eq!(d.rule, rule, "{path}: unexpected cross-rule finding: {d}");
+        }
+    }
+}

@@ -1,0 +1,28 @@
+//! Self-test: the real workspace must lint clean under the real
+//! `lint.toml`. This is the same pass CI runs as `cargo xtask lint`,
+//! executed in-process so `cargo test` alone catches regressions.
+
+use std::path::Path;
+
+#[test]
+fn workspace_lints_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask sits one level below the repo root")
+        .to_path_buf();
+    let toml = std::fs::read_to_string(root.join("lint.toml")).expect("read lint.toml");
+    let cfg = xtask::Config::parse(&toml).expect("parse lint.toml");
+    let files = xtask::collect_files(&root, &cfg.scan_roots).expect("collect sources");
+    assert!(
+        files.len() > 50,
+        "suspiciously few sources ({}) — scan roots broken?",
+        files.len()
+    );
+    let diags = xtask::lint_sources(&files, &cfg);
+    let listing: Vec<String> = diags.iter().map(|d| d.to_string()).collect();
+    assert!(
+        diags.is_empty(),
+        "workspace must lint clean; findings:\n{}",
+        listing.join("\n")
+    );
+}
