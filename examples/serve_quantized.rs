@@ -102,14 +102,9 @@ fn main() -> anyhow::Result<()> {
     );
     println!(
         "server stats: {} requests, {} batches ({:.2} requests/batch — dynamic batching at work)",
-        server.stats.requests.load(std::sync::atomic::Ordering::Relaxed),
-        server.stats.batches.load(std::sync::atomic::Ordering::Relaxed),
-        server.stats.requests.load(std::sync::atomic::Ordering::Relaxed) as f64
-            / server
-                .stats
-                .batches
-                .load(std::sync::atomic::Ordering::Relaxed)
-                .max(1) as f64
+        server.stats.requests.get(),
+        server.stats.batches.get(),
+        server.stats.requests.get() as f64 / server.stats.batches.get().max(1) as f64
     );
 
     // ---- exact-n slicing + determinism --------------------------------

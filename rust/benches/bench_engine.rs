@@ -182,12 +182,14 @@ fn steady_state_section(
             v2.tuner().cached_plans()
         );
     }
+    let obs_cells = obs_overhead_section(spec, theta, rng, fast);
     let json = Json::obj(vec![
         ("bench", Json::Str("bench_engine".into())),
         ("section", Json::Str("steady_state_sampling".into())),
         ("fast_mode", Json::Bool(fast)),
         ("steps", Json::Num(hot_steps as f64)),
         ("cells", Json::Arr(hot.iter().map(HotCell::to_json).collect())),
+        ("obs_overhead", Json::Arr(obs_cells)),
     ]);
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()
@@ -198,6 +200,74 @@ fn steady_state_section(
         Ok(()) => println!("-> {}", path.display()),
         Err(e) => eprintln!("(could not write {}: {e})", path.display()),
     }
+}
+
+/// Observability overhead gate: per-Euler-step latency through
+/// `EngineStep::run` with span timing enabled must stay within 3% of the
+/// same loop with timing disabled (plus a small absolute grace for clock
+/// jitter on sub-microsecond steps). Min-of-k on both sides so scheduler
+/// noise cannot fail the gate spuriously; under the `no-obs` feature the
+/// spans compile to nothing and the two sides are the same code. Panics
+/// (failing the bench run, which CI treats as a failure) on breach.
+fn obs_overhead_section(
+    spec: &ModelSpec,
+    theta: &ParamStore,
+    rng: &mut Pcg64,
+    fast: bool,
+) -> Vec<Json> {
+    let steps = if fast { 3 } else { 6 };
+    let reps = if fast { 7 } else { 15 };
+    let bs = 16usize;
+    let bits = 4u8;
+    let qm = quantize_model(spec, theta, QuantMethod::Ot, bits);
+    let v1 = LutEngine::with_pool(&qm, Pool::serial()).expect("pack model");
+    let mut be = EngineStep::new(&v1);
+    let x0: Vec<f32> = (0..bs * spec.d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let warm = be.run(x0.clone(), 0.0, 1.0, steps).expect("warm-up run");
+    std::hint::black_box(warm);
+    let mut min_step = |on: bool| {
+        fmq::obs::set_timing_enabled(on);
+        let mut best = f64::INFINITY;
+        for _ in 0..reps {
+            let x = x0.clone();
+            let t0 = std::time::Instant::now();
+            let out = be.run(x, 0.0, 1.0, steps).expect("measured run");
+            best = best.min(t0.elapsed().as_secs_f64() / steps as f64);
+            std::hint::black_box(out);
+        }
+        best
+    };
+    // off first, then on, then re-check off: taking the min of both off
+    // passes guards against frequency ramp-up biasing the comparison
+    let off_a = min_step(false);
+    let on = min_step(true);
+    let off = off_a.min(min_step(false));
+    fmq::obs::set_timing_enabled(true);
+    let overhead = on / off - 1.0;
+    println!(
+        "\nobs overhead (ot{bits}, B={bs}, min of {reps}): \
+         step {} off vs {} on ({:+.2}%)",
+        fmq::bench::fmt_time(off),
+        fmq::bench::fmt_time(on),
+        overhead * 100.0
+    );
+    // 3% relative + 200ns absolute grace (timer granularity floor)
+    let budget = off * 1.03 + 200e-9;
+    assert!(
+        on <= budget,
+        "span timing overhead breaks the 3% gate: {:.3}us on vs {:.3}us off",
+        on * 1e6,
+        off * 1e6
+    );
+    vec![Json::obj(vec![
+        ("engine", Json::Str("lut".into())),
+        ("bits", Json::Num(bits as f64)),
+        ("batch", Json::Num(bs as f64)),
+        ("step_timing_off_s", Json::Num(off)),
+        ("step_timing_on_s", Json::Num(on)),
+        ("overhead_frac", Json::Num(overhead)),
+        ("gate_frac", Json::Num(0.03)),
+    ])]
 }
 
 impl Cell {

@@ -88,8 +88,8 @@ fn main() -> anyhow::Result<()> {
     mean_lat /= clients as f64;
     let wall = t0.elapsed().as_secs_f64();
     let samples = clients * per * 2;
-    let reqs = server.stats.requests.load(std::sync::atomic::Ordering::Relaxed);
-    let batches = server.stats.batches.load(std::sync::atomic::Ordering::Relaxed);
+    let reqs = server.stats.requests.get();
+    let batches = server.stats.batches.get();
     println!(
         "concurrent: {samples} samples / {wall:.2}s = {:.1} samples/s; mean latency {:.1}ms",
         samples as f64 / wall,

@@ -27,9 +27,11 @@
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::flow::sampler::Direction;
+use crate::obs::{self, Metrics, Span};
 use crate::util::rng::Pcg64;
 
 /// What one request wants integrated.
@@ -69,6 +71,9 @@ struct Active {
     issued: usize,
     /// Rows reassembled into `out` so far.
     done: usize,
+    /// When the request entered the active set (feeds `queue_wait_ns` on
+    /// the request's first issuance into a super-batch).
+    admitted: Instant,
     src: Source,
     out: Vec<f32>,
     reply: Sender<Reply>,
@@ -141,14 +146,22 @@ pub struct Batcher {
     queue_cap: usize,
     active: VecDeque<Active>,
     next_id: u64,
+    metrics: Arc<Metrics>,
 }
 
 impl Batcher {
     /// `max_batch` rows per super-batch, `linger` accumulation window,
     /// `d` row width. `queue_cap` bounds the channel and the admitted
     /// active set each (so at most `2 * queue_cap` requests are held per
-    /// variant before submitters block).
-    pub fn new(max_batch: usize, linger: Duration, d: usize, queue_cap: usize) -> Self {
+    /// variant before submitters block). `metrics` is the owning server's
+    /// registry (queue-wait / assembly histograms land there).
+    pub fn new(
+        max_batch: usize,
+        linger: Duration,
+        d: usize,
+        queue_cap: usize,
+        metrics: Arc<Metrics>,
+    ) -> Self {
         let cap = queue_cap.max(1);
         let (tx, rx) = mpsc::sync_channel(cap);
         Self {
@@ -160,6 +173,7 @@ impl Batcher {
             queue_cap: cap,
             active: VecDeque::new(),
             next_id: 0,
+            metrics,
         }
     }
 
@@ -206,6 +220,7 @@ impl Batcher {
             n,
             issued: 0,
             done: 0,
+            admitted: Instant::now(),
             src,
             out: vec![0.0; n * self.d],
             reply: req.reply,
@@ -261,7 +276,13 @@ impl Batcher {
                 Err(_) => break,
             }
         }
-        Some(self.assemble())
+        let span = Span::begin();
+        let batch = self.assemble();
+        span.end(&self.metrics.batch_assemble_ns);
+        if !batch.is_empty() {
+            self.metrics.batch_rows.record(batch.rows as u64);
+        }
+        Some(batch)
     }
 
     /// Slice up to `max_batch` rows from the oldest unfinished requests
@@ -290,6 +311,10 @@ impl Batcher {
                 continue;
             }
             let take = (a.n - a.issued).min(self.max_batch - batch_row);
+            if a.issued == 0 && obs::timing_enabled() {
+                // first issuance: the request's whole queue wait is over
+                obs::record_since(&self.metrics.queue_wait_ns, a.admitted);
+            }
             match &mut a.src {
                 Source::Noise(rng) => {
                     for _ in 0..take * d {
@@ -378,6 +403,11 @@ mod tests {
     use super::*;
     use std::thread;
 
+    /// Test batcher with its own throwaway metrics registry.
+    fn mk(max_batch: usize, linger: Duration, d: usize, queue_cap: usize) -> Batcher {
+        Batcher::new(max_batch, linger, d, queue_cap, Arc::new(Metrics::new()))
+    }
+
     fn gen_req(n: usize, seed: u64) -> (GenRequest, mpsc::Receiver<Reply>) {
         let (rtx, rrx) = mpsc::channel();
         (
@@ -399,7 +429,7 @@ mod tests {
     #[test]
     fn batches_accumulate_within_linger() {
         let d = 4;
-        let mut b = Batcher::new(8, Duration::from_millis(50), d, 64);
+        let mut b = mk(8, Duration::from_millis(50), d, 64);
         let tx = b.submitter();
         let mut rxs = Vec::new();
         for i in 0..3 {
@@ -416,7 +446,7 @@ mod tests {
 
     #[test]
     fn full_batch_returns_immediately() {
-        let mut b = Batcher::new(4, Duration::from_secs(10), 4, 64); // long linger
+        let mut b = mk(4, Duration::from_secs(10), 4, 64); // long linger
         let tx = b.submitter();
         let (req, _rrx) = gen_req(4, 0);
         tx.send(req).unwrap();
@@ -430,12 +460,12 @@ mod tests {
     fn noise_is_per_request_and_independent_of_cobatching() {
         let d = 3;
         // alone
-        let mut b = Batcher::new(8, Duration::from_millis(5), d, 64);
+        let mut b = mk(8, Duration::from_millis(5), d, 64);
         let (req, _r) = gen_req(2, 42);
         b.submitter().send(req).unwrap();
         let alone = b.next_batch().unwrap();
         // co-batched behind another request with a different seed
-        let mut b2 = Batcher::new(8, Duration::from_millis(5), d, 64);
+        let mut b2 = mk(8, Duration::from_millis(5), d, 64);
         let (other, _r2) = gen_req(3, 7);
         let (req, _r3) = gen_req(2, 42);
         b2.submitter().send(other).unwrap();
@@ -448,7 +478,7 @@ mod tests {
         assert_eq!(alone.x0, expected_noise(42, 2, d));
         // two co-batched requests with the SAME seed get the same noise
         // (the old xor-fold cancelled them to the base seed instead)
-        let mut b3 = Batcher::new(8, Duration::from_millis(5), d, 64);
+        let mut b3 = mk(8, Duration::from_millis(5), d, 64);
         let (ra, _ka) = gen_req(1, 9);
         let (rb, _kb) = gen_req(1, 9);
         b3.submitter().send(ra).unwrap();
@@ -462,7 +492,7 @@ mod tests {
     fn large_request_slices_across_batches_and_reassembles_exact_n() {
         let d = 2;
         let (n, max_batch) = (10usize, 4usize);
-        let mut b = Batcher::new(max_batch, Duration::from_millis(1), d, 64);
+        let mut b = mk(max_batch, Duration::from_millis(1), d, 64);
         let (req, rrx) = gen_req(n, 5);
         b.submitter().send(req).unwrap();
         let mut sizes = Vec::new();
@@ -487,7 +517,7 @@ mod tests {
     #[test]
     fn directions_are_not_mixed_in_one_batch() {
         let d = 2;
-        let mut b = Batcher::new(8, Duration::from_millis(5), d, 64);
+        let mut b = mk(8, Duration::from_millis(5), d, 64);
         let (gtx, grx) = mpsc::channel();
         let (etx, erx) = mpsc::channel();
         b.submitter()
@@ -522,7 +552,7 @@ mod tests {
     #[test]
     fn failed_batch_fails_only_its_requests() {
         let d = 2;
-        let mut b = Batcher::new(2, Duration::from_millis(1), d, 64);
+        let mut b = mk(2, Duration::from_millis(1), d, 64);
         let (req, rrx) = gen_req(2, 3);
         b.submitter().send(req).unwrap();
         let batch = b.next_batch().unwrap();
@@ -535,7 +565,7 @@ mod tests {
     #[test]
     fn invalid_requests_fail_fast_without_admission() {
         let d = 4;
-        let mut b = Batcher::new(4, Duration::from_millis(1), d, 64);
+        let mut b = mk(4, Duration::from_millis(1), d, 64);
         let (ztx, zrx) = mpsc::channel();
         b.submitter()
             .send(GenRequest {
@@ -558,9 +588,38 @@ mod tests {
         assert!(erx.recv().unwrap().unwrap_err().contains("flat [n, d]"));
     }
 
+    /// The batcher feeds the owning server's registry: every non-empty
+    /// batch records its row count, and (with timing on) the first
+    /// issuance of a request records its queue wait.
+    #[test]
+    fn metrics_record_assembly_and_queue_wait() {
+        let _g = crate::obs::span::TEST_TIMING_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        crate::obs::set_timing_enabled(true);
+        let d = 2;
+        let m = Arc::new(Metrics::new());
+        let mut b = Batcher::new(4, Duration::from_millis(1), d, 64, m.clone());
+        let (req, _r) = gen_req(2, 1);
+        b.submitter().send(req).unwrap();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.rows, 2);
+        assert_eq!(m.batch_rows.snapshot().count, 1, "rows histogram fed");
+        if !cfg!(feature = "no-obs") {
+            assert_eq!(m.queue_wait_ns.snapshot().count, 1, "queue wait fed once");
+            assert!(m.batch_assemble_ns.snapshot().count >= 1, "assembly timed");
+        }
+        // the sliced tail must NOT record queue wait again
+        let rows = batch.x0.clone();
+        b.complete(batch, Ok(&rows));
+        if !cfg!(feature = "no-obs") {
+            assert_eq!(m.queue_wait_ns.snapshot().count, 1);
+        }
+    }
+
     #[test]
     fn next_batch_times_out_empty_when_idle() {
-        let mut b = Batcher::new(4, Duration::from_millis(1), 2, 64);
+        let mut b = mk(4, Duration::from_millis(1), 2, 64);
         let batch = b.next_batch().unwrap();
         assert!(batch.is_empty());
         // a request sent from another thread still arrives

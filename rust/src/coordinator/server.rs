@@ -12,11 +12,21 @@
 //!   <- {"ok": true, "model": "ot4", "n": 2, "d": 768, "latents": [...]}
 //!   -> {"op": "stats"}
 //!   <- {"ok": true, "requests": 9, "batches": 3, "samples": 18,
-//!       "encodes": 2, "queue_depth": 0,
+//!       "encodes": 2, "errors": 0, "queue_depth": 0,
 //!       "resident_bytes": 5443584, "workspace_bytes": 1245184}
+//!   -> {"op": "metrics"}                     (or "format": "json")
+//!   <- {"ok": true, "content_type": "text/plain; version=0.0.4",
+//!       "body": "# HELP fmq_server_requests_total ...\n..."}
 //!   -> {"op": "models"}
 //!   <- {"ok": true, "models": ["fp32", "ot2", ...]}
 //!   -> {"op": "ping"} / {"op": "shutdown"}
+//!
+//! Counter/gauge values in `stats` replies are integer-exact
+//! ([`Json::Int`] — no f64 2^53 precision cliff for byte gauges). The
+//! richer `metrics` op exposes the full [`crate::obs`] registry —
+//! request-latency / queue-wait / per-ODE-step histograms with
+//! p50/p95/p99 estimates — as Prometheus text-format or JSON; the
+//! catalogue is documented in `docs/OBSERVABILITY.md`.
 //!
 //! Serving contracts:
 //!
@@ -40,7 +50,8 @@
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, SyncSender};
 use std::sync::Arc;
 use std::thread;
@@ -53,6 +64,7 @@ use crate::coordinator::registry::{Registry, Variant};
 use crate::engine::{CpuRefEngine, Engine, EngineKind, LutEngine, LutV2Engine, Tuner};
 use crate::flow::sampler::{self, Direction, EngineStep, HloQStep, HloStep};
 use crate::model::spec::ModelSpec;
+use crate::obs::{self, Metrics, Span};
 use crate::runtime::SharedArtifacts;
 use crate::util::json::{parse, Json};
 
@@ -76,6 +88,10 @@ pub struct ServerConfig {
     /// Bound on queued requests per model variant (backpressure: submits
     /// block once the queue is full).
     pub queue_cap: usize,
+    /// Write a Prometheus text-format metrics snapshot to this path when
+    /// the server stops (the `--metrics-dump` flag), so benches and CI
+    /// capture latency trajectories as artifacts.
+    pub metrics_dump: Option<PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -86,6 +102,7 @@ impl Default for ServerConfig {
             linger: Duration::from_millis(5),
             engine: None,
             queue_cap: 256,
+            metrics_dump: None,
         }
     }
 }
@@ -150,34 +167,15 @@ fn resolve_engine<'a>(
     }
 }
 
-/// Metrics counters exposed for the bench harness and the `stats` op.
-#[derive(Default)]
-pub struct ServerStats {
-    /// Protocol requests handled (every op).
-    pub requests: AtomicU64,
-    /// Super-batches executed.
-    pub batches: AtomicU64,
-    /// Rows generated (forward ODE).
-    pub samples: AtomicU64,
-    /// Rows encoded (reverse ODE).
-    pub encodes: AtomicU64,
-    /// Rows admitted but not yet completed, summed over variants (gauge).
-    pub queue_depth: AtomicU64,
-    /// Model bytes resident across the native engines (packed codes +
-    /// codebooks + biases), summed over variant workers at startup.
-    pub resident_bytes: AtomicU64,
-    /// High-water scratch bytes across every worker's arenas (the
-    /// per-worker `EngineStep` workspace + the engine pool slots),
-    /// summed over variant workers (gauge, monotone per worker).
-    pub workspace_bytes: AtomicU64,
-}
-
-/// The running server handle.
+/// The running server handle. `stats` is the per-server
+/// [`crate::obs::Metrics`] registry (the old ad-hoc `ServerStats`
+/// counters live there now, plus the lifecycle histograms).
 pub struct Server {
     pub addr: std::net::SocketAddr,
-    pub stats: Arc<ServerStats>,
+    pub stats: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
     threads: Vec<thread::JoinHandle<()>>,
+    metrics_dump: Option<PathBuf>,
 }
 
 impl Server {
@@ -188,6 +186,19 @@ impl Server {
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
+        // final snapshot after every worker has drained: the artifact CI
+        // and benches pick up (`--metrics-dump`)
+        if let Some(path) = &self.metrics_dump {
+            if let Err(e) = std::fs::write(path, obs::render_prometheus(&self.stats)) {
+                eprintln!("metrics dump to {} failed: {e}", path.display());
+            }
+        }
+    }
+
+    /// Whether a client issued the `shutdown` op (or `stop` began). The
+    /// CLI's serve loop polls this to exit and write the metrics dump.
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
     }
 }
 
@@ -207,7 +218,7 @@ pub fn serve(
     let listener = TcpListener::bind(&cfg.addr)?;
     let addr = listener.local_addr()?;
     let shutdown = Arc::new(AtomicBool::new(false));
-    let stats = Arc::new(ServerStats::default());
+    let stats = Arc::new(Metrics::new());
     let mut threads = Vec::new();
 
     // one batcher + worker per variant
@@ -218,7 +229,7 @@ pub fn serve(
     let d = registry.spec.d;
     let mut submitters = std::collections::BTreeMap::new();
     for name in registry.names() {
-        let batcher = Batcher::new(batch_size, cfg.linger, d, cfg.queue_cap);
+        let batcher = Batcher::new(batch_size, cfg.linger, d, cfg.queue_cap, stats.clone());
         submitters.insert(name.clone(), batcher.submitter());
         let reg = registry.clone();
         let art = art.clone();
@@ -260,6 +271,7 @@ pub fn serve(
         stats,
         shutdown,
         threads,
+        metrics_dump: cfg.metrics_dump,
     })
 }
 
@@ -269,7 +281,7 @@ fn worker_loop(
     registry: Arc<Registry>,
     art: Option<Arc<SharedArtifacts>>,
     mut batcher: Batcher,
-    stats: Arc<ServerStats>,
+    stats: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
     steps: usize,
     batch_size: usize,
@@ -308,12 +320,10 @@ fn worker_loop(
     // step grid the velocity hot path performs zero heap allocations
     let mut native = engine.as_deref().map(EngineStep::new);
     if let Some(e) = engine.as_deref() {
-        stats
-            .resident_bytes
-            .fetch_add(e.resident_bytes() as u64, Ordering::Relaxed);
+        stats.resident_bytes.add(e.resident_bytes() as i64);
     }
-    let mut gauge = 0u64; // this worker's last contribution to queue_depth
-    let mut ws_gauge = 0u64; // last contribution to workspace_bytes
+    let mut gauge = 0i64; // this worker's last contribution to queue_depth
+    let mut ws_gauge = 0i64; // last contribution to workspace_bytes
     while !shutdown.load(Ordering::SeqCst) {
         let Some(batch) = batcher.next_batch() else {
             // all submitters dropped -> server is shutting down
@@ -322,6 +332,7 @@ fn worker_loop(
         if batch.is_empty() {
             continue; // wait timeout: loop to re-check the shutdown flag
         }
+        let run_span = Span::begin();
         let res = run_rows(
             native.as_mut(),
             variant,
@@ -332,37 +343,35 @@ fn worker_loop(
             batch_size,
             d,
         );
+        run_span.end(&stats.batch_run_ns);
         match res {
             Ok(rows) => {
-                stats.batches.fetch_add(1, Ordering::Relaxed);
+                stats.batches.inc();
                 let counter = match batch.dir {
                     Direction::Forward => &stats.samples,
                     Direction::Reverse => &stats.encodes,
                 };
-                counter.fetch_add(batch.rows as u64, Ordering::Relaxed);
+                counter.add(batch.rows as u64);
                 batcher.complete(batch, Ok(&rows));
             }
             Err(e) => batcher.complete(batch, Err(&e.to_string())),
         }
-        // export backlog as a signed delta so the gauge sums over workers
-        let depth = batcher.backlog_rows() as u64;
-        stats
-            .queue_depth
-            .fetch_add(depth.wrapping_sub(gauge), Ordering::Relaxed);
+        // export backlog as ONE signed delta per iteration so the gauge
+        // sums correctly over concurrent workers and can never wrap: a
+        // reader observes depth transitions atomically (no fetch_sub/
+        // fetch_add window where another worker's export interleaves)
+        let depth = batcher.backlog_rows() as i64;
+        stats.queue_depth.add(depth - gauge);
         gauge = depth;
         // arena high-water, same delta scheme (monotone per worker)
         let hw = native
             .as_ref()
             .map(|be| be.workspace_bytes() + be.engine().workspace_bytes())
-            .unwrap_or(0) as u64;
-        stats
-            .workspace_bytes
-            .fetch_add(hw.wrapping_sub(ws_gauge), Ordering::Relaxed);
+            .unwrap_or(0) as i64;
+        stats.workspace_bytes.add(hw - ws_gauge);
         ws_gauge = hw;
     }
-    stats
-        .queue_depth
-        .fetch_add(0u64.wrapping_sub(gauge), Ordering::Relaxed);
+    stats.queue_depth.add(-gauge);
 }
 
 /// Integrate one super-batch in the given direction. `native = Some(..)`
@@ -415,7 +424,7 @@ fn handle_conn(
     stream: TcpStream,
     registry: &Registry,
     submitters: &std::collections::BTreeMap<String, SyncSender<GenRequest>>,
-    stats: &ServerStats,
+    stats: &Metrics,
     shutdown: &AtomicBool,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
@@ -468,14 +477,19 @@ fn handle_conn(
         }
         let reply = match handle_request(trimmed, registry, submitters, stats, shutdown) {
             Ok(j) => j,
-            Err(e) => Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::Str(e.to_string())),
-            ]),
+            Err(e) => {
+                stats.errors.inc();
+                Json::obj(vec![
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::Str(e.to_string())),
+                ])
+            }
         };
+        let ser_span = Span::begin();
         writer.write_all(reply.to_string().as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
+        ser_span.end(&stats.reply_serialize_ns);
         if shutdown.load(Ordering::SeqCst) {
             return Ok(());
         }
@@ -509,11 +523,11 @@ fn handle_request(
     line: &str,
     registry: &Registry,
     submitters: &std::collections::BTreeMap<String, SyncSender<GenRequest>>,
-    stats: &ServerStats,
+    stats: &Metrics,
     shutdown: &AtomicBool,
 ) -> Result<Json> {
     let req = parse(line)?;
-    stats.requests.fetch_add(1, Ordering::Relaxed);
+    stats.requests.inc();
     match req.req_str("op")? {
         "ping" => Ok(Json::obj(vec![("ok", Json::Bool(true))])),
         "models" => Ok(Json::obj(vec![
@@ -523,37 +537,44 @@ fn handle_request(
                 Json::Arr(registry.names().into_iter().map(Json::Str).collect()),
             ),
         ])),
+        // integer-exact ([`Json::Int`]): byte gauges can legitimately
+        // exceed 2^53, where an f64 wire value silently rounds
         "stats" => Ok(Json::obj(vec![
             ("ok", Json::Bool(true)),
-            (
-                "requests",
-                Json::Num(stats.requests.load(Ordering::Relaxed) as f64),
-            ),
-            (
-                "batches",
-                Json::Num(stats.batches.load(Ordering::Relaxed) as f64),
-            ),
-            (
-                "samples",
-                Json::Num(stats.samples.load(Ordering::Relaxed) as f64),
-            ),
-            (
-                "encodes",
-                Json::Num(stats.encodes.load(Ordering::Relaxed) as f64),
-            ),
-            (
-                "queue_depth",
-                Json::Num(stats.queue_depth.load(Ordering::Relaxed) as f64),
-            ),
-            (
-                "resident_bytes",
-                Json::Num(stats.resident_bytes.load(Ordering::Relaxed) as f64),
-            ),
-            (
-                "workspace_bytes",
-                Json::Num(stats.workspace_bytes.load(Ordering::Relaxed) as f64),
-            ),
+            ("requests", Json::Int(stats.requests.get() as i128)),
+            ("batches", Json::Int(stats.batches.get() as i128)),
+            ("samples", Json::Int(stats.samples.get() as i128)),
+            ("encodes", Json::Int(stats.encodes.get() as i128)),
+            ("errors", Json::Int(stats.errors.get() as i128)),
+            ("queue_depth", Json::Int(stats.queue_depth.get() as i128)),
+            ("resident_bytes", Json::Int(stats.resident_bytes.get() as i128)),
+            ("workspace_bytes", Json::Int(stats.workspace_bytes.get() as i128)),
         ])),
+        "metrics" => {
+            let format = match req.get("format") {
+                None => "prometheus",
+                Some(j) => j
+                    .as_str()
+                    .ok_or_else(|| anyhow!("format must be a string"))?,
+            };
+            match format {
+                "prometheus" => Ok(Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    (
+                        "content_type",
+                        Json::Str("text/plain; version=0.0.4".to_string()),
+                    ),
+                    ("body", Json::Str(obs::render_prometheus(stats))),
+                ])),
+                "json" => Ok(Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("metrics", obs::render_json(stats)),
+                ])),
+                other => Err(anyhow!(
+                    "unknown metrics format '{other}' (expected 'prometheus' or 'json')"
+                )),
+            }
+        }
         "shutdown" => {
             shutdown.store(true, Ordering::SeqCst);
             Ok(Json::obj(vec![("ok", Json::Bool(true))]))
@@ -570,15 +591,17 @@ fn handle_request(
                 None => 0u64,
                 Some(j) => {
                     let s = j
-                        .as_f64()
-                        .ok_or_else(|| anyhow!("seed must be a number"))?;
-                    if s < 0.0 || s.fract() != 0.0 || s >= 9_007_199_254_740_992.0 {
+                        .as_u64()
+                        .ok_or_else(|| anyhow!("seed must be an integer in 0..2^53"))?;
+                    if s >= 9_007_199_254_740_992 {
                         bail!("seed must be an integer in 0..2^53 (got {s})");
                     }
-                    s as u64
+                    s
                 }
             };
+            let latency = Span::begin();
             let imgs = submit(submitters, model, Work::Generate { n, seed })?;
+            latency.end(&stats.request_latency_ns);
             let d = registry.spec.d;
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
@@ -602,7 +625,9 @@ fn handle_request(
             if n > MAX_N {
                 bail!("encode rows must be in 1..={MAX_N} (got {n})");
             }
+            let latency = Span::begin();
             let latents = submit(submitters, model, Work::Encode { rows })?;
+            latency.end(&stats.request_latency_ns);
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("model", Json::Str(model.to_string())),
@@ -676,11 +701,22 @@ impl Client {
     }
 
     /// Server counters (`requests`/`batches`/`samples`/`encodes`/
-    /// `queue_depth`) plus the memory gauges: `resident_bytes` (packed
-    /// model bytes held by the native engines) and `workspace_bytes`
-    /// (high-water scratch across every worker's reusable arenas).
+    /// `errors`/`queue_depth`) plus the memory gauges: `resident_bytes`
+    /// (packed model bytes held by the native engines) and
+    /// `workspace_bytes` (high-water scratch across every worker's
+    /// reusable arenas). Values are integer-exact ([`Json::Int`]).
     pub fn stats(&mut self) -> Result<Json> {
         self.checked(&Json::obj(vec![("op", Json::Str("stats".into()))]))
+    }
+
+    /// Full metrics snapshot. `format` is `"prometheus"` (reply carries
+    /// `content_type` + text-format `body`) or `"json"` (reply carries a
+    /// structured `metrics` object).
+    pub fn metrics(&mut self, format: &str) -> Result<Json> {
+        self.checked(&Json::obj(vec![
+            ("op", Json::Str("metrics".into())),
+            ("format", Json::Str(format.into())),
+        ]))
     }
 }
 

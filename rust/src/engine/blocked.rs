@@ -92,6 +92,7 @@ pub fn matmul_stripe(
     if w == 0 || m == 0 || kd == 0 {
         return;
     }
+    let span = crate::obs::Span::begin();
     let bits = layer.packed.bits.clamp(1, 8) as usize;
     let levels: &[f32] = &layer.levels;
     let klen = levels.len();
@@ -215,6 +216,7 @@ pub fn matmul_stripe(
         }
         k0 += kt;
     }
+    span.end(&crate::obs::ENGINE.v2_kernel_ns);
 }
 
 /// Full-width blocked matmul: `out[m, cols] += x[m, rows] @ W`.

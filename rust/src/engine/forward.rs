@@ -134,7 +134,9 @@ impl LutModel {
             out,
             act,
             &mut |l: &LutLayer, xs: &[f32], o: &mut [f32], m: usize| {
-                l.matmul_into_ws(xs, o, m, &mut *tile)
+                let span = crate::obs::Span::begin();
+                l.matmul_into_ws(xs, o, m, &mut *tile);
+                span.end(&crate::obs::ENGINE.layer_sweep_ns);
             },
         );
     }
@@ -159,6 +161,7 @@ impl LutModel {
     ) {
         let (act, kern) = ws.split();
         let mm = &mut |l: &LutLayer, xs: &[f32], o: &mut [f32], m: usize| {
+            let span = crate::obs::Span::begin();
             let n = l.cols;
             let sharded = col_pool
                 .filter(|p| p.threads() > 1 && m < p.threads() && n >= 2 * COL_SHARD_MIN);
@@ -192,6 +195,7 @@ impl LutModel {
                 let plan = blocked::plan_stripe(l, tuner, xs, m, 0, n, &mut *kern);
                 blocked::matmul_stripe(l, xs, o, m, 0, n, plan, &mut kern.scratch);
             }
+            span.end(&crate::obs::ENGINE.layer_sweep_ns);
         };
         self.forward_with(x, t, out, act, mm);
     }

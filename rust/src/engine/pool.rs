@@ -123,6 +123,7 @@ impl Pool {
         assert_eq!(x.len(), b * d, "x rows must match t length");
         assert_eq!(out.len(), b * d, "out rows must match t length");
         let shards = self.threads.min(b.max(1));
+        crate::obs::ENGINE.shard_jobs_total.add(shards.max(1) as u64);
         if shards <= 1 {
             return f(0, x, t, out);
         }
@@ -180,6 +181,7 @@ impl Pool {
         }
         let min = min_per_shard.max(1);
         let shards = self.threads.min(n.div_ceil(min)).max(1);
+        crate::obs::ENGINE.shard_jobs_total.add(shards as u64);
         if shards <= 1 {
             let mut one = Vec::with_capacity(1);
             one.push((0, n, f(0, 0, n)));

@@ -160,6 +160,9 @@ impl Tuner {
                         best = cand;
                     }
                 }
+                // one tick per measured shape (cache misses only): the
+                // metrics op shows how much warm-up autotuning cost
+                crate::obs::ENGINE.tune_plans_total.inc();
                 *cache
                     .lock()
                     .unwrap_or_else(|e| e.into_inner())

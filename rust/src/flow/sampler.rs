@@ -139,6 +139,9 @@ impl StepBackend for EngineStep<'_> {
         let dt = grid.dt();
         let mut x = x;
         for t in grid {
+            // span + atomics only — never touches x/v, so the result is
+            // bit-identical with timing on, off, or compiled out
+            let span = crate::obs::Span::begin();
             self.tb.clear();
             self.tb.resize(b, t);
             take_zeroed(&mut self.v, b * d);
@@ -149,6 +152,7 @@ impl StepBackend for EngineStep<'_> {
             for (xi, &vi) in x.iter_mut().zip(self.v.iter()) {
                 *xi += dt * vi;
             }
+            span.end(&crate::obs::ENGINE.ode_step_ns);
         }
         Ok(x)
     }
@@ -433,6 +437,39 @@ mod tests {
         let rev = run_direction(&mut be, &x, Direction::Reverse, 4).unwrap();
         assert_eq!(rev, encode(&mut be, &x, 4).unwrap());
         assert_ne!(fwd, rev);
+    }
+
+    /// Instrumentation must be an observer: sampling through the engine
+    /// adapter is bit-identical with span timing on and off (the spans
+    /// only read the clock and bump atomics), and the per-ODE-step
+    /// histogram actually fills while timing is on.
+    #[test]
+    fn engine_step_is_bit_identical_with_timing_on_and_off() {
+        use crate::engine::LutEngine;
+        use crate::quant::{quantize_model, QuantMethod};
+        let _g = crate::obs::span::TEST_TIMING_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let (spec, theta) = setup();
+        let qm = quantize_model(&spec, &theta, QuantMethod::Ot, 4);
+        let lut = LutEngine::new(&qm).unwrap();
+        let x0 = vec![0.2f32; 3 * spec.d];
+
+        crate::obs::set_timing_enabled(true);
+        let before = crate::obs::ENGINE.ode_step_ns.snapshot().count;
+        let mut be = EngineStep::new(&lut);
+        let on = generate_from(&mut be, &x0, 6).unwrap();
+        let after = crate::obs::ENGINE.ode_step_ns.snapshot().count;
+        if !cfg!(feature = "no-obs") {
+            assert_eq!(after - before, 6, "one record per ODE step");
+        }
+
+        crate::obs::set_timing_enabled(false);
+        let mut be = EngineStep::new(&lut);
+        let off = generate_from(&mut be, &x0, 6).unwrap();
+        crate::obs::set_timing_enabled(true);
+
+        assert_eq!(on, off, "timing must never change sampling results");
     }
 
     #[test]

@@ -77,6 +77,7 @@ pub mod flow;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod stats;

@@ -503,7 +503,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .flag("bits", "2,4,8", "bit-widths to build")
         .flag("steps", "16", "euler steps per sample")
         .flag("engine", "auto", "execution backend: auto|cpu-ref|lut|lut2|runtime")
-        .flag("queue", "256", "per-variant request queue bound (backpressure)");
+        .flag("queue", "256", "per-variant request queue bound (backpressure)")
+        .flag(
+            "metrics-dump",
+            "",
+            "write a Prometheus text metrics snapshot here on shutdown",
+        );
     let a = cmd.parse(argv)?;
     let spec = ModelSpec::default_spec();
     let dataset = Dataset::parse(a.get("dataset"))
@@ -515,45 +520,50 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let registry = Arc::new(Registry::build_fleet(&spec, &theta, &methods, &bits));
     let art = load_art(false)?.map(|a| Arc::new(fmq::runtime::SharedArtifacts::new(a)));
     let engine = parse_engine(&a)?;
+    let metrics_dump = match a.get("metrics-dump") {
+        "" => None,
+        p => Some(std::path::PathBuf::from(p)),
+    };
     let cfg = ServerConfig {
         addr: a.get("addr").to_string(),
         steps: a.get_usize("steps")?,
         engine,
         queue_cap: a.get_usize("queue")?.max(1),
+        metrics_dump,
         ..Default::default()
     };
     let server = serve(registry.clone(), art, cfg)?;
     println!(
         "serving {} variants on {} (engine: {}) — ops: \
-         generate/encode/stats/models/ping/shutdown \
+         generate/encode/stats/metrics/models/ping/shutdown \
          (deterministic per (model, n, seed); n up to 256 sliced to exact count)",
         registry.len(),
         server.addr,
         engine.map(|k| k.name()).unwrap_or("auto")
     );
-    // block until shutdown op flips the flag
+    // block until the shutdown op flips the flag, then join workers and
+    // write the --metrics-dump snapshot (Server::stop)
     loop {
         std::thread::sleep(std::time::Duration::from_millis(200));
-        if server.stats.requests.load(std::sync::atomic::Ordering::Relaxed) > 0
-            && server
-                .stats
-                .samples
-                .load(std::sync::atomic::Ordering::Relaxed)
-                % 1000
-                == 999
-        {
+        if server.shutdown_requested() {
+            break;
+        }
+        if server.stats.requests.get() > 0 && server.stats.samples.get() % 1000 == 999 {
             // periodic stats line (cheap, approximate; also served as
             // the `stats` op)
             println!(
-                "requests={} batches={} samples={} encodes={} queue_depth={}",
-                server.stats.requests.load(std::sync::atomic::Ordering::Relaxed),
-                server.stats.batches.load(std::sync::atomic::Ordering::Relaxed),
-                server.stats.samples.load(std::sync::atomic::Ordering::Relaxed),
-                server.stats.encodes.load(std::sync::atomic::Ordering::Relaxed),
-                server.stats.queue_depth.load(std::sync::atomic::Ordering::Relaxed)
+                "requests={} batches={} samples={} encodes={} errors={} queue_depth={}",
+                server.stats.requests.get(),
+                server.stats.batches.get(),
+                server.stats.samples.get(),
+                server.stats.encodes.get(),
+                server.stats.errors.get(),
+                server.stats.queue_depth.get()
             );
         }
     }
+    server.stop();
+    Ok(())
 }
 
 fn cmd_info(argv: &[String]) -> Result<()> {

@@ -1,0 +1,266 @@
+//! Exposition: snapshot the registries into Prometheus text-format or
+//! integer-exact JSON.
+//!
+//! Free functions, deliberately **not** methods on [`Hist`]/[`Metrics`]:
+//! rendering allocates (strings, JSON trees), and the registry types are
+//! enrolled wholesale in the `no_alloc` lint via wildcard roots — keeping
+//! exposition outside those types keeps the lint wall airtight.
+//!
+//! Conventions (full catalogue: `docs/OBSERVABILITY.md`):
+//!
+//! * names are `fmq_<registry>_<stage>_<unit>`; counters end `_total`,
+//!   durations are `_ns`;
+//! * histogram `le` boundaries sit on octave edges `2^m - 1` so each
+//!   cumulative count is a whole-bucket prefix sum — no sample is ever
+//!   split across an `le` line;
+//! * every histogram gets an `_approx` summary twin carrying
+//!   p50/p95/p99 *upper-bound* estimates ([`HistSnapshot::quantile`]
+//!   brackets the true quantile; the upper edge is reported so the
+//!   estimate errs pessimistic).
+
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+use super::hist::HistSnapshot;
+use super::{Metrics, ENGINE};
+
+/// The `le` octave edges emitted per histogram: `2^m - 1` for `m` in
+/// `3..=63`, then `+Inf`.
+const LE_OCTAVES: std::ops::RangeInclusive<u32> = 3..=63;
+
+/// Quantiles exposed on every `_approx` summary family.
+const QUANTILES: [(&str, f64); 3] = [("0.5", 0.5), ("0.95", 0.95), ("0.99", 0.99)];
+
+/// Render one Prometheus text-format snapshot of the per-server registry
+/// `m` plus the process-global [`ENGINE`] registry.
+pub fn render_prometheus(m: &Metrics) -> String {
+    let mut out = String::with_capacity(32 * 1024);
+
+    for (name, help, v) in [
+        ("fmq_server_requests_total", "Requests admitted (generate + encode).", m.requests.get()),
+        ("fmq_server_batches_total", "Batches executed by variant workers.", m.batches.get()),
+        ("fmq_server_samples_total", "Samples produced by generate requests.", m.samples.get()),
+        ("fmq_server_encodes_total", "Encode requests served.", m.encodes.get()),
+        ("fmq_server_errors_total", "Requests answered with an error reply.", m.errors.get()),
+    ] {
+        counter_block(&mut out, name, help, v);
+    }
+
+    for (name, help, v) in [
+        ("fmq_server_queue_depth", "Rows admitted but not yet completed.", m.queue_depth.get()),
+        ("fmq_server_resident_bytes", "Packed model bytes resident.", m.resident_bytes.get()),
+        (
+            "fmq_server_workspace_bytes",
+            "High-water workspace-arena bytes across workers.",
+            m.workspace_bytes.get(),
+        ),
+    ] {
+        gauge_block(&mut out, name, help, v);
+    }
+
+    for (name, help, h) in [
+        (
+            "fmq_server_request_latency_ns",
+            "End-to-end request latency (admission to reply built).",
+            &m.request_latency_ns,
+        ),
+        ("fmq_server_queue_wait_ns", "Admission to first batch assembly.", &m.queue_wait_ns),
+        ("fmq_server_batch_assemble_ns", "Batch input assembly time.", &m.batch_assemble_ns),
+        ("fmq_server_batch_run_ns", "Batch sampler execution time.", &m.batch_run_ns),
+        ("fmq_server_batch_rows", "Rows per executed batch.", &m.batch_rows),
+        (
+            "fmq_server_reply_serialize_ns",
+            "Reply serialization + socket write time.",
+            &m.reply_serialize_ns,
+        ),
+    ] {
+        hist_block(&mut out, name, help, &h.snapshot());
+    }
+
+    for (name, help, v) in [
+        (
+            "fmq_engine_tune_plans_total",
+            "Autotune plan measurements (cache misses).",
+            ENGINE.tune_plans_total.get(),
+        ),
+        (
+            "fmq_engine_shard_jobs_total",
+            "Shard jobs dispatched by the pool (row + column axes).",
+            ENGINE.shard_jobs_total.get(),
+        ),
+    ] {
+        counter_block(&mut out, name, help, v);
+    }
+
+    for (name, help, h) in [
+        ("fmq_engine_ode_step_ns", "One Euler ODE step over a batch.", &ENGINE.ode_step_ns),
+        (
+            "fmq_engine_layer_sweep_ns",
+            "One layer GEMM inside the fused forward.",
+            &ENGINE.layer_sweep_ns,
+        ),
+        ("fmq_engine_v2_kernel_ns", "One v2 blocked-kernel stripe invocation.", &ENGINE.v2_kernel_ns),
+    ] {
+        hist_block(&mut out, name, help, &h.snapshot());
+    }
+
+    out
+}
+
+/// Render an integer-exact JSON snapshot (the `metrics` op's
+/// `format: "json"` body): counters/gauges as [`Json::Int`], histograms
+/// as `{count, sum, p50, p95, p99}` objects with upper-bound estimates.
+pub fn render_json(m: &Metrics) -> Json {
+    let server = Json::obj(vec![
+        ("requests", Json::Int(m.requests.get() as i128)),
+        ("batches", Json::Int(m.batches.get() as i128)),
+        ("samples", Json::Int(m.samples.get() as i128)),
+        ("encodes", Json::Int(m.encodes.get() as i128)),
+        ("errors", Json::Int(m.errors.get() as i128)),
+        ("queue_depth", Json::Int(m.queue_depth.get() as i128)),
+        ("resident_bytes", Json::Int(m.resident_bytes.get() as i128)),
+        ("workspace_bytes", Json::Int(m.workspace_bytes.get() as i128)),
+        ("request_latency_ns", hist_json(&m.request_latency_ns.snapshot())),
+        ("queue_wait_ns", hist_json(&m.queue_wait_ns.snapshot())),
+        ("batch_assemble_ns", hist_json(&m.batch_assemble_ns.snapshot())),
+        ("batch_run_ns", hist_json(&m.batch_run_ns.snapshot())),
+        ("batch_rows", hist_json(&m.batch_rows.snapshot())),
+        ("reply_serialize_ns", hist_json(&m.reply_serialize_ns.snapshot())),
+    ]);
+    let engine = Json::obj(vec![
+        ("tune_plans_total", Json::Int(ENGINE.tune_plans_total.get() as i128)),
+        ("shard_jobs_total", Json::Int(ENGINE.shard_jobs_total.get() as i128)),
+        ("ode_step_ns", hist_json(&ENGINE.ode_step_ns.snapshot())),
+        ("layer_sweep_ns", hist_json(&ENGINE.layer_sweep_ns.snapshot())),
+        ("v2_kernel_ns", hist_json(&ENGINE.v2_kernel_ns.snapshot())),
+    ]);
+    Json::obj(vec![("server", server), ("engine", engine)])
+}
+
+fn counter_block(out: &mut String, name: &str, help: &str, v: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+fn gauge_block(out: &mut String, name: &str, help: &str, v: i64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+fn hist_block(out: &mut String, name: &str, help: &str, s: &HistSnapshot) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    for m in LE_OCTAVES {
+        let le = (1u64 << m) - 1;
+        let cum = s.cumulative_at_octave(m);
+        let _ = writeln!(out, "{name}_bucket{{le=\"{le}\"}} {cum}");
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", s.count);
+    let _ = writeln!(out, "{name}_sum {}", s.sum);
+    let _ = writeln!(out, "{name}_count {}", s.count);
+
+    // bracketed-quantile summary twin (upper bounds — pessimistic)
+    let _ = writeln!(out, "# HELP {name}_approx Bucket-upper-bound quantile estimates of {name}.");
+    let _ = writeln!(out, "# TYPE {name}_approx summary");
+    for (label, q) in QUANTILES {
+        let (_, hi) = s.quantile(q);
+        let _ = writeln!(out, "{name}_approx{{quantile=\"{label}\"}} {hi}");
+    }
+    let _ = writeln!(out, "{name}_approx_sum {}", s.sum);
+    let _ = writeln!(out, "{name}_approx_count {}", s.count);
+}
+
+fn hist_json(s: &HistSnapshot) -> Json {
+    Json::obj(vec![
+        ("count", Json::Int(s.count as i128)),
+        ("sum", Json::Int(s.sum as i128)),
+        ("p50", Json::Int(s.quantile(0.5).1 as i128)),
+        ("p95", Json::Int(s.quantile(0.95).1 as i128)),
+        ("p99", Json::Int(s.quantile(0.99).1 as i128)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn family_count(text: &str) -> usize {
+        text.lines().filter(|l| l.starts_with("# TYPE ")).count()
+    }
+
+    #[test]
+    fn prometheus_snapshot_has_required_families() {
+        let m = Metrics::new();
+        m.requests.add(3);
+        m.request_latency_ns.record(1_500_000);
+        m.batch_rows.record(8);
+        let text = render_prometheus(&m);
+
+        assert!(family_count(&text) >= 12, "families: {}", family_count(&text));
+        for family in [
+            "fmq_server_requests_total",
+            "fmq_server_queue_depth",
+            "fmq_server_request_latency_ns",
+            "fmq_engine_ode_step_ns",
+            "fmq_engine_tune_plans_total",
+        ] {
+            assert!(text.contains(&format!("# TYPE {family} ")), "missing {family}");
+        }
+        assert!(text.contains("fmq_server_requests_total 3"));
+        // histogram plumbing: buckets are cumulative, +Inf == count
+        assert!(text.contains("fmq_server_request_latency_ns_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("fmq_server_request_latency_ns_count 1"));
+        assert!(text.contains("fmq_server_request_latency_ns_approx{quantile=\"0.5\"}"));
+        assert!(text.contains("quantile=\"0.99\""));
+    }
+
+    #[test]
+    fn bucket_lines_are_cumulative_and_monotone() {
+        let m = Metrics::new();
+        for v in [1u64, 100, 10_000, 1_000_000, u64::MAX] {
+            m.batch_run_ns.record(v);
+        }
+        let text = render_prometheus(&m);
+        let mut prev = 0u64;
+        let mut saw = 0;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("fmq_server_batch_run_ns_bucket{le=") {
+                let count: u64 = rest
+                    .split_whitespace()
+                    .next_back()
+                    .unwrap()
+                    .parse()
+                    .unwrap();
+                assert!(count >= prev, "bucket counts must be cumulative");
+                prev = count;
+                saw += 1;
+            }
+        }
+        assert!(saw > 10, "expected many le lines, got {saw}");
+        assert_eq!(prev, 5, "+Inf bucket must equal total count");
+    }
+
+    #[test]
+    fn json_snapshot_is_integer_exact() {
+        let m = Metrics::new();
+        m.resident_bytes.set(9_007_199_254_740_993); // 2^53 + 1
+        m.requests.inc();
+        let j = render_json(&m);
+        let server = j.get("server").unwrap();
+        assert_eq!(
+            server.get("resident_bytes").unwrap().as_i64(),
+            Some(9_007_199_254_740_993)
+        );
+        assert_eq!(server.get("requests").unwrap().as_u64(), Some(1));
+        // round-trips through the wire without precision loss
+        let back = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            back.get("server").unwrap().get("resident_bytes").unwrap().as_i64(),
+            Some(9_007_199_254_740_993)
+        );
+        assert!(back.get("engine").unwrap().get("ode_step_ns").is_some());
+    }
+}

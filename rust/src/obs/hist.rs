@@ -1,0 +1,283 @@
+//! Fixed-capacity, lock-free, log-scaled-bucket histogram.
+//!
+//! The layout is HDR-style with a linear head and 4 sub-buckets per
+//! octave above it:
+//!
+//! * values `0..8` get one exact bucket each (indices `0..8`) — the
+//!   regime where nanosecond deltas and small row counts live;
+//! * every octave `[2^m, 2^(m+1))` for `m >= 3` splits into 4 equal
+//!   sub-buckets (`4 * 61` indices), bounding the relative quantile
+//!   error at ~12.5% across the full `u64` range.
+//!
+//! That is [`BUCKETS`] `= 252` fixed `AtomicU64` slots: [`Hist::new`] is
+//! `const` (usable in `static` registries), [`Hist::record`] is a bucket
+//! index computation plus three `Relaxed` `fetch_add`s — no locks, no
+//! allocation, no ordering dependence — and a snapshot is a stack copy.
+//! Enrolled in `cargo xtask lint`'s `no_alloc` rule via the `Hist::*`
+//! wildcard root in `lint.toml`.
+//!
+//! Quantile estimates come bracketed: [`HistSnapshot::quantile`] returns
+//! the `(lo, hi)` bounds of the bucket holding the rank, so
+//! `lo <= true quantile <= hi` is a provable property (see the tests).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Values below this get one exact bucket each.
+const LINEAR: u64 = 8;
+/// Sub-buckets per octave above the linear head.
+const SUBS: usize = 4;
+/// Total bucket count: 8 linear + 4 sub-buckets × 61 octaves (msb 3..=63).
+pub const BUCKETS: usize = LINEAR as usize + SUBS * 61;
+
+/// A preallocated log-scaled histogram over `u64` samples (typically
+/// nanoseconds or row counts). All methods are lock-free and alloc-free.
+pub struct Hist {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Hist {
+    /// An empty histogram. `const` so registries can live in `static`s
+    /// with zero startup cost.
+    pub const fn new() -> Self {
+        // a const item as the repeat operand keeps this on MSRV 1.75
+        // (inline-const array repeat needs 1.79)
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Hist {
+            buckets: [ZERO; BUCKETS],
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample. Lock-free: three `Relaxed` `fetch_add`s. A
+    /// concurrent [`Hist::snapshot`] may observe the count and the bucket
+    /// increments independently (the snapshot is not atomic across
+    /// fields), but no increment is ever lost.
+    pub fn record(&self, v: u64) {
+        let idx = Self::bucket_index(v);
+        // bucket_index() < BUCKETS for every u64 (property-tested);
+        // `get` keeps the record path panic-free regardless
+        if let Some(b) = self.buckets.get(idx) {
+            b.fetch_add(1, Ordering::Relaxed);
+        }
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Bucket index for a value: identity below [`LINEAR`], then
+    /// `8 + 4*(msb-3) + sub` where `sub` is the top-two-bits-after-msb.
+    /// Monotone in `v`, total over `u64`, and always `< BUCKETS`.
+    pub const fn bucket_index(v: u64) -> usize {
+        if v < LINEAR {
+            return v as usize;
+        }
+        let msb = 63 - v.leading_zeros() as usize; // >= 3 since v >= 8
+        let sub = ((v >> (msb - 2)) - 4) as usize; // 0..4 within the octave
+        LINEAR as usize + (msb - 3) * SUBS + sub
+    }
+
+    /// Inclusive `(lo, hi)` value bounds of bucket `idx`. The buckets
+    /// tile `u64`: `bounds(0).0 == 0`, `bounds(BUCKETS-1).1 == u64::MAX`,
+    /// and each bucket starts one past the previous bucket's end.
+    pub const fn bucket_bounds(idx: usize) -> (u64, u64) {
+        if idx < LINEAR as usize {
+            return (idx as u64, idx as u64);
+        }
+        let octave = (idx - LINEAR as usize) / SUBS;
+        let sub = ((idx - LINEAR as usize) % SUBS) as u64;
+        let msb = octave + 3;
+        let width = 1u64 << (msb - 2);
+        let lo = (4 + sub) << (msb - 2);
+        (lo, lo + (width - 1))
+    }
+
+    /// Copy the current bucket counts into a stack snapshot. Not atomic
+    /// across buckets (concurrent records may straddle the copy) but
+    /// each bucket value is itself consistent.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut buckets = [0u64; BUCKETS];
+        for (dst, src) in buckets.iter_mut().zip(self.buckets.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        HistSnapshot {
+            buckets,
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A point-in-time copy of a [`Hist`]: plain `u64`s, free to inspect.
+pub struct HistSnapshot {
+    /// Per-bucket sample counts (see [`Hist::bucket_bounds`]).
+    pub buckets: [u64; BUCKETS],
+    /// Total samples recorded.
+    pub count: u64,
+    /// Sum of all recorded values (wrapping on overflow).
+    pub sum: u64,
+}
+
+impl HistSnapshot {
+    /// Bracketed quantile estimate: the inclusive `(lo, hi)` bounds of
+    /// the bucket containing the rank-`ceil(q * count)` smallest sample,
+    /// so `lo <= true quantile <= hi`. Returns `(0, 0)` when empty.
+    pub fn quantile(&self, q: f64) -> (u64, u64) {
+        if self.count == 0 {
+            return (0, 0);
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (idx, &c) in self.buckets.iter().enumerate() {
+            seen = seen.saturating_add(c);
+            if seen >= rank {
+                return Hist::bucket_bounds(idx);
+            }
+        }
+        Hist::bucket_bounds(BUCKETS - 1)
+    }
+
+    /// Cumulative count of samples `<= bound` where `bound = 2^m - 1`
+    /// (an octave edge, `m` in `3..=63`). These are exactly the `le`
+    /// boundaries the Prometheus exposition emits, chosen so the
+    /// cumulative sum is a whole-bucket prefix.
+    pub fn cumulative_at_octave(&self, m: u32) -> u64 {
+        let cut = LINEAR as usize + SUBS * (m as usize - 3);
+        let mut total = 0u64;
+        for &c in self.buckets.iter().take(cut) {
+            total = total.saturating_add(c);
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn bounds_are_monotone_and_tile_u64() {
+        // contiguity: each bucket starts one past the previous end
+        let (lo0, _) = Hist::bucket_bounds(0);
+        assert_eq!(lo0, 0);
+        for idx in 0..BUCKETS {
+            let (lo, hi) = Hist::bucket_bounds(idx);
+            assert!(lo <= hi, "idx {idx}: lo {lo} > hi {hi}");
+            if idx + 1 < BUCKETS {
+                let (next_lo, _) = Hist::bucket_bounds(idx + 1);
+                assert_eq!(next_lo, hi + 1, "gap/overlap after idx {idx}");
+            }
+        }
+        let (_, top) = Hist::bucket_bounds(BUCKETS - 1);
+        assert_eq!(top, u64::MAX, "buckets must cover all of u64");
+    }
+
+    #[test]
+    fn every_value_lands_in_exactly_one_bucket() {
+        // contiguous monotone bounds + index/bounds agreement on random
+        // values over every scale => exactly-one-bucket for all u64
+        forall("hist index within bounds", 512, |g| {
+            let shift = g.usize_in(0..=63);
+            let v = g.rng().next_u64() >> shift;
+            let idx = Hist::bucket_index(v);
+            if idx >= BUCKETS {
+                return false;
+            }
+            let (lo, hi) = Hist::bucket_bounds(idx);
+            lo <= v && v <= hi
+        });
+        // edges the random sweep could miss
+        for v in [0u64, 7, 8, 9, 15, 16, u64::MAX - 1, u64::MAX] {
+            let idx = Hist::bucket_index(v);
+            let (lo, hi) = Hist::bucket_bounds(idx);
+            assert!(lo <= v && v <= hi, "v={v} idx={idx} [{lo},{hi}]");
+        }
+    }
+
+    #[test]
+    fn index_is_monotone_at_every_bucket_edge() {
+        for idx in 0..BUCKETS {
+            let (lo, hi) = Hist::bucket_bounds(idx);
+            assert_eq!(Hist::bucket_index(lo), idx);
+            assert_eq!(Hist::bucket_index(hi), idx);
+            if hi < u64::MAX {
+                assert_eq!(Hist::bucket_index(hi + 1), idx + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn quantile_estimate_brackets_true_quantile() {
+        forall("hist quantile brackets truth", 64, |g| {
+            let n = g.len(1..=400);
+            let h = Hist::new();
+            let mut vals: Vec<u64> = Vec::with_capacity(n);
+            for _ in 0..n {
+                let shift = g.usize_in(0..=63);
+                let v = g.rng().next_u64() >> shift;
+                h.record(v);
+                vals.push(v);
+            }
+            vals.sort_unstable();
+            let snap = h.snapshot();
+            for q in [0.5, 0.95, 0.99] {
+                let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+                let truth = vals[rank - 1];
+                let (lo, hi) = snap.quantile(q);
+                if !(lo <= truth && truth <= hi) {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn concurrent_record_loses_no_counts() {
+        let h = Hist::new();
+        let threads = 4;
+        let per = 10_000u64;
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let h = &h;
+                s.spawn(move || {
+                    for i in 0..per {
+                        // mixed scales so several buckets contend
+                        h.record((t * per + i) << (i % 16));
+                    }
+                });
+            }
+        });
+        let snap = h.snapshot();
+        assert_eq!(snap.count, threads * per);
+        let bucket_total: u64 = snap.buckets.iter().sum();
+        assert_eq!(bucket_total, threads * per, "no increments lost");
+    }
+
+    #[test]
+    fn snapshot_sum_and_cumulative_agree() {
+        let h = Hist::new();
+        for v in [0u64, 1, 7, 8, 100, 1_000_000] {
+            h.record(v);
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 6);
+        assert_eq!(snap.sum, 1_001_116);
+        // le = 2^3 - 1 = 7 covers {0, 1, 7}
+        assert_eq!(snap.cumulative_at_octave(3), 3);
+        // le = 2^7 - 1 = 127 covers {0, 1, 7, 8, 100}
+        assert_eq!(snap.cumulative_at_octave(7), 5);
+        assert_eq!(snap.cumulative_at_octave(63), 6);
+        // empty histogram quantile is the (0,0) sentinel
+        assert_eq!(Hist::new().snapshot().quantile(0.5), (0, 0));
+    }
+}

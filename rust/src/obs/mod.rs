@@ -1,0 +1,228 @@
+//! Observability: a static, fixed-capacity, alloc-free metrics registry
+//! with timing spans and Prometheus-style exposition.
+//!
+//! Three pieces (full catalogue + conventions: `docs/OBSERVABILITY.md`):
+//!
+//! * **Registry** — [`Counter`] / [`Gauge`] / [`Hist`] primitives, all
+//!   `const`-constructible and lock-free. Every metric is a named struct
+//!   field registered at startup: [`Metrics`] is the per-server registry
+//!   (one `Arc` per [`crate::coordinator::server::Server`], replacing the
+//!   old ad-hoc `ServerStats`), and [`ENGINE`] is the process-global
+//!   engine registry reached directly from kernel code (`obs::ENGINE.x`)
+//!   with zero setup. Record paths allocate nothing and are enrolled in
+//!   `cargo xtask lint`'s `no_alloc` rule via wildcard roots
+//!   (`Hist::*`, `Counter::*`, `Gauge::*`, `Span::*`) in `lint.toml`.
+//! * **Spans** — [`Span`] / [`record_since`] bracket lifecycle stages
+//!   (queue wait, batch assembly, ODE steps, layer sweeps, reply
+//!   serialization) into histograms; runtime-disablable via
+//!   [`set_timing_enabled`] and compiled out entirely by the `no-obs`
+//!   cargo feature. Timing never changes sampling outputs.
+//! * **Exposition** — [`render_prometheus`] / [`render_json`] snapshot
+//!   both registries into Prometheus text-format (with p50/p95/p99
+//!   bracketed quantile estimates) or integer-exact JSON; served by the
+//!   server's `metrics` protocol op and the `--metrics-dump` flag.
+
+pub mod expo;
+pub mod hist;
+pub mod span;
+
+pub use expo::{render_json, render_prometheus};
+pub use hist::{Hist, HistSnapshot, BUCKETS};
+pub use span::{record_since, set_timing_enabled, timing_enabled, Span};
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+
+/// A monotonically increasing event count. Lock-free, alloc-free.
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// A zeroed counter (`const` — usable in `static` registries).
+    pub const fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    /// Add one.
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Add `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A signed instantaneous value (queue depth, resident bytes). Signed so
+/// concurrent `+delta`/`-delta` updates from different threads can
+/// transiently net below a reader's expectation without wrapping to
+/// 2^64-ish garbage — a reader can *see* (and a test can assert against)
+/// any accounting bug as a negative value instead.
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    /// A zeroed gauge (`const` — usable in `static` registries).
+    pub const fn new() -> Self {
+        Gauge(AtomicI64::new(0))
+    }
+
+    /// Apply a signed delta in one atomic update.
+    #[inline]
+    pub fn add(&self, delta: i64) {
+        self.0.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    /// Overwrite the value.
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Per-server metrics registry: one instance per
+/// [`crate::coordinator::server::Server`], shared via `Arc` with every
+/// worker and connection thread. Fixed capacity — every metric is a
+/// struct field, registered here at startup; recording is field access
+/// plus an atomic op, never a lookup.
+pub struct Metrics {
+    /// Requests admitted (`generate` + `encode`).
+    pub requests: Counter,
+    /// Batches executed by variant workers.
+    pub batches: Counter,
+    /// Samples produced by `generate` requests.
+    pub samples: Counter,
+    /// `encode` requests served.
+    pub encodes: Counter,
+    /// Requests that returned an error reply.
+    pub errors: Counter,
+    /// Rows admitted but not yet completed, across all variant queues.
+    pub queue_depth: Gauge,
+    /// Packed model bytes resident across serving variants.
+    pub resident_bytes: Gauge,
+    /// High-water workspace-arena bytes across variant workers.
+    pub workspace_bytes: Gauge,
+    /// End-to-end request latency (admission to reply built), ns.
+    pub request_latency_ns: Hist,
+    /// Admission → first time a request's rows are assembled, ns.
+    pub queue_wait_ns: Hist,
+    /// Time to assemble one batch's inputs, ns.
+    pub batch_assemble_ns: Hist,
+    /// Time to run one batch through the sampler, ns.
+    pub batch_run_ns: Hist,
+    /// Rows per executed batch.
+    pub batch_rows: Hist,
+    /// Time to serialize + write one reply line, ns.
+    pub reply_serialize_ns: Hist,
+}
+
+impl Metrics {
+    /// A zeroed registry (`const`).
+    pub const fn new() -> Self {
+        Metrics {
+            requests: Counter::new(),
+            batches: Counter::new(),
+            samples: Counter::new(),
+            encodes: Counter::new(),
+            errors: Counter::new(),
+            queue_depth: Gauge::new(),
+            resident_bytes: Gauge::new(),
+            workspace_bytes: Gauge::new(),
+            request_latency_ns: Hist::new(),
+            queue_wait_ns: Hist::new(),
+            batch_assemble_ns: Hist::new(),
+            batch_run_ns: Hist::new(),
+            batch_rows: Hist::new(),
+            reply_serialize_ns: Hist::new(),
+        }
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Process-global engine registry, reached as `obs::ENGINE.field` from
+/// kernel-depth code (sampler step loop, LUT sweeps, autotuner) where no
+/// per-server handle can be threaded without polluting `Engine` trait
+/// signatures. Global is correct here: these measure the process's
+/// compute, aggregated across every engine instance.
+pub static ENGINE: EngineMetrics = EngineMetrics::new();
+
+/// The engine-side registry behind [`ENGINE`].
+pub struct EngineMetrics {
+    /// One Euler ODE step over a batch (`EngineStep::run` body), ns.
+    pub ode_step_ns: Hist,
+    /// One layer GEMM inside the fused forward, ns.
+    pub layer_sweep_ns: Hist,
+    /// One v2 blocked-kernel stripe invocation, ns.
+    pub v2_kernel_ns: Hist,
+    /// Autotune plan measurements (cache misses) performed.
+    pub tune_plans_total: Counter,
+    /// Shard jobs dispatched by the pool (rows + columns axes).
+    pub shard_jobs_total: Counter,
+}
+
+impl EngineMetrics {
+    /// A zeroed registry (`const` — this is a `static`).
+    pub const fn new() -> Self {
+        EngineMetrics {
+            ode_step_ns: Hist::new(),
+            layer_sweep_ns: Hist::new(),
+            v2_kernel_ns: Hist::new(),
+            tune_plans_total: Counter::new(),
+            shard_jobs_total: Counter::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(41);
+        assert_eq!(c.get(), 42);
+
+        let g = Gauge::new();
+        g.add(10);
+        g.add(-25);
+        assert_eq!(g.get(), -15, "gauges must represent negative states");
+        g.set(7);
+        assert_eq!(g.get(), 7);
+    }
+
+    #[test]
+    fn engine_registry_is_recordable_from_anywhere() {
+        let before = ENGINE.shard_jobs_total.get();
+        ENGINE.shard_jobs_total.add(3);
+        assert!(ENGINE.shard_jobs_total.get() >= before + 3);
+    }
+}

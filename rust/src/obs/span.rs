@@ -1,0 +1,148 @@
+//! Cheap timing spans for the request/step lifecycle.
+//!
+//! A [`Span`] brackets one stage (queue wait, batch assembly, one ODE
+//! step, one layer sweep, ...) and records the elapsed nanoseconds into a
+//! [`Hist`] on [`Span::end`]. Two off switches, with different costs:
+//!
+//! * **runtime** — [`set_timing_enabled`]`(false)` makes [`Span::begin`]
+//!   skip the clock read; the residual cost is one `Relaxed` atomic load
+//!   and a branch per span (measured by `bench_engine`'s obs-overhead
+//!   section, gated at ≤ 3% per ODE step with timing *on*);
+//! * **compile time** — the `no-obs` cargo feature compiles [`Span`] to a
+//!   zero-sized no-op and [`record_since`] to an empty body, for exactly
+//!   0% overhead on builds that must not carry instrumentation.
+//!
+//! Timing never changes sampling results: spans only read the clock and
+//! bump atomics, so outputs are bit-identical with instrumentation on or
+//! off (pinned by `flow::sampler`'s on/off test).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use crate::obs::hist::Hist;
+
+/// Process-wide runtime kill-switch for span timing. On by default.
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Turn span timing on or off at runtime (counters and direct histogram
+/// records are unaffected — only clock reads stop).
+pub fn set_timing_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether spans are currently reading the clock. Always `false` under
+/// the `no-obs` feature.
+pub fn timing_enabled() -> bool {
+    if cfg!(feature = "no-obs") {
+        return false;
+    }
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// An in-flight timing span. Obtain with [`Span::begin`], close with
+/// [`Span::end`] into the target histogram. Alloc-free (enrolled via the
+/// `Span::*` `no_alloc` root) and infallible.
+#[cfg(not(feature = "no-obs"))]
+#[must_use = "a span only records when end() is called"]
+pub struct Span {
+    t0: Option<Instant>,
+}
+
+#[cfg(not(feature = "no-obs"))]
+impl Span {
+    /// Start a span; reads the clock only while timing is enabled.
+    #[inline]
+    pub fn begin() -> Self {
+        Span {
+            t0: if timing_enabled() { Some(Instant::now()) } else { None },
+        }
+    }
+
+    /// Close the span, recording elapsed nanoseconds into `h`.
+    #[inline]
+    pub fn end(self, h: &Hist) {
+        if let Some(t0) = self.t0 {
+            record_since(h, t0);
+        }
+    }
+}
+
+/// No-op twin compiled under `no-obs`: zero-sized, fully inert.
+#[cfg(feature = "no-obs")]
+#[must_use = "a span only records when end() is called"]
+pub struct Span;
+
+#[cfg(feature = "no-obs")]
+impl Span {
+    /// Start a span (no-op under `no-obs`).
+    #[inline]
+    pub fn begin() -> Self {
+        Span
+    }
+
+    /// Close the span (no-op under `no-obs`).
+    #[inline]
+    pub fn end(self, _h: &Hist) {}
+}
+
+/// Record the nanoseconds elapsed since `t0` into `h`. The free-function
+/// form of [`Span::end`] for call sites that already hold an `Instant`.
+#[cfg(not(feature = "no-obs"))]
+#[fmq_macros::no_alloc]
+pub fn record_since(h: &Hist, t0: Instant) {
+    let ns = t0.elapsed().as_nanos();
+    h.record(if ns > u64::MAX as u128 { u64::MAX } else { ns as u64 });
+}
+
+/// No-op twin compiled under `no-obs`.
+#[cfg(feature = "no-obs")]
+#[fmq_macros::no_alloc]
+pub fn record_since(_h: &Hist, _t0: Instant) {}
+
+/// Serializes unit tests that toggle the process-global timing switch
+/// (they run on parallel threads in one test binary).
+#[cfg(test)]
+pub(crate) static TEST_TIMING_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_records_only_while_enabled() {
+        let _g = TEST_TIMING_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let h = Hist::new();
+        set_timing_enabled(true);
+        let s = Span::begin();
+        s.end(&h);
+        let on_count = h.snapshot().count;
+
+        set_timing_enabled(false);
+        let s = Span::begin();
+        s.end(&h);
+        let off_count = h.snapshot().count;
+        set_timing_enabled(true);
+
+        if cfg!(feature = "no-obs") {
+            assert_eq!(on_count, 0);
+            assert_eq!(off_count, 0);
+        } else {
+            assert_eq!(on_count, 1);
+            assert_eq!(off_count, 1, "disabling must not retro-drop");
+            // the disabled span added nothing
+            assert_eq!(off_count - on_count, 0);
+        }
+    }
+
+    #[test]
+    fn record_since_is_nonnegative_and_counted() {
+        let h = Hist::new();
+        let t0 = Instant::now();
+        record_since(&h, t0);
+        if cfg!(feature = "no-obs") {
+            assert_eq!(h.snapshot().count, 0);
+        } else {
+            assert_eq!(h.snapshot().count, 1);
+        }
+    }
+}

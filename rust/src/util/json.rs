@@ -11,14 +11,43 @@ use std::fmt::Write as _;
 use anyhow::{anyhow, bail, Result};
 
 /// A JSON value. Objects use `BTreeMap` so serialisation is deterministic.
-#[derive(Clone, Debug, PartialEq)]
+///
+/// Integer literals (no `.`/`e` in the source text) parse as [`Json::Int`]
+/// and serialise back as exact decimal integers, so u64-valued metrics
+/// (byte gauges, counters) survive the wire without the 2^53 precision
+/// cliff of `f64`. Numeric equality is cross-variant: `Int(2) == Num(2.0)`
+/// — required because the writer emits integral `Num`s without a decimal
+/// point, so they reparse as `Int`.
+#[derive(Clone, Debug)]
 pub enum Json {
     Null,
     Bool(bool),
     Num(f64),
+    /// Integer-exact number (wire-exact for the full `u64`/`i64` range).
+    Int(i128),
     Str(String),
     Arr(Vec<Json>),
     Obj(BTreeMap<String, Json>),
+}
+
+impl PartialEq for Json {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (Json::Null, Json::Null) => true,
+            (Json::Bool(a), Json::Bool(b)) => a == b,
+            (Json::Num(a), Json::Num(b)) => a == b,
+            (Json::Int(a), Json::Int(b)) => a == b,
+            // numerically equal only when the f64 represents the integer
+            // exactly (both directions checked so 2^53+1 != 2^53.0)
+            (Json::Int(i), Json::Num(f)) | (Json::Num(f), Json::Int(i)) => {
+                *f == *i as f64 && *i == *f as i128
+            }
+            (Json::Str(a), Json::Str(b)) => a == b,
+            (Json::Arr(a), Json::Arr(b)) => a == b,
+            (Json::Obj(a), Json::Obj(b)) => a == b,
+            _ => false,
+        }
+    }
 }
 
 impl Json {
@@ -33,15 +62,46 @@ impl Json {
         }
     }
 
+    /// Numeric value as `f64`; lossy above 2^53 for [`Json::Int`] — use
+    /// [`Json::as_u64`]/[`Json::as_i64`] where exactness matters.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
+            Json::Int(i) => Some(*i as f64),
             _ => None,
         }
     }
 
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|n| n as usize)
+        match self {
+            Json::Int(i) => usize::try_from(*i).ok(),
+            Json::Num(n) => Some(*n as usize),
+            _ => None,
+        }
+    }
+
+    /// Integer-exact `u64`: `Int` in range, or an integral `Num` below
+    /// 2^53 (the largest range where `f64` is still exact).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Int(i) => u64::try_from(*i).ok(),
+            Json::Num(n) if n.fract() == 0.0 && *n >= 0.0 && *n < 9_007_199_254_740_992.0 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    /// Integer-exact `i64`: `Int` in range, or an integral `Num` with
+    /// |n| < 2^53.
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Int(i) => i64::try_from(*i).ok(),
+            Json::Num(n) if n.fract() == 0.0 && n.abs() < 9_007_199_254_740_992.0 => {
+                Some(*n as i64)
+            }
+            _ => None,
+        }
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -116,6 +176,9 @@ impl Json {
                 } else {
                     let _ = write!(out, "{n}");
                 }
+            }
+            Json::Int(i) => {
+                let _ = write!(out, "{i}");
             }
             Json::Str(s) => write_escaped(s, out),
             Json::Arr(v) => {
@@ -237,6 +300,14 @@ impl<'a> Parser<'a> {
             self.i += 1;
         }
         let s = std::str::from_utf8(&self.b[start..self.i])?;
+        // integer literals stay integer-exact (counters/byte gauges above
+        // 2^53 would silently round through f64); overflow past i128 and
+        // anything with '.'/'e' takes the float path
+        if !s.bytes().any(|c| matches!(c, b'.' | b'e' | b'E')) {
+            if let Ok(i) = s.parse::<i128>() {
+                return Ok(Json::Int(i));
+            }
+        }
         Ok(Json::Num(s.parse::<f64>()?))
     }
 
@@ -384,6 +455,51 @@ mod tests {
         for (a, b) in xs.iter().zip(back.iter()) {
             assert!((a - b).abs() < 1e-10);
         }
+    }
+
+    #[test]
+    fn integers_roundtrip_exactly_above_2_53() {
+        // 2^53 + 1 is the first u64 that f64 cannot represent
+        for v in [
+            9_007_199_254_740_993u64, // 2^53 + 1
+            u64::MAX,
+            u64::MAX - 1,
+            0,
+        ] {
+            let j = Json::Int(v as i128);
+            let text = j.to_string();
+            assert_eq!(text, v.to_string(), "writer must be integer-exact");
+            let back = parse(&text).unwrap();
+            assert_eq!(back.as_u64(), Some(v), "parse must be integer-exact");
+        }
+        // negative i64 range survives too
+        let back = parse(&Json::Int(i64::MIN as i128).to_string()).unwrap();
+        assert_eq!(back.as_i64(), Some(i64::MIN));
+    }
+
+    #[test]
+    fn cross_variant_numeric_equality() {
+        assert_eq!(Json::Int(2), Json::Num(2.0));
+        assert_eq!(Json::Num(-2500.0), Json::Int(-2500));
+        // 2^53+1 rounds to 2^53 in f64 — must NOT compare equal
+        assert_ne!(Json::Int(9_007_199_254_740_993), Json::Num(9_007_199_254_740_992.0));
+        assert_ne!(Json::Int(2), Json::Num(2.5));
+        // integral Num written without a decimal point reparses as Int,
+        // and the whole value still compares equal
+        let v = Json::obj(vec![("x", Json::Num(3.0))]);
+        let v2 = parse(&v.to_string()).unwrap();
+        assert!(matches!(v2.get("x"), Some(Json::Int(3))));
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn as_u64_rejects_lossy_floats() {
+        assert_eq!(Json::Num(2.5).as_u64(), None);
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(9_007_199_254_740_992.0).as_u64(), None);
+        assert_eq!(Json::Num(4096.0).as_u64(), Some(4096));
+        assert_eq!(Json::Int(-1).as_u64(), None);
+        assert_eq!(Json::Int(1 << 60).as_u64(), Some(1u64 << 60));
     }
 
     #[test]

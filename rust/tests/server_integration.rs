@@ -253,14 +253,8 @@ fn concurrent_clients_are_batched() {
     for h in handles {
         assert_eq!(h.join().unwrap(), 2 * d);
     }
-    let reqs = server
-        .stats
-        .requests
-        .load(std::sync::atomic::Ordering::Relaxed);
-    let batches = server
-        .stats
-        .batches
-        .load(std::sync::atomic::Ordering::Relaxed);
+    let reqs = server.stats.requests.get();
+    let batches = server.stats.batches.get();
     assert_eq!(reqs, 6);
     assert!(batches >= 1, "no batches recorded");
     // dynamic batching must have merged at least some requests
@@ -403,6 +397,166 @@ fn stats_op_reports_counters() {
         get("workspace_bytes") > 0.0,
         "warm worker arenas must report high-water scratch bytes"
     );
+    server.stop();
+}
+
+/// The metrics op serves the full registry as Prometheus text format:
+/// at least 12 families, including the request-latency and per-ODE-step
+/// histograms with quantile estimate lines.
+#[test]
+fn metrics_op_serves_prometheus_families() {
+    let (server, addr) = start_small_server();
+    let mut c = Client::connect(&addr).unwrap();
+    c.generate("ot2", 2, 3).unwrap();
+    let resp = c.metrics("prometheus").unwrap();
+    assert_eq!(
+        resp.req_str("content_type").unwrap(),
+        "text/plain; version=0.0.4"
+    );
+    let body = resp.req_str("body").unwrap().to_string();
+    let families = body
+        .lines()
+        .filter(|l| l.starts_with("# TYPE "))
+        .count();
+    assert!(families >= 12, "expected >= 12 families, got {families}:\n{body}");
+    for name in [
+        "fmq_server_requests_total",
+        "fmq_server_errors_total",
+        "fmq_server_queue_depth",
+        "fmq_server_request_latency_ns",
+        "fmq_server_queue_wait_ns",
+        "fmq_server_batch_assemble_ns",
+        "fmq_server_batch_run_ns",
+        "fmq_server_batch_rows",
+        "fmq_server_reply_serialize_ns",
+        "fmq_engine_ode_step_ns",
+        "fmq_engine_layer_sweep_ns",
+        "fmq_engine_shard_jobs_total",
+    ] {
+        assert!(body.contains(name), "missing family {name}:\n{body}");
+    }
+    // quantile estimate lines on the latency histograms
+    for q in ["quantile=\"0.5\"", "quantile=\"0.95\"", "quantile=\"0.99\""] {
+        assert!(body.contains(q), "missing {q} lines:\n{body}");
+    }
+    // the generate above integrated STEPS ODE steps through the engine
+    // adapter; nothing in this binary disables timing, so the per-step
+    // histogram must have filled
+    let count_line = body
+        .lines()
+        .find(|l| l.starts_with("fmq_engine_ode_step_ns_count"))
+        .expect("ode step count line");
+    let count: u64 = count_line.split_whitespace().next_back().unwrap().parse().unwrap();
+    assert!(count > 0, "ODE steps must be timed: {count_line}");
+    // json format carries the same registry, integer-exact
+    let js = c.metrics("json").unwrap();
+    let m = js.req("metrics").unwrap();
+    let srv = m.req("server").unwrap();
+    assert!(srv.req("requests").unwrap().as_u64().unwrap() >= 1);
+    assert!(
+        m.req("engine").unwrap().req("ode_step_ns").unwrap().req("count").is_ok(),
+        "engine histograms must be present in json form"
+    );
+    // unknown formats are rejected
+    let err = c.metrics("xml").unwrap_err();
+    assert!(err.to_string().contains("unknown metrics format"), "{err}");
+    server.stop();
+}
+
+/// `ServerConfig::metrics_dump` (the `--metrics-dump` flag) writes a
+/// parseable Prometheus snapshot when the server stops.
+#[test]
+fn metrics_dump_writes_snapshot_on_stop() {
+    let path = std::env::temp_dir().join(format!("fmq_metrics_dump_{}.prom", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let spec = small_spec();
+    let theta = test_theta(&spec);
+    let registry = Arc::new(Registry::build_fleet(&spec, &theta, &[QuantMethod::Ot], &[2]));
+    let cfg = ServerConfig {
+        metrics_dump: Some(path.clone()),
+        ..test_config(None)
+    };
+    let server = serve(registry, None, cfg).expect("server start");
+    let addr = server.addr.to_string();
+    Client::connect(&addr).unwrap().generate("ot2", 1, 5).unwrap();
+    server.stop();
+    let body = std::fs::read_to_string(&path).expect("dump written on stop");
+    assert!(body.contains("# TYPE fmq_server_requests_total counter"));
+    assert!(body.contains("fmq_server_requests_total 1"));
+    assert!(body.contains("fmq_server_request_latency_ns_bucket"));
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Satellite regression: hammer `stats` from a reader thread while load
+/// runs — the queue-depth gauge must stay consistent (never negative,
+/// and exactly zero once the queues drain). The old u64 wrapping-delta
+/// export could transiently read as 2^64-ish garbage.
+#[test]
+fn queue_depth_gauge_is_consistent_under_load() {
+    let (server, addr) = start_small_server();
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let reader = {
+        let addr = addr.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            let mut polls = 0u32;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                let s = c.stats().unwrap();
+                let depth = s.req("queue_depth").unwrap().as_i64().unwrap();
+                assert!(depth >= 0, "queue_depth went negative: {depth}");
+                polls += 1;
+            }
+            polls
+        })
+    };
+    let mut writers = Vec::new();
+    for i in 0..4u64 {
+        let addr = addr.clone();
+        writers.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            for j in 0..5 {
+                // > model batch: forces slicing, so depth moves up + down
+                c.generate("ot2", 20, i * 100 + j).unwrap();
+            }
+        }));
+    }
+    for w in writers {
+        w.join().unwrap();
+    }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let polls = reader.join().unwrap();
+    assert!(polls > 0, "reader must have observed the gauge");
+    assert_eq!(
+        server.stats.queue_depth.get(),
+        0,
+        "drained queues must read exactly zero"
+    );
+    server.stop();
+}
+
+/// The stats op is integer-exact above 2^53: a byte gauge poked past the
+/// f64 precision cliff round-trips the wire without rounding.
+#[test]
+fn stats_op_is_integer_exact_above_2_53() {
+    let (server, addr) = start_small_server();
+    let mut c = Client::connect(&addr).unwrap();
+    // touch every variant so each worker has finished startup (workers
+    // add their resident bytes once, at init) before we poke the gauge
+    for model in ["fp32", "ot2", "ot8"] {
+        c.generate(model, 1, 1).unwrap();
+    }
+    let big = (1i64 << 53) + 1;
+    server.stats.resident_bytes.set(big);
+    let s = c.stats().unwrap();
+    assert_eq!(
+        s.req("resident_bytes").unwrap().as_i64(),
+        Some(big),
+        "2^53+1 must survive the wire exactly"
+    );
+    // the old f64 wire format sat exactly on the precision cliff here:
+    // the nearest representable double is 2^53, one byte short
+    assert_eq!(s.req("resident_bytes").unwrap().as_f64().unwrap() as i64, big - 1);
     server.stop();
 }
 

@@ -4,7 +4,9 @@
 //! Functions enter the checked set by carrying `#[fmq_macros::no_alloc]`
 //! or by being listed under `[no_alloc] roots` in `lint.toml` (qualified
 //! `Type::name` entries disambiguate trait methods from allocating
-//! same-name fallbacks). Inside the set, the rule denies:
+//! same-name fallbacks; wildcard `Type::*` entries enroll every method of
+//! a type — how the `obs::` metric record paths join the set). Inside the
+//! set, the rule denies:
 //!
 //! - forbidden macros (`vec!`, `format!`),
 //! - forbidden constructor paths (`Vec::new`, `Box::new`, ...),
@@ -52,7 +54,14 @@ pub fn run(files: &[ParsedFile], cfg: &Config) -> Vec<Diag> {
                 continue;
             }
             let rooted = cfg.no_alloc_roots.iter().any(|r| {
-                if r.contains("::") {
+                if let Some(ty) = r.strip_suffix("::*") {
+                    // wildcard root `Type::*`: every method of the type
+                    // joins the checked set (used to enroll whole metric
+                    // primitives — obs::{Hist, Counter, Gauge, Span})
+                    d.qual
+                        .strip_prefix(ty)
+                        .is_some_and(|rest| rest.starts_with("::"))
+                } else if r.contains("::") {
                     *r == d.qual
                 } else {
                     *r == d.name

@@ -1,0 +1,15 @@
+//! Fixture: a metric record path enrolled via the `Hist::*` wildcard
+//! root that allocates via `format!`. Expected: exactly one `no_alloc`
+//! diagnostic.
+
+pub struct Hist {
+    name: &'static str,
+    count: u64,
+}
+
+impl Hist {
+    pub fn record(&mut self, v: u64) {
+        let label = format!("{}={v}", self.name);
+        self.count += label.len() as u64;
+    }
+}

@@ -15,7 +15,7 @@ fn strs(xs: &[&str]) -> Vec<String> {
 fn fixture_cfg() -> Config {
     Config {
         scan_roots: strs(&["fix"]),
-        no_alloc_roots: strs(&["hot_entry"]),
+        no_alloc_roots: strs(&["hot_entry", "Hist::*"]),
         no_alloc_allow: vec![],
         no_alloc_forbidden_calls: strs(&["to_vec", "collect", "clone", "to_owned", "to_string"]),
         no_alloc_forbidden_macros: strs(&["vec", "format"]),
@@ -78,6 +78,21 @@ fn no_alloc_transitive_callee_allocation() {
     assert!(
         d.msg.contains("hot_entry") && d.msg.contains("helper"),
         "message should show the call chain from the root: {d}"
+    );
+}
+
+#[test]
+fn no_alloc_format_in_wildcard_rooted_record_path() {
+    let d = expect_one(
+        "fix/bad_no_alloc_obs_record.rs",
+        include_str!("fixtures/bad_no_alloc_obs_record.rs"),
+        "no_alloc",
+        "`format!`",
+    );
+    assert_eq!(d.line, 12, "diagnostic should anchor at the format! line");
+    assert!(
+        d.msg.contains("Hist::record"),
+        "wildcard root must qualify the method: {d}"
     );
 }
 
@@ -152,6 +167,11 @@ fn bad_fixtures_trip_only_their_own_rule() {
         (
             "fix/bad_no_alloc_transitive.rs",
             include_str!("fixtures/bad_no_alloc_transitive.rs"),
+            "no_alloc",
+        ),
+        (
+            "fix/bad_no_alloc_obs_record.rs",
+            include_str!("fixtures/bad_no_alloc_obs_record.rs"),
             "no_alloc",
         ),
         ("fix/bad_det_hashmap.rs", include_str!("fixtures/bad_det_hashmap.rs"), "determinism"),
