@@ -1,117 +1,95 @@
 //! FIG3 harness: regenerates the paper's Figure 3 (SSIM panel A, PSNR
-//! panel B) series — per dataset, method, bit-width — and prints the same
-//! rows the paper plots, plus a pass/fail on the expected shape:
-//!   * fidelity rises with bits for every method,
-//!   * OT is at/above the baselines at 2–3 bits,
-//!   * degradation accelerates below 5 bits for the baselines.
+//! panel B) series — per dataset, method, bit-width — as a thin wrapper
+//! over the `sweep` runner (the same engine path, metrics, and theory
+//! bounds the `figgrid` subcommand exercises), prints the rows the paper
+//! plots, and runs the full conformance invariant set on the result.
 //!
-//! Uses the trained checkpoint when `checkpoints/model-<ds>.fmq` exists
-//! (run examples/e2e_pipeline first), pseudo-trained weights otherwise.
-//! FMQ_BENCH_FAST=1 shrinks the grid for smoke runs.
+//! FMQ_BENCH_FAST=1 runs the smoke tier.
 
-use fmq::coordinator::experiment::{pseudo_trained_theta, EvalContext};
 use fmq::coordinator::report;
-use fmq::data::Dataset;
-use fmq::model::checkpoint;
-use fmq::model::spec::ModelSpec;
+use fmq::flow::ode::Solver;
 use fmq::quant::QuantMethod;
-use fmq::runtime::{artifacts, ArtifactSet};
+use fmq::sweep::{conformance, run_grid, GridSpec};
 
 fn main() -> anyhow::Result<()> {
     let fast = std::env::var("FMQ_BENCH_FAST").is_ok();
-    let spec = ModelSpec::default_spec();
-    let art = if artifacts::available(&artifacts::default_dir()) {
-        Some(ArtifactSet::load(&artifacts::default_dir())?)
-    } else {
-        None
+    // Fig. 3 is the euler panel of the paper grid; the other solvers are
+    // the figgrid subcommand's job.
+    let spec = GridSpec {
+        solvers: vec![Solver::Euler],
+        ..if fast { GridSpec::smoke() } else { GridSpec::full() }
     };
-    let ctx = EvalContext {
-        spec: spec.clone(),
-        art: art.as_ref(),
-        steps: if fast { 4 } else { 16 },
-        n: if fast { 8 } else { 16 },
-        seed: 7,
-        engine: None,
-    };
-    let datasets: &[Dataset] = if fast {
-        &[Dataset::SynthMnist, Dataset::SynthCeleba]
-    } else {
-        &Dataset::ALL
-    };
-    let bits: &[u8] = if fast { &[2, 4, 8] } else { &[2, 3, 4, 5, 6, 8] };
-    let methods = QuantMethod::PAPER;
-
-    let mut all = Vec::new();
     let t0 = std::time::Instant::now();
-    for &ds in datasets {
-        let ckpt = std::path::PathBuf::from(format!("checkpoints/model-{}.fmq", ds.name()));
-        let theta = if ckpt.exists() {
-            checkpoint::load_theta(&ckpt, &spec)?
-        } else {
-            pseudo_trained_theta(&spec, ds)
-        };
-        let pts = ctx.fidelity_sweep(ds, &theta, &methods, bits)?;
+    let res = run_grid(&spec)?;
+
+    let mut rows = Vec::new();
+    for &ds in &spec.datasets {
         println!("\n[{}] SSIM (A) | PSNR (B):", ds.name());
         print!("{:>6} |", "bits");
-        for m in methods {
+        for m in &spec.methods {
             print!(" {:>15} |", m.name());
         }
         println!();
-        for &b in bits {
+        for &b in &spec.bits {
             print!("{b:>6} |");
-            for m in methods {
-                let p = pts.iter().find(|p| p.method == m && p.bits == b).unwrap();
-                print!(" {:>6.4}/{:>5.1}dB |", p.ssim, p.psnr);
+            for &m in &spec.methods {
+                let Some(c) = res.cell(ds, m, b, Solver::Euler) else {
+                    continue;
+                };
+                print!(" {:>6.4}/{:>5.1}dB |", c.ssim, c.psnr);
+                rows.push(format!(
+                    "{},{},{b},{:.6},{:.4},{:.4},{:.6e}",
+                    ds.name(),
+                    m.name(),
+                    c.ssim,
+                    c.psnr,
+                    c.fid,
+                    c.w2_sq
+                ));
             }
             println!();
         }
-        all.extend(pts);
     }
-    println!("\nsweep wall-clock: {:.1}s ({} grid points)", t0.elapsed().as_secs_f64(), all.len());
+    println!(
+        "\nsweep wall-clock: {:.1}s ({} grid cells)",
+        t0.elapsed().as_secs_f64(),
+        res.cells.len()
+    );
 
-    // shape checks (paper's qualitative claims)
-    let mut shape_ok = true;
-    for &ds in datasets {
-        for m in methods {
-            let at = |b: u8| {
-                all.iter()
-                    .find(|p| p.dataset == ds.name() && p.method == m && p.bits == b)
-                    .unwrap()
-            };
-            let lo = at(bits[0]);
-            let hi = at(*bits.last().unwrap());
-            if hi.ssim + 1e-9 < lo.ssim {
-                println!("SHAPE VIOLATION: {} {} ssim falls with bits", ds.name(), m.name());
-                shape_ok = false;
-            }
-        }
-        // OT at/above baselines at the lowest bit-width
-        let ot = all
-            .iter()
-            .find(|p| p.dataset == ds.name() && p.method == QuantMethod::Ot && p.bits == bits[0])
-            .unwrap();
-        for m in [QuantMethod::Uniform, QuantMethod::Log2] {
-            let base = all
-                .iter()
-                .find(|p| p.dataset == ds.name() && p.method == m && p.bits == bits[0])
-                .unwrap();
-            if ot.ssim + 0.02 < base.ssim {
-                println!(
-                    "SHAPE VIOLATION: {} OT@{}b ssim {:.4} < {} {:.4}",
-                    ds.name(),
-                    bits[0],
-                    ot.ssim,
-                    m.name(),
-                    base.ssim
-                );
-                shape_ok = false;
-            }
-        }
+    // the paper's qualitative claims, as the shared invariant set
+    let violations = conformance::check(&res);
+    for v in &violations {
+        println!("SHAPE VIOLATION: {v}");
     }
-    println!("fig3 shape: {}", if shape_ok { "OK (matches paper)" } else { "VIOLATIONS — see above" });
+    println!(
+        "fig3 shape: {}",
+        if violations.is_empty() {
+            "OK (matches paper)"
+        } else {
+            "VIOLATIONS — see above"
+        }
+    );
+
+    // headline: OT vs the baselines at 2 bits on the hardest rung
+    if let (Some(ot), Some(un)) = (
+        spec.datasets.last().and_then(|&ds| res.cell(ds, QuantMethod::Ot, 2, Solver::Euler)),
+        spec.datasets.last().and_then(|&ds| res.cell(ds, QuantMethod::Uniform, 2, Solver::Euler)),
+    ) {
+        println!(
+            "hardest rung @2b: OT ssim {:.4} / w2 {:.2e} vs uniform {:.4} / {:.2e}",
+            ot.ssim, ot.w2_sq, un.ssim, un.w2_sq
+        );
+    }
 
     std::fs::create_dir_all("results")?;
-    report::fidelity_csv(std::path::Path::new("results/fig3_fidelity.csv"), &all)?;
+    report::write_csv(
+        std::path::Path::new("results/fig3_fidelity.csv"),
+        "dataset,method,bits,ssim,psnr,fid,w2_sq",
+        &rows,
+    )?;
     println!("-> results/fig3_fidelity.csv");
+    if !violations.is_empty() {
+        anyhow::bail!("{} conformance violation(s)", violations.len());
+    }
     Ok(())
 }

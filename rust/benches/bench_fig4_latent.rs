@@ -1,85 +1,69 @@
 //! FIG4 harness: regenerates the paper's Figure 4 — latent-variance
 //! standard deviation vs bit-width per method and dataset (reverse-ODE
-//! encoding) — and checks the expected shape: OT stays near the fp32
-//! baseline at every bit-width while uniform/log2 disperse at low bits.
+//! encoding) — as a thin wrapper over the `sweep` runner, and checks the
+//! expected shape: OT stays near the fp32 baseline at every bit-width
+//! while uniform/log2 disperse at low bits.
 //!
-//! FMQ_BENCH_FAST=1 shrinks the grid.
+//! FMQ_BENCH_FAST=1 runs the smoke tier.
 
-use fmq::coordinator::experiment::{pseudo_trained_theta, EvalContext};
 use fmq::coordinator::report;
-use fmq::data::Dataset;
-use fmq::model::checkpoint;
-use fmq::model::spec::ModelSpec;
+use fmq::flow::ode::Solver;
 use fmq::quant::QuantMethod;
-use fmq::runtime::{artifacts, ArtifactSet};
+use fmq::sweep::{conformance, run_grid, GridSpec};
 
 fn main() -> anyhow::Result<()> {
     let fast = std::env::var("FMQ_BENCH_FAST").is_ok();
-    let spec = ModelSpec::default_spec();
-    let art = if artifacts::available(&artifacts::default_dir()) {
-        Some(ArtifactSet::load(&artifacts::default_dir())?)
-    } else {
-        None
-    };
-    let ctx = EvalContext {
-        spec: spec.clone(),
-        art: art.as_ref(),
-        steps: if fast { 4 } else { 16 },
-        n: if fast { 8 } else { 16 },
+    let spec = GridSpec {
+        solvers: vec![Solver::Euler],
         seed: 11,
-        engine: None,
+        ..if fast { GridSpec::smoke() } else { GridSpec::full() }
     };
-    let datasets: &[Dataset] = if fast {
-        &[Dataset::SynthCifar]
-    } else {
-        &Dataset::ALL
-    };
-    let bits: &[u8] = if fast { &[2, 8] } else { &[2, 3, 4, 5, 6, 8] };
-    let methods = QuantMethod::PAPER;
-
-    let mut all = Vec::new();
     let t0 = std::time::Instant::now();
-    for &ds in datasets {
-        let ckpt = std::path::PathBuf::from(format!("checkpoints/model-{}.fmq", ds.name()));
-        let theta = if ckpt.exists() {
-            checkpoint::load_theta(&ckpt, &spec)?
-        } else {
-            pseudo_trained_theta(&spec, ds)
-        };
-        let pts = ctx.latent_sweep(ds, &theta, &methods, bits)?;
+    let res = run_grid(&spec)?;
+
+    let mut rows = Vec::new();
+    for &ds in &spec.datasets {
         println!("\n[{}] latent var-std (fp32 baseline in col 2):", ds.name());
         print!("{:>6} {:>9} |", "bits", "fp32");
-        for m in methods {
+        for m in &spec.methods {
             print!(" {:>9} |", m.name());
         }
         println!();
-        for &b in bits {
-            let base = pts
-                .iter()
-                .find(|p| p.bits == b && p.method == QuantMethod::Ot)
-                .unwrap()
-                .baseline_var_std;
+        for &b in &spec.bits {
+            let base = res
+                .cell(ds, QuantMethod::Ot, b, Solver::Euler)
+                .map(|c| c.baseline_var_std)
+                .unwrap_or(f64::NAN);
             print!("{b:>6} {base:>9.4} |");
-            for m in methods {
-                let p = pts.iter().find(|p| p.method == m && p.bits == b).unwrap();
-                print!(" {:>9.4} |", p.stats.var_std);
+            for &m in &spec.methods {
+                let Some(c) = res.cell(ds, m, b, Solver::Euler) else {
+                    continue;
+                };
+                print!(" {:>9.4} |", c.latent_var_std);
+                rows.push(format!(
+                    "{},{},{b},{:.6},{:.6},{:.6},{:.6}",
+                    ds.name(),
+                    m.name(),
+                    c.latent_var_std,
+                    c.baseline_var_std,
+                    c.latent_mean_abs,
+                    c.latent_max_abs
+                ));
             }
             println!();
         }
-        all.extend(pts);
     }
     println!("\nsweep wall-clock: {:.1}s", t0.elapsed().as_secs_f64());
 
-    // shape check: at the lowest bit-width, OT's dispersion is the closest
-    // to baseline among all methods (paper's central Fig. 4 finding)
+    // shape check: at the lowest bit-width, OT's dispersion is the
+    // closest to baseline among all methods (the central Fig. 4 finding)
     let mut ok = true;
-    for &ds in datasets {
+    let lowest = spec.bits.iter().copied().min().unwrap_or(2);
+    for &ds in &spec.datasets {
         let dev = |m: QuantMethod| {
-            let p = all
-                .iter()
-                .find(|p| p.dataset == ds.name() && p.method == m && p.bits == bits[0])
-                .unwrap();
-            (p.stats.var_std - p.baseline_var_std).abs()
+            res.cell(ds, m, lowest, Solver::Euler)
+                .map(|c| (c.latent_var_std - c.baseline_var_std).abs())
+                .unwrap_or(f64::NAN)
         };
         let d_ot = dev(QuantMethod::Ot);
         for m in [QuantMethod::Uniform, QuantMethod::Log2] {
@@ -95,10 +79,27 @@ fn main() -> anyhow::Result<()> {
             }
         }
     }
-    println!("fig4 shape: {}", if ok { "OK (matches paper)" } else { "VIOLATIONS — see above" });
+
+    // plus the shared grid invariants (monotonicity, bounds, engines)
+    let violations = conformance::check(&res);
+    for v in &violations {
+        println!("SHAPE VIOLATION: {v}");
+        ok = false;
+    }
+    println!(
+        "fig4 shape: {}",
+        if ok { "OK (matches paper)" } else { "VIOLATIONS — see above" }
+    );
 
     std::fs::create_dir_all("results")?;
-    report::latent_csv(std::path::Path::new("results/fig4_latent.csv"), &all)?;
+    report::write_csv(
+        std::path::Path::new("results/fig4_latent.csv"),
+        "dataset,method,bits,var_std,baseline_var_std,mean_abs,max_abs",
+        &rows,
+    )?;
     println!("-> results/fig4_latent.csv");
+    if !ok {
+        anyhow::bail!("fig4 shape violations");
+    }
     Ok(())
 }

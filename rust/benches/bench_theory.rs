@@ -3,16 +3,21 @@
 //! Gaussian/Laplace at k ∈ {8, 9, 10}σ (paper: 0.33 Gaussian, 0.54
 //! Laplace at k=10), ρ(b) < 1, the FID-bound curves with their 2^{-2b}
 //! slope, and the Corollary 13.1 bit-budget table.
+//!
+//! FMQ_BENCH_FAST=1 trims the table ranges for CI smoke runs; every
+//! closed-form check (slope, rho < 1, paper constants) still executes.
 
 use fmq::stats::dist::{alpha_gaussian, alpha_laplace};
 use fmq::theory::bounds::BoundInputs;
 
 fn main() {
+    let fast = std::env::var("FMQ_BENCH_FAST").is_ok();
     let sigma = 0.05f64;
 
     println!("== alpha^3/R^2 histogram ratios (paper Eq. 18 block) ==");
     println!("{:>6} {:>12} {:>12}", "k", "gaussian", "laplace");
-    for k in [8.0f64, 9.0, 10.0] {
+    let ks: &[f64] = if fast { &[10.0] } else { &[8.0, 9.0, 10.0] };
+    for &k in ks {
         let r = k * sigma;
         let g = alpha_gaussian(sigma).powi(3) / (r * r);
         let l = alpha_laplace(sigma / std::f64::consts::SQRT_2).powi(3) / (r * r);
@@ -42,7 +47,8 @@ fn main() {
 
     println!("\n== Corollary 13.1: bit budgets (relative to C_U) ==");
     println!("{:>14} {:>9} {:>6} {:>9}", "FID budget", "uniform", "OT", "headroom");
-    for exp in 0..=5 {
+    let max_exp = if fast { 2 } else { 5 };
+    for exp in 0..=max_exp {
         let delta = b.c_uniform() * 10f64.powi(-exp);
         let bu = b.bit_budget(delta, false);
         let bo = b.bit_budget(delta, true);

@@ -54,6 +54,17 @@ impl Dataset {
         Dataset::ALL.iter().copied().find(|d| d.name() == s)
     }
 
+    /// Position on the paper's complexity ladder (0 = simplest rung,
+    /// MNIST stand-in). Identical to the index in [`Dataset::ALL`]; the
+    /// sweep's per-rung conformance assertions and `BENCH_figgrid.json`
+    /// order cells by this.
+    pub fn ladder_rank(&self) -> usize {
+        Dataset::ALL
+            .iter()
+            .position(|d| d.name() == self.name())
+            .unwrap_or(0)
+    }
+
     /// Class cardinality — one of the paper's complexity knobs.
     pub fn classes(&self) -> usize {
         match self {

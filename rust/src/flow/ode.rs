@@ -3,12 +3,25 @@
 //! The paper samples with deterministic integration of the learned field;
 //! it does not pin the solver. Euler (the default throughout) is O(dt);
 //! Heun (explicit trapezoid) is O(dt²) at twice the velocity evaluations
-//! per step — the classic accuracy/VFE trade-off for FM samplers. This
-//! module provides both over any velocity closure and the step-count
+//! per step — the classic accuracy/VFE trade-off for FM samplers; dopri5
+//! (Dormand–Prince 5(4), [`dopri5_into`]) adds an adaptive embedded pair
+//! with explicit atol/rtol for the sweep's solver axis. This module
+//! provides all three over any velocity closure and the step-count
 //! ablation the bench uses to show where the quantization error (not the
 //! discretization error) becomes the binding constraint.
+//!
+//! The fixed-step solvers come in two shapes that execute *bit-identical*
+//! floating-point expressions: the allocating [`integrate`] driver over a
+//! [`BatchVelocity`] oracle, and the in-place `*_into` cores over a
+//! fill-a-buffer velocity closure plus a reusable [`SolverScratch`] — the
+//! shape the zero-alloc `EngineStep::run_solver` hot path uses. Keeping
+//! the update expressions identical between the two is a contract: the
+//! sweep's engine-equivalence checks compare trajectories produced
+//! through both shapes.
 
 use anyhow::Result;
+
+use crate::engine::workspace::take_zeroed;
 
 /// The fixed t-grid every fixed-step integrator in this crate visits:
 /// `t₀, t₀+dt, t₀+2dt, …` for `steps` points, produced by **additive
@@ -86,6 +99,10 @@ where
 pub enum Solver {
     Euler,
     Heun,
+    /// Dormand–Prince 5(4): adaptive step size against an embedded 4th-
+    /// order error estimate, controlled by (atol, rtol). The `steps`
+    /// argument of the drivers becomes the *initial* step hint.
+    Dopri5,
 }
 
 impl Solver {
@@ -93,20 +110,294 @@ impl Solver {
         match s {
             "euler" => Some(Solver::Euler),
             "heun" => Some(Solver::Heun),
+            "dopri5" => Some(Solver::Dopri5),
             _ => None,
         }
     }
 
-    /// Velocity evaluations per step.
+    /// The `--solver` flag value for this integrator.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Solver::Euler => "euler",
+            Solver::Heun => "heun",
+            Solver::Dopri5 => "dopri5",
+        }
+    }
+
+    /// Velocity evaluations per step (nominal — dopri5 is adaptive and
+    /// FSAL, so 6 is its per-accepted-step cost, not a fixed total).
     pub fn evals_per_step(&self) -> usize {
         match self {
             Solver::Euler => 1,
             Solver::Heun => 2,
+            Solver::Dopri5 => 6,
         }
     }
 }
 
-/// Integrate dx/dt = f(x, t) from t0 to t1 in `steps` fixed steps.
+/// Default absolute tolerance for [`Solver::Dopri5`] when a caller does
+/// not pass one explicitly (state components are O(1) pixels/latents, so
+/// the floor sits well under the quantization error the sweep measures).
+pub const DOPRI5_ATOL: f32 = 1e-5;
+/// Default relative tolerance for [`Solver::Dopri5`].
+pub const DOPRI5_RTOL: f32 = 1e-4;
+
+/// Reusable scratch for the in-place solver cores: seven stage buffers,
+/// one state-proposal buffer, and the velocity-evaluation counter the
+/// sweep's per-step latency accounting reads. Construct once per worker
+/// (`SolverScratch::default()`) and reuse — after the first step at a
+/// given batch shape the cores perform zero heap allocations.
+#[derive(Default)]
+pub struct SolverScratch {
+    k1: Vec<f32>,
+    k2: Vec<f32>,
+    k3: Vec<f32>,
+    k4: Vec<f32>,
+    k5: Vec<f32>,
+    k6: Vec<f32>,
+    k7: Vec<f32>,
+    ytmp: Vec<f32>,
+    /// Velocity evaluations performed by the most recent core run.
+    pub evals: usize,
+}
+
+impl SolverScratch {
+    /// Resize (and zero) every stage buffer for an n-element state.
+    fn prepare(&mut self, n: usize) {
+        take_zeroed(&mut self.k1, n);
+        take_zeroed(&mut self.k2, n);
+        take_zeroed(&mut self.k3, n);
+        take_zeroed(&mut self.k4, n);
+        take_zeroed(&mut self.k5, n);
+        take_zeroed(&mut self.k6, n);
+        take_zeroed(&mut self.k7, n);
+        take_zeroed(&mut self.ytmp, n);
+    }
+
+    /// Capacity held by the stage buffers (workspace accounting).
+    pub fn bytes(&self) -> usize {
+        [
+            &self.k1, &self.k2, &self.k3, &self.k4, &self.k5, &self.k6, &self.k7, &self.ytmp,
+        ]
+        .iter()
+        .map(|v| v.capacity())
+        .sum::<usize>()
+            * 4
+    }
+}
+
+/// Fill-a-buffer velocity closure: `vel(x, t, out)` writes v(x, t) into
+/// `out` (same length as `x`). The in-place cores take this shape so the
+/// engine adapter can route evaluations through `Engine::velocity_into`
+/// without allocating.
+pub type VelocityInto<'c> = dyn FnMut(&[f32], f32, &mut [f32]) -> Result<()> + 'c;
+
+/// In-place Heun over the shared [`StepGrid`]. The per-step expressions
+/// (`pred_i = x_i + dt·v0_i`, then `x_i += dt·0.5·(v0_i + v1_i)`) are
+/// the exact ones [`integrate`]'s Heun arm computes, so both paths
+/// produce bit-identical trajectories for the same velocity values —
+/// pinned by `flow::sampler`'s cross-path regression test.
+pub fn heun_into(
+    vel: &mut VelocityInto<'_>,
+    x: &mut [f32],
+    t0: f32,
+    t1: f32,
+    steps: usize,
+    scr: &mut SolverScratch,
+) -> Result<()> {
+    let n = x.len();
+    scr.evals = 0;
+    let grid = StepGrid::new(t0, t1, steps);
+    let dt = grid.dt();
+    for t in grid {
+        take_zeroed(&mut scr.k1, n);
+        vel(x, t, &mut scr.k1)?;
+        take_zeroed(&mut scr.ytmp, n);
+        for i in 0..n {
+            scr.ytmp[i] = x[i] + dt * scr.k1[i];
+        }
+        take_zeroed(&mut scr.k2, n);
+        vel(&scr.ytmp, t + dt, &mut scr.k2)?;
+        for i in 0..n {
+            x[i] += dt * 0.5 * (scr.k1[i] + scr.k2[i]);
+        }
+        scr.evals += 2;
+    }
+    Ok(())
+}
+
+// Dormand–Prince 5(4) Butcher tableau (c: stage times, a: stage weights,
+// b: 5th-order solution, e = b − b*: embedded error weights).
+const DP_C2: f32 = 1.0 / 5.0;
+const DP_C3: f32 = 3.0 / 10.0;
+const DP_C4: f32 = 4.0 / 5.0;
+const DP_C5: f32 = 8.0 / 9.0;
+const DP_A21: f32 = 1.0 / 5.0;
+const DP_A31: f32 = 3.0 / 40.0;
+const DP_A32: f32 = 9.0 / 40.0;
+const DP_A41: f32 = 44.0 / 45.0;
+const DP_A42: f32 = -56.0 / 15.0;
+const DP_A43: f32 = 32.0 / 9.0;
+const DP_A51: f32 = 19372.0 / 6561.0;
+const DP_A52: f32 = -25360.0 / 2187.0;
+const DP_A53: f32 = 64448.0 / 6561.0;
+const DP_A54: f32 = -212.0 / 729.0;
+const DP_A61: f32 = 9017.0 / 3168.0;
+const DP_A62: f32 = -355.0 / 33.0;
+const DP_A63: f32 = 46732.0 / 5247.0;
+const DP_A64: f32 = 49.0 / 176.0;
+const DP_A65: f32 = -5103.0 / 18656.0;
+const DP_B1: f32 = 35.0 / 384.0;
+const DP_B3: f32 = 500.0 / 1113.0;
+const DP_B4: f32 = 125.0 / 192.0;
+const DP_B5: f32 = -2187.0 / 6784.0;
+const DP_B6: f32 = 11.0 / 84.0;
+const DP_E1: f32 = 71.0 / 57600.0;
+const DP_E3: f32 = -71.0 / 16695.0;
+const DP_E4: f32 = 71.0 / 1920.0;
+const DP_E5: f32 = -17253.0 / 339200.0;
+const DP_E6: f32 = 22.0 / 525.0;
+const DP_E7: f32 = -1.0 / 40.0;
+
+/// In-place adaptive Dormand–Prince 5(4) from t0 to t1 (signed — the
+/// reverse/encode direction integrates with negative steps).
+///
+/// Step control: the embedded error is reduced to a scaled RMS norm
+/// (`scale_i = atol + rtol·max(|x_i|, |x'_i|)`, accumulated with an
+/// explicit f64 loop — no float `.sum()` in flow/, per the determinism
+/// lint) and a step is accepted when that norm is ≤ 1. The next step is
+/// `h · clamp(0.9·err^(-1/5), 0.2, 5)`. `steps_hint` seeds the initial
+/// step at `(t1-t0)/steps_hint`.
+///
+/// Termination is guaranteed on *any* field, including the exploded
+/// low-bit models Fig. 4 documents (non-finite velocities): a non-finite
+/// error norm rejects and shrinks the step hard; once the step reaches
+/// the floor (1e-6 of the span) it is force-accepted; and an overall
+/// iteration cap finishes the remaining interval with a single Euler
+/// step so the sweep can score the failure instead of hanging.
+#[allow(clippy::too_many_arguments)]
+pub fn dopri5_into(
+    vel: &mut VelocityInto<'_>,
+    x: &mut [f32],
+    t0: f32,
+    t1: f32,
+    atol: f32,
+    rtol: f32,
+    steps_hint: usize,
+    scr: &mut SolverScratch,
+) -> Result<()> {
+    let n = x.len();
+    scr.evals = 0;
+    if n == 0 || t0 == t1 {
+        return Ok(());
+    }
+    scr.prepare(n);
+    let span = t1 - t0;
+    let hint = steps_hint.max(1);
+    let mut dt = span / hint as f32;
+    let dt_min = span.abs() * 1e-6;
+    let max_iters = 64 * hint + 256;
+    let mut t = t0;
+    // FSAL: k1 holds v(x, t) at the top of every iteration; after an
+    // accepted step the 7th stage *is* the next step's first stage.
+    vel(x, t, &mut scr.k1)?;
+    scr.evals += 1;
+    let mut iters = 0usize;
+    while t != t1 {
+        iters += 1;
+        if iters > max_iters {
+            // pathological field: finish deterministically with one
+            // Euler step over the remainder (downstream clamps score it)
+            let rem = t1 - t;
+            for i in 0..n {
+                x[i] += rem * scr.k1[i];
+            }
+            t = t1;
+            break;
+        }
+        let mut h = dt;
+        let rem = t1 - t;
+        let last = if span > 0.0 { h >= rem } else { h <= rem };
+        if last {
+            h = rem;
+        }
+        for i in 0..n {
+            scr.ytmp[i] = x[i] + h * (DP_A21 * scr.k1[i]);
+        }
+        vel(&scr.ytmp, t + DP_C2 * h, &mut scr.k2)?;
+        for i in 0..n {
+            scr.ytmp[i] = x[i] + h * (DP_A31 * scr.k1[i] + DP_A32 * scr.k2[i]);
+        }
+        vel(&scr.ytmp, t + DP_C3 * h, &mut scr.k3)?;
+        for i in 0..n {
+            scr.ytmp[i] = x[i] + h * (DP_A41 * scr.k1[i] + DP_A42 * scr.k2[i] + DP_A43 * scr.k3[i]);
+        }
+        vel(&scr.ytmp, t + DP_C4 * h, &mut scr.k4)?;
+        for i in 0..n {
+            scr.ytmp[i] = x[i]
+                + h * (DP_A51 * scr.k1[i]
+                    + DP_A52 * scr.k2[i]
+                    + DP_A53 * scr.k3[i]
+                    + DP_A54 * scr.k4[i]);
+        }
+        vel(&scr.ytmp, t + DP_C5 * h, &mut scr.k5)?;
+        for i in 0..n {
+            scr.ytmp[i] = x[i]
+                + h * (DP_A61 * scr.k1[i]
+                    + DP_A62 * scr.k2[i]
+                    + DP_A63 * scr.k3[i]
+                    + DP_A64 * scr.k4[i]
+                    + DP_A65 * scr.k5[i]);
+        }
+        vel(&scr.ytmp, t + h, &mut scr.k6)?;
+        // 5th-order proposal x' (into ytmp) and its trailing stage k7
+        for i in 0..n {
+            scr.ytmp[i] = x[i]
+                + h * (DP_B1 * scr.k1[i]
+                    + DP_B3 * scr.k3[i]
+                    + DP_B4 * scr.k4[i]
+                    + DP_B5 * scr.k5[i]
+                    + DP_B6 * scr.k6[i]);
+        }
+        vel(&scr.ytmp, t + h, &mut scr.k7)?;
+        scr.evals += 6;
+        let mut acc = 0.0f64;
+        for i in 0..n {
+            let e = h
+                * (DP_E1 * scr.k1[i]
+                    + DP_E3 * scr.k3[i]
+                    + DP_E4 * scr.k4[i]
+                    + DP_E5 * scr.k5[i]
+                    + DP_E6 * scr.k6[i]
+                    + DP_E7 * scr.k7[i]);
+            let sc = atol + rtol * x[i].abs().max(scr.ytmp[i].abs());
+            let r = e as f64 / sc as f64;
+            acc += r * r;
+        }
+        let err = (acc / n as f64).sqrt();
+        if err <= 1.0 || h.abs() <= dt_min {
+            x.copy_from_slice(&scr.ytmp);
+            std::mem::swap(&mut scr.k1, &mut scr.k7);
+            t = if last { t1 } else { t + h };
+        }
+        let fac = if err.is_finite() && err > 0.0 {
+            (0.9 * err.powf(-0.2)).clamp(0.2, 5.0) as f32
+        } else if err == 0.0 {
+            5.0
+        } else {
+            0.2
+        };
+        dt = h * fac;
+        if dt.abs() < dt_min {
+            dt = dt_min * span.signum();
+        }
+    }
+    Ok(())
+}
+
+/// Integrate dx/dt = f(x, t) from t0 to t1 in `steps` fixed steps
+/// (for [`Solver::Dopri5`], `steps` is the initial-step hint and the
+/// default [`DOPRI5_ATOL`]/[`DOPRI5_RTOL`] tolerances apply).
 pub fn integrate(
     solver: Solver,
     f: &mut dyn BatchVelocity,
@@ -115,17 +406,21 @@ pub fn integrate(
     t1: f32,
     steps: usize,
 ) -> Result<Vec<f32>> {
-    let grid = StepGrid::new(t0, t1, steps);
-    let dt = grid.dt();
-    for t in grid {
-        match solver {
-            Solver::Euler => {
+    match solver {
+        Solver::Euler => {
+            let grid = StepGrid::new(t0, t1, steps);
+            let dt = grid.dt();
+            for t in grid {
                 let v = f.velocity(&x, t)?;
                 for (xi, vi) in x.iter_mut().zip(v.iter()) {
                     *xi += dt * vi;
                 }
             }
-            Solver::Heun => {
+        }
+        Solver::Heun => {
+            let grid = StepGrid::new(t0, t1, steps);
+            let dt = grid.dt();
+            for t in grid {
                 let v0 = f.velocity(&x, t)?;
                 let pred: Vec<f32> = x
                     .iter()
@@ -137,6 +432,24 @@ pub fn integrate(
                     *xi += dt * 0.5 * (a + b);
                 }
             }
+        }
+        Solver::Dopri5 => {
+            let mut scr = SolverScratch::default();
+            let mut vel = |xs: &[f32], t: f32, out: &mut [f32]| -> Result<()> {
+                let v = f.velocity(xs, t)?;
+                out.copy_from_slice(&v);
+                Ok(())
+            };
+            dopri5_into(
+                &mut vel,
+                &mut x,
+                t0,
+                t1,
+                DOPRI5_ATOL,
+                DOPRI5_RTOL,
+                steps,
+                &mut scr,
+            )?;
         }
     }
     Ok(x)
@@ -166,8 +479,113 @@ mod tests {
         let h1 = err(Solver::Heun, 16);
         let h2 = err(Solver::Heun, 32);
         assert!((h1 / h2 - 4.0).abs() < 0.6, "heun ratio {}", h1 / h2);
+        // empirical order p from error(dt) ∝ dt^p: p = log2(e(dt)/e(dt/2))
+        let p_euler = (e1 / e2).log2();
+        assert!((p_euler - 1.0).abs() < 0.25, "euler order {p_euler}");
+        let p_heun = (h1 / h2).log2();
+        assert!((p_heun - 2.0).abs() < 0.35, "heun order {p_heun}");
         // Heun strictly more accurate at equal steps
         assert!(h1 < e1 / 5.0, "heun {h1} vs euler {e1}");
+    }
+
+    /// dopri5 on the same closed-form field: the global error must land
+    /// within a small multiple of the (atol, rtol) tolerance band, and
+    /// the adaptive controller must not burn more evaluations than a
+    /// fine fixed grid would.
+    #[test]
+    fn dopri5_meets_tolerances_on_linear_ode() {
+        let mut vel = |x: &[f32], _t: f32, out: &mut [f32]| -> Result<()> {
+            for (o, &v) in out.iter_mut().zip(x.iter()) {
+                *o = -v;
+            }
+            Ok(())
+        };
+        let mut x = vec![1.0f32];
+        let mut scr = SolverScratch::default();
+        dopri5_into(&mut vel, &mut x, 0.0, 1.0, DOPRI5_ATOL, DOPRI5_RTOL, 4, &mut scr).unwrap();
+        let exact = (-1.0f32).exp();
+        let tol_scale = DOPRI5_ATOL + DOPRI5_RTOL * exact;
+        let err = (x[0] - exact).abs();
+        // global error within ~10x the per-step tolerance scale (the
+        // controller bounds local error; global error accumulates)
+        assert!(err < 10.0 * tol_scale, "err {err} vs scale {tol_scale}");
+        assert!(scr.evals > 0, "evals must be recorded");
+        // far fewer evals than a 256-step fixed grid at this accuracy
+        assert!(scr.evals < 256, "evals {}", scr.evals);
+        // the integrate() driver routes Dopri5 to the same core
+        let mut f = |x: &[f32], _t: f32| -> Result<Vec<f32>> {
+            Ok(x.iter().map(|&v| -v).collect())
+        };
+        let out = integrate(Solver::Dopri5, &mut f, vec![1.0], 0.0, 1.0, 4).unwrap();
+        assert_eq!(out[0].to_bits(), x[0].to_bits(), "driver and core must agree");
+    }
+
+    /// dopri5 must terminate (and return Ok) even when the field goes
+    /// non-finite — the exploded low-bit models the sweep scores.
+    #[test]
+    fn dopri5_terminates_on_pathological_field() {
+        let mut vel = |_x: &[f32], _t: f32, out: &mut [f32]| -> Result<()> {
+            for o in out.iter_mut() {
+                *o = f32::NAN;
+            }
+            Ok(())
+        };
+        let mut x = vec![0.5f32, -0.5];
+        let mut scr = SolverScratch::default();
+        dopri5_into(&mut vel, &mut x, 0.0, 1.0, DOPRI5_ATOL, DOPRI5_RTOL, 8, &mut scr).unwrap();
+        // reverse direction terminates too
+        let mut x2 = vec![0.5f32];
+        dopri5_into(&mut vel, &mut x2, 1.0, 0.0, DOPRI5_ATOL, DOPRI5_RTOL, 8, &mut scr).unwrap();
+    }
+
+    /// The in-place Heun core's stage-1 evaluation times are exactly the
+    /// shared [`StepGrid`] sequence — the temb-cache keying contract.
+    #[test]
+    fn heun_into_visits_the_euler_step_grid() {
+        let steps = 6usize; // dt = 1/6: not exactly representable
+        let mut seen: Vec<f32> = Vec::new();
+        let mut stage = 0usize;
+        let mut vel = |x: &[f32], t: f32, out: &mut [f32]| -> Result<()> {
+            if stage % 2 == 0 {
+                seen.push(t);
+            }
+            stage += 1;
+            for (o, &v) in out.iter_mut().zip(x.iter()) {
+                *o = -v;
+            }
+            Ok(())
+        };
+        let mut x = vec![1.0f32];
+        let mut scr = SolverScratch::default();
+        heun_into(&mut vel, &mut x, 0.0, 1.0, steps, &mut scr).unwrap();
+        let grid: Vec<f32> = StepGrid::new(0.0, 1.0, steps).collect();
+        assert_eq!(seen.len(), grid.len());
+        for (s, (&a, &b)) in seen.iter().zip(grid.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "stage-1 t at step {s}");
+        }
+        assert_eq!(scr.evals, 2 * steps);
+    }
+
+    /// Cross-shape contract: the allocating [`integrate`] Heun arm and
+    /// the in-place [`heun_into`] core produce bit-identical states.
+    #[test]
+    fn heun_core_matches_integrate_bitwise() {
+        let field = |x: &[f32], t: f32| -> Vec<f32> {
+            x.iter().map(|&v| (t - v) * 0.7).collect()
+        };
+        let x0 = vec![0.3f32, -1.2, 0.9];
+        let mut f = |x: &[f32], t: f32| -> Result<Vec<f32>> { Ok(field(x, t)) };
+        let want = integrate(Solver::Heun, &mut f, x0.clone(), 0.0, 1.0, 7).unwrap();
+        let mut vel = |x: &[f32], t: f32, out: &mut [f32]| -> Result<()> {
+            out.copy_from_slice(&field(x, t));
+            Ok(())
+        };
+        let mut got = x0.clone();
+        let mut scr = SolverScratch::default();
+        heun_into(&mut vel, &mut got, 0.0, 1.0, 7, &mut scr).unwrap();
+        for (i, (a, b)) in got.iter().zip(want.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "component {i}");
+        }
     }
 
     /// Time-dependent field dx/dt = t: x(1) = x0 + 1/2. Heun is exact for
@@ -206,8 +624,13 @@ mod tests {
     fn solver_parse_and_evals() {
         assert_eq!(Solver::parse("euler"), Some(Solver::Euler));
         assert_eq!(Solver::parse("heun"), Some(Solver::Heun));
+        assert_eq!(Solver::parse("dopri5"), Some(Solver::Dopri5));
         assert_eq!(Solver::parse("rk4"), None);
         assert_eq!(Solver::Heun.evals_per_step(), 2);
+        assert_eq!(Solver::Dopri5.evals_per_step(), 6);
+        for s in [Solver::Euler, Solver::Heun, Solver::Dopri5] {
+            assert_eq!(Solver::parse(s.name()), Some(s), "name round-trip");
+        }
     }
 
     /// Heun over the actual velocity network (CPU) reduces discretization

@@ -1,11 +1,16 @@
-//! Euler ODE sampler: forward generation (noise → data) and reverse
-//! encoding (data → noise, the Fig. 4 latent extraction), over any step
-//! backend (compiled HLO or the CPU reference).
+//! ODE sampler: forward generation (noise → data) and reverse encoding
+//! (data → noise, the Fig. 4 latent extraction), over any step backend
+//! (compiled HLO or the CPU reference). The default integration is Euler
+//! over the shared [`StepGrid`]; the engine adapter additionally exposes
+//! the full solver axis (euler/heun/dopri5) through
+//! [`EngineStep::run_solver`] for the paper-grid sweep.
 
 use anyhow::Result;
 
 use crate::engine::workspace::{take_zeroed, Workspace};
-use crate::flow::ode::StepGrid;
+use crate::flow::ode::{
+    dopri5_into, heun_into, Solver, SolverScratch, StepGrid, DOPRI5_ATOL, DOPRI5_RTOL,
+};
 use crate::model::params::ParamStore;
 use crate::model::quantized::QuantizedModel;
 use crate::model::spec::ModelSpec;
@@ -86,6 +91,8 @@ pub struct EngineStep<'a> {
     v: Vec<f32>,
     /// Shared per-step t broadcast to `[B]`.
     tb: Vec<f32>,
+    /// Stage buffers for the non-Euler solver cores ([`run_solver`][Self::run_solver]).
+    scr: SolverScratch,
 }
 
 impl<'a> EngineStep<'a> {
@@ -96,6 +103,7 @@ impl<'a> EngineStep<'a> {
             ws: Workspace::new(),
             v: Vec::new(),
             tb: Vec::new(),
+            scr: SolverScratch::default(),
         }
     }
 
@@ -105,10 +113,72 @@ impl<'a> EngineStep<'a> {
     }
 
     /// High-water bytes of the adapter-owned scratch (its workspace plus
-    /// the step loop's velocity/t buffers). The engine's own pool arenas
-    /// are reported separately by `Engine::workspace_bytes`.
+    /// the step loop's velocity/t buffers and solver stage buffers). The
+    /// engine's own pool arenas are reported separately by
+    /// `Engine::workspace_bytes`.
     pub fn workspace_bytes(&self) -> usize {
-        self.ws.high_water_bytes() + (self.v.capacity() + self.tb.capacity()) * 4
+        self.ws.high_water_bytes()
+            + (self.v.capacity() + self.tb.capacity()) * 4
+            + self.scr.bytes()
+    }
+
+    /// Velocity evaluations performed by the most recent
+    /// [`run_solver`][Self::run_solver] call — the sweep's per-eval
+    /// latency accounting (for dopri5 this is the *actual* adaptive
+    /// count, not the nominal 6·steps).
+    pub fn last_evals(&self) -> usize {
+        self.scr.evals
+    }
+
+    /// Multi-step integration with an explicit [`Solver`] — the sweep's
+    /// solver axis. Euler delegates to the serving [`StepBackend::run`]
+    /// loop (bit-identical to every other euler path in the crate); Heun
+    /// and dopri5 route through the in-place `flow::ode` cores with the
+    /// adapter's reusable [`SolverScratch`], so steady-state runs stay
+    /// allocation-free. Heun visits the exact euler [`StepGrid`] at its
+    /// first stage, so interleaving solvers never disturbs the engine
+    /// workspace's temb-cache keying (pinned by this module's tests).
+    pub fn run_solver(
+        &mut self,
+        x: Vec<f32>,
+        t0: f32,
+        t1: f32,
+        steps: usize,
+        solver: Solver,
+    ) -> Result<Vec<f32>> {
+        if solver == Solver::Euler {
+            let out = self.run(x, t0, t1, steps)?;
+            self.scr.evals = steps;
+            return Ok(out);
+        }
+        let d = self.engine.spec().d;
+        assert_eq!(x.len() % d, 0, "x must be flat [B, D]");
+        let b = x.len() / d;
+        let mut x = x;
+        let Self {
+            engine, ws, tb, scr, ..
+        } = self;
+        let mut vel = |xs: &[f32], t: f32, out: &mut [f32]| -> Result<()> {
+            tb.clear();
+            tb.resize(b, t);
+            engine.velocity_into(xs, tb, out, ws)
+        };
+        match solver {
+            // handled above: the serving euler loop is the pinned path
+            Solver::Euler => {}
+            Solver::Heun => heun_into(&mut vel, &mut x, t0, t1, steps, scr)?,
+            Solver::Dopri5 => dopri5_into(
+                &mut vel,
+                &mut x,
+                t0,
+                t1,
+                DOPRI5_ATOL,
+                DOPRI5_RTOL,
+                steps,
+                scr,
+            )?,
+        }
+        Ok(x)
     }
 }
 
@@ -252,7 +322,7 @@ impl StepBackend for HloQStep<'_> {
 /// Clamp to image range; non-finite states (an exploded low-bit model —
 /// the failure mode Fig. 4 documents) map to mid-gray so downstream
 /// metrics stay well-defined and score the failure as what it is.
-fn to_pixel(v: f32) -> f32 {
+pub(crate) fn to_pixel(v: f32) -> f32 {
     if v.is_finite() {
         v.clamp(-1.0, 1.0)
     } else {
@@ -262,7 +332,7 @@ fn to_pixel(v: f32) -> f32 {
 
 /// Bound latents; explosions register as a huge-but-finite sentinel so
 /// variance statistics quantify the blow-up instead of becoming NaN.
-fn to_latent(v: f32) -> f32 {
+pub(crate) fn to_latent(v: f32) -> f32 {
     if v.is_finite() {
         v.clamp(-1e3, 1e3)
     } else {
@@ -295,6 +365,30 @@ pub fn generate_from(
 /// Reverse encoding: images → latents (integrate t: 1 → 0, dt < 0).
 pub fn encode(backend: &mut dyn StepBackend, imgs: &[f32], steps: usize) -> Result<Vec<f32>> {
     let out = integrate(backend, imgs.to_vec(), 1.0, 0.0, steps)?;
+    Ok(out.into_iter().map(to_latent).collect())
+}
+
+/// [`generate_from`] with an explicit solver through the engine adapter
+/// (same start noise, same pixel clamp) — the sweep's forward path.
+pub fn generate_from_solver(
+    be: &mut EngineStep<'_>,
+    x0: &[f32],
+    steps: usize,
+    solver: Solver,
+) -> Result<Vec<f32>> {
+    let out = be.run_solver(x0.to_vec(), 0.0, 1.0, steps, solver)?;
+    Ok(out.into_iter().map(to_pixel).collect())
+}
+
+/// [`encode`] with an explicit solver through the engine adapter (same
+/// latent sentinel bound) — the sweep's Fig. 4 latent path.
+pub fn encode_solver(
+    be: &mut EngineStep<'_>,
+    imgs: &[f32],
+    steps: usize,
+    solver: Solver,
+) -> Result<Vec<f32>> {
+    let out = be.run_solver(imgs.to_vec(), 1.0, 0.0, steps, solver)?;
     Ok(out.into_iter().map(to_latent).collect())
 }
 
@@ -470,6 +564,86 @@ mod tests {
         crate::obs::set_timing_enabled(true);
 
         assert_eq!(on, off, "timing must never change sampling results");
+    }
+
+    /// Cross-path regression (referenced by `flow::ode`'s module doc):
+    /// the zero-alloc `run_solver` Heun path and the allocating
+    /// `ode::integrate` Heun driver produce bit-identical trajectories
+    /// through the same (bit-exact) engine.
+    #[test]
+    fn run_solver_heun_matches_integrate_bitwise() {
+        use crate::engine::{Engine, LutEngine};
+        use crate::quant::{quantize_model, QuantMethod};
+        let (spec, theta) = setup();
+        let qm = quantize_model(&spec, &theta, QuantMethod::Ot, 4);
+        let lut = LutEngine::new(&qm).unwrap();
+        let x0 = vec![0.3f32; 2 * spec.d];
+        let mut be = EngineStep::new(&lut);
+        let got = be.run_solver(x0.clone(), 0.0, 1.0, 5, Solver::Heun).unwrap();
+        assert_eq!(be.last_evals(), 10, "2 evals per heun step");
+        let d = spec.d;
+        let mut f = |x: &[f32], t: f32| -> Result<Vec<f32>> {
+            let ts = vec![t; x.len() / d];
+            lut.velocity(x, &ts)
+        };
+        let want = crate::flow::ode::integrate(Solver::Heun, &mut f, x0, 0.0, 1.0, 5).unwrap();
+        assert_eq!(got, want, "heun cross-path bit-identity");
+    }
+
+    /// StepGrid bit-contract regression: interleaving heun/dopri5 runs on
+    /// the same adapter must not disturb the euler path's temb-cache
+    /// keying — an euler run after heun+dopri5 is bit-identical to the
+    /// euler run on the fresh (cold-cache) adapter.
+    #[test]
+    fn solver_runs_do_not_disturb_euler_temb_cache() {
+        use crate::engine::LutEngine;
+        use crate::quant::{quantize_model, QuantMethod};
+        let (spec, theta) = setup();
+        let qm = quantize_model(&spec, &theta, QuantMethod::Uniform, 4);
+        let lut = LutEngine::new(&qm).unwrap();
+        let x0 = vec![0.25f32; 2 * spec.d];
+        let mut be = EngineStep::new(&lut);
+        let first = be.run_solver(x0.clone(), 0.0, 1.0, 6, Solver::Euler).unwrap();
+        let _ = be.run_solver(x0.clone(), 0.0, 1.0, 6, Solver::Heun).unwrap();
+        let _ = be
+            .run_solver(x0.clone(), 0.0, 1.0, 6, Solver::Dopri5)
+            .unwrap();
+        let again = be.run_solver(x0, 0.0, 1.0, 6, Solver::Euler).unwrap();
+        assert_eq!(first, again, "heun/dopri5 disturbed the euler path");
+        assert_eq!(be.last_evals(), 6, "euler records one eval per step");
+    }
+
+    /// dopri5 through the engine adapter: closer to the fine-grid euler
+    /// reference than coarse euler at the same step hint, with its
+    /// adaptive evaluation count recorded.
+    #[test]
+    fn run_solver_dopri5_tracks_fine_euler_reference() {
+        use crate::engine::LutEngine;
+        use crate::quant::{quantize_model, QuantMethod};
+        let (spec, theta) = setup();
+        let qm = quantize_model(&spec, &theta, QuantMethod::Ot, 8);
+        let lut = LutEngine::new(&qm).unwrap();
+        let x0 = vec![0.2f32; spec.d];
+        let mut be = EngineStep::new(&lut);
+        let reference = be
+            .run_solver(x0.clone(), 0.0, 1.0, 256, Solver::Euler)
+            .unwrap();
+        let coarse = be.run_solver(x0.clone(), 0.0, 1.0, 8, Solver::Euler).unwrap();
+        let adaptive = be.run_solver(x0, 0.0, 1.0, 8, Solver::Dopri5).unwrap();
+        assert!(be.last_evals() >= 7, "fsal start + at least one step");
+        let dist = |a: &[f32]| -> f64 {
+            let mut acc = 0.0f64;
+            for (&x, &y) in a.iter().zip(reference.iter()) {
+                acc += f64::from(x - y) * f64::from(x - y);
+            }
+            acc.sqrt()
+        };
+        let (e_coarse, e_adaptive) = (dist(&coarse), dist(&adaptive));
+        assert!(adaptive.iter().all(|v| v.is_finite()));
+        assert!(
+            e_adaptive < e_coarse,
+            "dopri5 {e_adaptive} vs euler-8 {e_coarse}"
+        );
     }
 
     #[test]

@@ -81,6 +81,7 @@ pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod stats;
+pub mod sweep;
 pub mod tensor;
 pub mod theory;
 pub mod util;

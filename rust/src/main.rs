@@ -9,6 +9,7 @@
 //!   latent    Fig. 4 latent-stability grid -> results/fig4_latent.csv
 //!   grid      Figs. 2 & 5–8 sample grids -> results/*.ppm
 //!   theory    ρ(b), bound curves, bit budgets -> results/theory_*.csv
+//!   figgrid   paper-grid conformance sweep -> BENCH_figgrid.json
 //!   serve     TCP serving with dynamic batching
 //!   info      artifact/manifest status
 
@@ -55,6 +56,7 @@ fn run() -> Result<()> {
         "latent" => cmd_latent(rest),
         "grid" => cmd_grid(rest),
         "theory" => cmd_theory(rest),
+        "figgrid" => cmd_figgrid(rest),
         "serve" => cmd_serve(rest),
         "info" => cmd_info(rest),
         "help" | "--help" | "-h" => {
@@ -77,6 +79,7 @@ fn print_help() {
            latent    Fig. 4 latent-stability grid (csv)\n\
            grid      Figs. 2 & 5-8 sample grids (ppm)\n\
            theory    rho(b), FID bounds, bit budgets (csv)\n\
+           figgrid   paper-grid conformance sweep (BENCH_figgrid.json)\n\
            serve     TCP serving with dynamic batching\n\
            info      artifact/manifest status\n\
          run `fmq <sub> --help` for flags"
@@ -491,6 +494,113 @@ fn cmd_theory(argv: &[String]) -> Result<()> {
         &budget,
     )?;
     println!("-> {:?}, theory_bounds.csv, theory_budget.csv", out);
+    Ok(())
+}
+
+fn parse_solvers(args: &fmq::util::cli::Args) -> Result<Vec<fmq::flow::ode::Solver>> {
+    args.get_list("solvers")
+        .iter()
+        .map(|s| {
+            fmq::flow::ode::Solver::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown solver '{s}'"))
+        })
+        .collect()
+}
+
+fn cmd_figgrid(argv: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "figgrid",
+        "paper-grid conformance sweep: datasets x methods x bits x solvers -> BENCH_figgrid.json",
+    )
+    .flag("datasets", "all", "comma list or 'all'")
+    .flag("methods", "ot,uniform,pwl,log2", "quantizers")
+    .flag("bits", "2,3,4,8", "bit-widths")
+    .flag("solvers", "euler,heun,dopri5", "ODE solvers")
+    .flag("steps", "16", "steps per trajectory (dopri5: initial-step hint)")
+    .flag("n", "64", "samples per cell")
+    .flag("batch", "16", "samples per engine super-batch")
+    .flag("seed", "7", "rng seed")
+    .flag("engine", "lut2", "primary backend: cpu-ref|lut|lut2")
+    .flag("check-engine", "cpu-ref", "cross-check backend")
+    .flag("out", "BENCH_figgrid.json", "output JSON path");
+    let a = cmd.parse(argv)?;
+    let mut spec = fmq::sweep::GridSpec {
+        datasets: parse_datasets(&a)?,
+        methods: parse_methods(&a)?,
+        bits: parse_bits(&a)?,
+        solvers: parse_solvers(&a)?,
+        steps: a.get_usize("steps")?,
+        n: a.get_usize("n")?,
+        batch: a.get_usize("batch")?.max(1),
+        seed: a.get_u64("seed")?,
+        engine: a.get_parse::<EngineKind>("engine")?,
+        check_engine: a.get_parse::<EngineKind>("check-engine")?,
+        ..fmq::sweep::GridSpec::full()
+    };
+    if std::env::var("FMQ_BENCH_FAST").is_ok_and(|v| v == "1") {
+        // CI smoke tier: keep the axes/engines chosen above, shrink the
+        // per-cell work to the smoke sizes (and drop the 4-bit column).
+        spec = fmq::sweep::GridSpec {
+            datasets: spec.datasets,
+            methods: spec.methods,
+            solvers: spec.solvers,
+            seed: spec.seed,
+            engine: spec.engine,
+            check_engine: spec.check_engine,
+            ..fmq::sweep::GridSpec::smoke()
+        };
+    }
+    println!(
+        "figgrid: {} cells ({} datasets x {} methods x {:?} bits x {} solvers), \
+         n={} steps={} engine={} check={}{}",
+        spec.cells(),
+        spec.datasets.len(),
+        spec.methods.len(),
+        spec.bits,
+        spec.solvers.len(),
+        spec.n,
+        spec.steps,
+        spec.engine.name(),
+        spec.check_engine.name(),
+        if spec.fast { " [FMQ_BENCH_FAST smoke tier]" } else { "" }
+    );
+    let start = std::time::Instant::now();
+    let res = fmq::sweep::run_grid(&spec)?;
+    for d in &res.datasets {
+        println!("  [{}] L_x_hat = {:.3}", d.dataset.name(), d.l_x_hat);
+    }
+    for c in &res.cells {
+        println!(
+            "  {}: ssim {:.4} psnr {:.2} fid {:.3} w2 {:.2e} traj {:.2e}<={:.2e} \
+             engine_dev {:.1e} ({} evals, {:.1} us/step)",
+            c.key(),
+            c.ssim,
+            c.psnr,
+            c.fid,
+            c.w2_sq,
+            c.traj_dev,
+            c.traj_bound,
+            c.engine_dev,
+            c.evals,
+            c.per_step_us
+        );
+    }
+    let out = PathBuf::from(a.get("out"));
+    res.write_json(&out)?;
+    println!(
+        "{} cells in {:.1}s -> {out:?}",
+        res.cells.len(),
+        start.elapsed().as_secs_f64()
+    );
+    // conformance AFTER the JSON lands, so a failing grid is inspectable
+    let violations = fmq::sweep::conformance::check(&res);
+    if !violations.is_empty() {
+        for v in &violations {
+            eprintln!("CONFORMANCE VIOLATION: {v}");
+        }
+        bail!("{} conformance violation(s) — see {out:?}", violations.len());
+    }
+    println!("conformance: all invariants hold");
     Ok(())
 }
 

@@ -125,6 +125,21 @@ pub fn quantize_mixed(
     QuantizedModel::new(spec.clone(), method, max_bits, codebooks, codes, biases)
 }
 
+/// Bit-tight payload accounting for a mixed allocation: the bytes the
+/// per-layer packed code streams occupy, Σ_l ⌈n_l·b_l / 8⌉. With a
+/// homogeneous allocation this is exactly the packed-codes term of
+/// [`QuantizedModel::compressed_bytes`] whenever every layer's bit count
+/// is byte-aligned (true for the default spec — all layer sizes are
+/// multiples of 8); the property tests pin both facts.
+pub fn packed_bytes(sizes: &[usize], bits: &[u8]) -> usize {
+    assert_eq!(sizes.len(), bits.len());
+    let mut total = 0usize;
+    for (&n, &b) in sizes.iter().zip(bits.iter()) {
+        total += (n * b as usize).div_ceil(8);
+    }
+    total
+}
+
 /// Size-weighted total distortion of an allocation (for tests/benches).
 pub fn total_distortion(table: &DistortionTable, bits: &[u8]) -> f64 {
     let total: usize = table.sizes.iter().sum();
@@ -212,6 +227,71 @@ mod tests {
             bits[idx_wt],
             bits[idx_w1]
         );
+    }
+
+    /// Per-layer bit assignments survive pack/unpack for ragged layer
+    /// shapes at every bit-width the allocator can emit (and below its
+    /// floor, down to 1 bit — the packing layer must not care).
+    #[test]
+    fn mixed_allocation_codes_roundtrip_packing() {
+        use crate::quant::packing::PackedCodes;
+        use crate::util::check::forall;
+        forall("mixed ragged pack/unpack", 60, |g| {
+            let n_layers = g.usize_in(1..=6);
+            let mut sizes = Vec::new();
+            let mut bits = Vec::new();
+            let mut layers: Vec<Vec<u32>> = Vec::new();
+            for _ in 0..n_layers {
+                // ragged: odd sizes, sizes below one packing word, empty
+                let n = g.usize_in(0..=67);
+                let b = g.usize_in(1..=8) as u8;
+                let limit = (1u32 << b) - 1;
+                let codes: Vec<u32> =
+                    (0..n).map(|_| g.rng().next_u64() as u32 & limit).collect();
+                sizes.push(n);
+                bits.push(b);
+                layers.push(codes);
+            }
+            let mut packed_total = 0usize;
+            for (codes, &b) in layers.iter().zip(bits.iter()) {
+                let p = PackedCodes::pack(codes, b).expect("codes fit");
+                if p.unpack() != *codes {
+                    return false;
+                }
+                packed_total += p.byte_len();
+            }
+            // the bit-tight account never exceeds the stored (64-bit
+            // word padded) payload, and the padding is under one word
+            // per layer
+            let tight = packed_bytes(&sizes, &bits);
+            tight <= packed_total && packed_total < tight + 8 * n_layers + 8
+        });
+    }
+
+    /// The model's reported size is exactly the per-layer packed-byte
+    /// sum plus codebooks and biases — no hidden accounting.
+    #[test]
+    fn model_size_accounting_matches_packed_bytes() {
+        let (spec, theta, table) = setup();
+        for b in [2u8, 3, 5, 8] {
+            let bits = vec![b; table.sizes.len()];
+            let qm = quantize_mixed(&spec, &theta, QuantMethod::Ot, &bits);
+            assert_eq!(qm.bits, b);
+            let code_bytes = packed_bytes(&table.sizes, &bits);
+            let cb_bytes: usize = qm.codebooks.iter().map(|c| c.levels.len() * 4).sum();
+            let bias_bytes = qm.biases.len() * 4;
+            assert_eq!(
+                qm.compressed_bytes(),
+                code_bytes + cb_bytes + bias_bytes,
+                "b={b}: accounting drift"
+            );
+            // and the stored packing agrees with the tight account
+            // (every default-spec layer is a multiple of 8 params, so
+            // per-layer and contiguous packing coincide)
+            let packed = qm.pack_codes().expect("packs");
+            assert!(packed.byte_len() >= code_bytes);
+            assert!(packed.byte_len() < code_bytes + 8);
+        }
     }
 
     #[test]

@@ -1,0 +1,407 @@
+//! Ordering and bound invariants over a finished sweep.
+//!
+//! [`check`] returns one human-readable violation string per broken
+//! invariant (empty = conformant). The families, and why each slack is
+//! what it is:
+//!
+//! 1. **Completeness** — every (dataset, method, bits, solver) cell the
+//!    spec names must be present, with positive eval/latency fields.
+//! 2. **Monotone degradation** — per (dataset, method): weight-space
+//!    `w2_sq` non-increasing as bits increase (1% multiplicative slack
+//!    for the seeded Lloyd iterations), and end-to-end SSIM at the
+//!    widest bit-width no worse than at the narrowest (0.02 additive
+//!    slack for sampling noise on tiny smoke batches).
+//! 3. **OT wins at low bits** — on every ladder rung, OT's `w2_sq` is
+//!    within 5% of (i.e. at most 1.05×) the uniform and log2 baselines'
+//!    at 2 and 3 bits — the paper's Table 1/Fig. 2 ordering. Against
+//!    the quantile-cored pwl baseline only an order-of-magnitude guard
+//!    applies ([`OT_PWL_SLACK`]): equal-mass OT optimizes the W₂
+//!    coupling, not MSE, and pwl is MSE-competitive at 3 bits.
+//! 4. **Uniform closed form** — uniform cells must sit under the
+//!    Definition-2 Δ_U bounds (`w2_uniform_bound`/`sup_uniform_bound`);
+//!    these are theorems, so the slack is float-roundoff only. (OT's
+//!    equal-mass `w2_sq` is *not* compared against the Bennett density
+//!    form — measured values sit above it by design; see
+//!    `theory/bounds.rs`.)
+//! 5. **Trajectory bound** — the measured euler-discretization endpoint
+//!    deviation must sit under the measured-constant Grönwall bound
+//!    (`traj_bound`), a theorem for finite constants; non-finite
+//!    constants (exploded low-bit fields) hold vacuously and are
+//!    skipped.
+//! 6. **Engine equivalence** — the primary (lut2) and check (cpu-ref)
+//!    engines must agree per cell: ≤ 5e-3 max pixel deviation for the
+//!    fixed-step solvers (the engines' 1e-4/1e-5 velocity tolerance,
+//!    amplified along the trajectory). dopri5's accept/reject control
+//!    flow may fork on sub-tolerance velocity differences, so its cells
+//!    only require a finite deviation (it is recorded for the report).
+
+use super::{CellResult, GridResult};
+use crate::flow::ode::Solver;
+use crate::quant::QuantMethod;
+
+/// Multiplicative slack for the quantizer-error monotonicity family.
+const W2_MONO_SLACK: f64 = 1.01;
+/// Additive SSIM slack between the widest and narrowest bit-widths.
+const SSIM_SLACK: f64 = 0.02;
+/// Multiplicative slack for the OT-vs-uniform/log2 low-bit comparison.
+const OT_SLACK: f64 = 1.05;
+/// Guard for OT vs the quantile-cored pwl baseline. Equal-mass OT
+/// optimizes the W₂ coupling, not MSE, and pwl's dense 2.5–97.5% core
+/// is MSE-competitive — measured ~1.0× at 2 bits and 1.2–1.9× at
+/// 3 bits on Gaussian-with-outlier layers — so against pwl this family
+/// only guards order-of-magnitude regressions (a broken OT sort, an
+/// off-by-one mass split), not strict dominance.
+const OT_PWL_SLACK: f64 = 2.5;
+/// Roundoff-only slack for the closed-form / Grönwall theorems.
+const THEOREM_SLACK: f64 = 1.05;
+/// Max per-pixel primary-vs-check deviation for fixed-step solvers.
+const ENGINE_DEV_MAX: f64 = 5e-3;
+
+/// Run every invariant family over `res`; returns the violations.
+pub fn check(res: &GridResult) -> Vec<String> {
+    let mut v = Vec::new();
+    completeness(res, &mut v);
+    monotone_degradation(res, &mut v);
+    ot_wins_low_bits(res, &mut v);
+    uniform_closed_form(res, &mut v);
+    trajectory_bound_holds(res, &mut v);
+    engine_equivalence(res, &mut v);
+    v
+}
+
+fn completeness(res: &GridResult, v: &mut Vec<String>) {
+    let spec = &res.spec;
+    if res.cells.len() != spec.cells() {
+        v.push(format!(
+            "completeness: {} cells recorded, spec names {}",
+            res.cells.len(),
+            spec.cells()
+        ));
+    }
+    for &ds in &spec.datasets {
+        for &method in &spec.methods {
+            for &bits in &spec.bits {
+                for &solver in &spec.solvers {
+                    match res.cell(ds, method, bits, solver) {
+                        None => v.push(format!(
+                            "completeness: missing cell {}",
+                            super::cell_key(ds, method, bits, solver)
+                        )),
+                        Some(c) => {
+                            let pos = |x: f64| x.is_finite() && x > 0.0;
+                            if c.evals == 0
+                                || !pos(c.gen_seconds)
+                                || !pos(c.per_step_us)
+                                || !pos(c.per_eval_us)
+                            {
+                                v.push(format!(
+                                    "completeness: {} has non-positive cost fields \
+                                     (evals={}, gen_seconds={}, per_step_us={}, per_eval_us={})",
+                                    c.key(),
+                                    c.evals,
+                                    c.gen_seconds,
+                                    c.per_step_us,
+                                    c.per_eval_us
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn monotone_degradation(res: &GridResult, v: &mut Vec<String>) {
+    let spec = &res.spec;
+    let mut bits = spec.bits.clone();
+    bits.sort_unstable();
+    for &ds in &spec.datasets {
+        for &method in &spec.methods {
+            for &solver in &spec.solvers {
+                // w2_sq non-increasing across every adjacent bit pair
+                for w in bits.windows(2) {
+                    let (lo, hi) = (w[0], w[1]);
+                    let (Some(cl), Some(ch)) = (
+                        res.cell(ds, method, lo, solver),
+                        res.cell(ds, method, hi, solver),
+                    ) else {
+                        continue;
+                    };
+                    if ch.w2_sq > cl.w2_sq * W2_MONO_SLACK + 1e-12 {
+                        v.push(format!(
+                            "monotone: {} w2_sq {} exceeds b{} value {}",
+                            ch.key(),
+                            ch.w2_sq,
+                            lo,
+                            cl.w2_sq
+                        ));
+                    }
+                }
+                // SSIM at the widest width no worse than at the narrowest
+                if let (Some(&lo), Some(&hi)) = (bits.first(), bits.last()) {
+                    if lo != hi {
+                        let (Some(cl), Some(ch)) = (
+                            res.cell(ds, method, lo, solver),
+                            res.cell(ds, method, hi, solver),
+                        ) else {
+                            continue;
+                        };
+                        if ch.ssim + SSIM_SLACK < cl.ssim {
+                            v.push(format!(
+                                "monotone: {} ssim {} below b{} value {}",
+                                ch.key(),
+                                ch.ssim,
+                                lo,
+                                cl.ssim
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn ot_wins_low_bits(res: &GridResult, v: &mut Vec<String>) {
+    let spec = &res.spec;
+    if !spec.methods.iter().any(|m| m.name() == QuantMethod::Ot.name()) {
+        return;
+    }
+    let baselines = [QuantMethod::Uniform, QuantMethod::Pwl, QuantMethod::Log2];
+    let Some(&solver) = spec.solvers.first() else {
+        return;
+    };
+    for &ds in &spec.datasets {
+        for bits in [2u8, 3] {
+            if !spec.bits.contains(&bits) {
+                continue;
+            }
+            let Some(ot) = res.cell(ds, QuantMethod::Ot, bits, solver) else {
+                continue;
+            };
+            for base in baselines {
+                if !spec.methods.iter().any(|m| m.name() == base.name()) {
+                    continue;
+                }
+                let Some(bc) = res.cell(ds, base, bits, solver) else {
+                    continue;
+                };
+                let slack = if base == QuantMethod::Pwl {
+                    OT_PWL_SLACK
+                } else {
+                    OT_SLACK
+                };
+                if ot.w2_sq > bc.w2_sq * slack {
+                    v.push(format!(
+                        "ot-low-bit: {} w2_sq {} exceeds {} w2_sq {}",
+                        ot.key(),
+                        ot.w2_sq,
+                        bc.key(),
+                        bc.w2_sq
+                    ));
+                }
+            }
+        }
+    }
+}
+
+fn uniform_closed_form(res: &GridResult, v: &mut Vec<String>) {
+    for c in uniform_cells(res) {
+        if c.w2_sq > c.w2_uniform_bound * THEOREM_SLACK + 1e-12 {
+            v.push(format!(
+                "uniform-bound: {} w2_sq {} above closed-form {}",
+                c.key(),
+                c.w2_sq,
+                c.w2_uniform_bound
+            ));
+        }
+        if c.sup_err > c.sup_uniform_bound * THEOREM_SLACK + 1e-12 {
+            v.push(format!(
+                "uniform-bound: {} sup {} above closed-form {}",
+                c.key(),
+                c.sup_err,
+                c.sup_uniform_bound
+            ));
+        }
+    }
+}
+
+fn uniform_cells(res: &GridResult) -> impl Iterator<Item = &CellResult> {
+    res.cells
+        .iter()
+        .filter(|c| c.method.name() == QuantMethod::Uniform.name())
+}
+
+fn trajectory_bound_holds(res: &GridResult, v: &mut Vec<String>) {
+    for c in &res.cells {
+        if c.solver != Solver::Euler {
+            continue;
+        }
+        if !c.traj_dev.is_finite() || !c.traj_bound.is_finite() {
+            continue; // exploded field: the bound holds vacuously
+        }
+        if c.traj_dev > c.traj_bound * THEOREM_SLACK + 1e-6 {
+            v.push(format!(
+                "traj-bound: {} deviation {} above measured-constant bound {}",
+                c.key(),
+                c.traj_dev,
+                c.traj_bound
+            ));
+        }
+    }
+}
+
+fn engine_equivalence(res: &GridResult, v: &mut Vec<String>) {
+    for c in &res.cells {
+        if !c.engine_dev.is_finite() {
+            v.push(format!("engine: {} non-finite deviation", c.key()));
+            continue;
+        }
+        if c.solver != Solver::Dopri5 && c.engine_dev > ENGINE_DEV_MAX {
+            v.push(format!(
+                "engine: {} primary-vs-check deviation {} exceeds {}",
+                c.key(),
+                c.engine_dev,
+                ENGINE_DEV_MAX
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::sweep::{GridResult, GridSpec};
+
+    fn cell(bits: u8, solver: Solver, method: QuantMethod) -> CellResult {
+        CellResult {
+            dataset: Dataset::SynthMnist,
+            method,
+            bits,
+            solver,
+            ssim: 1.0 - f64::from(8 - bits.min(8)) * 0.01,
+            psnr: 40.0,
+            fid: 0.1,
+            cov_covered: 1.0,
+            cov_entropy: 1.0,
+            latent_var_mean: 1.0,
+            latent_var_std: 0.1,
+            latent_mean_abs: 0.01,
+            latent_max_abs: 3.0,
+            baseline_var_std: 0.1,
+            w2_sq: f64::from(8 - bits.min(8)) * 1e-3 + 1e-6,
+            sup_err: 1e-3,
+            w2_uniform_bound: 1.0,
+            sup_uniform_bound: 1.0,
+            compression: 8.0,
+            traj_dev: 0.1,
+            dv_max: 0.5,
+            l_hat: 1.0,
+            traj_bound: 1.0,
+            eps_paper: 2.0,
+            engine_dev: 1e-5,
+            gen_seconds: 0.01,
+            evals: 8,
+            per_step_us: 10.0,
+            per_eval_us: 5.0,
+        }
+    }
+
+    fn tiny_spec() -> GridSpec {
+        GridSpec {
+            datasets: vec![Dataset::SynthMnist],
+            methods: vec![QuantMethod::Uniform],
+            bits: vec![2, 8],
+            solvers: vec![Solver::Euler],
+            ..GridSpec::smoke()
+        }
+    }
+
+    fn tiny_result() -> GridResult {
+        GridResult {
+            spec: tiny_spec(),
+            datasets: vec![],
+            cells: vec![
+                cell(2, Solver::Euler, QuantMethod::Uniform),
+                cell(8, Solver::Euler, QuantMethod::Uniform),
+            ],
+        }
+    }
+
+    #[test]
+    fn conformant_result_passes() {
+        let res = tiny_result();
+        let v = check(&res);
+        assert!(v.is_empty(), "unexpected violations: {v:?}");
+    }
+
+    #[test]
+    fn missing_cell_is_reported() {
+        let mut res = tiny_result();
+        res.cells.pop();
+        let v = check(&res);
+        assert!(v.iter().any(|s| s.contains("missing cell")), "{v:?}");
+    }
+
+    #[test]
+    fn non_monotone_w2_is_reported() {
+        let mut res = tiny_result();
+        res.cells[1].w2_sq = res.cells[0].w2_sq * 10.0;
+        let v = check(&res);
+        assert!(v.iter().any(|s| s.starts_with("monotone:")), "{v:?}");
+    }
+
+    #[test]
+    fn uniform_bound_violation_is_reported() {
+        let mut res = tiny_result();
+        res.cells[0].w2_sq = res.cells[0].w2_uniform_bound * 2.0;
+        // keep monotonicity intact: the wider cell stays below
+        let v = check(&res);
+        assert!(v.iter().any(|s| s.starts_with("uniform-bound:")), "{v:?}");
+    }
+
+    #[test]
+    fn trajectory_bound_violation_is_reported_only_for_finite_euler() {
+        let mut res = tiny_result();
+        res.cells[0].traj_dev = 10.0; // bound is 1.0
+        let v = check(&res);
+        assert!(v.iter().any(|s| s.starts_with("traj-bound:")), "{v:?}");
+        // non-finite constants hold vacuously
+        res.cells[0].traj_bound = f64::INFINITY;
+        res.cells[0].traj_dev = f64::INFINITY;
+        let v = check(&res);
+        assert!(!v.iter().any(|s| s.starts_with("traj-bound:")), "{v:?}");
+    }
+
+    #[test]
+    fn engine_deviation_violation_is_reported_for_fixed_step_only() {
+        let mut res = tiny_result();
+        res.cells[0].engine_dev = 0.5;
+        let v = check(&res);
+        assert!(v.iter().any(|s| s.starts_with("engine:")), "{v:?}");
+        res.cells[0].solver = Solver::Dopri5;
+        // now the grid is incomplete (euler b2 missing) but the engine
+        // family must no longer fire for the adaptive solver
+        let v = check(&res);
+        assert!(!v.iter().any(|s| s.contains("deviation 0.5")), "{v:?}");
+    }
+
+    #[test]
+    fn ot_low_bit_regression_is_reported() {
+        let mut res = tiny_result();
+        res.spec.methods = vec![QuantMethod::Ot, QuantMethod::Uniform];
+        res.cells = vec![
+            cell(2, Solver::Euler, QuantMethod::Ot),
+            cell(8, Solver::Euler, QuantMethod::Ot),
+            cell(2, Solver::Euler, QuantMethod::Uniform),
+            cell(8, Solver::Euler, QuantMethod::Uniform),
+        ];
+        res.cells[0].w2_sq = res.cells[2].w2_sq * 3.0; // OT worse than uniform
+        let v = check(&res);
+        assert!(v.iter().any(|s| s.starts_with("ot-low-bit:")), "{v:?}");
+        // monotonicity for OT is now also broken by construction; only
+        // assert the family we targeted fired.
+    }
+}

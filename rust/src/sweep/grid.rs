@@ -1,0 +1,434 @@
+//! The sweep runner: per-dataset context, the per-cell hot loop, and the
+//! measured-constant trajectory-bound pass.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::experiment::pseudo_trained_theta;
+use crate::data::{synth, Dataset};
+use crate::engine::{build_quantized, CpuRefEngine, Engine};
+use crate::flow::ode::{Solver, StepGrid};
+use crate::flow::sampler::{to_latent, to_pixel, Direction, EngineStep};
+use crate::metrics::coverage::{coverage, Templates};
+use crate::metrics::features::FeatureNet;
+use crate::metrics::fid::fid_images;
+use crate::metrics::latent::latent_stats;
+use crate::metrics::psnr::batch_psnr;
+use crate::metrics::ssim::batch_ssim;
+use crate::model::params::ParamStore;
+use crate::model::spec::ModelSpec;
+use crate::quant::uniform::{delta_u, symmetric_range};
+use crate::quant::{quantize_model, QuantMethod};
+use crate::theory::bounds::trajectory_bound;
+use crate::theory::lipschitz::{estimate_l_x, VelocityOracle};
+use crate::util::rng::Pcg64;
+
+use super::{CellResult, DatasetSummary, GridResult, GridSpec};
+
+/// The sweep's per-cell sample generation hot loop: run every chunk of a
+/// flat `[n, D]` batch through [`EngineStep::run_solver`], mapping the
+/// end states through the direction's clamp into `out`. The chunk buffer
+/// and the output are caller-owned and reused across cells, so the
+/// steady-state loop performs zero heap allocations — enrolled in the
+/// `[no_alloc]` lint roots (`lint.toml`), with the known-bad fixture
+/// `xtask/tests/fixtures/bad_no_alloc_sweep_cell.rs` proving an
+/// allocating variant is caught. Returns the total velocity evaluations.
+pub fn run_cell_samples(
+    be: &mut EngineStep<'_>,
+    x0: &[f32],
+    batch: usize,
+    steps: usize,
+    solver: Solver,
+    dir: Direction,
+    xbuf: &mut Vec<f32>,
+    out: &mut Vec<f32>,
+) -> Result<usize> {
+    let d = be.engine().spec().d;
+    let (t0, t1) = match dir {
+        Direction::Forward => (0.0, 1.0),
+        Direction::Reverse => (1.0, 0.0),
+    };
+    let clamp: fn(f32) -> f32 = match dir {
+        Direction::Forward => to_pixel,
+        Direction::Reverse => to_latent,
+    };
+    out.clear();
+    let mut evals = 0usize;
+    for chunk in x0.chunks(batch.max(1) * d) {
+        xbuf.clear();
+        xbuf.extend_from_slice(chunk);
+        let y = be.run_solver(std::mem::take(xbuf), t0, t1, steps, solver)?;
+        evals += be.last_evals();
+        for &v in &y {
+            out.push(clamp(v));
+        }
+        *xbuf = y;
+    }
+    Ok(evals)
+}
+
+/// Fp32-field velocity oracle for the paper-form Lipschitz probes.
+struct CpuOracle<'a> {
+    spec: &'a ModelSpec,
+    theta: &'a ParamStore,
+}
+
+impl VelocityOracle for CpuOracle<'_> {
+    fn velocity(&mut self, x: &[f32], t: f32) -> Vec<f32> {
+        crate::flow::cpu_ref::velocity(self.spec, self.theta, x, &[t])
+    }
+    fn dim(&self) -> usize {
+        self.spec.d
+    }
+}
+
+/// Closed-form weight-space bound for the *uniform* quantizer
+/// (Definition 2: per-weight error ≤ Δ_U per layer, pinned by
+/// `quant/uniform.rs`'s forall test). Returns the size-weighted mean of
+/// the per-layer Δ_U² (dominates `w2_sq`) and the max per-layer Δ_U
+/// (dominates `sup`).
+fn uniform_w2_bound(spec: &ModelSpec, theta: &ParamStore, bits: u8) -> (f64, f64) {
+    let mut acc = 0.0f64;
+    let mut sup = 0.0f64;
+    let mut total = 0usize;
+    for l in spec.weight_layers() {
+        let w = theta.layer(spec, &l.name);
+        let du = delta_u(symmetric_range(w) as f64, bits);
+        acc += du * du * l.size() as f64;
+        if du > sup {
+            sup = du;
+        }
+        total += l.size();
+    }
+    (acc / total.max(1) as f64, sup)
+}
+
+/// The measured-constant discrete-Grönwall pass (euler discretization):
+/// advance the quantized and reference trajectories side by side,
+/// recording the largest per-sample velocity gap `dv_max` at the
+/// quantized trajectory's visited states and the largest directional
+/// Lipschitz quotient `l_hat` of the reference field between the two
+/// trajectories. [`trajectory_bound`]`(l_hat, 1, dv_max)` then dominates
+/// the measured endpoint deviation by construction (exact arithmetic) —
+/// the sweep's per-cell theory conformance check. Non-finite states
+/// (exploded low-bit models) poison the constants to +∞, which the
+/// conformance layer treats as "bound holds vacuously".
+struct GronwallCell {
+    traj_dev: f64,
+    dv_max: f64,
+    l_hat: f64,
+    bound: f64,
+}
+
+fn gronwall_euler(
+    spec: &ModelSpec,
+    theta: &ParamStore,
+    qeng: &dyn Engine,
+    x0: &[f32],
+    steps: usize,
+) -> Result<GronwallCell> {
+    let d = spec.d;
+    let m = x0.len() / d;
+    let mut xq = x0.to_vec();
+    let mut yr = x0.to_vec();
+    let mut dv_max = 0.0f64;
+    let mut l_hat = 0.0f64;
+    let mut finite = true;
+    let grid = StepGrid::new(0.0, 1.0, steps);
+    let dt = grid.dt();
+    let l2 = |a: &[f32], b: &[f32]| -> f64 {
+        let mut acc = 0.0f64;
+        for (&p, &q) in a.iter().zip(b.iter()) {
+            let diff = f64::from(p) - f64::from(q);
+            acc += diff * diff;
+        }
+        acc.sqrt()
+    };
+    for t in grid {
+        let tb = vec![t; m];
+        let vq = qeng.velocity(&xq, &tb)?;
+        let vf_xq = crate::flow::cpu_ref::velocity(spec, theta, &xq, &tb);
+        let vf_yr = crate::flow::cpu_ref::velocity(spec, theta, &yr, &tb);
+        for s in 0..m {
+            let r = s * d..(s + 1) * d;
+            let gap = l2(&vq[r.clone()], &vf_xq[r.clone()]);
+            let num = l2(&vf_xq[r.clone()], &vf_yr[r.clone()]);
+            let den = l2(&xq[r.clone()], &yr[r]);
+            if !gap.is_finite() || !num.is_finite() {
+                finite = false;
+            }
+            if gap > dv_max {
+                dv_max = gap;
+            }
+            if den > 1e-9 && num / den > l_hat {
+                l_hat = num / den;
+            }
+        }
+        for i in 0..xq.len() {
+            xq[i] += dt * vq[i];
+            yr[i] += dt * vf_yr[i];
+        }
+    }
+    let mut traj_dev = 0.0f64;
+    for s in 0..m {
+        let r = s * d..(s + 1) * d;
+        let dev = l2(&xq[r.clone()], &yr[r]);
+        if dev > traj_dev || !dev.is_finite() {
+            traj_dev = dev;
+        }
+    }
+    if !finite {
+        dv_max = f64::INFINITY;
+    }
+    let bound = trajectory_bound(l_hat, 1.0, dv_max);
+    Ok(GronwallCell {
+        traj_dev,
+        dv_max,
+        l_hat,
+        bound,
+    })
+}
+
+/// Per-dataset context shared by every cell of one ladder rung.
+struct DsCtx {
+    theta: ParamStore,
+    /// Shared start noise, flat [n, d].
+    x0: Vec<f32>,
+    /// Subset of `x0` the Grönwall pass integrates ([m, d], m ≤ 4).
+    gron_x0: Vec<f32>,
+    /// Real images for the latent round-trip, flat [n, d].
+    real: Vec<f32>,
+    templates: Templates,
+    l_x_hat: f64,
+    /// Per-solver fp32 references (parallel to `spec.solvers`).
+    refs: Vec<SolverRef>,
+}
+
+struct SolverRef {
+    imgs: Vec<f32>,
+    baseline_var_std: f64,
+}
+
+impl DsCtx {
+    fn build(spec: &GridSpec, mspec: &ModelSpec, ds: Dataset) -> Result<DsCtx> {
+        let d = mspec.d;
+        let rank = ds.ladder_rank() as u64;
+        let theta = pseudo_trained_theta(mspec, ds);
+        let mut noise_rng = Pcg64::seed(spec.seed ^ 0x5EED ^ (rank + 1).wrapping_mul(0xD1CE));
+        let x0: Vec<f32> = (0..spec.n * d).map(|_| noise_rng.normal_f32(0.0, 1.0)).collect();
+        let gron_x0 = x0[..x0.len().min(4 * d)].to_vec();
+        let real = synth::eval_batch(ds, spec.seed ^ 0x1A7E, spec.n);
+        let mut tmpl_rng = Pcg64::seed(spec.seed ^ 0xC0F ^ (rank + 1).wrapping_mul(0xFACE));
+        let templates = Templates::build(ds, &mut tmpl_rng, spec.coverage_samples, spec.coverage_iters);
+        let mut lip_rng = Pcg64::seed(spec.seed ^ 0x11B ^ rank);
+        let mut oracle = CpuOracle { spec: mspec, theta: &theta };
+        let l_x_hat = estimate_l_x(&mut oracle, &mut lip_rng, spec.lipschitz_probes, 1e-3);
+        // fp32 references per solver, through the same engine adapter and
+        // hot loop every quantized cell uses
+        let feng = CpuRefEngine::fp32(mspec, &theta);
+        let mut be = EngineStep::new(&feng);
+        let mut xbuf = Vec::with_capacity(spec.batch * d);
+        let mut refs = Vec::with_capacity(spec.solvers.len());
+        for &solver in &spec.solvers {
+            let mut imgs = Vec::with_capacity(spec.n * d);
+            run_cell_samples(
+                &mut be,
+                &x0,
+                spec.batch,
+                spec.steps,
+                solver,
+                Direction::Forward,
+                &mut xbuf,
+                &mut imgs,
+            )?;
+            let mut lats = Vec::with_capacity(spec.n * d);
+            run_cell_samples(
+                &mut be,
+                &real,
+                spec.batch,
+                spec.steps,
+                solver,
+                Direction::Reverse,
+                &mut xbuf,
+                &mut lats,
+            )?;
+            let baseline_var_std = latent_stats(&lats, d).var_std;
+            refs.push(SolverRef {
+                imgs,
+                baseline_var_std,
+            });
+        }
+        Ok(DsCtx {
+            theta,
+            x0,
+            gron_x0,
+            real,
+            templates,
+            l_x_hat,
+            refs,
+        })
+    }
+}
+
+/// Run the whole configured grid. Deterministic for a given spec.
+pub fn run_grid(spec: &GridSpec) -> Result<GridResult> {
+    let mspec = ModelSpec::default_spec();
+    let net = FeatureNet::standard(mspec.d);
+    let mut datasets = Vec::with_capacity(spec.datasets.len());
+    let mut cells = Vec::with_capacity(spec.cells());
+    for &ds in &spec.datasets {
+        let ctx = DsCtx::build(spec, &mspec, ds)?;
+        datasets.push(DatasetSummary {
+            dataset: ds,
+            l_x_hat: ctx.l_x_hat,
+        });
+        for &method in &spec.methods {
+            for &bits in &spec.bits {
+                let qm = quantize_model(&mspec, &ctx.theta, method, bits);
+                let qerr = qm.w2_error(&ctx.theta);
+                let (w2_uniform_bound, sup_uniform_bound) =
+                    uniform_w2_bound(&mspec, &ctx.theta, bits);
+                let compression = qm.compression_ratio();
+                let qeng = build_quantized(spec.engine, &qm)?;
+                let ceng = build_quantized(spec.check_engine, &qm)?;
+                let gron =
+                    gronwall_euler(&mspec, &ctx.theta, qeng.as_ref(), &ctx.gron_x0, spec.steps)?;
+                let eps_paper = trajectory_bound(ctx.l_x_hat, 1.0, gron.dv_max);
+                for (si, &solver) in spec.solvers.iter().enumerate() {
+                    let mut cell = run_cell(
+                        spec,
+                        &ctx,
+                        &net,
+                        mspec.d,
+                        qeng.as_ref(),
+                        ceng.as_ref(),
+                        solver,
+                        si,
+                    )?;
+                    cell.dataset = ds;
+                    cell.method = method;
+                    cell.bits = bits;
+                    cell.w2_sq = qerr.w2_sq;
+                    cell.sup_err = qerr.sup;
+                    cell.w2_uniform_bound = w2_uniform_bound;
+                    cell.sup_uniform_bound = sup_uniform_bound;
+                    cell.compression = compression;
+                    cell.traj_dev = gron.traj_dev;
+                    cell.dv_max = gron.dv_max;
+                    cell.l_hat = gron.l_hat;
+                    cell.traj_bound = gron.bound;
+                    cell.eps_paper = eps_paper;
+                    cells.push(cell);
+                }
+            }
+        }
+    }
+    Ok(GridResult {
+        spec: spec.clone(),
+        datasets,
+        cells,
+    })
+}
+
+/// One (engine, solver) cell: timed generation, latent round-trip,
+/// fidelity metrics against the solver's fp32 reference, and the
+/// primary-vs-check engine deviation. Quantizer-level fields are filled
+/// in by the caller (shared across the solver axis).
+#[allow(clippy::too_many_arguments)]
+fn run_cell(
+    spec: &GridSpec,
+    ctx: &DsCtx,
+    net: &FeatureNet,
+    d: usize,
+    qeng: &dyn Engine,
+    ceng: &dyn Engine,
+    solver: Solver,
+    si: usize,
+) -> Result<CellResult> {
+    let mut be = EngineStep::new(qeng);
+    let mut xbuf = Vec::with_capacity(spec.batch * d);
+    let mut imgs = Vec::with_capacity(spec.n * d);
+    let start = Instant::now();
+    let evals = run_cell_samples(
+        &mut be,
+        &ctx.x0,
+        spec.batch,
+        spec.steps,
+        solver,
+        Direction::Forward,
+        &mut xbuf,
+        &mut imgs,
+    )?;
+    let gen_seconds = start.elapsed().as_secs_f64();
+    let mut lats = Vec::with_capacity(spec.n * d);
+    run_cell_samples(
+        &mut be,
+        &ctx.real,
+        spec.batch,
+        spec.steps,
+        solver,
+        Direction::Reverse,
+        &mut xbuf,
+        &mut lats,
+    )?;
+    let mut cbe = EngineStep::new(ceng);
+    let mut cimgs = Vec::with_capacity(spec.n * d);
+    run_cell_samples(
+        &mut cbe,
+        &ctx.x0,
+        spec.batch,
+        spec.steps,
+        solver,
+        Direction::Forward,
+        &mut xbuf,
+        &mut cimgs,
+    )?;
+    let mut engine_dev = 0.0f64;
+    for (&a, &b) in imgs.iter().zip(cimgs.iter()) {
+        let diff = (f64::from(a) - f64::from(b)).abs();
+        if diff > engine_dev {
+            engine_dev = diff;
+        }
+    }
+    let sref = ctx
+        .refs
+        .get(si)
+        .ok_or_else(|| anyhow::anyhow!("missing solver reference {si}"))?;
+    let cov = coverage(&ctx.templates, &imgs);
+    let lstats = latent_stats(&lats, d);
+    let chunks = spec.n.div_ceil(spec.batch.max(1)).max(1);
+    let per_step_us = gen_seconds * 1e6 / (spec.steps.max(1) * chunks) as f64;
+    let per_eval_us = gen_seconds * 1e6 / evals.max(1) as f64;
+    Ok(CellResult {
+        dataset: Dataset::SynthMnist, // caller overwrites the axes
+        method: QuantMethod::Ot,
+        bits: 0,
+        solver,
+        ssim: batch_ssim(&sref.imgs, &imgs, d),
+        psnr: batch_psnr(&sref.imgs, &imgs, d),
+        fid: fid_images(net, &imgs, &sref.imgs),
+        cov_covered: cov.covered,
+        cov_entropy: cov.entropy,
+        latent_var_mean: lstats.var_mean,
+        latent_var_std: lstats.var_std,
+        latent_mean_abs: lstats.mean_abs,
+        latent_max_abs: lstats.max_abs,
+        baseline_var_std: sref.baseline_var_std,
+        w2_sq: 0.0,
+        sup_err: 0.0,
+        w2_uniform_bound: 0.0,
+        sup_uniform_bound: 0.0,
+        compression: 0.0,
+        traj_dev: 0.0,
+        dv_max: 0.0,
+        l_hat: 0.0,
+        traj_bound: 0.0,
+        eps_paper: 0.0,
+        engine_dev,
+        gen_seconds,
+        evals,
+        per_step_us,
+        per_eval_us,
+    })
+}

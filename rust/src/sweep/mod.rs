@@ -1,0 +1,315 @@
+//! Paper-grid conformance sweep (the `figgrid` subcommand).
+//!
+//! Runs the full figure grid end to end — complexity-ladder datasets ×
+//! quantization methods × bit-widths × ODE solvers — through the fast
+//! lut2 engine and the zero-alloc `EngineStep` sampler, scoring every
+//! cell with the fidelity metrics (SSIM/PSNR/FID/coverage), the Fig. 4
+//! latent round-trip stability, the weight-space W₂ error against its
+//! closed-form uniform bound, and a measured discrete-Grönwall
+//! trajectory bound (Lemma 1 with empirical constants). One machine-
+//! readable `BENCH_figgrid.json` lands at the repo root; the
+//! [`conformance`] checks assert the paper's qualitative ordering on the
+//! result (degradation monotone in bits, OT no worse than the baselines
+//! at 2–3 bits on every ladder rung, measured error within the bound,
+//! primary engine ≡ reference engine per cell).
+//!
+//! Two tiers share all of this code: [`GridSpec::smoke`] (the
+//! `FMQ_BENCH_FAST=1` CI grid and `tests/figgrid_conformance.rs`) and
+//! [`GridSpec::full`] (the offline paper grid). The figure benches
+//! (`bench_fig2_grid`/`bench_fig3_fidelity`/`bench_fig4_latent`) are
+//! thin wrappers over the same runner.
+
+pub mod conformance;
+pub mod grid;
+
+use std::collections::BTreeMap;
+
+use crate::data::Dataset;
+use crate::engine::EngineKind;
+use crate::flow::ode::Solver;
+use crate::quant::QuantMethod;
+use crate::util::json::Json;
+
+pub use grid::{run_cell_samples, run_grid};
+
+/// The grid to run: every combination of the four axes, plus the run
+/// parameters shared by all cells.
+#[derive(Clone, Debug)]
+pub struct GridSpec {
+    pub datasets: Vec<Dataset>,
+    pub methods: Vec<QuantMethod>,
+    pub bits: Vec<u8>,
+    pub solvers: Vec<Solver>,
+    /// ODE steps per trajectory (dopri5: initial-step hint).
+    pub steps: usize,
+    /// Samples per cell.
+    pub n: usize,
+    /// Samples per engine super-batch.
+    pub batch: usize,
+    pub seed: u64,
+    /// Primary engine every cell generates through.
+    pub engine: EngineKind,
+    /// Cross-check engine (per-cell equivalence deviation).
+    pub check_engine: EngineKind,
+    /// Samples / k-means iterations for the coverage templates.
+    pub coverage_samples: usize,
+    pub coverage_iters: usize,
+    /// Probes for the paper-form Lipschitz estimate L̂_x.
+    pub lipschitz_probes: usize,
+    /// True for the smoke tier (recorded in the JSON).
+    pub fast: bool,
+}
+
+impl GridSpec {
+    /// The full paper grid (offline; minutes of CPU).
+    pub fn full() -> Self {
+        GridSpec {
+            datasets: Dataset::ALL.to_vec(),
+            methods: QuantMethod::PAPER.to_vec(),
+            bits: vec![2, 3, 4, 8],
+            solvers: vec![Solver::Euler, Solver::Heun, Solver::Dopri5],
+            steps: 16,
+            n: 64,
+            batch: 16,
+            seed: 7,
+            engine: EngineKind::Lut2,
+            check_engine: EngineKind::CpuRef,
+            coverage_samples: 256,
+            coverage_iters: 8,
+            lipschitz_probes: 16,
+            fast: false,
+        }
+    }
+
+    /// The CI / integration-test smoke grid: same axes (minus 4-bit),
+    /// tiny sample counts. Seconds of CPU, and every conformance
+    /// invariant still has the cells it needs.
+    pub fn smoke() -> Self {
+        GridSpec {
+            bits: vec![2, 3, 8],
+            steps: 4,
+            n: 4,
+            batch: 4,
+            coverage_samples: 64,
+            coverage_iters: 4,
+            lipschitz_probes: 4,
+            fast: true,
+            ..Self::full()
+        }
+    }
+
+    /// Total cell count of the configured grid.
+    pub fn cells(&self) -> usize {
+        self.datasets.len() * self.methods.len() * self.bits.len() * self.solvers.len()
+    }
+}
+
+/// Stable key of one grid cell inside `BENCH_figgrid.json`'s `cells`
+/// object: `"<dataset>/<method>/b<bits>/<solver>"`.
+pub fn cell_key(ds: Dataset, method: QuantMethod, bits: u8, solver: Solver) -> String {
+    format!("{}/{}/b{}/{}", ds.name(), method.name(), bits, solver.name())
+}
+
+/// Everything measured for one (dataset, method, bits, solver) cell.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub dataset: Dataset,
+    pub method: QuantMethod,
+    pub bits: u8,
+    pub solver: Solver,
+    // fidelity vs. the fp32 reference of the same solver
+    pub ssim: f64,
+    pub psnr: f64,
+    pub fid: f64,
+    pub cov_covered: f64,
+    pub cov_entropy: f64,
+    // Fig. 4 latent round-trip stability
+    pub latent_var_mean: f64,
+    pub latent_var_std: f64,
+    pub latent_mean_abs: f64,
+    pub latent_max_abs: f64,
+    pub baseline_var_std: f64,
+    // weight-space quantization error + its closed-form uniform bound
+    pub w2_sq: f64,
+    pub sup_err: f64,
+    pub w2_uniform_bound: f64,
+    pub sup_uniform_bound: f64,
+    pub compression: f64,
+    // measured discrete-Grönwall trajectory bound (euler discretization,
+    // shared across the solver cells of one (dataset, method, bits))
+    pub traj_dev: f64,
+    pub dv_max: f64,
+    pub l_hat: f64,
+    pub traj_bound: f64,
+    /// Paper-form Lemma 1 scale: amplification(L̂_x, 1)·dv_max with the
+    /// probe-estimated L̂_x (informational — see `conformance`).
+    pub eps_paper: f64,
+    // engine equivalence + per-step cost
+    pub engine_dev: f64,
+    pub gen_seconds: f64,
+    pub evals: usize,
+    pub per_step_us: f64,
+    pub per_eval_us: f64,
+}
+
+impl CellResult {
+    pub fn key(&self) -> String {
+        cell_key(self.dataset, self.method, self.bits, self.solver)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::Str(self.dataset.name().into())),
+            ("ladder_rank", Json::Int(self.dataset.ladder_rank() as i128)),
+            ("method", Json::Str(self.method.name().into())),
+            ("bits", Json::Int(self.bits as i128)),
+            ("solver", Json::Str(self.solver.name().into())),
+            ("ssim", num(self.ssim)),
+            ("psnr", num(self.psnr)),
+            ("fid", num(self.fid)),
+            ("cov_covered", num(self.cov_covered)),
+            ("cov_entropy", num(self.cov_entropy)),
+            ("latent_var_mean", num(self.latent_var_mean)),
+            ("latent_var_std", num(self.latent_var_std)),
+            ("latent_mean_abs", num(self.latent_mean_abs)),
+            ("latent_max_abs", num(self.latent_max_abs)),
+            ("baseline_var_std", num(self.baseline_var_std)),
+            ("w2_sq", num(self.w2_sq)),
+            ("sup_err", num(self.sup_err)),
+            ("w2_uniform_bound", num(self.w2_uniform_bound)),
+            ("sup_uniform_bound", num(self.sup_uniform_bound)),
+            ("compression", num(self.compression)),
+            ("traj_dev", num(self.traj_dev)),
+            ("dv_max", num(self.dv_max)),
+            ("l_hat", num(self.l_hat)),
+            ("traj_bound", num(self.traj_bound)),
+            ("eps_paper", num(self.eps_paper)),
+            ("engine_dev", num(self.engine_dev)),
+            ("gen_seconds", num(self.gen_seconds)),
+            ("evals", Json::Int(self.evals as i128)),
+            ("per_step_us", num(self.per_step_us)),
+            ("per_eval_us", num(self.per_eval_us)),
+        ])
+    }
+}
+
+/// Clamp non-finite measurements to a finite sentinel so the JSON stays
+/// parseable (exploded low-bit cells are data, not serialization bugs).
+fn num(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else if v.is_nan() {
+        Json::Num(-1.0)
+    } else {
+        Json::Num(v.signum() * 1e300)
+    }
+}
+
+/// Per-dataset context shared by all that dataset's cells.
+#[derive(Clone, Debug)]
+pub struct DatasetSummary {
+    pub dataset: Dataset,
+    /// Probe-estimated state-Lipschitz constant of the fp32 field.
+    pub l_x_hat: f64,
+}
+
+/// The whole sweep result: the spec echo plus every cell.
+#[derive(Clone, Debug)]
+pub struct GridResult {
+    pub spec: GridSpec,
+    pub datasets: Vec<DatasetSummary>,
+    pub cells: Vec<CellResult>,
+}
+
+impl GridResult {
+    /// Look up one cell by its axes.
+    pub fn cell(
+        &self,
+        ds: Dataset,
+        method: QuantMethod,
+        bits: u8,
+        solver: Solver,
+    ) -> Option<&CellResult> {
+        self.cells.iter().find(|c| {
+            c.dataset.name() == ds.name()
+                && c.method.name() == method.name()
+                && c.bits == bits
+                && c.solver.name() == solver.name()
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut cells = BTreeMap::new();
+        for c in &self.cells {
+            cells.insert(c.key(), c.to_json());
+        }
+        let mut datasets = BTreeMap::new();
+        for d in &self.datasets {
+            datasets.insert(
+                d.dataset.name().to_string(),
+                Json::obj(vec![
+                    ("ladder_rank", Json::Int(d.dataset.ladder_rank() as i128)),
+                    ("l_x_hat", num(d.l_x_hat)),
+                ]),
+            );
+        }
+        Json::obj(vec![
+            ("bench", Json::Str("figgrid".into())),
+            ("fast_mode", Json::Bool(self.spec.fast)),
+            ("engine", Json::Str(self.spec.engine.name().into())),
+            ("check_engine", Json::Str(self.spec.check_engine.name().into())),
+            ("steps", Json::Int(self.spec.steps as i128)),
+            ("n", Json::Int(self.spec.n as i128)),
+            ("seed", Json::Int(self.spec.seed as i128)),
+            ("datasets", Json::Obj(datasets)),
+            ("cells", Json::Obj(cells)),
+        ])
+    }
+
+    /// Write `BENCH_figgrid.json` (or any path). Returns the serialized
+    /// text so callers can log it.
+    pub fn write_json(&self, path: &std::path::Path) -> anyhow::Result<String> {
+        let text = self.to_json().to_string();
+        std::fs::write(path, &text)?;
+        Ok(text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_key_format_is_stable() {
+        assert_eq!(
+            cell_key(Dataset::SynthMnist, QuantMethod::Ot, 2, Solver::Euler),
+            "synth-mnist/ot/b2/euler"
+        );
+        assert_eq!(
+            cell_key(Dataset::SynthImagenet, QuantMethod::Log2, 8, Solver::Dopri5),
+            "synth-imagenet/log2/b8/dopri5"
+        );
+    }
+
+    #[test]
+    fn smoke_grid_covers_every_axis() {
+        let s = GridSpec::smoke();
+        assert!(s.fast);
+        assert_eq!(s.datasets.len(), Dataset::ALL.len());
+        assert_eq!(s.methods.len(), QuantMethod::PAPER.len());
+        assert!(s.bits.contains(&2) && s.bits.contains(&3) && s.bits.contains(&8));
+        assert_eq!(s.solvers.len(), 3);
+        assert_eq!(s.cells(), 5 * 4 * 3 * 3);
+        let f = GridSpec::full();
+        assert!(!f.fast);
+        assert_eq!(f.cells(), 5 * 4 * 4 * 3);
+    }
+
+    #[test]
+    fn non_finite_measurements_serialize_finite() {
+        assert_eq!(num(f64::INFINITY), Json::Num(1e300));
+        assert_eq!(num(f64::NEG_INFINITY), Json::Num(-1e300));
+        assert_eq!(num(f64::NAN), Json::Num(-1.0));
+        assert_eq!(num(0.5), Json::Num(0.5));
+    }
+}

@@ -38,6 +38,23 @@ pub fn amplification(l_x: f64, t: f64) -> f64 {
     }
 }
 
+/// Lemma 1 instantiated with *measured* constants: if the velocity gap
+/// between the quantized and reference fields is ≤ `dv_max` along the
+/// quantized trajectory's visited states, and the reference field is
+/// `l_x`-Lipschitz in x between the two trajectories, then the endpoint
+/// deviation obeys ‖x_q(t) − x(t)‖ ≤ dv_max · (e^{l_x t} − 1)/l_x.
+///
+/// The discrete (fixed-step Euler) error recursion
+/// `e_{s+1} ≤ (1 + dt·l_x)·e_s + dt·dv_max` telescopes to
+/// `dv_max·((1+dt·l_x)^N − 1)/l_x`, which this continuous form dominates
+/// ((1+z) ≤ e^z) — so the sweep's per-cell conformance check
+/// `measured deviation ≤ trajectory_bound(L̂, t, d̂v)` is a theorem
+/// whenever L̂ and d̂v really dominate the per-step constants (the sweep
+/// measures both along the actual trajectory pair).
+pub fn trajectory_bound(l_x: f64, t: f64, dv_max: f64) -> f64 {
+    amplification(l_x, t) * dv_max
+}
+
 impl BoundInputs {
     /// Front constant C_U of Theorem 3.
     pub fn c_uniform(&self) -> f64 {
@@ -131,6 +148,27 @@ mod tests {
         assert!((amplification(1e-9, 2.0) - 2.0).abs() < 1e-6);
         // known value
         assert!((amplification(1.0, 1.0) - (1.0f64.exp() - 1.0)).abs() < 1e-12);
+    }
+
+    /// The measured-constant Grönwall bound: L→0 limit is t·dv, and it
+    /// dominates the discrete fixed-step recursion it certifies.
+    #[test]
+    fn trajectory_bound_dominates_discrete_recursion() {
+        assert!((trajectory_bound(0.0, 1.0, 0.25) - 0.25).abs() < 1e-12);
+        for &(l, steps) in &[(0.5f64, 4usize), (2.0, 16), (5.0, 3)] {
+            let dv = 0.1;
+            let dt = 1.0 / steps as f64;
+            let mut e = 0.0f64;
+            for _ in 0..steps {
+                e = (1.0 + dt * l) * e + dt * dv;
+            }
+            let bound = trajectory_bound(l, 1.0, dv);
+            assert!(e <= bound * (1.0 + 1e-12), "l={l} steps={steps}: {e} > {bound}");
+        }
+        // monotone in every argument
+        assert!(trajectory_bound(2.0, 1.0, 0.1) > trajectory_bound(1.0, 1.0, 0.1));
+        assert!(trajectory_bound(1.0, 1.0, 0.2) > trajectory_bound(1.0, 1.0, 0.1));
+        assert!(trajectory_bound(1.0, 1.0, 0.1) > trajectory_bound(1.0, 0.5, 0.1));
     }
 
     /// The paper's headline numbers, dimensionally untangled. Eq. 17 writes

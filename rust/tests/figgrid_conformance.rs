@@ -1,0 +1,180 @@
+//! Paper-grid conformance: run a trimmed smoke grid end to end through
+//! the sweep runner and assert the four invariant families the paper's
+//! figures encode (see `sweep::conformance`):
+//!
+//!  1. degradation is monotone in fewer bits for every method,
+//!  2. OT is no worse than uniform/log2 (5%) at 2–3 bits on every rung,
+//!     with an order-of-magnitude guard against the quantile-cored pwl,
+//!  3. measured errors sit under their theory bounds (closed-form Δ_U
+//!     for uniform; measured-constant Grönwall for the trajectories),
+//!  4. the primary (lut2) and check (cpu-ref) engines agree per cell.
+//!
+//! The grid here is the CI smoke tier with the per-cell sample counts
+//! cut further so the debug-profile test run stays in budget; the CI
+//! release binary runs the full [`GridSpec::smoke`] tier and the
+//! offline `figgrid` run covers [`GridSpec::full`].
+
+use fmq::data::Dataset;
+use fmq::flow::ode::Solver;
+use fmq::quant::QuantMethod;
+use fmq::sweep::{cell_key, conformance, run_grid, GridSpec};
+
+fn test_spec() -> GridSpec {
+    GridSpec {
+        n: 2,
+        batch: 2,
+        steps: 3,
+        coverage_samples: 32,
+        coverage_iters: 2,
+        lipschitz_probes: 2,
+        ..GridSpec::smoke()
+    }
+}
+
+#[test]
+fn smoke_grid_satisfies_all_conformance_invariants() {
+    let spec = test_spec();
+    let res = run_grid(&spec).expect("sweep runs");
+
+    // every cell the spec names is present, exactly once
+    assert_eq!(res.cells.len(), spec.cells());
+    let mut keys: Vec<String> = res.cells.iter().map(|c| c.key()).collect();
+    keys.sort();
+    keys.dedup();
+    assert_eq!(keys.len(), spec.cells(), "duplicate cell keys");
+
+    // the four invariant families
+    let violations = conformance::check(&res);
+    assert!(
+        violations.is_empty(),
+        "conformance violations:\n{}",
+        violations.join("\n")
+    );
+
+    // spot-check the families directly (belt to conformance's braces)
+    for d in &res.datasets {
+        assert!(d.l_x_hat.is_finite() && d.l_x_hat > 0.0);
+    }
+    for &ds in &spec.datasets {
+        for &method in &spec.methods {
+            for &solver in &spec.solvers {
+                let lo = res.cell(ds, method, 2, solver).expect("b2 cell");
+                let hi = res.cell(ds, method, 8, solver).expect("b8 cell");
+                // (1) monotone degradation, both in weight space and
+                // end-to-end
+                assert!(
+                    hi.w2_sq <= lo.w2_sq * 1.01 + 1e-12,
+                    "{}: w2 {} !<= {}",
+                    hi.key(),
+                    hi.w2_sq,
+                    lo.w2_sq
+                );
+                assert!(
+                    hi.ssim + 0.02 >= lo.ssim,
+                    "{}: ssim {} < b2 {}",
+                    hi.key(),
+                    hi.ssim,
+                    lo.ssim
+                );
+            }
+        }
+        // (2) OT no worse than the baselines at the low bit-widths.
+        // Strict (5%) against uniform/log2; the quantile-cored pwl is
+        // MSE-competitive with equal-mass OT (which optimizes the W₂
+        // coupling, not MSE), so only an order-of-magnitude guard holds
+        // there — mirroring `sweep::conformance`.
+        for bits in [2u8, 3] {
+            let ot = res
+                .cell(ds, QuantMethod::Ot, bits, Solver::Euler)
+                .expect("ot cell");
+            for (base, slack) in [
+                (QuantMethod::Uniform, 1.05),
+                (QuantMethod::Pwl, 2.5),
+                (QuantMethod::Log2, 1.05),
+            ] {
+                let bc = res.cell(ds, base, bits, Solver::Euler).expect("base cell");
+                assert!(
+                    ot.w2_sq <= bc.w2_sq * slack,
+                    "{}: OT w2 {} above {} w2 {}",
+                    ot.key(),
+                    ot.w2_sq,
+                    bc.key(),
+                    bc.w2_sq
+                );
+            }
+        }
+    }
+    for c in &res.cells {
+        // (3) theory bounds
+        if c.method == QuantMethod::Uniform {
+            assert!(c.w2_sq <= c.w2_uniform_bound * 1.05 + 1e-12, "{}", c.key());
+            assert!(c.sup_err <= c.sup_uniform_bound * 1.05 + 1e-12, "{}", c.key());
+        }
+        if c.solver == Solver::Euler && c.traj_dev.is_finite() && c.traj_bound.is_finite() {
+            assert!(
+                c.traj_dev <= c.traj_bound * 1.05 + 1e-6,
+                "{}: traj {} above bound {}",
+                c.key(),
+                c.traj_dev,
+                c.traj_bound
+            );
+        }
+        // (4) engine equivalence (fixed-step solvers; dopri5's adaptive
+        // control flow may fork on sub-tolerance velocity differences)
+        assert!(c.engine_dev.is_finite(), "{}", c.key());
+        if c.solver != Solver::Dopri5 {
+            assert!(c.engine_dev <= 5e-3, "{}: engine_dev {}", c.key(), c.engine_dev);
+        }
+        // cost fields populated
+        assert!(c.evals > 0 && c.gen_seconds > 0.0 && c.per_eval_us > 0.0, "{}", c.key());
+    }
+
+    // heun costs two evaluations per step, euler one — recorded per cell
+    let e = res
+        .cell(Dataset::SynthMnist, QuantMethod::Ot, 8, Solver::Euler)
+        .expect("euler cell");
+    let h = res
+        .cell(Dataset::SynthMnist, QuantMethod::Ot, 8, Solver::Heun)
+        .expect("heun cell");
+    assert_eq!(h.evals, 2 * e.evals, "heun evals vs euler");
+
+    // JSON lands with the expected cell keys and fields
+    let path = std::env::temp_dir().join(format!("fmq_figgrid_{}.json", std::process::id()));
+    let text = res.write_json(&path).expect("json writes");
+    for (ds, m, b, s) in [
+        (Dataset::SynthMnist, QuantMethod::Ot, 2, Solver::Euler),
+        (Dataset::SynthImagenet, QuantMethod::Log2, 8, Solver::Dopri5),
+    ] {
+        let key = cell_key(ds, m, b, s);
+        assert!(text.contains(&format!("\"{key}\"")), "missing {key} in JSON");
+    }
+    for field in ["traj_bound", "ssim", "psnr", "fid", "per_step_us", "engine_dev"] {
+        assert!(text.contains(&format!("\"{field}\"")), "missing field {field}");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn sweep_is_deterministic_for_a_fixed_spec() {
+    // one rung, fixed-step solvers: the whole pipeline is seeded, so a
+    // re-run must reproduce every measurement bit for bit
+    let spec = GridSpec {
+        datasets: vec![Dataset::SynthCifar],
+        methods: vec![QuantMethod::Ot, QuantMethod::Uniform],
+        bits: vec![2, 8],
+        solvers: vec![Solver::Euler, Solver::Heun],
+        ..test_spec()
+    };
+    let a = run_grid(&spec).expect("first run");
+    let b = run_grid(&spec).expect("second run");
+    assert_eq!(a.cells.len(), b.cells.len());
+    for (ca, cb) in a.cells.iter().zip(b.cells.iter()) {
+        assert_eq!(ca.key(), cb.key());
+        assert_eq!(ca.ssim.to_bits(), cb.ssim.to_bits(), "{}", ca.key());
+        assert_eq!(ca.psnr.to_bits(), cb.psnr.to_bits(), "{}", ca.key());
+        assert_eq!(ca.w2_sq.to_bits(), cb.w2_sq.to_bits(), "{}", ca.key());
+        assert_eq!(ca.traj_dev.to_bits(), cb.traj_dev.to_bits(), "{}", ca.key());
+        assert_eq!(ca.engine_dev.to_bits(), cb.engine_dev.to_bits(), "{}", ca.key());
+        assert_eq!(ca.evals, cb.evals, "{}", ca.key());
+    }
+}

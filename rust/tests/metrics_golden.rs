@@ -1,0 +1,95 @@
+//! Golden-value tests for the `metrics/` stack: closed-form answers the
+//! implementations must reproduce exactly (up to float roundoff), so a
+//! refactor of any metric shows up as a hard diff rather than a drifting
+//! benchmark number.
+
+use fmq::data::{Dataset, IMG_D};
+use fmq::metrics::coverage::{coverage, Templates};
+use fmq::metrics::features::FeatureNet;
+use fmq::metrics::fid::fid_images;
+use fmq::metrics::psnr::{batch_psnr, psnr};
+use fmq::metrics::ssim::{batch_ssim, ssim};
+use fmq::util::rng::Pcg64;
+
+fn sample_batch(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::seed(seed);
+    Dataset::SynthCifar.batch(&mut rng, n)
+}
+
+#[test]
+fn psnr_identical_images_is_infinite_and_batch_clamps_to_99() {
+    let imgs = sample_batch(3, 11);
+    assert!(psnr(&imgs[..IMG_D], &imgs[..IMG_D]).is_infinite());
+    // batch mean caps per-image infinities at 99 dB so means stay finite
+    let b = batch_psnr(&imgs, &imgs, IMG_D);
+    assert!((b - 99.0).abs() < 1e-12, "batch psnr {b}");
+}
+
+#[test]
+fn psnr_uniform_shift_matches_closed_form() {
+    // constant shift s: mse = s^2, peak 2 -> psnr = 10 log10(4 / s^2)
+    let a = vec![0.1f32; IMG_D];
+    for s in [0.2f64, 0.05, 0.5] {
+        let b: Vec<f32> = a.iter().map(|&x| x + s as f32).collect();
+        let expected = 10.0 * (4.0 / (s * s)).log10();
+        let got = psnr(&a, &b);
+        assert!(
+            (got - expected).abs() < 1e-3,
+            "shift {s}: psnr {got} vs closed form {expected}"
+        );
+    }
+    // the textbook value: s = 0.2 -> 20 dB
+    let b: Vec<f32> = a.iter().map(|&x| x + 0.2).collect();
+    assert!((psnr(&a, &b) - 20.0).abs() < 1e-3);
+}
+
+#[test]
+fn ssim_identical_images_is_one() {
+    let imgs = sample_batch(2, 17);
+    let s = ssim(&imgs[..IMG_D], &imgs[..IMG_D]);
+    assert!((s - 1.0).abs() < 1e-9, "ssim(a, a) = {s}");
+    let bs = batch_ssim(&imgs, &imgs, IMG_D);
+    assert!((bs - 1.0).abs() < 1e-9, "batch ssim {bs}");
+}
+
+#[test]
+fn ssim_degrades_under_noise_but_stays_in_range() {
+    let imgs = sample_batch(1, 23);
+    let mut rng = Pcg64::seed(29);
+    let noisy: Vec<f32> = imgs.iter().map(|&x| x + rng.normal_f32(0.0, 0.3)).collect();
+    let s = ssim(&imgs, &noisy);
+    assert!(s < 0.999, "noise must cost similarity: {s}");
+    assert!((-1.0..=1.0).contains(&s), "ssim out of range: {s}");
+}
+
+#[test]
+fn fid_of_a_distribution_with_itself_is_zero() {
+    let net = FeatureNet::standard(IMG_D);
+    let imgs = sample_batch(16, 31);
+    let d = fid_images(&net, &imgs, &imgs);
+    assert!(d.abs() < 1e-6, "fid(a, a) = {d}");
+    // and strictly positive between different datasets
+    let mut rng = Pcg64::seed(37);
+    let other = Dataset::SynthMnist.batch(&mut rng, 16);
+    let d2 = fid_images(&net, &imgs, &other);
+    assert!(d2 > d + 1e-6, "fid must separate distributions: {d2}");
+}
+
+#[test]
+fn coverage_of_the_template_set_itself_is_total() {
+    let mut rng = Pcg64::seed(41);
+    let templates = Templates::build(Dataset::SynthMnist, &mut rng, 64, 4);
+    // the templates, offered as a batch, each hit their own mode
+    let cov = coverage(&templates, &templates.means);
+    assert!((cov.covered - 1.0).abs() < 1e-12, "covered = {}", cov.covered);
+    assert!(cov.entropy > 0.99, "uniform histogram entropy = {}", cov.entropy);
+    // a collapsed batch (one template repeated) covers exactly 1/k
+    let one: Vec<f32> = templates.means[..IMG_D].repeat(8);
+    let collapsed = coverage(&templates, &one);
+    let expect = 1.0 / templates.k as f64;
+    assert!(
+        (collapsed.covered - expect).abs() < 1e-12,
+        "collapsed covered {} vs {expect}",
+        collapsed.covered
+    );
+}

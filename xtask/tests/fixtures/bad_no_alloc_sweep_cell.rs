@@ -1,0 +1,16 @@
+//! Fixture: a sweep per-cell sample loop (the shape of
+//! `sweep::grid::run_cell_samples`, enrolled by name in the real
+//! `lint.toml`) that allocates inside its inner loop via `format!`.
+//! Expected: exactly one `no_alloc` diagnostic.
+
+pub fn run_cell(x0: &[f32], batch: usize, out: &mut Vec<f32>) -> usize {
+    let mut evals = 0usize;
+    for (i, chunk) in x0.chunks(batch).enumerate() {
+        let label = format!("cell-{i}");
+        evals += label.len();
+        for &v in chunk {
+            out.push(v.clamp(-1.0, 1.0));
+        }
+    }
+    evals
+}

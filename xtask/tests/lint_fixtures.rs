@@ -15,7 +15,7 @@ fn strs(xs: &[&str]) -> Vec<String> {
 fn fixture_cfg() -> Config {
     Config {
         scan_roots: strs(&["fix"]),
-        no_alloc_roots: strs(&["hot_entry", "Hist::*"]),
+        no_alloc_roots: strs(&["hot_entry", "Hist::*", "run_cell"]),
         no_alloc_allow: vec![],
         no_alloc_forbidden_calls: strs(&["to_vec", "collect", "clone", "to_owned", "to_string"]),
         no_alloc_forbidden_macros: strs(&["vec", "format"]),
@@ -96,6 +96,24 @@ fn no_alloc_format_in_wildcard_rooted_record_path() {
     );
 }
 
+/// The sweep's per-cell hot loop is enrolled by bare name in the real
+/// `lint.toml`; this fixture proves an allocating inner loop of that
+/// shape is caught (push/chunks stay permitted, `format!` trips).
+#[test]
+fn no_alloc_allocating_sweep_cell_loop() {
+    let d = expect_one(
+        "fix/bad_no_alloc_sweep_cell.rs",
+        include_str!("fixtures/bad_no_alloc_sweep_cell.rs"),
+        "no_alloc",
+        "`format!`",
+    );
+    assert_eq!(d.line, 9, "diagnostic should anchor at the format! line");
+    assert!(
+        d.msg.contains("run_cell"),
+        "message should name the rooted fn: {d}"
+    );
+}
+
 #[test]
 fn determinism_hashmap_in_ordered_file() {
     let d = expect_one(
@@ -172,6 +190,11 @@ fn bad_fixtures_trip_only_their_own_rule() {
         (
             "fix/bad_no_alloc_obs_record.rs",
             include_str!("fixtures/bad_no_alloc_obs_record.rs"),
+            "no_alloc",
+        ),
+        (
+            "fix/bad_no_alloc_sweep_cell.rs",
+            include_str!("fixtures/bad_no_alloc_sweep_cell.rs"),
             "no_alloc",
         ),
         ("fix/bad_det_hashmap.rs", include_str!("fixtures/bad_det_hashmap.rs"), "determinism"),
