@@ -201,7 +201,8 @@ impl Batcher {
                 (Direction::Forward, n, Source::Noise(Pcg64::seed(seed)))
             }
             Work::Encode { rows } => {
-                if rows.is_empty() || rows.len() % self.d != 0 {
+                let d = self.d.max(1);
+                if rows.is_empty() || rows.len() % d != 0 {
                     let _ = req.reply.send(Err(format!(
                         "encode rows must be flat [n, d] with d={} (got {} values)",
                         self.d,
@@ -209,7 +210,7 @@ impl Batcher {
                     )));
                     return;
                 }
-                let n = rows.len() / self.d;
+                let n = rows.len() / d;
                 (Direction::Reverse, n, Source::Rows(rows))
             }
         };

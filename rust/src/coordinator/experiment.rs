@@ -127,7 +127,7 @@ impl<'a> EvalContext<'a> {
         match self.engine {
             None => match self.art {
                 Some(art) => {
-                    let mut be = HloQStep::new(art, qm);
+                    let mut be = HloQStep::new(art, qm)?;
                     self.run_batched(&mut be, x, reverse)
                 }
                 None => {
@@ -139,7 +139,7 @@ impl<'a> EvalContext<'a> {
                 let art = self
                     .art
                     .ok_or_else(|| anyhow!("--engine runtime needs compiled artifacts"))?;
-                let mut be = HloQStep::new(art, qm);
+                let mut be = HloQStep::new(art, qm)?;
                 self.run_batched(&mut be, x, reverse)
             }
             Some(kind) => {

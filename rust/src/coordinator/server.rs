@@ -396,7 +396,7 @@ fn run_rows(
         Some(be) => sampler::run_direction(be, x0, dir, steps),
         None => {
             let sa = art.ok_or_else(|| anyhow!("runtime engine requires artifacts"))?;
-            let rows = x0.len() / d;
+            let rows = x0.len() / d.max(1);
             let padded = rows.max(1).div_ceil(batch_size.max(1)) * batch_size.max(1);
             let mut xp = x0.to_vec();
             xp.resize(padded * d, 0.0);
@@ -408,7 +408,7 @@ fn run_rows(
                         sampler::run_direction(&mut be, chunk, dir, steps)
                     })?,
                     Variant::Quantized(qm) => sa.with(|a| {
-                        let mut be = HloQStep::new(a, qm);
+                        let mut be = HloQStep::new(a, qm)?;
                         sampler::run_direction(&mut be, chunk, dir, steps)
                     })?,
                 };
@@ -602,7 +602,7 @@ fn handle_request(
             let latency = Span::begin();
             let imgs = submit(submitters, model, Work::Generate { n, seed })?;
             latency.end(&stats.request_latency_ns);
-            let d = registry.spec.d;
+            let d = registry.spec.d.max(1);
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("model", Json::Str(model.to_string())),
@@ -614,7 +614,7 @@ fn handle_request(
         "encode" => {
             let model = req.req_str("model")?;
             let rows = req.req("images")?.to_f32s()?;
-            let d = registry.spec.d;
+            let d = registry.spec.d.max(1);
             if rows.is_empty() || rows.len() % d != 0 {
                 bail!(
                     "images must be flat [n, d] with d={d} (got {} values)",

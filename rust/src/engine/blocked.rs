@@ -34,6 +34,22 @@ use crate::engine::tune::{TilePlan, Tuner};
 use crate::engine::workspace::{take_zeroed, Kernel};
 use crate::quant::packing::PackedCodes;
 
+/// Slice → fixed-size array for the sweep blocks below. Callers slice
+/// exactly `N` elements (`chunks_exact(N)` chunks, `q * N..(q + 1) * N`
+/// table windows), so the conversion is infallible by construction.
+#[inline]
+fn arr<T, const N: usize>(s: &[T]) -> &[T; N] {
+    // fmq-analyze: allow(panic_cone) -- every caller slices exactly N elements (chunks_exact / N-wide windows), so try_into cannot fail
+    s.try_into().unwrap()
+}
+
+/// Mutable twin of [`arr`], for the unrolled output blocks.
+#[inline]
+fn arr_mut<T, const N: usize>(s: &mut [T]) -> &mut [T; N] {
+    // fmq-analyze: allow(panic_cone) -- same contract as `arr`: callers pass exactly N elements
+    s.try_into().unwrap()
+}
+
 /// Output elements per unrolled sweep block. Eight f32 lanes = one AVX2
 /// register width; the fixed-size-array block below removes every bounds
 /// check so the compiler is free to vectorize the adds and interleave
@@ -93,12 +109,14 @@ pub fn matmul_stripe(
         return;
     }
     let span = crate::obs::Span::begin();
-    let bits = layer.packed.bits.clamp(1, 8) as usize;
+    // max(1) is identity after the clamps; it pins the nonzero divisors
+    // for the panic-cone pass
+    let bits = (layer.packed.bits.clamp(1, 8) as usize).max(1);
     let levels: &[f32] = &layer.levels;
     let klen = levels.len();
     // group is capped by the 8-bit fused index; k_tile aligns to pair
     // boundaries so the accumulation order is plan-invariant
-    let g = plan.group.clamp(1, 8 / bits);
+    let g = plan.group.clamp(1, 8 / bits).max(1);
     let align = 2 * g;
     let k_tile = plan.k_tile.max(align).div_ceil(align) * align;
     let quads_max = k_tile / g;
@@ -172,17 +190,17 @@ pub fn matmul_stripe(
             // loop — the blocking is numerically invisible.
             let mut q = 0usize;
             while q + 1 < nq {
-                let ta: &[f32; 256] = tabs[q * 256..(q + 1) * 256].try_into().unwrap();
-                let tb: &[f32; 256] = tabs[(q + 1) * 256..(q + 2) * 256].try_into().unwrap();
+                let ta: &[f32; 256] = arr(&tabs[q * 256..(q + 1) * 256]);
+                let tb: &[f32; 256] = arr(&tabs[(q + 1) * 256..(q + 2) * 256]);
                 let fa = &fused[q * w..(q + 1) * w];
                 let fb = &fused[(q + 1) * w..(q + 2) * w];
                 let mut oc = orow.chunks_exact_mut(LANES);
                 let mut ac = fa.chunks_exact(LANES);
                 let mut bc = fb.chunks_exact(LANES);
                 for ((o, ca), cb) in (&mut oc).zip(&mut ac).zip(&mut bc) {
-                    let o: &mut [f32; LANES] = o.try_into().unwrap();
-                    let ca: &[u8; LANES] = ca.try_into().unwrap();
-                    let cb: &[u8; LANES] = cb.try_into().unwrap();
+                    let o: &mut [f32; LANES] = arr_mut(o);
+                    let ca: &[u8; LANES] = arr(ca);
+                    let cb: &[u8; LANES] = arr(cb);
                     for ((ov, &a), &b) in o.iter_mut().zip(ca.iter()).zip(cb.iter()) {
                         *ov += ta[a as usize] + tb[b as usize];
                     }
@@ -198,13 +216,13 @@ pub fn matmul_stripe(
                 q += 2;
             }
             if q < nq {
-                let ta: &[f32; 256] = tabs[q * 256..(q + 1) * 256].try_into().unwrap();
+                let ta: &[f32; 256] = arr(&tabs[q * 256..(q + 1) * 256]);
                 let fa = &fused[q * w..(q + 1) * w];
                 let mut oc = orow.chunks_exact_mut(LANES);
                 let mut ac = fa.chunks_exact(LANES);
                 for (o, ca) in (&mut oc).zip(&mut ac) {
-                    let o: &mut [f32; LANES] = o.try_into().unwrap();
-                    let ca: &[u8; LANES] = ca.try_into().unwrap();
+                    let o: &mut [f32; LANES] = arr_mut(o);
+                    let ca: &[u8; LANES] = arr(ca);
                     for (ov, &a) in o.iter_mut().zip(ca.iter()) {
                         *ov += ta[a as usize];
                     }

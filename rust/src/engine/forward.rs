@@ -177,7 +177,7 @@ impl LutModel {
                     let kern = slot.kernel();
                     let mut stripe = std::mem::take(&mut kern.stripe);
                     take_zeroed(&mut stripe, m * (c1 - c0));
-                    let plan = blocked::plan_stripe(l, tuner, xs, m, c0, c1, kern);
+                    let plan = blocked::plan_stripe(l, tuner, xs, m, c0, c1, kern); // fmq-analyze: allow(lock_order) -- this shard's slot idx is exclusive (map_shards hands each closure its own), and the may-block witness is the analyzer resolving the atomic `load` in timing_enabled to ArtifactSet::load by method name; covers next line
                     blocked::matmul_stripe(l, xs, &mut stripe, m, c0, c1, plan, &mut kern.scratch);
                     (idx, stripe)
                 });
@@ -217,7 +217,7 @@ impl LutModel {
         let spec = &self.spec;
         let b = t.len();
         let (d, h_dim) = (spec.d, spec.hidden);
-        assert_eq!(x.len(), b * d);
+        assert_eq!(x.len(), b * d); // fmq-analyze: allow(panic_cone) -- shape contract: batcher and engine size x/out from the same spec.d (slice-conformance tests enforce it end-to-end; covers next line)
         assert_eq!(out.len(), b * d);
         let refs = &self.refs;
         let bias = |(off, len): (usize, usize)| &self.biases[off..off + len];
@@ -289,10 +289,10 @@ impl OpRefs {
             layers
                 .iter()
                 .position(|l| l.name == name)
-                .unwrap_or_else(|| panic!("unknown weight layer {name}"))
+                .unwrap_or_else(|| panic!("unknown weight layer {name}")) // fmq-analyze: allow(panic_cone) -- OpRefs::resolve runs once at model load; a malformed spec fails deployment before any request is accepted
         };
         let bref = |name: &str| {
-            let l = spec.layer(name).unwrap_or_else(|| panic!("bias layer {name}"));
+            let l = spec.layer(name).unwrap_or_else(|| panic!("bias layer {name}")); // fmq-analyze: allow(panic_cone) -- same load-time spec resolution as widx above
             (spec.bias_offset(name), l.size())
         };
         OpRefs {

@@ -94,12 +94,12 @@ impl LutLayer {
             .weight_layers()
             .iter()
             .position(|wl| wl.name == layer_name)
-            .expect("weight layer position");
+            .expect("weight layer position"); // fmq-analyze: allow(panic_cone) -- from_model iterates the spec's own layer table; a miss here is a pack-time bug, found at load, never mid-request
         LutLayer::new(
             layer_name,
-            l.shape[0],
+            l.shape[0], // fmq-analyze: allow(panic_cone) -- layer shapes are fixed 2-element arrays in the spec table (covers next line)
             l.shape[1],
-            &qm.codes[woff..woff + l.size()],
+            &qm.codes[woff..woff + l.size()], // fmq-analyze: allow(panic_cone) -- woff/row come from the same spec table the quantizer packed against; load-time code (covers next line)
             qm.codebooks[row].levels.clone(),
             qm.bits,
         )

@@ -319,6 +319,7 @@ impl Engine for LutEngine {
         // in its own pool-slot arena
         self.pool.map_rows_into(x, t, d, out, |idx, xs, ts, o| {
             let mut slot = self.pool.workspace(idx);
+            // fmq-analyze: allow(lock_order) -- each shard leases its own slot idx (disjoint by construction), and the may-block witnesses are method-name collisions (the atomic `load` in timing_enabled resolving to ArtifactSet::load); the engine under the lease does no channel or file I/O
             self.model.velocity_into(xs, ts, o, &mut slot);
             Ok(())
         })
@@ -411,7 +412,7 @@ impl Engine for LutV2Engine {
             self.pool.map_rows_into(x, t, d, out, |idx, xs, ts, o| {
                 let mut slot = self.pool.workspace(idx);
                 self.model
-                    .velocity_into_v2(xs, ts, o, &self.tuner, None, &mut slot);
+                    .velocity_into_v2(xs, ts, o, &self.tuner, None, &mut slot); // fmq-analyze: allow(lock_order) -- same disjoint slot-lease discipline as the v1 shard closure above
                 Ok(())
             })
         } else {

@@ -120,7 +120,7 @@ impl Pool {
         F: Fn(usize, &[f32], &[f32], &mut [f32]) -> Result<()> + Sync,
     {
         let b = t.len();
-        assert_eq!(x.len(), b * d, "x rows must match t length");
+        assert_eq!(x.len(), b * d, "x rows must match t length"); // fmq-analyze: allow(panic_cone) -- shard-dispatch shape contract with the engines above; both sides derive sizes from spec.d (covers next line)
         assert_eq!(out.len(), b * d, "out rows must match t length");
         let shards = self.threads.min(b.max(1));
         crate::obs::ENGINE.shard_jobs_total.add(shards.max(1) as u64);

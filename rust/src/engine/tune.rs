@@ -28,7 +28,8 @@ use std::sync::Mutex;
 /// `bits` per code: `max_group(2) == 4`, `max_group(3) == 2`,
 /// `max_group(4) == 2`, `max_group(b >= 5) == 1`.
 pub fn max_group(bits: u8) -> usize {
-    (8 / bits.clamp(1, 8) as usize).max(1)
+    let b = (bits.clamp(1, 8) as usize).max(1);
+    (8 / b).max(1)
 }
 
 /// Tile shape for one blocked LUT-GEMM invocation.

@@ -129,15 +129,18 @@ impl Activations {
         let td = 2 * spec.temb_freqs;
         let Self { temb, cache, .. } = self;
         temb.clear();
-        if t.is_empty() || td == 0 {
+        let Some(&first) = t.first() else {
+            return;
+        };
+        if td == 0 {
             return;
         }
-        let t0 = t[0].to_bits();
+        let t0 = first.to_bits();
         if t.iter().all(|tv| tv.to_bits() == t0) {
             // broadcast by appending: no zero-fill pass — every element
             // is written exactly once (unlike the accumulator buffers,
             // temb is never read before being fully overwritten)
-            let row = cache.row(spec, t[0]);
+            let row = cache.row(spec, first);
             temb.reserve(t.len() * td);
             for _ in 0..t.len() {
                 temb.extend_from_slice(row);

@@ -34,7 +34,7 @@ pub fn time_features(spec: &ModelSpec, t: &[f32]) -> Vec<f32> {
 /// allocating version (same `freq`, same `sin`/`cos` arguments).
 pub fn time_features_into(spec: &ModelSpec, t: &[f32], out: &mut [f32]) {
     let f = spec.temb_freqs;
-    assert_eq!(out.len(), t.len() * 2 * f, "out must be [B, 2 * temb_freqs]");
+    assert_eq!(out.len(), t.len() * 2 * f, "out must be [B, 2 * temb_freqs]"); // fmq-analyze: allow(panic_cone) -- shape contract with the workspace temb arena: the caller sizes `out` from the same spec (pinned by the bit-exactness tests)
     // denominator (f-1) is only meaningful for f >= 2; clamping to 1 makes
     // the f == 1 exponent exactly 0 (freq = e^0 = 1) and changes nothing
     // for f >= 2
@@ -78,7 +78,7 @@ impl Weights for Quantized<'_> {
             .weight_layers()
             .iter()
             .position(|l| l.name == name)
-            .unwrap();
+            .unwrap(); // fmq-analyze: allow(panic_cone) -- reference-oracle path: layer names come from the spec's own tables; a miss is a construction bug caught by any test run, not request-reachable (covers next line too)
         let l = spec.layer(name).unwrap();
         let woff = spec.weight_offset(name);
         let cb = &qm.codebooks[row];
@@ -90,7 +90,7 @@ impl Weights for Quantized<'_> {
         );
     }
     fn bias(&self, spec: &ModelSpec, name: &str) -> Vec<f32> {
-        let l = spec.layer(name).unwrap();
+        let l = spec.layer(name).unwrap(); // fmq-analyze: allow(panic_cone) -- same spec-table lookup as `weight` above: a miss is a construction bug, not request data
         let boff = spec.bias_offset(name);
         self.0.biases[boff..boff + l.size()].to_vec()
     }
@@ -99,7 +99,7 @@ impl Weights for Quantized<'_> {
 fn forward(spec: &ModelSpec, w: &dyn Weights, x: &[f32], t: &[f32]) -> Vec<f32> {
     let b = t.len();
     let (d, h_dim, temb_dim) = (spec.d, spec.hidden, 2 * spec.temb_freqs);
-    assert_eq!(x.len(), b * d);
+    assert_eq!(x.len(), b * d); // fmq-analyze: allow(panic_cone) -- oracle shape contract: callers build x/t from the same spec
     let mut wbuf: Vec<f32> = Vec::new();
 
     // ht = silu(temb @ w_t + b_t)

@@ -49,11 +49,13 @@ pub struct StepGrid {
 
 impl StepGrid {
     /// Grid from `t0` to `t1` in `steps` fixed steps (dt is signed).
+    /// `steps == 0` yields an empty grid; for `steps >= 1` the dt bits
+    /// are unchanged from the plain division (`max(1)` is identity), so
+    /// the accumulated-t contract above is preserved exactly.
     pub fn new(t0: f32, t1: f32, steps: usize) -> Self {
-        assert!(steps > 0);
         Self {
             t: t0,
-            dt: (t1 - t0) / steps as f32,
+            dt: (t1 - t0) / steps.max(1) as f32,
             left: steps,
         }
     }

@@ -5,7 +5,7 @@
 //! the full solver axis (euler/heun/dopri5) through
 //! [`EngineStep::run_solver`] for the paper-grid sweep.
 
-use anyhow::Result;
+use anyhow::{ensure, Context, Result};
 
 use crate::engine::workspace::{take_zeroed, Workspace};
 use crate::flow::ode::{
@@ -151,8 +151,8 @@ impl<'a> EngineStep<'a> {
             self.scr.evals = steps;
             return Ok(out);
         }
-        let d = self.engine.spec().d;
-        assert_eq!(x.len() % d, 0, "x must be flat [B, D]");
+        let d = self.engine.spec().d.max(1);
+        ensure!(x.len() % d == 0, "x must be flat [B, D] with d={d}");
         let b = x.len() / d;
         let mut x = x;
         let Self {
@@ -184,8 +184,8 @@ impl<'a> EngineStep<'a> {
 
 impl StepBackend for EngineStep<'_> {
     fn step(&mut self, x: &[f32], t: f32, dt: f32) -> Result<Vec<f32>> {
-        let d = self.engine.spec().d;
-        assert_eq!(x.len() % d, 0, "x must be flat [B, D]");
+        let d = self.engine.spec().d.max(1);
+        ensure!(x.len() % d == 0, "x must be flat [B, D] with d={d}");
         let b = x.len() / d;
         self.tb.clear();
         self.tb.resize(b, t);
@@ -202,8 +202,8 @@ impl StepBackend for EngineStep<'_> {
     }
 
     fn run(&mut self, x: Vec<f32>, t0: f32, t1: f32, steps: usize) -> Result<Vec<f32>> {
-        let d = self.engine.spec().d;
-        assert_eq!(x.len() % d, 0, "x must be flat [B, D]");
+        let d = self.engine.spec().d.max(1);
+        ensure!(x.len() % d == 0, "x must be flat [B, D] with d={d}");
         let b = x.len() / d;
         let grid = StepGrid::new(t0, t1, steps);
         let dt = grid.dt();
@@ -271,19 +271,19 @@ enum QMode<'a> {
 }
 
 impl<'a> HloQStep<'a> {
-    pub fn new(art: &'a ArtifactSet, qm: &QuantizedModel) -> Self {
+    pub fn new(art: &'a ArtifactSet, qm: &QuantizedModel) -> Result<Self> {
         let session = art
             .qsample_session_dequant(qm)
-            .expect("dequantize quantized model on device");
-        Self::build(art, qm, QMode::DequantOnLoad(session))
+            .context("dequantize quantized model on device")?;
+        Ok(Self::build(art, qm, QMode::DequantOnLoad(session)))
     }
 
     /// Per-step Pallas-qmm dequantization (the TPU-faithful mode).
-    pub fn new_on_the_fly(art: &'a ArtifactSet, qm: &QuantizedModel) -> Self {
+    pub fn new_on_the_fly(art: &'a ArtifactSet, qm: &QuantizedModel) -> Result<Self> {
         let session = art
             .qsample_session(qm)
-            .expect("stage quantized model on device");
-        Self::build(art, qm, QMode::OnTheFly(session))
+            .context("stage quantized model on device")?;
+        Ok(Self::build(art, qm, QMode::OnTheFly(session)))
     }
 
     fn build(art: &'a ArtifactSet, qm: &QuantizedModel, mode: QMode<'a>) -> Self {

@@ -66,7 +66,7 @@ impl SymMat {
     }
 
     pub fn add(&self, rhs: &SymMat) -> SymMat {
-        assert_eq!(self.n, rhs.n);
+        assert_eq!(self.n, rhs.n); // fmq-analyze: allow(panic_cone) -- OT quantizer builds both operands with one n; a mismatch is a programmer error, not data
         SymMat {
             n: self.n,
             a: self

@@ -179,6 +179,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     if let Some(p) = out.parent() {
         std::fs::create_dir_all(p)?;
     }
+    // fmq-analyze: allow(det_taint) -- train's clock feeds only the wall_s progress line; theta bytes are a pure function of (seed, dataset, spec)
     checkpoint::save_theta(
         &out,
         &res.theta,
@@ -586,6 +587,7 @@ fn cmd_figgrid(argv: &[String]) -> Result<()> {
         );
     }
     let out = PathBuf::from(a.get("out"));
+    // fmq-analyze: allow(det_taint) -- the per_step_us fields in BENCH_figgrid.json are informational bench metadata; golden conformance compares only the deterministic metric fields
     res.write_json(&out)?;
     println!(
         "{} cells in {:.1}s -> {out:?}",

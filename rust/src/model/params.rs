@@ -39,7 +39,7 @@ impl ParamStore {
 
     /// Slice of one named layer.
     pub fn layer<'a>(&'a self, spec: &ModelSpec, name: &str) -> &'a [f32] {
-        let l = spec.layer(name).unwrap_or_else(|| panic!("no layer {name}"));
+        let l = spec.layer(name).unwrap_or_else(|| panic!("no layer {name}")); // fmq-analyze: allow(panic_cone) -- spec-table lookup with static layer names; offsets were sized by the same spec (covers next line)
         &self.data[l.offset..l.offset + l.size()]
     }
 

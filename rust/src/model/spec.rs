@@ -124,7 +124,7 @@ impl ModelSpec {
             }
             off += l.size();
         }
-        panic!("unknown weight layer {name}");
+        panic!("unknown weight layer {name}"); // fmq-analyze: allow(panic_cone) -- callers pass names from this spec's own layer table; load/pack-time only
     }
 
     /// Offset of a bias inside the packed bias vector biases[PB].
@@ -136,7 +136,7 @@ impl ModelSpec {
             }
             off += l.size();
         }
-        panic!("unknown bias layer {name}");
+        panic!("unknown bias layer {name}"); // fmq-analyze: allow(panic_cone) -- same spec-table contract as weight_offset
     }
 
     /// He-style init: W ~ N(0, 1/sqrt(fan_in)), biases 0, output layer

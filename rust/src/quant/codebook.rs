@@ -78,7 +78,7 @@ impl Codebook {
     /// Pad levels to `k_max` with CODEBOOK_PAD for the fixed-size artifact
     /// input.
     pub fn padded_levels(&self, k_max: usize) -> Vec<f32> {
-        assert!(self.levels.len() <= k_max);
+        assert!(self.levels.len() <= k_max); // fmq-analyze: allow(panic_cone) -- k_max is the spec-wide max level count computed over these same codebooks
         let mut v = self.levels.clone();
         v.resize(k_max, CODEBOOK_PAD);
         v

@@ -76,7 +76,7 @@ impl PackedCodes {
     /// by recomputing `get(i)`, which is what makes tile-wise streaming of
     /// the codes cheap enough to sit inside a GEMM.
     pub fn unpack_range_u8(&self, start: usize, out: &mut [u8]) {
-        assert!(self.bits <= 8, "unpack_range_u8 needs bits <= 8, got {}", self.bits);
+        assert!(self.bits <= 8, "unpack_range_u8 needs bits <= 8, got {}", self.bits); // fmq-analyze: allow(panic_cone) -- these asserts ARE the documented bounds contract; offsets derive from the spec's layer table and the property tests cover every bit-width (covers next line)
         assert!(
             start + out.len() <= self.n,
             "unpack_range_u8 range {}..{} out of {} codes",
@@ -109,7 +109,7 @@ impl PackedCodes {
     /// straddle a word boundary. A property test pins this against the
     /// element-wise decoder for every bit-width and ragged range.
     pub fn unpack_bulk_u8(&self, start: usize, out: &mut [u8]) {
-        assert!(self.bits <= 8, "unpack_bulk_u8 needs bits <= 8, got {}", self.bits);
+        assert!(self.bits <= 8, "unpack_bulk_u8 needs bits <= 8, got {}", self.bits); // fmq-analyze: allow(panic_cone) -- same documented bounds contract as unpack_range_u8 (covers next line)
         assert!(
             start + out.len() <= self.n,
             "unpack_bulk_u8 range {}..{} out of {} codes",

@@ -23,7 +23,9 @@ pub struct SharedArtifacts {
 // SAFETY: all access to the non-Send internals goes through `with`, which
 // holds the Mutex; the wrapped value never escapes the closure, so no two
 // threads can touch the Rc refcounts or PJRT handles concurrently.
+// fmq-analyze: safety -- `with` serializes every touch behind the Mutex and the value never escapes the closure, so Rc refcounts / PJRT handles are never reached from two threads
 unsafe impl Send for SharedArtifacts {}
+// fmq-analyze: safety -- same proof as Send: Mutex-serialized access only
 unsafe impl Sync for SharedArtifacts {}
 
 impl SharedArtifacts {
@@ -35,7 +37,13 @@ impl SharedArtifacts {
 
     /// Run `f` with exclusive access to the artifact set.
     pub fn with<T>(&self, f: impl FnOnce(&ArtifactSet) -> T) -> T {
-        let guard = self.inner.lock().unwrap();
+        // a poisoned lock means another worker panicked mid-`with`; the
+        // closure only ever gets `&ArtifactSet` (no partial mutation to
+        // observe), so serving continues instead of cascading the panic
+        let guard = self
+            .inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         f(&guard)
     }
 }

@@ -128,7 +128,7 @@ fn gronwall_euler(
     x0: &[f32],
     steps: usize,
 ) -> Result<GronwallCell> {
-    let d = spec.d;
+    let d = spec.d.max(1);
     let m = x0.len() / d;
     let mut xq = x0.to_vec();
     let mut yr = x0.to_vec();
@@ -150,19 +150,26 @@ fn gronwall_euler(
         let vq = qeng.velocity(&xq, &tb)?;
         let vf_xq = crate::flow::cpu_ref::velocity(spec, theta, &xq, &tb);
         let vf_yr = crate::flow::cpu_ref::velocity(spec, theta, &yr, &tb);
-        for s in 0..m {
-            let r = s * d..(s + 1) * d;
-            let gap = l2(&vq[r.clone()], &vf_xq[r.clone()]);
-            let num = l2(&vf_xq[r.clone()], &vf_yr[r.clone()]);
-            let den = l2(&xq[r.clone()], &yr[r]);
+        for (((vq_s, vfx_s), vfy_s), (xq_s, yr_s)) in vq
+            .chunks_exact(d)
+            .zip(vf_xq.chunks_exact(d))
+            .zip(vf_yr.chunks_exact(d))
+            .zip(xq.chunks_exact(d).zip(yr.chunks_exact(d)))
+        {
+            let gap = l2(vq_s, vfx_s);
+            let num = l2(vfx_s, vfy_s);
+            let den = l2(xq_s, yr_s);
             if !gap.is_finite() || !num.is_finite() {
                 finite = false;
             }
             if gap > dv_max {
                 dv_max = gap;
             }
-            if den > 1e-9 && num / den > l_hat {
-                l_hat = num / den;
+            // max(1e-9) is identity under the den > 1e-9 gate; it only
+            // keeps the (discarded) ratio finite below it
+            let ratio = num / den.max(1e-9);
+            if den > 1e-9 && ratio > l_hat {
+                l_hat = ratio;
             }
         }
         for i in 0..xq.len() {
@@ -171,9 +178,8 @@ fn gronwall_euler(
         }
     }
     let mut traj_dev = 0.0f64;
-    for s in 0..m {
-        let r = s * d..(s + 1) * d;
-        let dev = l2(&xq[r.clone()], &yr[r]);
+    for (xq_s, yr_s) in xq.chunks_exact(d).zip(yr.chunks_exact(d)) {
+        let dev = l2(xq_s, yr_s);
         if dev > traj_dev || !dev.is_finite() {
             traj_dev = dev;
         }

@@ -30,6 +30,7 @@ impl Args {
         self.values
             .get(name)
             .map(|s| s.as_str())
+            // fmq-analyze: allow(panic_cone) -- fires only when a subcommand reads a flag missing from its own static flag table: a programmer error caught by the first run of that subcommand, not by request data
             .unwrap_or_else(|| panic!("flag --{name} not declared"))
     }
 
@@ -138,8 +139,7 @@ impl Command {
             }
         }
         let mut i = 0;
-        while i < argv.len() {
-            let a = &argv[i];
+        while let Some(a) = argv.get(i) {
             if let Some(name) = a.strip_prefix("--") {
                 if name == "help" {
                     bail!("{}", self.usage());

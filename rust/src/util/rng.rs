@@ -68,7 +68,7 @@ impl Pcg64 {
     #[inline]
     pub fn below(&mut self, n: usize) -> usize {
         debug_assert!(n > 0);
-        (self.uniform() * n as f64) as usize % n
+        (self.uniform() * n as f64) as usize % n.max(1)
     }
 
     /// Standard normal via Box–Muller (one value; pairs not cached to keep

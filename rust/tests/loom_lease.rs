@@ -3,20 +3,16 @@
 //! orderings the in-process checker in `tests/slot_interleavings.rs`
 //! cannot model).
 //!
-//! The whole file is gated behind `--cfg loom` because loom is not a
-//! default dev-dependency: this workspace builds offline and keeps
-//! `anyhow` as its only external crate (same policy as the vendored-xla
-//! `pjrt` feature in Cargo.toml). To run the model locally:
+//! Loom is an optional dependency behind the `loom` feature, and this
+//! file additionally requires `--cfg loom` (the cfg loom itself uses to
+//! swap in its model types), so the default build compiles none of it
+//! and stays on the offline anyhow-only dependency policy. To run the
+//! model — locally or in the CI `loom` job:
 //!
-//! 1. add under `[dev-dependencies]` in `rust/Cargo.toml`:
-//!        loom = "0.7"
-//! 2. run just this test with the cfg enabled:
-//!        RUSTFLAGS="--cfg loom" cargo test --release --test loom_lease
+//!     RUSTFLAGS="--cfg loom" cargo test --release --features loom --test loom_lease
 //!
-//! Without step 1 the cfg stays off and the file compiles to nothing, so
-//! plain `cargo test` is unaffected. `check-cfg` for `cfg(loom)` is
-//! declared in the workspace lints table.
-#![cfg(loom)]
+//! `check-cfg` for `cfg(loom)` is declared in the workspace lints table.
+#![cfg(all(loom, feature = "loom"))]
 
 use loom::sync::{Arc, Mutex};
 use loom::thread;

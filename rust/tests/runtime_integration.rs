@@ -192,9 +192,11 @@ fn dequant_on_load_session_matches_on_the_fly() {
         .map(|_| rng.normal_f32(0.0, 1.0))
         .collect();
     let a = HloQStep::new(&art, &qm)
+        .unwrap()
         .run(x.clone(), 0.0, 1.0, 8)
         .unwrap();
     let b = HloQStep::new_on_the_fly(&art, &qm)
+        .unwrap()
         .run(x, 0.0, 1.0, 8)
         .unwrap();
     let rel = rel_err(&a, &b);

@@ -1,0 +1,189 @@
+//! Pass `det_taint` — nondeterminism must not reach artifact sinks.
+//!
+//! The repo's reproducibility contracts (PRs 2/3/7: byte-stable packed
+//! artifacts, replies a pure function of `(model, n, seed, steps)`,
+//! conformance-checked `BENCH_*.json` fields) die quietly when a value
+//! derived from the wall clock, an unordered container, or an unpinned
+//! float reduction flows into a writer. Stage 1 checks *where code
+//! lives* (HashMap denied in listed files); this pass checks *where
+//! values flow*:
+//!
+//! - **Seed** taint at clock/thread-id reads (`Instant::now`,
+//!   `.elapsed()`, `thread::current`), `HashMap`/`HashSet` usage, and
+//!   float reductions (`.sum()`/`.fold()`/`.product()`) inside the
+//!   configured reduction scope;
+//! - **Propagate** callee -> caller along the whole-workspace call graph
+//!   (a function calling a tainted function computes tainted values);
+//! - **Deny** when a tainted function *is* a sink or directly calls one
+//!   (`StepGrid::new`, `PackedCodes::pack`, the checkpoint/report/bench
+//!   writers).
+//!
+//! Pre-justified sources: `[det_taint] source_allow` fn patterns and
+//! `source_allow_paths` file prefixes (the `obs/` registry is a
+//! write-only observer — its clock reads feed histograms that never flow
+//! back into compute). Site-level suppression:
+//! `fmq-analyze: allow(det_taint) -- why` at the source line (kills the
+//! seed) or at the sink call line (accepts the flow, e.g. wall-time
+//! fields in bench JSON that are explicitly informational).
+
+use std::collections::BTreeSet;
+
+use crate::analyze::{fn_matches, suppressed, AnalyzeConfig};
+use crate::callgraph::Graph;
+use crate::config::Config;
+use crate::diag::Diag;
+use crate::lexer::TokKind;
+use crate::parse::ParsedFile;
+use crate::rules::calls_in;
+
+const RULE: &str = "det_taint";
+
+const UNORDERED: &[&str] = &["HashMap", "HashSet"];
+const REDUCTIONS: &[&str] = &["sum", "fold", "product"];
+
+pub fn run(files: &[ParsedFile], graph: &Graph, cfg: &AnalyzeConfig) -> Vec<Diag> {
+    let n = graph.nodes.len();
+    let mut diags = Vec::new();
+
+    // 1. Seed: per-node direct sources, with a witness description.
+    let mut seed = vec![false; n];
+    let mut source_desc: Vec<Option<String>> = vec![None; n];
+    for u in 0..n {
+        let nref = graph.nodes[u];
+        let f = &files[nref.file];
+        let d = &f.fns[nref.fn_idx];
+        let Some((a, b)) = d.body else { continue };
+        if fn_matches(&d.qual, &d.name, &cfg.taint_source_allow)
+            || Config::path_in(&f.path, &cfg.taint_source_allow_paths)
+        {
+            continue;
+        }
+        let toks = &f.lexed.toks;
+        let hi = b.min(toks.len().saturating_sub(1));
+        let mut note = |line: u32, what: String, diags: &mut Vec<Diag>| {
+            if suppressed(f, RULE, line, diags) {
+                return;
+            }
+            seed[u] = true;
+            if source_desc[u].is_none() {
+                source_desc[u] = Some(format!("{what} at {}:{line}", f.path));
+            }
+        };
+        for call in calls_in(toks, (a, b)) {
+            if call.is_macro {
+                continue;
+            }
+            if let Some(q) = &call.qual {
+                if cfg.taint_time_paths.iter().any(|p| p == q) {
+                    note(call.line, format!("`{q}`"), &mut diags);
+                }
+            }
+            if call.is_method && cfg.taint_time_methods.iter().any(|m| *m == call.name) {
+                note(call.line, format!("`.{}()`", call.name), &mut diags);
+            }
+            if call.is_method
+                && REDUCTIONS.contains(&call.name.as_str())
+                && Config::path_in(&f.path, &cfg.taint_reduction_scope)
+                && !cfg.taint_reduction_allow.iter().any(|x| *x == d.name)
+            {
+                note(call.line, format!("float `.{}()`", call.name), &mut diags);
+            }
+        }
+        for j in a..=hi {
+            let t = &toks[j];
+            if t.kind == TokKind::Ident && UNORDERED.contains(&t.text.as_str()) {
+                note(t.line, format!("`{}`", t.text), &mut diags);
+            }
+        }
+    }
+
+    // 2. Propagate callee -> caller, with the witness callee recorded.
+    let (tainted, via) = graph.propagate_up_witness(&seed);
+
+    // 3. Sinks.
+    let mut sink_nodes: BTreeSet<usize> = BTreeSet::new();
+    for pat in &cfg.taint_sinks {
+        sink_nodes.extend(graph.matching(files, pat));
+    }
+
+    // Witness: how `u` became tainted, down to the concrete source.
+    let witness = |u: usize| -> String {
+        let mut cur = u;
+        let mut hops = Vec::new();
+        while let Some(nx) = via[cur] {
+            hops.push(graph.qual(files, nx).to_string());
+            cur = nx;
+            if hops.len() > n {
+                break;
+            }
+        }
+        let src = source_desc[cur]
+            .clone()
+            .unwrap_or_else(|| "a nondeterministic source".to_string());
+        if hops.is_empty() {
+            src
+        } else {
+            format!("via {}: {src}", hops.join(" -> "))
+        }
+    };
+
+    // 4a. A sink that is itself tainted.
+    for &s in &sink_nodes {
+        if !tainted[s] {
+            continue;
+        }
+        let nref = graph.nodes[s];
+        let f = &files[nref.file];
+        let d = &f.fns[nref.fn_idx];
+        if suppressed(f, RULE, d.line, &mut diags) {
+            continue;
+        }
+        diags.push(Diag::new(
+            RULE,
+            &f.path,
+            d.line,
+            format!(
+                "determinism sink `{}` is itself tainted ({})",
+                d.qual,
+                witness(s)
+            ),
+        ));
+    }
+
+    // 4b. A tainted function feeding a sink it calls directly.
+    let mut reported: BTreeSet<(String, u32, String)> = BTreeSet::new();
+    for u in 0..n {
+        if !tainted[u] || sink_nodes.contains(&u) {
+            continue;
+        }
+        let nref = graph.nodes[u];
+        let f = &files[nref.file];
+        let d = &f.fns[nref.fn_idx];
+        let Some(body) = d.body else { continue };
+        for call in calls_in(&f.lexed.toks, body) {
+            for v in graph.resolve(files, u, &call) {
+                if !sink_nodes.contains(&v) {
+                    continue;
+                }
+                if suppressed(f, RULE, call.line, &mut diags) {
+                    continue;
+                }
+                let sq = graph.qual(files, v).to_string();
+                if !reported.insert((f.path.clone(), call.line, sq.clone())) {
+                    continue;
+                }
+                diags.push(Diag::new(
+                    RULE,
+                    &f.path,
+                    call.line,
+                    format!(
+                        "determinism-tainted `{}` ({}) calls sink `{sq}`",
+                        d.qual,
+                        witness(u)
+                    ),
+                ));
+            }
+        }
+    }
+    diags
+}

@@ -1,0 +1,354 @@
+//! Pass `lock_order` — deadlock freedom over lock classes.
+//!
+//! Stage 1's `lock_hygiene` checks one scope in one file: a let-bound
+//! guard must not sit across a blocking call *in the same function*.
+//! This pass generalizes both dimensions:
+//!
+//! - **Classes.** Every acquisition site (`.lock()`, or the pool's
+//!   `.workspace()` slot lease) is assigned a class — the receiver
+//!   identifier (`cache.lock()` -> `cache`), or `slot` for workspace
+//!   leases. The may-hold-while-acquiring relation over classes forms a
+//!   digraph; a cycle means two threads can acquire the same pair of
+//!   locks in opposite orders, which is a deadlock under contention, not
+//!   a hygiene nit. Classes in `[lock_order] indexed` (per-index
+//!   instances like pool slots, where concurrent holders use disjoint
+//!   indices by construction) are exempt from self-edges only.
+//! - **Transitivity.** While a guard is held, calls are resolved through
+//!   the whole-workspace call graph: a callee that may transitively
+//!   acquire another class contributes an edge, and a callee that may
+//!   transitively block (`send`/`recv`/`join`/...) is reported even when
+//!   the blocking call is three frames down in another file.
+//!
+//! Suppression: `fmq-analyze: allow(lock_order) -- why`.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::analyze::{suppressed, AnalyzeConfig};
+use crate::callgraph::{Graph, NodeId};
+use crate::diag::Diag;
+use crate::lexer::{Tok, TokKind};
+use crate::parse::ParsedFile;
+use crate::rules::calls_in;
+
+const RULE: &str = "lock_order";
+
+/// One guard acquisition with the token range it is held over.
+struct Held {
+    class: String,
+    line: u32,
+    /// Token range (exclusive of the acquiring statement itself).
+    range: (usize, usize),
+}
+
+pub fn run(files: &[ParsedFile], graph: &Graph, cfg: &AnalyzeConfig) -> Vec<Diag> {
+    let n = graph.nodes.len();
+
+    // Per node: classes acquired anywhere in the body, and whether the
+    // body itself contains a blocking call.
+    let mut acquires: Vec<BTreeSet<String>> = vec![BTreeSet::new(); n];
+    let mut blocks_direct = vec![false; n];
+    let mut helds: Vec<Vec<Held>> = Vec::with_capacity(n);
+    for u in 0..n {
+        let nref = graph.nodes[u];
+        let f = &files[nref.file];
+        let d = &f.fns[nref.fn_idx];
+        let Some((a, b)) = d.body else {
+            helds.push(Vec::new());
+            continue;
+        };
+        let toks = &f.lexed.toks;
+        let hi = b.min(toks.len().saturating_sub(1));
+        let mut hs = Vec::new();
+        for j in a..=hi {
+            let t = &toks[j];
+            if t.kind != TokKind::Ident {
+                continue;
+            }
+            if cfg.lock_blocking.iter().any(|bn| *bn == t.text)
+                && j > 0
+                && toks[j - 1].is_punct('.')
+                && toks.get(j + 1).is_some_and(|nx| nx.is_punct('('))
+            {
+                blocks_direct[u] = true;
+            }
+            if cfg.lock_guard_fns.iter().any(|g| *g == t.text)
+                && j > 0
+                && toks[j - 1].is_punct('.')
+                && toks.get(j + 1).is_some_and(|nx| nx.is_punct('('))
+            {
+                let class = class_of(toks, j);
+                acquires[u].insert(class.clone());
+                if let Some(range) = held_range(toks, a, j, hi) {
+                    hs.push(Held { class, line: t.line, range });
+                }
+            }
+        }
+        helds.push(hs);
+    }
+
+    // Transitive may-acquire per node (monotone fixpoint, cycle-safe).
+    let mut may_acquire = acquires.clone();
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for u in 0..n {
+            for &v in &graph.callees[u] {
+                if v == u {
+                    continue;
+                }
+                let add: Vec<String> = may_acquire[v]
+                    .iter()
+                    .filter(|c| !may_acquire[u].contains(*c))
+                    .cloned()
+                    .collect();
+                if !add.is_empty() {
+                    may_acquire[u].extend(add);
+                    changed = true;
+                }
+            }
+        }
+    }
+    let (may_block, block_via) = graph.propagate_up_witness(&blocks_direct);
+
+    // Walk every held range: build class edges and report blocking.
+    let mut edges: BTreeMap<(String, String), (String, u32)> = BTreeMap::new();
+    let mut diags = Vec::new();
+    let mut reported: BTreeSet<(String, u32, String)> = BTreeSet::new();
+    for u in 0..n {
+        let nref = graph.nodes[u];
+        let f = &files[nref.file];
+        let d = &f.fns[nref.fn_idx];
+        let toks = &f.lexed.toks;
+        for h in &helds[u] {
+            for call in calls_in(toks, h.range) {
+                if call.is_macro {
+                    continue;
+                }
+                let is_guard = cfg.lock_guard_fns.iter().any(|g| *g == call.name)
+                    && call.is_method;
+                if is_guard {
+                    let dst = class_of(toks, call.at);
+                    edges
+                        .entry((h.class.clone(), dst))
+                        .or_insert((f.path.clone(), call.line));
+                    continue;
+                }
+                if cfg.lock_blocking.iter().any(|bn| *bn == call.name) && call.is_method {
+                    if !suppressed(f, RULE, call.line, &mut diags)
+                        && reported.insert((f.path.clone(), call.line, call.name.clone()))
+                    {
+                        diags.push(Diag::new(
+                            RULE,
+                            &f.path,
+                            call.line,
+                            format!(
+                                "blocking call `{}()` while `{}` guard (line {}) is held \
+                                 in `{}`",
+                                call.name, h.class, h.line, d.qual
+                            ),
+                        ));
+                    }
+                    continue;
+                }
+                for v in graph.resolve(files, u, &call) {
+                    if v == u {
+                        continue;
+                    }
+                    for dst in &may_acquire[v] {
+                        edges
+                            .entry((h.class.clone(), dst.clone()))
+                            .or_insert((f.path.clone(), call.line));
+                    }
+                    if may_block[v]
+                        && !suppressed(f, RULE, call.line, &mut diags)
+                        && reported.insert((f.path.clone(), call.line, format!("via {v}")))
+                    {
+                        let witness = block_chain(files, graph, &block_via, v);
+                        diags.push(Diag::new(
+                            RULE,
+                            &f.path,
+                            call.line,
+                            format!(
+                                "`{}` guard (line {}) held across call to `{}`, which may \
+                                 block ({witness}) in `{}`",
+                                h.class,
+                                h.line,
+                                graph.qual(files, v),
+                                d.qual
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    // Cycle detection over the class digraph.
+    let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for (src, dst) in edges.keys() {
+        if src == dst {
+            if !cfg.lock_indexed.iter().any(|c| c == src) {
+                let (file, line) = &edges[&(src.clone(), dst.clone())];
+                diags.push(Diag::new(
+                    RULE,
+                    file,
+                    *line,
+                    format!("acquiring lock class `{src}` while already holding it"),
+                ));
+            }
+            continue;
+        }
+        adj.entry(src).or_default().push(dst);
+    }
+    let mut seen_cycles: BTreeSet<Vec<String>> = BTreeSet::new();
+    for &start in adj.keys() {
+        // DFS from each class; a back edge to the start is a cycle
+        let mut stack = vec![(start, 0usize)];
+        let mut path = vec![start];
+        let mut on_path: BTreeSet<&str> = [start].into();
+        while let Some((node, idx)) = stack.pop() {
+            let nexts = adj.get(node).map(|v| v.as_slice()).unwrap_or(&[]);
+            if idx < nexts.len() {
+                stack.push((node, idx + 1));
+                let nx = nexts[idx];
+                if nx == start {
+                    let mut key: Vec<String> = path.iter().map(|s| s.to_string()).collect();
+                    key.sort();
+                    if seen_cycles.insert(key) {
+                        let cyc = path.join(" -> ");
+                        let (file, line) = &edges[&(node.to_string(), start.to_string())];
+                        diags.push(Diag::new(
+                            RULE,
+                            file,
+                            *line,
+                            format!(
+                                "lock-order cycle: {cyc} -> {start} — two threads taking \
+                                 these locks in opposite orders deadlock under contention"
+                            ),
+                        ));
+                    }
+                } else if !on_path.contains(nx) {
+                    on_path.insert(nx);
+                    path.push(nx);
+                    stack.push((nx, 0));
+                }
+            } else {
+                on_path.remove(node);
+                path.pop();
+            }
+        }
+    }
+    diags
+}
+
+/// The lock class of an acquisition site at token `j` (the guard-fn
+/// name): `slot` for `.workspace(...)` leases, else the receiver
+/// identifier (walking back over `]`/`)` groups and field chains).
+fn class_of(toks: &[Tok], j: usize) -> String {
+    if toks[j].text == "workspace" {
+        return "slot".to_string();
+    }
+    // j-1 is the `.`; walk back over the receiver's trailing groups
+    let mut k = j - 1; // at `.`
+    while k > 0 {
+        let p = &toks[k - 1];
+        if p.is_punct(']') || p.is_punct(')') {
+            let (open, close) = if p.is_punct(')') { ('(', ')') } else { ('[', ']') };
+            let mut depth = 0i32;
+            let mut m = k - 1;
+            loop {
+                if toks[m].is_punct(close) {
+                    depth += 1;
+                } else if toks[m].is_punct(open) {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                if m == 0 {
+                    break;
+                }
+                m -= 1;
+            }
+            k = m;
+        } else if p.kind == TokKind::Ident && p.text != "self" {
+            return p.text.clone();
+        } else if p.kind == TokKind::Ident || p.is_punct('.') || p.is_punct(':') {
+            k -= 1;
+        } else {
+            break;
+        }
+    }
+    "anonymous".to_string()
+}
+
+/// The token range a guard obtained at `j` stays live over: for
+/// `let`-bound guards, from the end of the `let` statement to the end of
+/// the enclosing block or an explicit `drop(guard)`; temporary guards
+/// (`m.lock().field = x;`) end within their statement and return `None`
+/// (their range cannot contain a resolved call boundary worth walking —
+/// chained calls on the guard itself are covered by the caller scan).
+fn held_range(toks: &[Tok], body_start: usize, j: usize, hi: usize) -> Option<(usize, usize)> {
+    // statement start: nearest `;` / `{` / `}` walking back
+    let mut k = j;
+    while k > body_start
+        && !(toks[k - 1].is_punct(';') || toks[k - 1].is_punct('{') || toks[k - 1].is_punct('}'))
+    {
+        k -= 1;
+    }
+    if !toks[k].is_ident("let") {
+        return None;
+    }
+    let mut name_at = k + 1;
+    if toks.get(name_at).is_some_and(|t| t.is_ident("mut")) {
+        name_at += 1;
+    }
+    let guard = toks.get(name_at).filter(|t| t.kind == TokKind::Ident)?;
+    let guard_name = guard.text.clone();
+    // end of the let statement
+    let mut m = j;
+    while m <= hi && !toks[m].is_punct(';') {
+        m += 1;
+    }
+    let start = m + 1;
+    let mut depth = 0i32;
+    let mut mm = start;
+    while mm <= hi {
+        let u = &toks[mm];
+        if u.is_punct('{') {
+            depth += 1;
+        } else if u.is_punct('}') {
+            depth -= 1;
+            if depth < 0 {
+                break;
+            }
+        } else if u.is_ident("drop")
+            && toks.get(mm + 1).is_some_and(|nx| nx.is_punct('('))
+            && toks.get(mm + 2).is_some_and(|nx| nx.is_ident(&guard_name))
+        {
+            break;
+        }
+        mm += 1;
+    }
+    (start < mm).then_some((start, mm.saturating_sub(1)))
+}
+
+/// Human-readable witness for a may-block verdict: the chain from `v`
+/// down to the function containing the blocking call.
+fn block_chain(
+    files: &[ParsedFile],
+    graph: &Graph,
+    via: &[Option<NodeId>],
+    v: NodeId,
+) -> String {
+    let mut names = vec![graph.qual(files, v).to_string()];
+    let mut cur = v;
+    while let Some(nx) = via[cur] {
+        names.push(graph.qual(files, nx).to_string());
+        cur = nx;
+        if names.len() > via.len() {
+            break;
+        }
+    }
+    names.join(" -> ")
+}

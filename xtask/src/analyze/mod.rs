@@ -1,0 +1,204 @@
+//! `cargo xtask analyze` — stage 2 of the static-analysis wall.
+//!
+//! Stage 1 (`cargo xtask lint`) is syntactic and file-scoped: each rule
+//! looks at one file at a time, guided by path lists in `lint.toml`.
+//! Stage 2 is *graph*-scoped: it builds the whole-workspace call graph
+//! (`callgraph.rs`) and runs four passes whose findings depend on what a
+//! function can reach, not on which file it lives in:
+//!
+//! - [`panic_cone`] — panic-freedom of everything transitively reachable
+//!   from the serving entry points (replaces the old three-file list);
+//! - [`lock_order`] — the may-hold-while-acquiring graph over lock
+//!   classes: cycles (deadlock) and guards held across possibly-blocking
+//!   callees, interprocedurally;
+//! - [`det_taint`] — nondeterminism sources (clock reads, unordered
+//!   containers, float reductions) propagated up the call graph, denied
+//!   at artifact/bench/packing sinks;
+//! - [`unsafe_bounds`] — every `unsafe` and unchecked-access site must
+//!   carry a `// fmq-analyze: safety -- <proof>` annotation.
+//!
+//! Suppression: `// fmq-analyze: allow(rule) -- why` on the finding's
+//! line or the line above. The justification after `--` is mandatory —
+//! a bare `allow` is itself reported. Configuration lives in
+//! `analyze.toml`; rationale and the full grammar in
+//! docs/STATIC_ANALYSIS.md.
+
+pub mod det_taint;
+pub mod lock_order;
+pub mod panic_cone;
+pub mod unsafe_bounds;
+
+use anyhow::{bail, Context, Result};
+
+use crate::callgraph::Graph;
+use crate::config::{parse_value, strip_comment};
+use crate::diag::{self, Diag};
+use crate::parse::ParsedFile;
+
+/// Parsed `analyze.toml`. Field groups mirror the file's sections.
+#[derive(Debug, Clone, Default)]
+pub struct AnalyzeConfig {
+    /// Directories (repo-relative) whose `.rs` files are analyzed.
+    pub scan_roots: Vec<String>,
+
+    /// panic_cone: entry-point patterns (`worker_loop`, `Batcher::*`,
+    /// `EngineStep::run*`) whose transitive cone is panic-checked.
+    pub cone_entries: Vec<String>,
+    /// panic_cone: audited kernel fns (patterns) where computed indexing
+    /// is the point — bounds are pinned by shape contracts and the
+    /// bit-exactness tests, so raw `x[i * k + j]` stays allowed there.
+    pub cone_index_audited: Vec<String>,
+
+    /// lock_order: guard-returning method names (`lock`, `workspace`).
+    pub lock_guard_fns: Vec<String>,
+    /// lock_order: blocking call names (`send`, `recv`, `join`, ...).
+    pub lock_blocking: Vec<String>,
+    /// lock_order: classes backed by distinct per-index instances
+    /// (`slot` — `Pool::workspace(idx)` leases), where a self-edge is
+    /// not a deadlock because the indices are disjoint by construction.
+    pub lock_indexed: Vec<String>,
+
+    /// det_taint: qualified nondeterminism sources (`Instant::now`).
+    pub taint_time_paths: Vec<String>,
+    /// det_taint: method-call nondeterminism sources (`elapsed`).
+    pub taint_time_methods: Vec<String>,
+    /// det_taint: path prefixes where float reductions seed taint.
+    pub taint_reduction_scope: Vec<String>,
+    /// det_taint: fns whose reductions are order-independent.
+    pub taint_reduction_allow: Vec<String>,
+    /// det_taint: fn patterns whose *direct* sources are pre-justified
+    /// (write-only observers such as `Span::*`).
+    pub taint_source_allow: Vec<String>,
+    /// det_taint: file prefixes whose direct sources are pre-justified.
+    pub taint_source_allow_paths: Vec<String>,
+    /// det_taint: sink fn patterns (artifact writers, `StepGrid::new`,
+    /// packing) a tainted fn must not be or directly call.
+    pub taint_sinks: Vec<String>,
+
+    /// unsafe_bounds: unchecked-access call names that require a safety
+    /// annotation (`get_unchecked`, `from_raw_parts`, ...).
+    pub unsafe_unchecked: Vec<String>,
+}
+
+impl AnalyzeConfig {
+    /// Parse an `analyze.toml` document. Unknown sections/keys are hard
+    /// errors, mirroring `lint.toml` — a typo must not disable a pass.
+    pub fn parse(src: &str) -> Result<AnalyzeConfig> {
+        let mut cfg = AnalyzeConfig::default();
+        let mut section = String::new();
+        let mut lines = src.lines().enumerate().peekable();
+        while let Some((ln, raw)) = lines.next() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    bail!("analyze.toml:{}: malformed section header", ln + 1);
+                };
+                section = name.trim().to_string();
+                match section.as_str() {
+                    "scan" | "panic_cone" | "lock_order" | "det_taint" | "unsafe_bounds" => {}
+                    other => bail!("analyze.toml:{}: unknown section [{other}]", ln + 1),
+                }
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                bail!("analyze.toml:{}: expected `key = value`", ln + 1);
+            };
+            let key = line[..eq].trim().to_string();
+            let mut value = line[eq + 1..].trim().to_string();
+            if value.starts_with('[') {
+                while !value.contains(']') {
+                    let Some((_, more)) = lines.next() else {
+                        bail!("analyze.toml:{}: unterminated array for `{key}`", ln + 1);
+                    };
+                    value.push(' ');
+                    value.push_str(strip_comment(more).trim());
+                }
+            }
+            let items = parse_value(&value)
+                .with_context(|| format!("analyze.toml:{}: bad value for `{key}`", ln + 1))?;
+            let slot = match (section.as_str(), key.as_str()) {
+                ("scan", "roots") => &mut cfg.scan_roots,
+                ("panic_cone", "entries") => &mut cfg.cone_entries,
+                ("panic_cone", "index_audited") => &mut cfg.cone_index_audited,
+                ("lock_order", "guard_fns") => &mut cfg.lock_guard_fns,
+                ("lock_order", "blocking") => &mut cfg.lock_blocking,
+                ("lock_order", "indexed") => &mut cfg.lock_indexed,
+                ("det_taint", "time") => &mut cfg.taint_time_paths,
+                ("det_taint", "time_methods") => &mut cfg.taint_time_methods,
+                ("det_taint", "reduction_scope") => &mut cfg.taint_reduction_scope,
+                ("det_taint", "reduction_allow") => &mut cfg.taint_reduction_allow,
+                ("det_taint", "source_allow") => &mut cfg.taint_source_allow,
+                ("det_taint", "source_allow_paths") => &mut cfg.taint_source_allow_paths,
+                ("det_taint", "sinks") => &mut cfg.taint_sinks,
+                ("unsafe_bounds", "unchecked") => &mut cfg.unsafe_unchecked,
+                (s, k) => bail!("analyze.toml:{}: unknown key `{k}` in [{s}]", ln + 1),
+            };
+            slot.extend(items);
+        }
+        Ok(cfg)
+    }
+}
+
+/// Does a node's qualified name match any pattern in `pats` (exact
+/// `Type::name`, bare `name`, or `prefix*` wildcard)?
+pub(crate) fn fn_matches(qual: &str, name: &str, pats: &[String]) -> bool {
+    pats.iter().any(|p| {
+        if let Some(prefix) = p.strip_suffix('*') {
+            qual.starts_with(prefix)
+        } else if p.contains("::") {
+            qual == p
+        } else {
+            name == p
+        }
+    })
+}
+
+/// Check a stage-2 suppression at `line`: returns `true` (and pushes no
+/// finding) when a justified `fmq-analyze: allow(rule)` covers it; an
+/// unjustified marker is itself a finding.
+pub(crate) fn suppressed(
+    f: &ParsedFile,
+    rule: &'static str,
+    line: u32,
+    diags: &mut Vec<Diag>,
+) -> bool {
+    match f.lexed.analyze_allowed(rule, line) {
+        Some(true) => true,
+        Some(false) => {
+            diags.push(Diag::new(
+                rule,
+                &f.path,
+                line,
+                format!(
+                    "`fmq-analyze: allow({rule})` without a justification: \
+                     append `-- <why this site is safe>`"
+                ),
+            ));
+            true // the site itself is acknowledged; only the missing why is reported
+        }
+        None => false,
+    }
+}
+
+/// Analyze in-memory sources (`(repo-relative path, content)` pairs).
+/// Pure function of its inputs — the fixture tests drive this directly.
+pub fn analyze_sources(files: &[(String, String)], cfg: &AnalyzeConfig) -> Vec<Diag> {
+    let parsed: Vec<ParsedFile> = files
+        .iter()
+        .map(|(path, src)| crate::parse::parse(path, crate::lexer::lex(src)))
+        .collect();
+    let graph = Graph::build(&parsed);
+    let mut diags = Vec::new();
+    diags.extend(panic_cone::run(&parsed, &graph, cfg));
+    diags.extend(lock_order::run(&parsed, &graph, cfg));
+    diags.extend(det_taint::run(&parsed, &graph, cfg));
+    diags.extend(unsafe_bounds::run(&parsed, cfg));
+    diag::sort(&mut diags);
+    // an unjustified `allow` covering several findings on one line would
+    // otherwise be reported once per finding
+    diags.dedup();
+    diags
+}

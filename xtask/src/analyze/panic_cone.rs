@@ -1,0 +1,342 @@
+//! Pass `panic_cone` — panic-freedom of the serving cone.
+//!
+//! The transitive closure from the `[panic_cone] entries` patterns
+//! (`worker_loop`, `handle_conn`, `Batcher::*`, `EngineStep::run*`, the
+//! sweep's sample loop) is the code a live request can execute. A panic
+//! anywhere in that cone strands every queued client, so inside it the
+//! pass denies:
+//!
+//! - `.unwrap()` / `.expect(...)`;
+//! - `panic!` / `unreachable!` / `todo!` / `unimplemented!` and the
+//!   `assert!`/`assert_eq!`/`assert_ne!` family (`debug_assert*` stays
+//!   allowed — it compiles out of release serving builds);
+//! - slice/array indexing `x[i]` and range slicing `x[a..b]`, unless
+//!   the index is exactly an enclosing `for`-loop induction variable
+//!   (`for i in 0..n { x[i] }` cannot overrun), the index is the full
+//!   range `[..]` (never out of bounds), or the function is listed
+//!   under `[panic_cone] index_audited` (computed-offset kernels whose
+//!   bounds are pinned by shape contracts and bit-exactness tests);
+//! - integer division/modulo by a bare variable, unless the divisor is
+//!   visibly guarded (`.max(1)` on the divisor or on its `let` binding),
+//!   a literal, a `SCREAMING_CASE` named constant, or the division is
+//!   float-typed — a float literal on either side, or a cast to
+//!   `f32`/`f64` (float division cannot panic).
+//!
+//! Suppression: `fmq-analyze: allow(panic_cone) -- why`, or the stage-1
+//! `fmq-lint: allow(panic_safety)` marker (honored so sites audited
+//! under the old file-list rule stay audited, not re-annotated).
+
+use std::collections::BTreeSet;
+
+use crate::analyze::{fn_matches, suppressed, AnalyzeConfig};
+use crate::callgraph::Graph;
+use crate::diag::Diag;
+use crate::lexer::{Tok, TokKind};
+use crate::parse::ParsedFile;
+use crate::rules::calls_in;
+
+const RULE: &str = "panic_cone";
+
+const PANIC_MACROS: &[&str] = &[
+    "panic",
+    "unreachable",
+    "todo",
+    "unimplemented",
+    "assert",
+    "assert_eq",
+    "assert_ne",
+];
+
+pub fn run(files: &[ParsedFile], graph: &Graph, cfg: &AnalyzeConfig) -> Vec<Diag> {
+    let mut roots = Vec::new();
+    for pat in &cfg.cone_entries {
+        roots.extend(graph.matching(files, pat));
+    }
+    let cone = graph.reachable(&roots);
+
+    let mut diags = Vec::new();
+    let mut reported: BTreeSet<(String, u32, String)> = BTreeSet::new();
+    for (&u, _) in &cone {
+        let nref = graph.nodes[u];
+        let f = &files[nref.file];
+        let d = &f.fns[nref.fn_idx];
+        let Some((a, b)) = d.body else { continue };
+        let toks = &f.lexed.toks;
+        let hi = b.min(toks.len().saturating_sub(1));
+        let index_audited = fn_matches(&d.qual, &d.name, &cfg.cone_index_audited);
+        let loop_vars = loop_vars_in(toks, a, hi);
+
+        let mut report = |line: u32, what: String, diags: &mut Vec<Diag>| {
+            if f.lexed.allowed("panic_safety", line) || suppressed(f, RULE, line, diags) {
+                return;
+            }
+            if !reported.insert((f.path.clone(), line, what.clone())) {
+                return;
+            }
+            let chain = graph.chain(files, &cone, u).join(" -> ");
+            diags.push(Diag::new(
+                RULE,
+                &f.path,
+                line,
+                format!("{what} in serving-reachable `{}` (cone: {chain})", d.qual),
+            ));
+        };
+
+        for call in calls_in(toks, (a, b)) {
+            if call.is_macro {
+                if PANIC_MACROS.contains(&call.name.as_str()) {
+                    report(call.line, format!("`{}!`", call.name), &mut diags);
+                }
+            } else if call.is_method && (call.name == "unwrap" || call.name == "expect") {
+                report(call.line, format!("`.{}()`", call.name), &mut diags);
+            }
+        }
+
+        for j in a..=hi {
+            let t = &toks[j];
+            if t.is_punct('[') && !index_audited {
+                // indexing: `[` preceded by an ident, `)` or `]` is an
+                // index expression, not an array literal or type
+                let prev_is_place = j > a
+                    && (toks[j - 1].kind == TokKind::Ident
+                        && !is_keyword(&toks[j - 1].text)
+                        || toks[j - 1].is_punct(')')
+                        || toks[j - 1].is_punct(']'));
+                if prev_is_place
+                    && !index_is_full_range(toks, j, hi)
+                    && !index_is_pinned_loop_var(toks, j, hi, &loop_vars)
+                {
+                    report(t.line, "slice indexing".to_string(), &mut diags);
+                }
+            } else if t.is_punct('/') || t.is_punct('%') {
+                // `a / b` with a bare-variable divisor; skip `/=` lhs
+                let k = if toks.get(j + 1).is_some_and(|n| n.is_punct('=')) {
+                    j + 2
+                } else {
+                    j + 1
+                };
+                if !lhs_is_float(toks, a, j) && divisor_may_be_zero(toks, a, k, hi) {
+                    let op = if t.is_punct('/') { "division" } else { "modulo" };
+                    report(t.line, format!("{op} by unguarded variable"), &mut diags);
+                }
+            }
+        }
+    }
+    diags
+}
+
+fn is_keyword(s: &str) -> bool {
+    matches!(
+        s,
+        "if" | "in" | "as" | "return" | "else" | "match" | "mut" | "ref" | "move" | "break"
+    )
+}
+
+/// Induction variables of every `for` loop in the body: `for i in ...`
+/// and the idents of `for (a, b) in ...` tuple patterns.
+fn loop_vars_in(toks: &[Tok], a: usize, hi: usize) -> BTreeSet<String> {
+    let mut vars = BTreeSet::new();
+    let mut j = a;
+    while j <= hi {
+        if toks[j].is_ident("for") {
+            let mut k = j + 1;
+            while k <= hi && !toks[k].is_ident("in") {
+                if toks[k].kind == TokKind::Ident
+                    && toks[k].text != "mut"
+                    && toks[k].text != "_"
+                    && toks[k].text != "ref"
+                {
+                    vars.insert(toks[k].text.clone());
+                }
+                // a `{` before `in` means this `for` was something else
+                if toks[k].is_punct('{') {
+                    break;
+                }
+                k += 1;
+            }
+            j = k;
+        }
+        j += 1;
+    }
+    vars
+}
+
+/// Is the index expression `toks[open+1 .. matching ]]` exactly one
+/// enclosing-loop induction variable? `for i in 0..n { x[i] }` cannot
+/// overrun by construction.
+fn index_is_pinned_loop_var(
+    toks: &[Tok],
+    open: usize,
+    hi: usize,
+    loop_vars: &BTreeSet<String>,
+) -> bool {
+    let inner = &toks[open + 1..=hi.min(toks.len() - 1)];
+    match inner {
+        [v, close, ..] if close.is_punct(']') => {
+            v.kind == TokKind::Ident && loop_vars.contains(&v.text)
+        }
+        _ => false,
+    }
+}
+
+/// Is the index expression exactly the full range `[..]`? (`..` lexes as
+/// two `.` puncts.) A full-range slice can never be out of bounds.
+fn index_is_full_range(toks: &[Tok], open: usize, hi: usize) -> bool {
+    let lim = hi.min(toks.len() - 1);
+    open + 3 <= lim
+        && toks[open + 1].is_punct('.')
+        && toks[open + 2].is_punct('.')
+        && toks[open + 3].is_punct(']')
+}
+
+/// Is the expression ending just before the `/` at `j` visibly
+/// float-typed? True when the preceding token is a float literal, or a
+/// `)` whose balanced group contains one (`(x * 0.5) / n`). Float
+/// division cannot panic, whatever the divisor.
+fn lhs_is_float(toks: &[Tok], body_start: usize, j: usize) -> bool {
+    if j <= body_start {
+        return false;
+    }
+    let mut p = j - 1;
+    let t = &toks[p];
+    if t.kind == TokKind::Literal && t.text.contains('.') {
+        return true;
+    }
+    if t.is_punct(')') {
+        let mut depth = 0i32;
+        loop {
+            if toks[p].is_punct(')') {
+                depth += 1;
+            } else if toks[p].is_punct('(') {
+                depth -= 1;
+                if depth == 0 {
+                    return false;
+                }
+            } else if toks[p].kind == TokKind::Literal && toks[p].text.contains('.') {
+                return true;
+            }
+            if p == body_start {
+                break;
+            }
+            p -= 1;
+        }
+    }
+    false
+}
+
+/// Can the divisor starting at `k` be zero at runtime? Scans the primary
+/// expression (idents, fields, calls, casts) and clears the site when it
+/// sees a `.max(...)` guard, an all-literal divisor, a float literal
+/// anywhere in the divisor (the division is float-typed and cannot
+/// panic), a `SCREAMING_CASE` named-constant divisor, or a cast to
+/// `f32`/`f64`; otherwise looks for a `.max(` on the divisor's own `let`
+/// binding earlier in the body.
+fn divisor_may_be_zero(toks: &[Tok], body_start: usize, k: usize, hi: usize) -> bool {
+    // a bare SCREAMING_CASE ident (not a path/field/call head) is a
+    // named constant: constants are compile-time values, not runtime
+    // variables that can drift to zero
+    if let Some(t0) = toks.get(k) {
+        if t0.kind == TokKind::Ident
+            && t0.text.len() > 1
+            && t0.text.chars().all(|c| !c.is_lowercase())
+            && t0.text.chars().any(|c| c.is_alphabetic())
+        {
+            let nxt = toks.get(k + 1);
+            let continues = nxt.is_some_and(|n| n.is_punct('.') || n.is_punct(':') || n.is_punct('('));
+            if !continues {
+                return false;
+            }
+        }
+    }
+    let mut j = k;
+    let mut saw_max = false;
+    let mut float_cast = false;
+    let mut all_literal = true;
+    let mut first_ident: Option<&str> = None;
+    let mut after_as = false;
+    while j <= hi {
+        let t = &toks[j];
+        match t.kind {
+            TokKind::Ident => {
+                if t.text == "as" {
+                    after_as = true;
+                } else if after_as {
+                    float_cast = t.text == "f32" || t.text == "f64";
+                    after_as = false;
+                } else {
+                    if t.text == "max" {
+                        saw_max = true;
+                    }
+                    if first_ident.is_none() && t.text != "self" {
+                        first_ident = Some(&t.text);
+                    }
+                    all_literal = false;
+                }
+            }
+            TokKind::Literal => {
+                if t.text.contains('.') {
+                    return false; // float literal: float division, no panic
+                }
+            }
+            TokKind::Punct => match t.text.as_bytes()[0] {
+                b'.' => all_literal = false,
+                b':' => all_literal = false, // path segment
+                b'(' | b'[' => {
+                    // consume the balanced group (args may contain max)
+                    let (open, close) = if t.is_punct('(') { ('(', ')') } else { ('[', ']') };
+                    let mut depth = 0i32;
+                    while j <= hi {
+                        if toks[j].is_punct(open) {
+                            depth += 1;
+                        } else if toks[j].is_punct(close) {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        } else if toks[j].is_ident("max") {
+                            saw_max = true;
+                        } else if toks[j].kind == TokKind::Literal && toks[j].text.contains('.') {
+                            return false; // float literal in the divisor group
+                        } else if toks[j].kind == TokKind::Ident {
+                            if first_ident.is_none() && toks[j].text != "self" {
+                                first_ident = Some(&toks[j].text);
+                            }
+                            all_literal = false;
+                        }
+                        j += 1;
+                    }
+                }
+                _ => break, // `;`, `,`, `)`, an operator: divisor ends
+            },
+            TokKind::Lifetime => break,
+        }
+        j += 1;
+    }
+    if saw_max || float_cast || (all_literal && first_ident.is_none()) {
+        return false;
+    }
+    // `let <divisor> = ...` earlier in the body containing `.max(` is a
+    // guarded binding (`let hint = steps_hint.max(1); span / hint`)
+    if let Some(name) = first_ident {
+        let mut m = body_start;
+        while m + 2 < k {
+            if toks[m].is_ident("let") {
+                let mut p = m + 1;
+                if toks.get(p).is_some_and(|t| t.is_ident("mut")) {
+                    p += 1;
+                }
+                if toks.get(p).is_some_and(|t| t.is_ident(name)) {
+                    let mut q = p + 1;
+                    while q < k && !toks[q].is_punct(';') {
+                        if toks[q].is_ident("max") {
+                            return false;
+                        }
+                        q += 1;
+                    }
+                }
+            }
+            m += 1;
+        }
+    }
+    true
+}

@@ -1,0 +1,77 @@
+//! Pass `unsafe_bounds` — every escape from the borrow checker carries
+//! its proof.
+//!
+//! The workspace is `unsafe`-averse by design (the kernels are safe Rust
+//! with bounds pinned by shape contracts), so the few sites that do
+//! exist must each carry an auditable argument. The pass inventories:
+//!
+//! - every `unsafe` token outside test code (blocks, `unsafe impl`,
+//!   `unsafe fn`);
+//! - every call named in `[unsafe_bounds] unchecked`
+//!   (`get_unchecked`, `from_raw_parts`, `transmute`, `assume_init`,
+//!   ...) — these are the bounds/validity escapes that stay dangerous
+//!   even inside an already-annotated `unsafe` block;
+//!
+//! and requires a `// fmq-analyze: safety -- <proof>` annotation on the
+//! same line or the line above. A marker without proof text is itself a
+//! finding — the annotation *is* the audit trail.
+
+use std::collections::BTreeSet;
+
+use crate::analyze::AnalyzeConfig;
+use crate::diag::Diag;
+use crate::lexer::TokKind;
+use crate::parse::ParsedFile;
+
+const RULE: &str = "unsafe_bounds";
+
+pub fn run(files: &[ParsedFile], cfg: &AnalyzeConfig) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    let mut reported: BTreeSet<(String, u32)> = BTreeSet::new();
+    for f in files {
+        let toks = &f.lexed.toks;
+        for (j, t) in toks.iter().enumerate() {
+            if t.kind != TokKind::Ident || f.in_test_code(j) {
+                continue;
+            }
+            let site = if t.text == "unsafe" {
+                Some("`unsafe`".to_string())
+            } else if cfg.unsafe_unchecked.iter().any(|u| *u == t.text)
+                && toks.get(j + 1).is_some_and(|nx| {
+                    nx.is_punct('(')
+                        || (nx.is_punct(':') && toks.get(j + 2).is_some_and(|c| c.is_punct(':')))
+                })
+            {
+                Some(format!("`{}`", t.text))
+            } else {
+                None
+            };
+            let Some(what) = site else { continue };
+            if !reported.insert((f.path.clone(), t.line)) {
+                continue;
+            }
+            match f.lexed.safety_at(t.line) {
+                Some(true) => {}
+                Some(false) => diags.push(Diag::new(
+                    RULE,
+                    &f.path,
+                    t.line,
+                    format!(
+                        "{what} has a `fmq-analyze: safety` annotation without proof \
+                         text: append `-- <why this cannot violate memory safety>`"
+                    ),
+                )),
+                None => diags.push(Diag::new(
+                    RULE,
+                    &f.path,
+                    t.line,
+                    format!(
+                        "{what} without a safety annotation: add \
+                         `// fmq-analyze: safety -- <proof>` on this line or the line above"
+                    ),
+                )),
+            }
+        }
+    }
+    diags
+}

@@ -1,0 +1,501 @@
+//! Whole-workspace call graph over the parsed `fn` items.
+//!
+//! `cargo xtask analyze` reasons about *reachability* — which code a
+//! serving entry point can transitively execute, which locks a callee may
+//! acquire, where a nondeterministic value can flow. This module builds
+//! the graph those passes share: every non-test `fn` item in the scanned
+//! files becomes a node, and every call site is resolved to the local
+//! definitions it may target.
+//!
+//! Resolution is deliberately an over-approximation (the passes deny, so
+//! missing an edge is worse than adding one):
+//!
+//! - `Type::name(...)` resolves to every def with that qualified name
+//!   (`Self::name` is rewritten against the enclosing `impl` first);
+//! - `.name(...)` method calls resolve to every *method* def with that
+//!   bare name, unless the receiver is literally `self` and the enclosing
+//!   impl defines `Type::name` — then the receiver pins the target;
+//! - `mod::name(...)` / `crate::x::name(...)` module-qualified calls
+//!   (lowercase path head) fall back to every free fn named `name` —
+//!   we do not track the module tree, only who might be meant;
+//! - `name(...)` plain calls resolve to every free fn with that name;
+//! - anything that resolves to no local def is external (std) and adds
+//!   no edge.
+//!
+//! All resolution is *crate-scoped*: a call inside `rust/` never edges
+//! into `xtask/` or `fmq-macros/` (and vice versa) — the crates are not
+//! linked together, so a same-named fn in another crate is a different
+//! function, and keeping the edge would drag e.g. the analyzer's own
+//! helpers into the serving panic cone.
+//!
+//! Trait objects fall out naturally: `engine.velocity_into(...)` edges to
+//! every local `velocity_into` method, which is exactly the dynamic
+//! dispatch set the passes must assume.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use crate::lexer::TokKind;
+use crate::parse::ParsedFile;
+use crate::rules::{calls_in, Call};
+
+/// Node id: index into [`Graph::nodes`].
+pub type NodeId = usize;
+
+/// Crate key of a scanned path: the first path segment (`rust`, `xtask`,
+/// `fmq-macros`). Resolution never crosses crate keys. A bare filename
+/// (no separator — unit-test inputs) keys to `""` so single-crate test
+/// graphs resolve freely.
+fn crate_key(path: &str) -> &str {
+    match path.split_once('/') {
+        Some((head, _)) => head,
+        None => "",
+    }
+}
+
+/// One graph node: `(file index, fn index)` into the parsed file list.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DefRef {
+    pub file: usize,
+    pub fn_idx: usize,
+}
+
+/// The resolved call graph.
+pub struct Graph {
+    pub nodes: Vec<DefRef>,
+    /// Forward edges, deduplicated: callees[u] = nodes u may call.
+    pub callees: Vec<Vec<NodeId>>,
+    by_qual: BTreeMap<String, Vec<NodeId>>,
+    by_name: BTreeMap<String, Vec<NodeId>>,
+    /// Defs with an owning type (qual != name), by bare name.
+    methods_by_name: BTreeMap<String, Vec<NodeId>>,
+}
+
+impl Graph {
+    /// Build the graph over every non-test fn item in `files`.
+    pub fn build(files: &[ParsedFile]) -> Graph {
+        let mut nodes = Vec::new();
+        let mut by_name: BTreeMap<String, Vec<NodeId>> = BTreeMap::new();
+        let mut by_qual: BTreeMap<String, Vec<NodeId>> = BTreeMap::new();
+        let mut methods_by_name: BTreeMap<String, Vec<NodeId>> = BTreeMap::new();
+        for (fi, f) in files.iter().enumerate() {
+            for (di, d) in f.fns.iter().enumerate() {
+                if d.is_test {
+                    continue;
+                }
+                let id = nodes.len();
+                nodes.push(DefRef { file: fi, fn_idx: di });
+                by_qual.entry(d.qual.clone()).or_default().push(id);
+                if d.qual == d.name {
+                    by_name.entry(d.name.clone()).or_default().push(id);
+                } else {
+                    methods_by_name.entry(d.name.clone()).or_default().push(id);
+                }
+            }
+        }
+
+        let mut g = Graph {
+            nodes,
+            callees: Vec::new(),
+            by_qual,
+            by_name,
+            methods_by_name,
+        };
+        let mut callees: Vec<Vec<NodeId>> = vec![Vec::new(); g.nodes.len()];
+        for (u, c) in callees.iter_mut().enumerate() {
+            let nref = g.nodes[u];
+            let f = &files[nref.file];
+            let Some(body) = f.fns[nref.fn_idx].body else { continue };
+            let mut out: BTreeSet<NodeId> = BTreeSet::new();
+            for call in calls_in(&f.lexed.toks, body) {
+                out.extend(g.resolve(files, u, &call));
+            }
+            out.remove(&u); // direct recursion adds nothing to reachability
+            *c = out.into_iter().collect();
+        }
+        g.callees = callees;
+        g
+    }
+
+    /// Keep only candidates from the caller's crate (see module docs).
+    fn same_crate(&self, files: &[ParsedFile], caller: NodeId, cands: Vec<NodeId>) -> Vec<NodeId> {
+        let ck = crate_key(&files[self.nodes[caller].file].path);
+        cands
+            .into_iter()
+            .filter(|&v| crate_key(&files[self.nodes[v].file].path) == ck)
+            .collect()
+    }
+
+    /// Resolve one call site inside node `caller` to the local defs it
+    /// may target (empty = external).
+    pub fn resolve(&self, files: &[ParsedFile], caller: NodeId, call: &Call) -> Vec<NodeId> {
+        if call.is_macro {
+            return Vec::new();
+        }
+        let nref = self.nodes[caller];
+        let f = &files[nref.file];
+        let d = &f.fns[nref.fn_idx];
+        // the enclosing type, for `Self::` and `self.` resolution
+        let owner = d.qual.strip_suffix(&format!("::{}", d.name)).unwrap_or("");
+        if let Some(q) = &call.qual {
+            let q = match q.strip_prefix("Self::") {
+                Some(rest) if !owner.is_empty() => format!("{owner}::{rest}"),
+                _ => q.clone(),
+            };
+            let mut cands = self.by_qual.get(&q).cloned().unwrap_or_default();
+            if cands.is_empty() {
+                // module-qualified free-fn call (`blocked::plan_stripe`,
+                // `crate::io::save`): the path head is a module, not a
+                // type, so match the bare fn name instead. Heads that
+                // start lowercase (or `_`) are modules by Rust naming
+                // convention; `Type::name` paths never take this branch.
+                let head = q.split("::").next().unwrap_or("");
+                if head
+                    .chars()
+                    .next()
+                    .is_some_and(|c| c.is_lowercase() || c == '_')
+                {
+                    cands = self.by_name.get(call.name.as_str()).cloned().unwrap_or_default();
+                }
+            }
+            return self.same_crate(files, caller, cands);
+        }
+        if call.is_method {
+            // receiver heuristic: `self.name(...)` inside `impl Owner`
+            // pins `Owner::name` when it exists
+            let toks = &f.lexed.toks;
+            let recv_is_self = call.at >= 2
+                && toks[call.at - 2].kind == TokKind::Ident
+                && toks[call.at - 2].text == "self";
+            if recv_is_self && !owner.is_empty() {
+                if let Some(ts) = self.by_qual.get(&format!("{owner}::{}", call.name)) {
+                    let ts = self.same_crate(files, caller, ts.clone());
+                    if !ts.is_empty() {
+                        return ts;
+                    }
+                }
+            }
+            let cands = self
+                .methods_by_name
+                .get(call.name.as_str())
+                .cloned()
+                .unwrap_or_default();
+            return self.same_crate(files, caller, cands);
+        }
+        let cands = self
+            .by_name
+            .get(call.name.as_str())
+            .cloned()
+            .unwrap_or_default();
+        self.same_crate(files, caller, cands)
+    }
+
+    /// Nodes matching an entry/sink/audit pattern: `name` (free fn or any
+    /// def with that bare name), `Type::name` (exact), or a `prefix*`
+    /// wildcard over qualified names (`Batcher::*`, `EngineStep::run*`).
+    pub fn matching(&self, files: &[ParsedFile], pattern: &str) -> Vec<NodeId> {
+        if let Some(prefix) = pattern.strip_suffix('*') {
+            return self
+                .by_qual
+                .iter()
+                .filter(|(q, _)| q.starts_with(prefix))
+                .flat_map(|(_, ids)| ids.iter().copied())
+                .collect();
+        }
+        if pattern.contains("::") {
+            return self.by_qual.get(pattern).cloned().unwrap_or_default();
+        }
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|&(_, n)| files[n.file].fns[n.fn_idx].name == pattern)
+            .map(|(id, _)| id)
+            .collect()
+    }
+
+    /// Cycle-safe transitive closure from `roots`. Returns, for every
+    /// reachable node, the node it was first reached from (`None` for the
+    /// roots themselves) — enough to reconstruct a witness chain.
+    pub fn reachable(&self, roots: &[NodeId]) -> BTreeMap<NodeId, Option<NodeId>> {
+        let mut seen: BTreeMap<NodeId, Option<NodeId>> = BTreeMap::new();
+        let mut queue: VecDeque<NodeId> = VecDeque::new();
+        for &r in roots {
+            if !seen.contains_key(&r) {
+                seen.insert(r, None);
+                queue.push_back(r);
+            }
+        }
+        while let Some(u) = queue.pop_front() {
+            for &v in &self.callees[u] {
+                if let std::collections::btree_map::Entry::Vacant(e) = seen.entry(v) {
+                    e.insert(Some(u));
+                    queue.push_back(v);
+                }
+            }
+        }
+        seen
+    }
+
+    /// Witness chain of qualified names from a root down to `node`, given
+    /// the parent map from [`Graph::reachable`].
+    pub fn chain(
+        &self,
+        files: &[ParsedFile],
+        parents: &BTreeMap<NodeId, Option<NodeId>>,
+        node: NodeId,
+    ) -> Vec<String> {
+        let mut rev = Vec::new();
+        let mut cur = Some(node);
+        while let Some(u) = cur {
+            rev.push(self.qual(files, u).to_string());
+            cur = parents.get(&u).copied().flatten();
+            if rev.len() > self.nodes.len() {
+                break; // defensive: parent maps from `reachable` are acyclic
+            }
+        }
+        rev.reverse();
+        rev
+    }
+
+    /// Qualified name of a node.
+    pub fn qual<'a>(&self, files: &'a [ParsedFile], id: NodeId) -> &'a str {
+        let n = self.nodes[id];
+        &files[n.file].fns[n.fn_idx].qual
+    }
+
+    /// Fixpoint propagation of a boolean property from callees to
+    /// callers: `out[u]` starts as `seed[u]` and becomes true when any
+    /// callee is true. Cycle-safe (monotone fixpoint, at most |V| rounds).
+    pub fn propagate_up(&self, seed: &[bool]) -> Vec<bool> {
+        let mut out = seed.to_vec();
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for u in 0..self.nodes.len() {
+                if out[u] {
+                    continue;
+                }
+                if self.callees[u].iter().any(|&v| out[v]) {
+                    out[u] = true;
+                    changed = true;
+                }
+            }
+        }
+        out
+    }
+
+    /// For each node, the callee that first made `propagate_up` true for
+    /// it (`None` for seeds and untouched nodes) — the witness edge for
+    /// taint/blocking chains.
+    pub fn propagate_up_witness(&self, seed: &[bool]) -> (Vec<bool>, Vec<Option<NodeId>>) {
+        let mut out = seed.to_vec();
+        let mut via: Vec<Option<NodeId>> = vec![None; self.nodes.len()];
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for u in 0..self.nodes.len() {
+                if out[u] {
+                    continue;
+                }
+                if let Some(&v) = self.callees[u].iter().find(|&&v| out[v]) {
+                    out[u] = true;
+                    via[u] = Some(v);
+                    changed = true;
+                }
+            }
+        }
+        (out, via)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+    use crate::parse::parse;
+
+    fn graph_of(sources: &[(&str, &str)]) -> (Vec<ParsedFile>, Graph) {
+        let files: Vec<ParsedFile> = sources
+            .iter()
+            .map(|(p, s)| parse(p, lex(s)))
+            .collect();
+        let g = Graph::build(&files);
+        (files, g)
+    }
+
+    fn reach_quals(files: &[ParsedFile], g: &Graph, entry: &str) -> Vec<String> {
+        let roots = g.matching(files, entry);
+        g.reachable(&roots)
+            .keys()
+            .map(|&id| g.qual(files, id).to_string())
+            .collect()
+    }
+
+    #[test]
+    fn trait_method_disambiguation() {
+        // `self.step()` inside `impl Euler` must pin `Euler::step`, not
+        // pull in `Heun::step`; an unpinned `obj.step()` must take both.
+        let src = r#"
+            impl Euler { fn step(&self) { bad_euler() } fn run(&self) { self.step() } }
+            impl Heun { fn step(&self) { bad_heun() } }
+            fn drive(s: &dyn Solver) { s.step() }
+            fn bad_euler() {}
+            fn bad_heun() {}
+        "#;
+        let (files, g) = graph_of(&[("a.rs", src)]);
+        let from_run = reach_quals(&files, &g, "Euler::run");
+        assert!(from_run.contains(&"Euler::step".to_string()));
+        assert!(from_run.contains(&"bad_euler".to_string()));
+        assert!(
+            !from_run.contains(&"Heun::step".to_string()),
+            "self-receiver must pin the enclosing impl: {from_run:?}"
+        );
+        let from_drive = reach_quals(&files, &g, "drive");
+        assert!(from_drive.contains(&"Euler::step".to_string()));
+        assert!(from_drive.contains(&"Heun::step".to_string()));
+    }
+
+    #[test]
+    fn cross_module_and_cross_file_resolution() {
+        // plain calls and `Type::name` paths resolve across files; a
+        // qualified call that resolves nowhere locally adds no edge
+        let a = r#"
+            pub fn entry() { helper(); Codec::pack(1); Vec::with_capacity(4); }
+        "#;
+        let b = r#"
+            pub mod inner {
+                pub fn helper() { leaf() }
+                pub fn leaf() {}
+            }
+            impl Codec { pub fn pack(x: u32) {} }
+        "#;
+        let (files, g) = graph_of(&[("a.rs", a), ("b.rs", b)]);
+        let r = reach_quals(&files, &g, "entry");
+        assert!(r.contains(&"helper".to_string()));
+        assert!(r.contains(&"leaf".to_string()));
+        assert!(r.contains(&"Codec::pack".to_string()));
+        assert_eq!(r.len(), 4, "external Vec::with_capacity must not resolve: {r:?}");
+    }
+
+    #[test]
+    fn self_qualified_calls_resolve_against_enclosing_impl() {
+        let src = r#"
+            impl Grid { fn new() { Self::fill() } fn fill() { sink() } }
+            fn sink() {}
+        "#;
+        let (files, g) = graph_of(&[("a.rs", src)]);
+        let r = reach_quals(&files, &g, "Grid::new");
+        assert!(r.contains(&"Grid::fill".to_string()));
+        assert!(r.contains(&"sink".to_string()));
+    }
+
+    #[test]
+    fn recursion_and_cycles_terminate() {
+        // direct recursion, mutual recursion, and a 3-cycle: reachability
+        // and upward propagation must terminate and still be complete
+        let src = r#"
+            fn entry() { ping() }
+            fn ping() { pong(); ping() }
+            fn pong() { ping(); tri_a() }
+            fn tri_a() { tri_b() }
+            fn tri_b() { tri_c() }
+            fn tri_c() { tri_a(); deep() }
+            fn deep() {}
+        "#;
+        let (files, g) = graph_of(&[("a.rs", src)]);
+        let r = reach_quals(&files, &g, "entry");
+        for f in ["ping", "pong", "tri_a", "tri_b", "tri_c", "deep"] {
+            assert!(r.contains(&f.to_string()), "missing {f}: {r:?}");
+        }
+        // propagate deep's seed back up through the cycles
+        let mut seed = vec![false; g.nodes.len()];
+        let deep = g.matching(&files, "deep");
+        seed[deep[0]] = true;
+        let up = g.propagate_up(&seed);
+        let entry = g.matching(&files, "entry");
+        assert!(up[entry[0]], "seed must propagate through cycles to the entry");
+    }
+
+    #[test]
+    fn wildcard_and_prefix_entry_patterns() {
+        let src = r#"
+            impl Batcher { fn submit(&self) {} fn next_batch(&self) {} }
+            impl EngineStep { fn run(&self) {} fn run_solver(&self) {} fn other(&self) {} }
+        "#;
+        let (files, g) = graph_of(&[("a.rs", src)]);
+        assert_eq!(g.matching(&files, "Batcher::*").len(), 2);
+        assert_eq!(g.matching(&files, "EngineStep::run*").len(), 2);
+        assert_eq!(g.matching(&files, "EngineStep::run").len(), 1);
+    }
+
+    #[test]
+    fn test_code_is_outside_the_graph() {
+        let src = r#"
+            fn entry() { helper() }
+            fn helper() {}
+            #[cfg(test)]
+            mod tests {
+                fn entry() { panic!("test-only twin") }
+            }
+        "#;
+        let (files, g) = graph_of(&[("a.rs", src)]);
+        assert_eq!(g.matching(&files, "entry").len(), 1);
+    }
+
+    #[test]
+    fn module_qualified_calls_fall_back_to_bare_fn_name() {
+        // `blocked::plan_stripe(...)`-style calls: the path head is a
+        // module (lowercase), so the bare fn name resolves; `Codec::pack`
+        // (uppercase head = a type) must NOT fall back to a free fn twin.
+        let src = r#"
+            pub fn entry() { blocked::plan_stripe(); crate::io::save(); Codec::pack(); }
+            pub fn plan_stripe() { leaf() }
+            pub fn save() {}
+            pub fn pack() {}
+            pub fn leaf() {}
+        "#;
+        let (files, g) = graph_of(&[("a.rs", src)]);
+        let r = reach_quals(&files, &g, "entry");
+        assert!(r.contains(&"plan_stripe".to_string()), "{r:?}");
+        assert!(r.contains(&"save".to_string()), "crate:: paths: {r:?}");
+        assert!(r.contains(&"leaf".to_string()), "transitive: {r:?}");
+        assert!(
+            !r.contains(&"pack".to_string()),
+            "Type::name must stay exact, no bare-name fallback: {r:?}"
+        );
+    }
+
+    #[test]
+    fn resolution_never_crosses_crates() {
+        // same fn names in two crates: edges stay within the caller's
+        // first path segment, so the xtask twin is unreachable
+        let a = r#"
+            pub fn entry() { helper(); t.shared_method(); }
+            pub fn helper() {}
+            impl Real { fn shared_method(&self) { real_leaf() } }
+            pub fn real_leaf() {}
+        "#;
+        let b = r#"
+            pub fn helper() { other_leaf() }
+            impl Fake { fn shared_method(&self) { other_leaf() } }
+            pub fn other_leaf() {}
+        "#;
+        let (files, g) = graph_of(&[("rust/src/a.rs", a), ("xtask/src/b.rs", b)]);
+        let r = reach_quals(&files, &g, "entry");
+        assert!(r.contains(&"Real::shared_method".to_string()), "{r:?}");
+        assert!(r.contains(&"real_leaf".to_string()), "{r:?}");
+        assert!(
+            !r.contains(&"other_leaf".to_string()) && !r.contains(&"Fake::shared_method".to_string()),
+            "cross-crate twins must not edge: {r:?}"
+        );
+    }
+
+    #[test]
+    fn chains_reconstruct_a_root_to_node_witness() {
+        let src = "fn a() { b() } fn b() { c() } fn c() {}";
+        let (files, g) = graph_of(&[("a.rs", src)]);
+        let roots = g.matching(&files, "a");
+        let parents = g.reachable(&roots);
+        let c = g.matching(&files, "c")[0];
+        assert_eq!(g.chain(&files, &parents, c), vec!["a", "b", "c"]);
+    }
+}

@@ -123,7 +123,7 @@ impl Config {
 }
 
 /// Drop a `#` comment, respecting `"` quoting.
-fn strip_comment(line: &str) -> &str {
+pub(crate) fn strip_comment(line: &str) -> &str {
     let mut in_str = false;
     for (i, c) in line.char_indices() {
         match c {
@@ -136,7 +136,7 @@ fn strip_comment(line: &str) -> &str {
 }
 
 /// Parse `"x"` or `["a", "b", ...]` into a list of strings.
-fn parse_value(v: &str) -> Result<Vec<String>> {
+pub(crate) fn parse_value(v: &str) -> Result<Vec<String>> {
     let v = v.trim();
     if let Some(body) = v.strip_prefix('[') {
         let Some(body) = body.strip_suffix(']') else {

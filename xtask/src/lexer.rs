@@ -44,12 +44,18 @@ impl Tok {
     }
 }
 
-/// Lexed file: tokens plus inline `fmq-lint: allow(...)` markers
-/// (`(line, rule)` pairs).
+/// Lexed file: tokens plus the inline markers the two analysis stages
+/// honor — `fmq-lint: allow(...)` (stage 1), `fmq-analyze: allow(...) --
+/// why` (stage 2, justification required) and `fmq-analyze: safety --
+/// proof` (unsafe/bounds audit annotations).
 #[derive(Debug, Default)]
 pub struct Lexed {
     pub toks: Vec<Tok>,
     pub allows: Vec<(u32, String)>,
+    /// `(line, rule, has_justification)` for `fmq-analyze: allow(...)`.
+    pub analyze_allows: Vec<(u32, String, bool)>,
+    /// `(line, has_proof)` for `fmq-analyze: safety -- <proof>`.
+    pub safety_marks: Vec<(u32, bool)>,
 }
 
 impl Lexed {
@@ -59,6 +65,25 @@ impl Lexed {
         self.allows
             .iter()
             .any(|(l, r)| r == rule && (*l == line || *l + 1 == line))
+    }
+
+    /// Stage-2 suppression state for `rule` at `line` (same line or the
+    /// line above): `None` = no marker, `Some(has_why)` = marker present,
+    /// with or without the required `-- why` justification.
+    pub fn analyze_allowed(&self, rule: &str, line: u32) -> Option<bool> {
+        self.analyze_allows
+            .iter()
+            .find(|(l, r, _)| r == rule && (*l == line || *l + 1 == line))
+            .map(|&(_, _, why)| why)
+    }
+
+    /// Safety-annotation state at `line` (same line or the line above):
+    /// `None` = unannotated, `Some(has_proof)` otherwise.
+    pub fn safety_at(&self, line: u32) -> Option<bool> {
+        self.safety_marks
+            .iter()
+            .find(|(l, _)| *l == line || *l + 1 == line)
+            .map(|&(_, proof)| proof)
     }
 }
 
@@ -83,6 +108,42 @@ fn scan_allow_marker(comment: &str, line: u32, out: &mut Vec<(u32, String)>) {
     }
 }
 
+/// Extract `fmq-analyze:` markers (`allow(a, b) -- why` or
+/// `safety -- proof`) from a comment body.
+fn scan_analyze_marker(
+    comment: &str,
+    line: u32,
+    allows: &mut Vec<(u32, String, bool)>,
+    safety: &mut Vec<(u32, bool)>,
+) {
+    let Some(at) = comment.find("fmq-analyze:") else {
+        return;
+    };
+    let rest = comment[at + "fmq-analyze:".len()..].trim_start();
+    if let Some(body) = rest.strip_prefix("allow(") {
+        let Some(end) = body.find(')') else {
+            return;
+        };
+        // `-- justification` must follow the close paren and be nonempty
+        let tail = body[end + 1..].trim_start();
+        let has_why = tail
+            .strip_prefix("--")
+            .is_some_and(|why| !why.trim().is_empty());
+        for rule in body[..end].split(',') {
+            let rule = rule.trim();
+            if !rule.is_empty() {
+                allows.push((line, rule.to_string(), has_why));
+            }
+        }
+    } else if let Some(tail) = rest.strip_prefix("safety") {
+        let has_proof = tail
+            .trim_start()
+            .strip_prefix("--")
+            .is_some_and(|p| !p.trim().is_empty());
+        safety.push((line, has_proof));
+    }
+}
+
 /// Tokenize `src`. Never fails: unterminated constructs just consume to
 /// end-of-file (the lint is best-effort on malformed input; `cargo build`
 /// is the authority on syntax).
@@ -90,6 +151,8 @@ pub fn lex(src: &str) -> Lexed {
     let b: Vec<char> = src.chars().collect();
     let mut toks = Vec::new();
     let mut allows = Vec::new();
+    let mut analyze_allows = Vec::new();
+    let mut safety_marks = Vec::new();
     let mut i = 0usize;
     let mut line: u32 = 1;
     let n = b.len();
@@ -113,6 +176,7 @@ pub fn lex(src: &str) -> Lexed {
                 }
                 let body: String = b[start..j].iter().collect();
                 scan_allow_marker(&body, line, &mut allows);
+                scan_analyze_marker(&body, line, &mut analyze_allows, &mut safety_marks);
                 i = j;
             }
             '/' if i + 1 < n && b[i + 1] == '*' => {
@@ -140,7 +204,14 @@ pub fn lex(src: &str) -> Lexed {
                 let mut j = i + 1;
                 while j < n {
                     match b[j] {
-                        '\\' => j += 2,
+                        // an escaped newline (line-continuation in a
+                        // multi-line string) still ends a source line
+                        '\\' => {
+                            if j + 1 < n && b[j + 1] == '\n' {
+                                line += 1;
+                            }
+                            j += 2;
+                        }
                         '"' => {
                             j += 1;
                             break;
@@ -245,7 +316,12 @@ pub fn lex(src: &str) -> Lexed {
             }
         }
     }
-    Lexed { toks, allows }
+    Lexed {
+        toks,
+        allows,
+        analyze_allows,
+        safety_marks,
+    }
 }
 
 /// Does `b[i..]` start a raw string (`r"`, `r#"`) or byte string (`b"`,
@@ -364,11 +440,57 @@ mod tests {
     }
 
     #[test]
+    fn analyze_markers_require_justification() {
+        let src = "\
+// fmq-analyze: allow(panic_cone) -- bounds pinned by caller contract
+let x = v[0];
+// fmq-analyze: allow(det_taint)
+let t = now();
+";
+        let l = lex(src);
+        assert_eq!(l.analyze_allowed("panic_cone", 2), Some(true));
+        assert_eq!(l.analyze_allowed("panic_cone", 1), Some(true));
+        assert_eq!(l.analyze_allowed("panic_cone", 3), None);
+        // marker without `-- why` is recorded as unjustified
+        assert_eq!(l.analyze_allowed("det_taint", 4), Some(false));
+        assert_eq!(l.analyze_allowed("lock_order", 2), None);
+    }
+
+    #[test]
+    fn safety_annotations_are_recorded_with_proof_state() {
+        let src = "\
+// fmq-analyze: safety -- Arc'd buffers are never mutated after publish
+unsafe impl Send for X {}
+unsafe impl Sync for X {} // fmq-analyze: safety
+";
+        let l = lex(src);
+        assert_eq!(l.safety_at(2), Some(true));
+        // annotation without proof text is present but incomplete
+        assert_eq!(l.safety_at(3), Some(false));
+        assert_eq!(l.safety_at(5), None);
+    }
+
+    #[test]
     fn line_numbers_track_newlines() {
         let src = "a\nb\n  c";
         let l = lex(src);
         let lines: Vec<u32> = l.toks.iter().map(|t| t.line).collect();
         assert_eq!(lines, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn escaped_newlines_in_strings_still_count_lines() {
+        // a `\`-newline continuation inside a string literal ends a
+        // source line like any other newline; skipping it as a plain
+        // two-byte escape shifted every later diagnostic line
+        let src = "let s = \"line one \\\n    continued\";\nafter();";
+        let l = lex(src);
+        let after = l
+            .toks
+            .iter()
+            .find(|t| t.text == "after")
+            .expect("ident survives");
+        assert_eq!(after.line, 3);
     }
 
     #[test]

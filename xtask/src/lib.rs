@@ -1,12 +1,19 @@
 //! `xtask` — repo automation for the fmq workspace.
 //!
-//! The only subcommand today is `cargo xtask lint`: a static-analysis
-//! pass that enforces the repo's *unwritten-by-the-compiler* invariants
-//! (alloc-freedom of the hot path, deterministic ordering on artifact
-//! paths, panic-free request handling, lock hygiene) as structured
-//! `file:line` diagnostics. Rules and their configuration live in
-//! `lint.toml` at the repo root; rationale and annotation how-to in
-//! `docs/STATIC_ANALYSIS.md`.
+//! Two analysis stages run as subcommands:
+//!
+//! - `cargo xtask lint` — stage 1, syntactic and file-scoped: enforces
+//!   the repo's *unwritten-by-the-compiler* invariants (alloc-freedom of
+//!   the hot path, deterministic ordering on artifact paths, panic-free
+//!   request handling, lock hygiene) per file, configured by `lint.toml`.
+//! - `cargo xtask analyze` — stage 2, graph-scoped: builds the
+//!   whole-workspace call graph and checks reachability-dependent
+//!   invariants (panic cone from serving entry points, lock-order
+//!   deadlock cycles, determinism taint to artifact sinks, unsafe/bounds
+//!   audit), configured by `analyze.toml`, with `--sarif` output for CI.
+//!
+//! Both emit structured `file:line` diagnostics; rationale and the
+//! annotation grammar live in `docs/STATIC_ANALYSIS.md`.
 //!
 //! Design constraint: the linter parses Rust with its own token scanner
 //! (`lexer.rs` + `parse.rs`) instead of `syn`, so the workspace keeps a
@@ -16,17 +23,21 @@
 //! `#[cfg(test)]` scoping) and deliberately nothing more; `cargo build`
 //! remains the authority on syntax.
 
+pub mod analyze;
+pub mod callgraph;
 pub mod config;
 pub mod diag;
 pub mod lexer;
 pub mod parse;
 pub mod rules;
+pub mod sarif;
 
 use std::fs;
 use std::path::Path;
 
 use anyhow::{Context, Result};
 
+pub use analyze::{analyze_sources, AnalyzeConfig};
 pub use config::Config;
 pub use diag::Diag;
 

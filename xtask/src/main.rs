@@ -1,4 +1,4 @@
-//! CLI entry point: `cargo xtask lint [--json] [--config <path>]`.
+//! CLI entry point: `cargo xtask <lint|analyze> [...]`.
 //!
 //! Exit codes: 0 clean, 1 findings, 2 usage/configuration error.
 
@@ -6,15 +6,20 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 use anyhow::{bail, Context, Result};
-use xtask::{collect_files, find_root, lint_sources, Config};
+use xtask::{analyze_sources, collect_files, find_root, lint_sources, AnalyzeConfig, Config};
 
 const USAGE: &str = "\
 usage: cargo xtask <command>
 
 commands:
   lint [--json] [--config <path>]
-        run the invariant lint over the workspace (see lint.toml and
-        docs/STATIC_ANALYSIS.md). --json emits one JSON object per line.
+        stage 1: file-scoped invariant lint over the workspace (see
+        lint.toml and docs/STATIC_ANALYSIS.md). --json emits one JSON
+        object per line.
+  analyze [--json] [--sarif <path>] [--config <path>]
+        stage 2: whole-workspace call-graph analysis (panic cone,
+        lock order, determinism taint, unsafe audit; see analyze.toml).
+        --sarif writes a SARIF 2.1.0 report for CI upload.
 ";
 
 fn main() -> ExitCode {
@@ -40,6 +45,7 @@ fn run(args: &[String]) -> Result<bool> {
     };
     match cmd.as_str() {
         "lint" => lint(rest),
+        "analyze" => analyze(rest),
         "--help" | "-h" | "help" => {
             println!("{USAGE}");
             Ok(true)
@@ -91,6 +97,60 @@ fn lint(args: &[String]) -> Result<bool> {
         Ok(true)
     } else {
         eprintln!("xtask lint: {} finding(s)", diags.len());
+        Ok(false)
+    }
+}
+
+fn analyze(args: &[String]) -> Result<bool> {
+    let mut json = false;
+    let mut sarif_path: Option<PathBuf> = None;
+    let mut config_path: Option<PathBuf> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--json" => json = true,
+            "--sarif" => {
+                let p = it.next().context("--sarif needs a path")?;
+                sarif_path = Some(PathBuf::from(p));
+            }
+            "--config" => {
+                let p = it.next().context("--config needs a path")?;
+                config_path = Some(PathBuf::from(p));
+            }
+            other => bail!("unknown argument `{other}`\n\n{USAGE}"),
+        }
+    }
+
+    let cwd = std::env::current_dir().context("getcwd")?;
+    let root = find_root(&cwd)
+        .or_else(|| {
+            let m = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+            m.parent().map(|p| p.to_path_buf())
+        })
+        .context("could not locate repo root (no lint.toml found)")?;
+    let cfg_path = config_path.unwrap_or_else(|| root.join("analyze.toml"));
+    let cfg_src = std::fs::read_to_string(&cfg_path)
+        .with_context(|| format!("reading `{}`", cfg_path.display()))?;
+    let cfg = AnalyzeConfig::parse(&cfg_src)?;
+
+    let files = collect_files(&root, &cfg.scan_roots)?;
+    let diags = analyze_sources(&files, &cfg);
+    if let Some(p) = &sarif_path {
+        std::fs::write(p, xtask::sarif::to_sarif(&diags))
+            .with_context(|| format!("writing `{}`", p.display()))?;
+    }
+    for d in &diags {
+        if json {
+            println!("{}", d.to_json());
+        } else {
+            println!("{d}");
+        }
+    }
+    if diags.is_empty() {
+        eprintln!("xtask analyze: clean ({} files, 4 passes)", files.len());
+        Ok(true)
+    } else {
+        eprintln!("xtask analyze: {} finding(s)", diags.len());
         Ok(false)
     }
 }

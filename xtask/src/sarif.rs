@@ -1,0 +1,115 @@
+//! SARIF 2.1.0 serialization of analyze diagnostics.
+//!
+//! The output is the minimal valid shape GitHub code scanning consumes:
+//! one run, a tool driver declaring the four rules, and one `result` per
+//! diagnostic with a `physicalLocation` (repo-relative URI + start
+//! line). Serialization is hand-rolled like `diag::to_json` — stable key
+//! order, escaped strings, no dependencies.
+
+use crate::diag::Diag;
+
+/// `(id, shortDescription)` for every stage-2 rule, embedded in the
+/// driver so SARIF viewers can label findings without external docs.
+const RULES: &[(&str, &str)] = &[
+    (
+        "panic_cone",
+        "Panic-reachability: unwrap/expect/panic!/indexing/unguarded division \
+         transitively reachable from a serving entry point",
+    ),
+    (
+        "lock_order",
+        "Lock-order: may-hold-while-acquiring cycles and guards held across \
+         possibly-blocking callees",
+    ),
+    (
+        "det_taint",
+        "Determinism taint: clock/unordered-container/float-reduction values \
+         flowing into artifact, packing, or bench-JSON sinks",
+    ),
+    (
+        "unsafe_bounds",
+        "Unsafe/bounds audit: unsafe blocks and unchecked accesses without a \
+         written safety proof",
+    ),
+];
+
+/// Serialize `diags` as a SARIF 2.1.0 document.
+pub fn to_sarif(diags: &[Diag]) -> String {
+    let mut out = String::with_capacity(1024 + diags.len() * 256);
+    out.push_str("{\"$schema\":\"https://json.schemastore.org/sarif-2.1.0.json\",");
+    out.push_str("\"version\":\"2.1.0\",\"runs\":[{\"tool\":{\"driver\":{");
+    out.push_str("\"name\":\"fmq-xtask-analyze\",\"rules\":[");
+    for (i, (id, desc)) in RULES.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"id\":\"{}\",\"shortDescription\":{{\"text\":\"{}\"}}}}",
+            esc(id),
+            esc(desc)
+        ));
+    }
+    out.push_str("]}},\"results\":[");
+    for (i, d) in diags.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"ruleId\":\"{}\",\"level\":\"error\",\"message\":{{\"text\":\"{}\"}},\
+             \"locations\":[{{\"physicalLocation\":{{\"artifactLocation\":\
+             {{\"uri\":\"{}\",\"uriBaseId\":\"SRCROOT\"}},\"region\":\
+             {{\"startLine\":{}}}}}}}]}}",
+            esc(d.rule),
+            esc(&d.msg),
+            esc(&d.file),
+            d.line.max(1)
+        ));
+    }
+    out.push_str("]}]}");
+    out
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sarif_shape_is_valid_and_quotes_are_escaped() {
+        let diags = vec![Diag::new(
+            "panic_cone",
+            "rust/src/a.rs",
+            7,
+            "`.unwrap()` in serving-reachable `f` (cone: \"x\")",
+        )];
+        let s = to_sarif(&diags);
+        assert!(s.contains("\"version\":\"2.1.0\""));
+        assert!(s.contains("\"ruleId\":\"panic_cone\""));
+        assert!(s.contains("\"uri\":\"rust/src/a.rs\""));
+        assert!(s.contains("\"startLine\":7"));
+        assert!(s.contains("\\\"x\\\""), "quotes inside messages must be escaped");
+        // four rules declared even when only one fires
+        assert_eq!(s.matches("\"shortDescription\"").count(), 4);
+    }
+
+    #[test]
+    fn empty_findings_still_produce_a_valid_run() {
+        let s = to_sarif(&[]);
+        assert!(s.contains("\"results\":[]"));
+        assert!(s.ends_with("]}]}"));
+    }
+}

@@ -1,0 +1,177 @@
+//! Stage-2 fixture tests: each known-bad snippet under `tests/fixtures/`
+//! must trip *exactly one* diagnostic of the expected pass, and the
+//! near-miss fixture must trip none. Mirrors `lint_fixtures.rs` — the
+//! fixtures are analyzer inputs, not compiled code.
+
+use xtask::{analyze_sources, AnalyzeConfig, Diag};
+
+fn strs(xs: &[&str]) -> Vec<String> {
+    xs.iter().map(|x| x.to_string()).collect()
+}
+
+/// A self-contained config scoped to the fixture pseudo-paths, mirroring
+/// the shape of the real `analyze.toml`.
+fn fixture_cfg() -> AnalyzeConfig {
+    AnalyzeConfig {
+        scan_roots: strs(&["fix"]),
+        cone_entries: strs(&["serve_entry", "Step::run*"]),
+        cone_index_audited: strs(&["audited_kernel"]),
+        lock_guard_fns: strs(&["lock", "workspace"]),
+        lock_blocking: strs(&["send", "recv", "join"]),
+        lock_indexed: strs(&["slot"]),
+        taint_time_paths: strs(&["Instant::now", "SystemTime::now"]),
+        taint_time_methods: strs(&["elapsed"]),
+        taint_reduction_scope: strs(&["fix/"]),
+        taint_reduction_allow: strs(&["ok_bytes"]),
+        taint_source_allow: strs(&["Span::*"]),
+        taint_source_allow_paths: strs(&["fix/obs/"]),
+        taint_sinks: strs(&["write_report", "StepGrid::new"]),
+        unsafe_unchecked: strs(&["get_unchecked", "from_raw_parts", "transmute", "assume_init"]),
+    }
+}
+
+fn analyze_one(path: &str, src: &str) -> Vec<Diag> {
+    analyze_sources(&[(path.to_string(), src.to_string())], &fixture_cfg())
+}
+
+/// Assert the fixture trips exactly one diagnostic of `rule`, and that
+/// its message mentions `needle`.
+fn expect_one(path: &str, src: &str, rule: &str, needle: &str) -> Diag {
+    let diags = analyze_one(path, src);
+    assert_eq!(
+        diags.len(),
+        1,
+        "{path}: expected exactly one diagnostic, got: {diags:#?}"
+    );
+    let d = diags.into_iter().next().expect("len checked above");
+    assert_eq!(d.rule, rule, "{path}: wrong pass: {d}");
+    assert!(
+        d.msg.contains(needle),
+        "{path}: message should mention `{needle}`: {d}"
+    );
+    d
+}
+
+#[test]
+fn panic_cone_transitive_unwrap() {
+    let d = expect_one(
+        "fix/bad_cone_unwrap.rs",
+        include_str!("fixtures/bad_cone_unwrap.rs"),
+        "panic_cone",
+        "unwrap",
+    );
+    assert!(
+        d.msg.contains("serve_entry") && d.msg.contains("helper") && d.msg.contains("decode"),
+        "message should carry the entry-to-panic witness chain: {d}"
+    );
+    assert_eq!(d.line, 14, "diagnostic should anchor at the unwrap line");
+}
+
+#[test]
+fn lock_order_cycle_through_helpers() {
+    let d = expect_one(
+        "fix/bad_lock_cycle.rs",
+        include_str!("fixtures/bad_lock_cycle.rs"),
+        "lock_order",
+        "cycle",
+    );
+    assert!(
+        d.msg.contains('a') && d.msg.contains('b') && d.msg.contains("deadlock"),
+        "message should name both lock classes: {d}"
+    );
+}
+
+#[test]
+fn det_taint_elapsed_reaches_sink() {
+    let d = expect_one(
+        "fix/bad_taint_fingerprint.rs",
+        include_str!("fixtures/bad_taint_fingerprint.rs"),
+        "det_taint",
+        "write_report",
+    );
+    assert!(
+        d.msg.contains("elapsed"),
+        "message should carry the concrete source witness: {d}"
+    );
+    assert_eq!(d.line, 8, "diagnostic should anchor at the sink call line");
+}
+
+#[test]
+fn unsafe_bounds_unannotated_block() {
+    let d = expect_one(
+        "fix/bad_unsafe_unannotated.rs",
+        include_str!("fixtures/bad_unsafe_unannotated.rs"),
+        "unsafe_bounds",
+        "safety annotation",
+    );
+    assert_eq!(d.line, 10, "diagnostic should anchor at the unsafe line");
+}
+
+#[test]
+fn clean_fixture_with_near_misses_is_clean() {
+    let diags = analyze_one(
+        "fix/good_analyze_clean.rs",
+        include_str!("fixtures/good_analyze_clean.rs"),
+    );
+    assert!(
+        diags.is_empty(),
+        "good_analyze_clean.rs must analyze clean, got: {diags:#?}"
+    );
+}
+
+/// The bad fixtures are single-purpose: no fixture may trip a *second*
+/// pass, or the "exactly one" contract above silently weakens.
+#[test]
+fn bad_fixtures_trip_only_their_own_pass() {
+    let all = [
+        ("fix/bad_cone_unwrap.rs", include_str!("fixtures/bad_cone_unwrap.rs"), "panic_cone"),
+        ("fix/bad_lock_cycle.rs", include_str!("fixtures/bad_lock_cycle.rs"), "lock_order"),
+        (
+            "fix/bad_taint_fingerprint.rs",
+            include_str!("fixtures/bad_taint_fingerprint.rs"),
+            "det_taint",
+        ),
+        (
+            "fix/bad_unsafe_unannotated.rs",
+            include_str!("fixtures/bad_unsafe_unannotated.rs"),
+            "unsafe_bounds",
+        ),
+    ];
+    for (path, src, rule) in all {
+        for d in analyze_one(path, src) {
+            assert_eq!(d.rule, rule, "{path}: unexpected cross-pass finding: {d}");
+        }
+    }
+}
+
+/// Deny-side twins of the near-misses in `good_analyze_clean.rs`: an
+/// unguarded divisor and computed indexing inside the cone still trip.
+#[test]
+fn panic_cone_unguarded_division_and_computed_index() {
+    let div = "pub fn serve_entry(x: usize, d: usize) -> usize {\n    x / d\n}\n";
+    let d = analyze_one("fix/div.rs", div);
+    assert_eq!(d.len(), 1, "got: {d:#?}");
+    assert!(d[0].msg.contains("division by unguarded variable"), "{}", d[0]);
+
+    let idx = "pub fn serve_entry(xs: &[u32], k: usize) -> u32 {\n    xs[k + 1]\n}\n";
+    let d = analyze_one("fix/idx.rs", idx);
+    assert_eq!(d.len(), 1, "got: {d:#?}");
+    assert!(d[0].msg.contains("slice indexing"), "{}", d[0]);
+}
+
+/// An `allow` without the mandatory `-- why` justification is itself a
+/// finding — the suppression grammar is part of the contract.
+#[test]
+fn unjustified_allow_is_reported() {
+    let src = "pub fn serve_entry(xs: &[u32]) -> u32 {\n\
+               \x20   // fmq-analyze: allow(panic_cone)\n\
+               \x20   *xs.first().unwrap()\n\
+               }\n";
+    let diags = analyze_one("fix/unjustified.rs", src);
+    assert_eq!(diags.len(), 1, "got: {diags:#?}");
+    assert!(
+        diags[0].msg.contains("without a justification"),
+        "bare allow must be its own finding: {}",
+        diags[0]
+    );
+}

@@ -1,0 +1,15 @@
+//! Known-bad: `.unwrap()` two frames below a serving entry point. The
+//! entry itself is spotless — the panic hides in a transitive callee,
+//! which is exactly what the file-scoped stage-1 rule could not see.
+
+pub fn serve_entry(xs: &[u32]) -> u32 {
+    helper(xs)
+}
+
+fn helper(xs: &[u32]) -> u32 {
+    decode(xs)
+}
+
+fn decode(xs: &[u32]) -> u32 {
+    *xs.first().unwrap()
+}

@@ -1,0 +1,35 @@
+//! Known-bad: lock-order cycle through helpers. `order_ab` holds `a`
+//! while a callee takes `b`; `order_ba` holds `b` while a callee takes
+//! `a`. Neither function is wrong on its own — the deadlock only exists
+//! in the may-hold-while-acquiring graph across both.
+
+struct Pair {
+    a: std::sync::Mutex<u32>,
+    b: std::sync::Mutex<u32>,
+}
+
+fn order_ab(p: &Pair) {
+    let ga = p.a.lock();
+    take_b(p);
+    drop(ga);
+}
+
+fn take_b(p: &Pair) {
+    let gb = p.b.lock();
+    consume(*gb);
+    drop(gb);
+}
+
+fn order_ba(p: &Pair) {
+    let gb = p.b.lock();
+    take_a(p);
+    drop(gb);
+}
+
+fn take_a(p: &Pair) {
+    let ga = p.a.lock();
+    consume(*ga);
+    drop(ga);
+}
+
+fn consume(_x: u32) {}

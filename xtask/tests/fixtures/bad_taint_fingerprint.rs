@@ -1,0 +1,13 @@
+//! Known-bad: a wall-clock read flowing into an artifact sink. The
+//! `.elapsed()` seeds taint in `fingerprint`, which then hands the value
+//! to the configured sink `write_report` — a byte-stable artifact now
+//! depends on scheduling.
+
+pub fn fingerprint(start: std::time::Instant, out: &mut Vec<u8>) {
+    let wall = start.elapsed();
+    write_report(out, wall.as_nanos() as u64);
+}
+
+fn write_report(out: &mut Vec<u8>, stamp: u64) {
+    out.push((stamp & 0xff) as u8);
+}

@@ -1,0 +1,11 @@
+//! Known-bad: an `unsafe` block with no `fmq-analyze: safety` proof.
+//! The code happens to be guarded, but the audit trail is the point —
+//! an unsound edit here would review exactly like a sound one.
+
+pub fn head_unchecked(xs: &[u32]) -> u32 {
+    if xs.is_empty() {
+        return 0;
+    }
+    let p = xs.as_ptr();
+    unsafe { *p }
+}

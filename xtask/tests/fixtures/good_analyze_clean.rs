@@ -1,0 +1,97 @@
+//! Near-miss fixture for stage 2: every construct here skirts the edge
+//! of an analyze pass and must produce zero findings.
+//!
+//! panic_cone: guarded divisors (`.max(1)` binding, SCREAMING constant,
+//! float-typed division), loop-var and full-range indexing, an audited
+//! kernel, a justified suppression, and `?`-style error handling where
+//! an `.unwrap()` would be tempting.
+//! lock_order: two functions taking `a` then `b` in the *same* order
+//! (edges but no cycle), with blocking deferred until the guard drops.
+//! det_taint: a tainted value that never reaches a sink, an allow-listed
+//! reduction, and an untainted caller of the sink.
+//! unsafe_bounds: an `unsafe` block that carries its proof.
+
+use std::collections::BTreeMap;
+
+const LANES: usize = 4;
+
+pub fn serve_entry(xs: &mut [f32], d: usize) -> f32 {
+    let d = d.max(1);
+    let rows = xs.len() / d;
+    let scale = xs.len() as f32 / 2.0;
+    let frac = 0.5 / scale;
+    let per_lane = rows / LANES;
+    for i in 0..xs.len() {
+        xs[i] = frac;
+    }
+    let all = &xs[..];
+    checked_head(all) + audited_kernel(all, 0, 0, 1) + suppressed_peek(all) + per_lane as f32
+}
+
+fn checked_head(xs: &[f32]) -> f32 {
+    match xs.first() {
+        Some(v) => *v,
+        None => 0.0,
+    }
+}
+
+fn audited_kernel(xs: &[f32], i: usize, j: usize, w: usize) -> f32 {
+    xs[i * w + j]
+}
+
+fn suppressed_peek(xs: &[f32]) -> f32 {
+    // fmq-analyze: allow(panic_cone) -- fixture: a justified suppression must silence the pass
+    xs[0]
+}
+
+struct Locks {
+    a: std::sync::Mutex<u32>,
+    b: std::sync::Mutex<u32>,
+}
+
+fn ordered_one(l: &Locks, tx: &std::sync::mpsc::Sender<u32>) {
+    let ga = l.a.lock();
+    grab_b(l);
+    drop(ga);
+    tx.send(1).ok();
+}
+
+fn ordered_two(l: &Locks) {
+    let ga = l.a.lock();
+    grab_b(l);
+    drop(ga);
+}
+
+fn grab_b(l: &Locks) {
+    let gb = l.b.lock();
+    consume(*gb);
+    drop(gb);
+}
+
+fn consume(_x: u32) {}
+
+fn timed_probe(start: std::time::Instant) -> u64 {
+    start.elapsed().as_nanos() as u64
+}
+
+fn ok_bytes(xs: &[f32]) -> f32 {
+    xs.iter().sum()
+}
+
+fn clean_writer(out: &mut Vec<u8>, tags: &BTreeMap<u32, u8>) {
+    for (&k, &v) in tags {
+        write_report(out, (k as u64) << 8 | v as u64);
+    }
+}
+
+fn write_report(out: &mut Vec<u8>, stamp: u64) {
+    out.push((stamp & 0xff) as u8);
+}
+
+fn head_or_zero(xs: &[u32]) -> u32 {
+    if xs.is_empty() {
+        return 0;
+    }
+    // fmq-analyze: safety -- emptiness is checked above, so `as_ptr` reads in-bounds
+    unsafe { *xs.as_ptr() }
+}

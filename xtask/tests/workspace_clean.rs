@@ -1,15 +1,20 @@
-//! Self-test: the real workspace must lint clean under the real
-//! `lint.toml`. This is the same pass CI runs as `cargo xtask lint`,
-//! executed in-process so `cargo test` alone catches regressions.
+//! Self-test: the real workspace must pass BOTH analysis stages under
+//! their real configs. These are the same passes CI runs as `cargo
+//! xtask lint` and `cargo xtask analyze`, executed in-process so `cargo
+//! test` alone catches regressions.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask sits one level below the repo root")
+        .to_path_buf()
+}
 
 #[test]
 fn workspace_lints_clean() {
-    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
-        .parent()
-        .expect("xtask sits one level below the repo root")
-        .to_path_buf();
+    let root = repo_root();
     let toml = std::fs::read_to_string(root.join("lint.toml")).expect("read lint.toml");
     let cfg = xtask::Config::parse(&toml).expect("parse lint.toml");
     let files = xtask::collect_files(&root, &cfg.scan_roots).expect("collect sources");
@@ -25,4 +30,33 @@ fn workspace_lints_clean() {
         "workspace must lint clean; findings:\n{}",
         listing.join("\n")
     );
+}
+
+#[test]
+fn workspace_analyzes_clean() {
+    let root = repo_root();
+    let toml = std::fs::read_to_string(root.join("analyze.toml")).expect("read analyze.toml");
+    let cfg = xtask::AnalyzeConfig::parse(&toml).expect("parse analyze.toml");
+    assert!(
+        !cfg.cone_entries.is_empty(),
+        "panic_cone without entry points checks nothing"
+    );
+    let files = xtask::collect_files(&root, &cfg.scan_roots).expect("collect sources");
+    assert!(
+        files.len() > 50,
+        "suspiciously few sources ({}) — scan roots broken?",
+        files.len()
+    );
+    let diags = xtask::analyze_sources(&files, &cfg);
+    let listing: Vec<String> = diags.iter().map(|d| d.to_string()).collect();
+    assert!(
+        diags.is_empty(),
+        "workspace must analyze clean (fix the code, or suppress with a \
+         justified `fmq-analyze: allow(..)` marker); findings:\n{}",
+        listing.join("\n")
+    );
+    // the SARIF serialization of the clean run must still be a valid doc
+    let sarif = xtask::sarif::to_sarif(&diags);
+    assert!(sarif.contains("\"version\":\"2.1.0\""));
+    assert!(sarif.contains("\"results\":[]"));
 }
