@@ -20,16 +20,26 @@
 //!   reassembles them in order) and replied to only when all `n` rows are
 //!   done.
 //!
-//! Backpressure: submissions go through a bounded [`mpsc::sync_channel`],
-//! so connection handlers block (instead of the queue growing without
-//! bound) once `queue_cap` requests are in flight, and the batcher admits
-//! at most `queue_cap` requests into its active set at a time.
+//! Backpressure: submissions go through a bounded [`mpsc::sync_channel`];
+//! the server's `submit` uses `try_send` and sheds with a typed
+//! `overloaded` reply once `queue_cap` requests are queued (instead of
+//! the queue growing without bound), and the batcher admits at most
+//! `queue_cap` requests into its active set at a time.
+//!
+//! Deadlines: a request may carry an absolute deadline. Expired requests
+//! are failed with a typed `deadline_exceeded` error at admission and
+//! again before each assembly ([`Batcher::next_batch`] sheds queued
+//! requests whose deadline passed while they waited), so a stale request
+//! never burns sampler compute. Rows already issued into a super-batch
+//! are finished rather than cancelled — slicing keeps batches small, so
+//! the win from mid-batch cancellation would not pay for the complexity.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::errors::ServeError;
 use crate::flow::sampler::Direction;
 use crate::obs::{self, Metrics, Span};
 use crate::util::rng::Pcg64;
@@ -50,14 +60,18 @@ pub enum Work {
     },
 }
 
-/// Reply payload: the exact-n output rows, or an error message the
-/// protocol layer forwards to the client.
-pub type Reply = Result<Vec<f32>, String>;
+/// Reply payload: the exact-n output rows, or a typed error the protocol
+/// layer forwards to the client (class + message + retry hint — see
+/// [`crate::coordinator::errors`]).
+pub type Reply = Result<Vec<f32>, ServeError>;
 
 /// One queued request: the work plus its reply channel.
 pub struct GenRequest {
     /// What to integrate.
     pub work: Work,
+    /// Absolute completion deadline, if the client set `deadline_ms`.
+    /// Expired requests are shed (`deadline_exceeded`) instead of run.
+    pub deadline: Option<Instant>,
     /// Where the reassembled result (or error) goes.
     pub reply: Sender<Reply>,
 }
@@ -74,6 +88,8 @@ struct Active {
     /// When the request entered the active set (feeds `queue_wait_ns` on
     /// the request's first issuance into a super-batch).
     admitted: Instant,
+    /// Absolute deadline; checked at admission and before each assembly.
+    deadline: Option<Instant>,
     src: Source,
     out: Vec<f32>,
     reply: Sender<Reply>,
@@ -189,13 +205,24 @@ impl Batcher {
         self.active.iter().map(|a| a.n - a.done).sum()
     }
 
-    /// Validate and admit one request into the active set; invalid
-    /// requests are failed immediately instead of being admitted.
+    /// Validate and admit one request into the active set; invalid or
+    /// already-expired requests are failed immediately instead of being
+    /// admitted.
     fn admit(&mut self, req: GenRequest) {
+        if let Some(dl) = req.deadline {
+            if Instant::now() >= dl {
+                let _ = req.reply.send(Err(ServeError::deadline_exceeded(
+                    "deadline expired before the request was admitted",
+                )));
+                return;
+            }
+        }
         let (dir, n, src) = match req.work {
             Work::Generate { n, seed } => {
                 if n == 0 {
-                    let _ = req.reply.send(Err("n must be at least 1".into()));
+                    let _ = req
+                        .reply
+                        .send(Err(ServeError::bad_request("n must be at least 1")));
                     return;
                 }
                 (Direction::Forward, n, Source::Noise(Pcg64::seed(seed)))
@@ -203,11 +230,11 @@ impl Batcher {
             Work::Encode { rows } => {
                 let d = self.d.max(1);
                 if rows.is_empty() || rows.len() % d != 0 {
-                    let _ = req.reply.send(Err(format!(
+                    let _ = req.reply.send(Err(ServeError::bad_request(format!(
                         "encode rows must be flat [n, d] with d={} (got {} values)",
                         self.d,
                         rows.len()
-                    )));
+                    ))));
                     return;
                 }
                 let n = rows.len() / d;
@@ -222,10 +249,48 @@ impl Batcher {
             issued: 0,
             done: 0,
             admitted: Instant::now(),
+            deadline: req.deadline,
             src,
             out: vec![0.0; n * self.d],
             reply: req.reply,
         });
+    }
+
+    /// Fail every queued request whose deadline has passed before it got
+    /// any rows issued. Partially-issued requests are left to finish:
+    /// their compute is already committed, and `complete` tolerates the
+    /// finished slices either way.
+    fn shed_expired(&mut self) {
+        let now = Instant::now();
+        let mut i = 0;
+        while i < self.active.len() {
+            let expired = self
+                .active
+                .get(i)
+                .is_some_and(|a| a.issued == 0 && a.deadline.is_some_and(|dl| now >= dl));
+            if expired {
+                if let Some(a) = self.active.remove(i) {
+                    let _ = a.reply.send(Err(ServeError::deadline_exceeded(
+                        "deadline exceeded while the request was queued",
+                    )));
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Fail every admitted request and drain the submission channel,
+    /// replying `err` to each. Called by workers on hard stop (drain
+    /// window expired) so no client is left waiting on a reply that will
+    /// never come.
+    pub fn abort_all(&mut self, err: &ServeError) {
+        while let Some(a) = self.active.pop_front() {
+            let _ = a.reply.send(Err(err.clone()));
+        }
+        while let Ok(req) = self.rx.try_recv() {
+            let _ = req.reply.send(Err(err.clone()));
+        }
     }
 
     fn pending_rows(&self) -> usize {
@@ -277,6 +342,10 @@ impl Batcher {
                 Err(_) => break,
             }
         }
+        // shed anything whose deadline lapsed while it waited — after
+        // linger/drain so a request expiring inside the linger window is
+        // still caught, before assemble so it never costs sampler time
+        self.shed_expired();
         let span = Span::begin();
         let batch = self.assemble();
         span.end(&self.metrics.batch_assemble_ns);
@@ -349,8 +418,9 @@ impl Batcher {
     /// request replies the moment its last row arrives. On `Ok`, the
     /// slice must hold at least `batch.rows * d` values in `x0` order;
     /// on `Err`, every request sliced into the batch fails with the
-    /// message.
-    pub fn complete(&mut self, batch: SuperBatch, result: Result<&[f32], &str>) {
+    /// typed error (this is how the supervisor fails exactly the
+    /// in-flight super-batch's requests with `worker_panic`).
+    pub fn complete(&mut self, batch: SuperBatch, result: Result<&[f32], &ServeError>) {
         let d = self.d;
         for s in batch.slices {
             let Some(pos) = self.active.iter().position(|a| a.id == s.id) else {
@@ -384,14 +454,14 @@ impl Batcher {
                             }
                         }
                     } else if let Some(a) = self.active.remove(pos) {
-                        let _ = a
-                            .reply
-                            .send(Err("worker result shorter than super-batch".to_string()));
+                        let _ = a.reply.send(Err(ServeError::internal(
+                            "worker result shorter than super-batch",
+                        )));
                     }
                 }
-                Err(msg) => {
+                Err(err) => {
                     if let Some(a) = self.active.remove(pos) {
-                        let _ = a.reply.send(Err(msg.to_string()));
+                        let _ = a.reply.send(Err(err.clone()));
                     }
                 }
             }
@@ -414,6 +484,7 @@ mod tests {
         (
             GenRequest {
                 work: Work::Generate { n, seed },
+                deadline: None,
                 reply: rtx,
             },
             rrx,
@@ -524,6 +595,7 @@ mod tests {
         b.submitter()
             .send(GenRequest {
                 work: Work::Generate { n: 2, seed: 1 },
+                deadline: None,
                 reply: gtx,
             })
             .unwrap();
@@ -532,6 +604,7 @@ mod tests {
                 work: Work::Encode {
                     rows: vec![0.5; 3 * d],
                 },
+                deadline: None,
                 reply: etx,
             })
             .unwrap();
@@ -557,9 +630,11 @@ mod tests {
         let (req, rrx) = gen_req(2, 3);
         b.submitter().send(req).unwrap();
         let batch = b.next_batch().unwrap();
-        b.complete(batch, Err("engine exploded"));
+        b.complete(batch, Err(&ServeError::internal("engine exploded")));
         let got = rrx.recv().unwrap();
-        assert_eq!(got.unwrap_err(), "engine exploded");
+        let err = got.unwrap_err();
+        assert_eq!(err.to_string(), "engine exploded");
+        assert_eq!(err.class, crate::coordinator::errors::ErrClass::Internal);
         assert_eq!(b.backlog_rows(), 0);
     }
 
@@ -571,6 +646,7 @@ mod tests {
         b.submitter()
             .send(GenRequest {
                 work: Work::Generate { n: 0, seed: 1 },
+                deadline: None,
                 reply: ztx,
             })
             .unwrap();
@@ -580,13 +656,16 @@ mod tests {
                 work: Work::Encode {
                     rows: vec![0.0; d + 1], // not a whole number of rows
                 },
+                deadline: None,
                 reply: etx,
             })
             .unwrap();
         let batch = b.next_batch().unwrap();
         assert!(batch.is_empty());
         assert!(zrx.recv().unwrap().is_err());
-        assert!(erx.recv().unwrap().unwrap_err().contains("flat [n, d]"));
+        let err = erx.recv().unwrap().unwrap_err();
+        assert!(err.to_string().contains("flat [n, d]"));
+        assert_eq!(err.class, crate::coordinator::errors::ErrClass::BadRequest);
     }
 
     /// The batcher feeds the owning server's registry: every non-empty
@@ -619,6 +698,74 @@ mod tests {
     }
 
     #[test]
+    fn expired_deadline_is_shed_at_admission() {
+        use crate::coordinator::errors::ErrClass;
+        let mut b = mk(4, Duration::from_millis(1), 2, 64);
+        let (rtx, rrx) = mpsc::channel();
+        b.submitter()
+            .send(GenRequest {
+                work: Work::Generate { n: 2, seed: 1 },
+                deadline: Some(Instant::now() - Duration::from_millis(1)),
+                reply: rtx,
+            })
+            .unwrap();
+        let batch = b.next_batch().unwrap();
+        assert!(batch.is_empty(), "expired request must not produce rows");
+        let err = rrx.recv().unwrap().unwrap_err();
+        assert_eq!(err.class, ErrClass::DeadlineExceeded);
+        assert_eq!(b.backlog_rows(), 0, "nothing admitted");
+    }
+
+    #[test]
+    fn queued_request_expiring_behind_backlog_is_shed_before_assembly() {
+        use crate::coordinator::errors::ErrClass;
+        let d = 2;
+        // max_batch 2: the first request (n=4) needs two batches, so the
+        // second request waits in the active set across a dispatch
+        let mut b = mk(2, Duration::from_millis(1), d, 64);
+        let (big, big_rx) = gen_req(4, 1);
+        b.submitter().send(big).unwrap();
+        let (rtx, rrx) = mpsc::channel();
+        b.submitter()
+            .send(GenRequest {
+                work: Work::Generate { n: 1, seed: 2 },
+                deadline: Some(Instant::now() + Duration::from_millis(20)),
+                reply: rtx,
+            })
+            .unwrap();
+        let first = b.next_batch().unwrap();
+        assert_eq!(first.rows, 2);
+        std::thread::sleep(Duration::from_millis(30)); // deadline lapses in queue
+        let rows = first.x0.clone();
+        b.complete(first, Ok(&rows));
+        let second = b.next_batch().unwrap(); // sheds, then assembles big's tail
+        assert_eq!(second.rows, 2, "big request's tail still runs");
+        let err = rrx.recv().unwrap().unwrap_err();
+        assert_eq!(err.class, ErrClass::DeadlineExceeded);
+        let rows = second.x0.clone();
+        b.complete(second, Ok(&rows));
+        assert!(big_rx.recv().unwrap().is_ok(), "unexpired request unharmed");
+    }
+
+    #[test]
+    fn abort_all_fails_active_and_channel_queued_requests() {
+        use crate::coordinator::errors::ErrClass;
+        let mut b = mk(2, Duration::from_millis(1), 2, 64);
+        let (admitted, admitted_rx) = gen_req(4, 1);
+        b.submitter().send(admitted).unwrap();
+        let batch = b.next_batch().unwrap(); // admits + issues first slice
+        assert_eq!(batch.rows, 2);
+        let (queued, queued_rx) = gen_req(1, 2);
+        b.submitter().send(queued).unwrap(); // still in the channel
+        b.abort_all(&ServeError::shutting_down("server stopped"));
+        for rx in [admitted_rx, queued_rx] {
+            let err = rx.recv().unwrap().unwrap_err();
+            assert_eq!(err.class, ErrClass::ShuttingDown);
+        }
+        assert_eq!(b.backlog_rows(), 0);
+    }
+
+    #[test]
     fn next_batch_times_out_empty_when_idle() {
         let mut b = mk(4, Duration::from_millis(1), 2, 64);
         let batch = b.next_batch().unwrap();
@@ -629,6 +776,7 @@ mod tests {
             let (rtx, _r) = mpsc::channel();
             tx.send(GenRequest {
                 work: Work::Generate { n: 1, seed: 0 },
+                deadline: None,
                 reply: rtx,
             })
             .unwrap();

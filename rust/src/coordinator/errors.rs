@@ -1,0 +1,207 @@
+//! Typed serving errors: the wire-visible error taxonomy.
+//!
+//! Every error reply the server produces carries, besides the
+//! human-readable `error` message, a stable machine-readable `code` and
+//! a `retryable` flag so clients can decide between backing off and
+//! giving up without parsing prose. The full taxonomy, including which
+//! classes are produced where, is documented in `docs/ROBUSTNESS.md`.
+//!
+//! Design notes:
+//! - `Display` renders the message *only* (no code prefix), so existing
+//!   substring assertions and log lines keep their shape; the class
+//!   travels in the dedicated `code` wire field.
+//! - The class list is index-aligned with
+//!   [`crate::obs::ERROR_CLASSES`] so per-class counters stay a fixed
+//!   array of atomics with no allocation at count time.
+
+use std::fmt;
+
+use crate::util::json::Json;
+
+/// Stable error classes. `code()` strings are wire API — never rename.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrClass {
+    /// Malformed or out-of-range request (client bug). Terminal.
+    BadRequest,
+    /// Model name not in this server's registry. Terminal.
+    UnknownModel,
+    /// The worker serving this request panicked (or is gone) and the
+    /// request was failed while the worker respawns. Retryable: the
+    /// respawned worker serves the identical request deterministically.
+    WorkerPanic,
+    /// The request's `deadline_ms` elapsed before a reply was ready.
+    /// Terminal: the client's budget is spent by definition.
+    DeadlineExceeded,
+    /// Admission control shed the request because the model's queue was
+    /// full. Retryable after the `retry_after_ms` hint.
+    Overloaded,
+    /// The server is draining or stopped and no longer admits work.
+    /// Terminal against this server (another replica may retry it).
+    ShuttingDown,
+    /// A checkpoint/artifact failed its integrity check while loading.
+    /// Terminal until the on-disk artifact is repaired.
+    CorruptArtifact,
+    /// Engine failure or other server-side invariant violation. Terminal.
+    Internal,
+}
+
+impl ErrClass {
+    /// Wire `code` string; index-aligned with [`crate::obs::ERROR_CLASSES`].
+    pub fn code(self) -> &'static str {
+        match self {
+            ErrClass::BadRequest => "bad_request",
+            ErrClass::UnknownModel => "unknown_model",
+            ErrClass::WorkerPanic => "worker_panic",
+            ErrClass::DeadlineExceeded => "deadline_exceeded",
+            ErrClass::Overloaded => "overloaded",
+            ErrClass::ShuttingDown => "shutting_down",
+            ErrClass::CorruptArtifact => "corrupt_artifact",
+            ErrClass::Internal => "internal",
+        }
+    }
+
+    /// Whether a client retry against the *same* server can succeed.
+    /// `worker_panic` clears once the supervisor respawns the worker;
+    /// `overloaded` clears once the queue drains. Everything else is
+    /// terminal here (see `docs/ROBUSTNESS.md` for the replica nuance
+    /// around `shutting_down`).
+    pub fn retryable(self) -> bool {
+        matches!(self, ErrClass::WorkerPanic | ErrClass::Overloaded)
+    }
+}
+
+/// A typed serving error: class + message + optional backoff hint.
+#[derive(Clone, Debug)]
+pub struct ServeError {
+    pub class: ErrClass,
+    pub msg: String,
+    /// Server-suggested minimum backoff before retrying (only set for
+    /// `Overloaded`).
+    pub retry_after_ms: Option<u64>,
+}
+
+impl ServeError {
+    pub fn new(class: ErrClass, msg: impl Into<String>) -> Self {
+        Self {
+            class,
+            msg: msg.into(),
+            retry_after_ms: None,
+        }
+    }
+
+    pub fn bad_request(msg: impl Into<String>) -> Self {
+        Self::new(ErrClass::BadRequest, msg)
+    }
+
+    pub fn unknown_model(msg: impl Into<String>) -> Self {
+        Self::new(ErrClass::UnknownModel, msg)
+    }
+
+    pub fn worker_panic(msg: impl Into<String>) -> Self {
+        Self::new(ErrClass::WorkerPanic, msg)
+    }
+
+    pub fn deadline_exceeded(msg: impl Into<String>) -> Self {
+        Self::new(ErrClass::DeadlineExceeded, msg)
+    }
+
+    pub fn overloaded(msg: impl Into<String>, retry_after_ms: u64) -> Self {
+        Self {
+            class: ErrClass::Overloaded,
+            msg: msg.into(),
+            retry_after_ms: Some(retry_after_ms),
+        }
+    }
+
+    pub fn shutting_down(msg: impl Into<String>) -> Self {
+        Self::new(ErrClass::ShuttingDown, msg)
+    }
+
+    pub fn internal(msg: impl Into<String>) -> Self {
+        Self::new(ErrClass::Internal, msg)
+    }
+
+    /// Build the wire error reply. Shape:
+    /// `{"ok":false,"error":msg,"code":...,"retryable":...[,"retry_after_ms":n]}`.
+    pub fn to_reply(&self) -> Json {
+        let mut pairs = vec![
+            ("ok", Json::Bool(false)),
+            ("error", Json::Str(self.msg.clone())),
+            ("code", Json::Str(self.class.code().to_string())),
+            ("retryable", Json::Bool(self.class.retryable())),
+        ];
+        if let Some(ms) = self.retry_after_ms {
+            pairs.push(("retry_after_ms", Json::Int(ms as i128)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_align_with_obs_error_class_labels() {
+        // The per-class counters in obs index by position in
+        // ERROR_CLASSES; every class this module can produce must have a
+        // slot there, in the same spelling.
+        for class in [
+            ErrClass::BadRequest,
+            ErrClass::UnknownModel,
+            ErrClass::WorkerPanic,
+            ErrClass::DeadlineExceeded,
+            ErrClass::Overloaded,
+            ErrClass::ShuttingDown,
+            ErrClass::CorruptArtifact,
+            ErrClass::Internal,
+        ] {
+            assert!(
+                crate::obs::ERROR_CLASSES.contains(&class.code()),
+                "obs::ERROR_CLASSES missing '{}'",
+                class.code()
+            );
+        }
+        assert_eq!(crate::obs::ERROR_CLASSES.len(), 8);
+    }
+
+    #[test]
+    fn only_panic_and_overload_are_retryable() {
+        assert!(ErrClass::WorkerPanic.retryable());
+        assert!(ErrClass::Overloaded.retryable());
+        for terminal in [
+            ErrClass::BadRequest,
+            ErrClass::UnknownModel,
+            ErrClass::DeadlineExceeded,
+            ErrClass::ShuttingDown,
+            ErrClass::CorruptArtifact,
+            ErrClass::Internal,
+        ] {
+            assert!(!terminal.retryable(), "{:?} must be terminal", terminal);
+        }
+    }
+
+    #[test]
+    fn reply_shape_carries_code_and_hint() {
+        let e = ServeError::overloaded("queue for 'ot2' is full", 100);
+        let j = e.to_reply();
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(j.get("code").and_then(Json::as_str), Some("overloaded"));
+        assert_eq!(j.get("retryable").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("retry_after_ms").and_then(Json::as_u64), Some(100));
+        assert_eq!(e.to_string(), "queue for 'ot2' is full");
+
+        let t = ServeError::deadline_exceeded("deadline exceeded");
+        let j = t.to_reply();
+        assert_eq!(j.get("retryable").and_then(Json::as_bool), Some(false));
+        assert!(j.get("retry_after_ms").is_none());
+    }
+}

@@ -4,6 +4,7 @@
 //! per-request seeded noise — deterministic, exact-n replies).
 
 pub mod batcher;
+pub mod errors;
 pub mod experiment;
 pub mod registry;
 pub mod report;

@@ -1,6 +1,7 @@
 //! Serving layer: TCP, JSON-lines protocol, dynamic batching per model
-//! variant. Python never runs here — quantized sampling executes through
-//! the compiled HLO (or the CPU reference when artifacts are absent).
+//! variant, supervised workers. Python never runs here — quantized
+//! sampling executes through the compiled HLO (or the CPU reference when
+//! artifacts are absent).
 //!
 //! Protocol (one JSON object per line; request lines are capped at
 //! [`MAX_LINE`] bytes, sized to the largest legal `encode` payload;
@@ -8,24 +9,30 @@
 //! integer-precision limit — to round-trip exactly):
 //!   -> {"op": "generate", "model": "ot4", "n": 2, "seed": 7}
 //!   <- {"ok": true, "model": "ot4", "n": 2, "d": 768, "images": [...]}
+//!   -> {"op": "generate", "model": "ot4", "n": 2, "seed": 7,
+//!       "deadline_ms": 250}              (optional per-request budget)
 //!   -> {"op": "encode", "model": "ot4", "images": [... n*d floats ...]}
 //!   <- {"ok": true, "model": "ot4", "n": 2, "d": 768, "latents": [...]}
 //!   -> {"op": "stats"}
 //!   <- {"ok": true, "requests": 9, "batches": 3, "samples": 18,
-//!       "encodes": 2, "errors": 0, "queue_depth": 0,
+//!       "encodes": 2, "errors": 0, "shed": 0, "worker_respawns": 0,
+//!       "conn_drops": 0, "queue_depth": 0,
 //!       "resident_bytes": 5443584, "workspace_bytes": 1245184}
 //!   -> {"op": "metrics"}                     (or "format": "json")
 //!   <- {"ok": true, "content_type": "text/plain; version=0.0.4",
 //!       "body": "# HELP fmq_server_requests_total ...\n..."}
 //!   -> {"op": "models"}
 //!   <- {"ok": true, "models": ["fp32", "ot2", ...]}
-//!   -> {"op": "ping"} / {"op": "shutdown"}
+//!   -> {"op": "ping"} / {"op": "shutdown"}   (shutdown begins a drain)
 //!
-//! Counter/gauge values in `stats` replies are integer-exact
-//! ([`Json::Int`] — no f64 2^53 precision cliff for byte gauges). The
-//! richer `metrics` op exposes the full [`crate::obs`] registry —
-//! request-latency / queue-wait / per-ODE-step histograms with
-//! p50/p95/p99 estimates — as Prometheus text-format or JSON; the
+//! Error replies are typed: `{"ok": false, "error": <message>, "code":
+//! <class>, "retryable": <bool>[, "retry_after_ms": <hint>]}` with the
+//! class taxonomy of [`crate::coordinator::errors`] (full matrix:
+//! `docs/ROBUSTNESS.md`). Counter/gauge values in `stats` replies are
+//! integer-exact ([`Json::Int`] — no f64 2^53 precision cliff for byte
+//! gauges). The richer `metrics` op exposes the full [`crate::obs`]
+//! registry — request-latency / queue-wait / per-ODE-step histograms
+//! with p50/p95/p99 estimates — as Prometheus text-format or JSON; the
 //! catalogue is documented in `docs/OBSERVABILITY.md`.
 //!
 //! Serving contracts:
@@ -40,33 +47,53 @@
 //!   bit-identical to running `flow::sampler::generate` locally with
 //!   the same seed; `lut2`/`runtime` replies are equally deterministic
 //!   but match the reference sampler only within the 1e-5
-//!   engine-equivalence harness (v2 re-associates sums).
+//!   engine-equivalence harness (v2 re-associates sums). Worker panics
+//!   and respawns do not weaken this: a respawned worker repacks the
+//!   same variant, so a retried request returns the identical bits.
 //! * **Exact n.** Requests up to [`MAX_N`] samples are sliced across as
 //!   many super-batches as needed (slot accounting in the batcher) and
 //!   reassembled in order — never truncated to the model batch.
 //! * **Backpressure.** Each variant's queue is a bounded channel
-//!   (`ServerConfig::queue_cap`); connection handlers block on submit
-//!   once it fills instead of growing server memory.
+//!   (`ServerConfig::queue_cap`); once it fills, submits are *shed* with
+//!   a typed `overloaded` error carrying a `retry_after_ms` hint instead
+//!   of blocking connection handlers (load never grows server memory,
+//!   and a client can tell "busy" from "broken").
+//! * **Supervision.** Each variant worker runs its batches under
+//!   `catch_unwind`; a panic fails only the in-flight super-batch's
+//!   requests with a retryable `worker_panic` error, then the supervisor
+//!   respawns the worker (fresh engine + [`EngineStep`]) under capped
+//!   exponential backoff. Queued requests survive respawn untouched.
+//! * **Deadlines.** A request's optional `deadline_ms` is enforced at
+//!   admission, before each batch assembly (queued-but-expired requests
+//!   are shed with `deadline_exceeded`), and on the reply wait.
+//! * **Drain.** [`Server::stop`] (and the `shutdown` op) moves the
+//!   lifecycle to *draining*: no new work is admitted, in-flight and
+//!   queued requests are flushed, and only stragglers past the drain
+//!   deadline are failed with `shutting_down`.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{self, SyncSender};
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
 use crate::coordinator::batcher::{Batcher, GenRequest, Work};
+use crate::coordinator::errors::ServeError;
 use crate::coordinator::registry::{Registry, Variant};
 use crate::engine::{CpuRefEngine, Engine, EngineKind, LutEngine, LutV2Engine, Tuner};
+use crate::faults::{BatchFault, FaultPlan, ReplyFault};
 use crate::flow::sampler::{self, Direction, EngineStep, HloQStep, HloStep};
 use crate::model::spec::ModelSpec;
 use crate::obs::{self, Metrics, Span};
 use crate::runtime::SharedArtifacts;
 use crate::util::json::{parse, Json};
+use crate::util::rng::Pcg64;
 
 /// Protocol cap on samples per request (`generate` n, `encode` rows).
 pub const MAX_N: usize = 256;
@@ -75,6 +102,27 @@ pub const MAX_N: usize = 256;
 /// server memory past this per connection. Sized so the largest legal
 /// `encode` request (MAX_N × d floats in decimal) still fits.
 pub const MAX_LINE: u64 = 16 * 1024 * 1024;
+
+/// `retry_after_ms` hint attached to `overloaded` shed replies: one
+/// model batch is typically integrated well within this, so a polite
+/// client retrying after it usually finds a free queue slot.
+pub const SHED_RETRY_MS: u64 = 100;
+
+/// Reply wait when the request carries no deadline — the historical
+/// server-wide generation timeout.
+const DEFAULT_SUBMIT_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// Cap on client-supplied `deadline_ms` (24h): keeps `Instant + Duration`
+/// arithmetic far from overflow while remaining far beyond any real
+/// request budget.
+const MAX_DEADLINE_MS: u64 = 86_400_000;
+
+/// First respawn backoff is `BACKOFF_BASE_MS << 1`, doubling per
+/// consecutive respawn up to `BACKOFF_BASE_MS << BACKOFF_MAX_SHIFT`
+/// (640ms) — long enough to stop a crash-looping engine from spinning a
+/// core, short enough that a one-off panic barely dents latency.
+const BACKOFF_BASE_MS: u64 = 10;
+const BACKOFF_MAX_SHIFT: u32 = 6;
 
 /// Server configuration.
 pub struct ServerConfig {
@@ -85,13 +133,21 @@ pub struct ServerConfig {
     /// loaded, else the native LUT engine for quantized variants and the
     /// CPU reference for fp32).
     pub engine: Option<EngineKind>,
-    /// Bound on queued requests per model variant (backpressure: submits
-    /// block once the queue is full).
+    /// Bound on queued requests per model variant. Submits against a
+    /// full queue are shed with a typed `overloaded` error (plus
+    /// `retry_after_ms` hint) instead of blocking the connection.
     pub queue_cap: usize,
     /// Write a Prometheus text-format metrics snapshot to this path when
     /// the server stops (the `--metrics-dump` flag), so benches and CI
     /// capture latency trajectories as artifacts.
     pub metrics_dump: Option<PathBuf>,
+    /// How long [`Server::stop`] lets in-flight + queued work flush
+    /// before hard-failing stragglers with `shutting_down`.
+    pub drain: Duration,
+    /// Deterministic fault-injection plan (chaos harness). Inert unless
+    /// built with the `faults` cargo feature *and* rules are configured
+    /// (`FMQ_FAULTS` is read by the CLI, never ambiently here).
+    pub faults: Arc<FaultPlan>,
 }
 
 impl Default for ServerConfig {
@@ -103,14 +159,82 @@ impl Default for ServerConfig {
             engine: None,
             queue_cap: 256,
             metrics_dump: None,
+            drain: Duration::from_secs(5),
+            faults: Arc::new(FaultPlan::none()),
         }
+    }
+}
+
+/// Lifecycle phase of a serving process. Transitions are one-way:
+/// `Running -> Draining -> Stopped` (stop can skip the drain).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LifeState {
+    /// Admitting and serving work.
+    Running,
+    /// No longer admitting; flushing in-flight + queued requests.
+    Draining,
+    /// Hard-stopped; workers abort whatever remains with `shutting_down`.
+    Stopped,
+}
+
+/// Shared lifecycle switchboard: the phase plus a live-worker count the
+/// drain loop polls. Replaces the old single `AtomicBool` shutdown flag
+/// so "stop admitting" and "abandon in-flight work" are distinct steps.
+pub struct Lifecycle {
+    state: AtomicU8,
+    live_workers: AtomicUsize,
+}
+
+impl Lifecycle {
+    const RUNNING: u8 = 0;
+    const DRAINING: u8 = 1;
+    const STOPPED: u8 = 2;
+
+    pub fn new(workers: usize) -> Self {
+        Self {
+            state: AtomicU8::new(Self::RUNNING),
+            live_workers: AtomicUsize::new(workers),
+        }
+    }
+
+    pub fn state(&self) -> LifeState {
+        match self.state.load(Ordering::SeqCst) {
+            Self::RUNNING => LifeState::Running,
+            Self::DRAINING => LifeState::Draining,
+            _ => LifeState::Stopped,
+        }
+    }
+
+    /// Move `Running -> Draining`. No-op from any later phase (never
+    /// regresses a `Stopped` server back to draining).
+    pub fn begin_drain(&self) {
+        let _ = self.state.compare_exchange(
+            Self::RUNNING,
+            Self::DRAINING,
+            Ordering::SeqCst,
+            Ordering::SeqCst,
+        );
+    }
+
+    fn stop_hard(&self) {
+        self.state.store(Self::STOPPED, Ordering::SeqCst);
+    }
+
+    fn worker_exited(&self) {
+        self.live_workers.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Variant workers that have not yet exited their serve loop.
+    pub fn workers_live(&self) -> usize {
+        self.live_workers.load(Ordering::SeqCst)
     }
 }
 
 /// Resolve the configured engine for one variant. `None` means "run the
 /// batch through the compiled-HLO artifact sessions" (the `Runtime`
 /// kind); `Some(engine)` is a native in-process backend. Built once per
-/// serving worker, so LUT packing happens at startup, never per request.
+/// serving worker (and again on each supervisor respawn), so LUT packing
+/// happens at startup, never per request.
 ///
 /// An *explicit* `--engine lut`/`lut2` choice that fails to pack is an
 /// error (the operator asked for a specific backend; silently serving
@@ -173,14 +297,31 @@ fn resolve_engine<'a>(
 pub struct Server {
     pub addr: std::net::SocketAddr,
     pub stats: Arc<Metrics>,
-    shutdown: Arc<AtomicBool>,
+    lifecycle: Arc<Lifecycle>,
     threads: Vec<thread::JoinHandle<()>>,
     metrics_dump: Option<PathBuf>,
+    drain: Duration,
 }
 
 impl Server {
-    pub fn stop(mut self) {
-        self.shutdown.store(true, Ordering::SeqCst);
+    /// Graceful stop with the configured drain window
+    /// (`ServerConfig::drain`).
+    pub fn stop(self) {
+        let drain = self.drain;
+        self.stop_within(drain);
+    }
+
+    /// Graceful stop: begin draining (no new admissions), give in-flight
+    /// and queued work up to `drain` to flush, then hard-stop — workers
+    /// fail any stragglers with a typed `shutting_down` error — join
+    /// every thread and write the metrics dump.
+    pub fn stop_within(mut self, drain: Duration) {
+        self.lifecycle.begin_drain();
+        let deadline = Instant::now() + drain;
+        while self.lifecycle.workers_live() > 0 && Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(5));
+        }
+        self.lifecycle.stop_hard();
         // nudge the acceptor with a dummy connection
         let _ = TcpStream::connect(self.addr);
         for t in self.threads.drain(..) {
@@ -195,15 +336,22 @@ impl Server {
         }
     }
 
-    /// Whether a client issued the `shutdown` op (or `stop` began). The
-    /// CLI's serve loop polls this to exit and write the metrics dump.
+    /// Whether a client issued the `shutdown` op (or `stop` began): the
+    /// lifecycle has left `Running`. The CLI's serve loop polls this to
+    /// exit and write the metrics dump.
     pub fn shutdown_requested(&self) -> bool {
-        self.shutdown.load(Ordering::SeqCst)
+        self.lifecycle.state() != LifeState::Running
+    }
+
+    /// The lifecycle switchboard (tests observe drain transitions here).
+    pub fn lifecycle(&self) -> &Lifecycle {
+        &self.lifecycle
     }
 }
 
-/// Launch the server: one acceptor thread, one batching worker per model
-/// variant. `registry` and the optional artifact set are shared read-only.
+/// Launch the server: one acceptor thread, one supervised batching
+/// worker per model variant. `registry` and the optional artifact set
+/// are shared read-only.
 pub fn serve(
     registry: Arc<Registry>,
     art: Option<Arc<SharedArtifacts>>,
@@ -217,50 +365,54 @@ pub fn serve(
     }
     let listener = TcpListener::bind(&cfg.addr)?;
     let addr = listener.local_addr()?;
-    let shutdown = Arc::new(AtomicBool::new(false));
     let stats = Arc::new(Metrics::new());
+    let names = registry.names();
+    let lifecycle = Arc::new(Lifecycle::new(names.len()));
     let mut threads = Vec::new();
 
-    // one batcher + worker per variant
+    // one batcher + supervised worker per variant
     let batch_size = art
         .as_ref()
         .map(|a| a.with(|art| art.b_sample))
         .unwrap_or(16);
     let d = registry.spec.d;
     let mut submitters = std::collections::BTreeMap::new();
-    for name in registry.names() {
+    for name in names {
         let batcher = Batcher::new(batch_size, cfg.linger, d, cfg.queue_cap, stats.clone());
         submitters.insert(name.clone(), batcher.submitter());
         let reg = registry.clone();
         let art = art.clone();
         let stats = stats.clone();
-        let sd = shutdown.clone();
+        let lc = lifecycle.clone();
+        let fp = cfg.faults.clone();
         let steps = cfg.steps;
         let engine = cfg.engine;
         threads.push(thread::spawn(move || {
-            worker_loop(&name, reg, art, batcher, stats, sd, steps, batch_size, engine)
+            worker_loop(&name, reg, art, batcher, stats, lc, fp, steps, batch_size, engine)
         }));
     }
     let submitters = Arc::new(submitters);
 
     // acceptor
     {
-        let sd = shutdown.clone();
+        let lc = lifecycle.clone();
+        let fp = cfg.faults.clone();
         let stats = stats.clone();
         let reg = registry.clone();
         let subs = submitters.clone();
         threads.push(thread::spawn(move || {
             for stream in listener.incoming() {
-                if sd.load(Ordering::SeqCst) {
+                if lc.state() == LifeState::Stopped {
                     break;
                 }
                 let Ok(stream) = stream else { continue };
                 let stats = stats.clone();
                 let reg = reg.clone();
                 let subs = subs.clone();
-                let sd2 = sd.clone();
+                let lc2 = lc.clone();
+                let fp2 = fp.clone();
                 thread::spawn(move || {
-                    let _ = handle_conn(stream, &reg, &subs, &stats, &sd2);
+                    let _ = handle_conn(stream, &reg, &subs, &stats, &lc2, &fp2);
                 });
             }
         }));
@@ -269,12 +421,35 @@ pub fn serve(
     Ok(Server {
         addr,
         stats,
-        shutdown,
+        lifecycle,
         threads,
         metrics_dump: cfg.metrics_dump,
+        drain: cfg.drain,
     })
 }
 
+/// This worker's last exported contribution to the shared gauges, so
+/// each iteration exports ONE signed delta (see [`export_gauges`]).
+#[derive(Default)]
+struct WorkerGauges {
+    queue: i64,
+    ws: i64,
+}
+
+/// How one supervised serve pass ended.
+enum WorkerExit {
+    /// Clean exit: drained idle, channel closed, or hard stop.
+    Finished,
+    /// A batch panicked; the supervisor should respawn the engine.
+    Panicked,
+}
+
+/// Supervisor: build the engine, serve batches, and on a batch panic
+/// respawn the whole execution stack (pool, engine, [`EngineStep`])
+/// under capped exponential backoff. The batcher — and with it every
+/// queued request — survives respawns untouched; only the super-batch
+/// that was in flight during the panic is failed (typed `worker_panic`,
+/// retryable).
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     name: &str,
@@ -282,70 +457,160 @@ fn worker_loop(
     art: Option<Arc<SharedArtifacts>>,
     mut batcher: Batcher,
     stats: Arc<Metrics>,
-    shutdown: Arc<AtomicBool>,
+    lifecycle: Arc<Lifecycle>,
+    faults: Arc<FaultPlan>,
     steps: usize,
     batch_size: usize,
     engine_choice: Option<EngineKind>,
 ) {
     let variant = match registry.get(name) {
         Ok(v) => v,
-        Err(_) => return,
-    };
-    // resolve + build the execution engine once per worker: for the LUT
-    // engine this packs the codes at startup, so the request path only
-    // ever touches the packed representation. Each worker's pool spans
-    // all cores — a lone hot variant should saturate the machine, and
-    // when several variants batch at once the scoped worker threads
-    // simply time-share.
-    let pool = crate::engine::Pool::new(0);
-    let resolved = resolve_engine(engine_choice, art.is_some(), variant, &registry.spec, pool);
-    let engine = match resolved {
-        Ok(e) => e,
-        Err(err) => {
-            // an explicit engine choice this variant cannot satisfy:
-            // stay up and fail each request with the build error instead
-            // of silently serving through a different backend
-            let msg = format!("engine init failed for '{name}': {err:#}");
-            while !shutdown.load(Ordering::SeqCst) {
-                let Some(batch) = batcher.next_batch() else { return };
-                batcher.complete(batch, Err(&msg));
-            }
+        Err(_) => {
+            lifecycle.worker_exited();
             return;
         }
     };
     let d = registry.spec.d;
-    // one step adapter per worker, built once and reused across every
-    // super-batch: its workspace arena (and the per-step time-embedding
-    // cache inside it) persists, so after the first batch of a given
-    // step grid the velocity hot path performs zero heap allocations
-    let mut native = engine.as_deref().map(EngineStep::new);
-    if let Some(e) = engine.as_deref() {
-        stats.resident_bytes.add(e.resident_bytes() as i64);
-    }
-    let mut gauge = 0i64; // this worker's last contribution to queue_depth
-    let mut ws_gauge = 0i64; // last contribution to workspace_bytes
-    while !shutdown.load(Ordering::SeqCst) {
-        let Some(batch) = batcher.next_batch() else {
-            // all submitters dropped -> server is shutting down
-            break;
+    let mut gauges = WorkerGauges::default();
+    let mut respawns = 0u32;
+    loop {
+        // resolve + build the execution engine once per (re)spawn: for
+        // the LUT engine this packs the codes up front, so the request
+        // path only ever touches the packed representation. Each
+        // worker's pool spans all cores — a lone hot variant should
+        // saturate the machine, and when several variants batch at once
+        // the scoped worker threads simply time-share.
+        let pool = crate::engine::Pool::new(0);
+        let resolved =
+            resolve_engine(engine_choice, art.is_some(), variant, &registry.spec, pool);
+        let engine = match resolved {
+            Ok(e) => e,
+            Err(err) => {
+                // an explicit engine choice this variant cannot satisfy:
+                // deterministic init failure, so never respawn — stay up
+                // and fail each request with the build error instead of
+                // silently serving through a different backend
+                let serr =
+                    ServeError::internal(format!("engine init failed for '{name}': {err:#}"));
+                while lifecycle.state() == LifeState::Running {
+                    let Some(batch) = batcher.next_batch() else { break };
+                    batcher.complete(batch, Err(&serr));
+                }
+                batcher.abort_all(&ServeError::shutting_down(
+                    "server stopped before the request completed",
+                ));
+                break;
+            }
         };
-        if batch.is_empty() {
-            continue; // wait timeout: loop to re-check the shutdown flag
-        }
-        let run_span = Span::begin();
-        let res = run_rows(
-            native.as_mut(),
+        let res_bytes = engine
+            .as_deref()
+            .map(|e| e.resident_bytes() as i64)
+            .unwrap_or(0);
+        stats.resident_bytes.add(res_bytes);
+        // one step adapter per spawn, reused across every super-batch:
+        // its workspace arena (and the per-step time-embedding cache
+        // inside it) persists, so after the first batch of a given step
+        // grid the velocity hot path performs zero heap allocations
+        let mut native = engine.as_deref().map(EngineStep::new);
+        let exit = run_batches(
+            name,
             variant,
             art.as_deref(),
-            &batch.x0,
-            batch.dir,
+            &mut batcher,
+            &stats,
+            &lifecycle,
+            &faults,
+            &mut native,
             steps,
             batch_size,
             d,
+            &mut gauges,
         );
+        match exit {
+            WorkerExit::Finished => break,
+            WorkerExit::Panicked => {
+                // the panicked spawn's engine is dropped here; retract
+                // its residency before the respawn re-adds its own
+                stats.resident_bytes.add(-res_bytes);
+                stats.worker_respawns.inc();
+                respawns += 1;
+                let shift = respawns.min(BACKOFF_MAX_SHIFT);
+                thread::sleep(Duration::from_millis(BACKOFF_BASE_MS << shift));
+            }
+        }
+    }
+    stats.queue_depth.add(-gauges.queue);
+    lifecycle.worker_exited();
+}
+
+/// One supervised serve pass: batch, integrate (under `catch_unwind`),
+/// reply — until the lifecycle says stop, the queue drains idle, or a
+/// batch panics.
+#[allow(clippy::too_many_arguments)]
+fn run_batches(
+    name: &str,
+    variant: &Variant,
+    art: Option<&SharedArtifacts>,
+    batcher: &mut Batcher,
+    stats: &Metrics,
+    lifecycle: &Lifecycle,
+    faults: &FaultPlan,
+    native: &mut Option<EngineStep<'_>>,
+    steps: usize,
+    batch_size: usize,
+    d: usize,
+    gauges: &mut WorkerGauges,
+) -> WorkerExit {
+    loop {
+        if lifecycle.state() == LifeState::Stopped {
+            // hard stop: whatever is still queued/active is a straggler
+            // past the drain deadline
+            batcher.abort_all(&ServeError::shutting_down(
+                "server stopped before the request completed",
+            ));
+            export_gauges(batcher, native.as_ref(), stats, gauges);
+            return WorkerExit::Finished;
+        }
+        let Some(batch) = batcher.next_batch() else {
+            // all submitters dropped -> server handle is gone
+            return WorkerExit::Finished;
+        };
+        if batch.is_empty() {
+            // idle tick: during a drain, idle + empty backlog means this
+            // worker has flushed everything it will ever get
+            if lifecycle.state() != LifeState::Running && batcher.backlog_rows() == 0 {
+                export_gauges(batcher, native.as_ref(), stats, gauges);
+                return WorkerExit::Finished;
+            }
+            continue;
+        }
+        let run_span = Span::begin();
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            match faults.on_batch(name) {
+                BatchFault::Slow(ms) => thread::sleep(Duration::from_millis(ms)),
+                BatchFault::Panic => {
+                    // fmq-analyze: allow(panic_cone) -- injected chaos
+                    // fault; fires only under the `faults` feature with a
+                    // matching FMQ_FAULTS rule, and exists to exercise
+                    // the supervisor's catch_unwind + respawn path
+                    panic!("injected fault: panic@batch for '{name}'")
+                }
+                BatchFault::None => {}
+            }
+            run_rows(
+                native.as_mut(),
+                variant,
+                art,
+                &batch.x0,
+                batch.dir,
+                steps,
+                batch_size,
+                d,
+            )
+        }));
         run_span.end(&stats.batch_run_ns);
         match res {
-            Ok(rows) => {
+            Ok(Ok(rows)) => {
                 stats.batches.inc();
                 let counter = match batch.dir {
                     Direction::Forward => &stats.samples,
@@ -354,24 +619,58 @@ fn worker_loop(
                 counter.add(batch.rows as u64);
                 batcher.complete(batch, Ok(&rows));
             }
-            Err(e) => batcher.complete(batch, Err(&e.to_string())),
+            Ok(Err(e)) => {
+                batcher.complete(batch, Err(&ServeError::internal(e.to_string())));
+            }
+            Err(payload) => {
+                // fail ONLY the in-flight super-batch's requests; queued
+                // work survives for the respawned worker
+                let what = panic_message(payload.as_ref());
+                batcher.complete(
+                    batch,
+                    Err(&ServeError::worker_panic(format!(
+                        "worker for '{name}' panicked while serving this batch: {what}"
+                    ))),
+                );
+                export_gauges(batcher, native.as_ref(), stats, gauges);
+                return WorkerExit::Panicked;
+            }
         }
-        // export backlog as ONE signed delta per iteration so the gauge
-        // sums correctly over concurrent workers and can never wrap: a
-        // reader observes depth transitions atomically (no fetch_sub/
-        // fetch_add window where another worker's export interleaves)
-        let depth = batcher.backlog_rows() as i64;
-        stats.queue_depth.add(depth - gauge);
-        gauge = depth;
-        // arena high-water, same delta scheme (monotone per worker)
-        let hw = native
-            .as_ref()
-            .map(|be| be.workspace_bytes() + be.engine().workspace_bytes())
-            .unwrap_or(0) as i64;
-        stats.workspace_bytes.add(hw - ws_gauge);
-        ws_gauge = hw;
+        export_gauges(batcher, native.as_ref(), stats, gauges);
     }
-    stats.queue_depth.add(-gauge);
+}
+
+/// Export backlog + workspace as ONE signed delta per call so the gauges
+/// sum correctly over concurrent workers and can never wrap: a reader
+/// observes depth transitions atomically (no fetch_sub/fetch_add window
+/// where another worker's export interleaves).
+fn export_gauges(
+    batcher: &Batcher,
+    native: Option<&EngineStep<'_>>,
+    stats: &Metrics,
+    g: &mut WorkerGauges,
+) {
+    let depth = batcher.backlog_rows() as i64;
+    stats.queue_depth.add(depth - g.queue);
+    g.queue = depth;
+    // arena high-water, same delta scheme (monotone per spawn)
+    let hw = native
+        .map(|be| be.workspace_bytes() + be.engine().workspace_bytes())
+        .unwrap_or(0) as i64;
+    stats.workspace_bytes.add(hw - g.ws);
+    g.ws = hw;
+}
+
+/// Best-effort human-readable panic payload (the `&str`/`String` cases
+/// cover `panic!` and `assert!` — everything the serve path can raise).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "non-string panic payload"
+    }
 }
 
 /// Integrate one super-batch in the given direction. `native = Some(..)`
@@ -395,7 +694,7 @@ fn run_rows(
     match native {
         Some(be) => sampler::run_direction(be, x0, dir, steps),
         None => {
-            let sa = art.ok_or_else(|| anyhow!("runtime engine requires artifacts"))?;
+            let sa = art.ok_or_else(|| anyhow::anyhow!("runtime engine requires artifacts"))?;
             let rows = x0.len() / d.max(1);
             let padded = rows.max(1).div_ceil(batch_size.max(1)) * batch_size.max(1);
             let mut xp = x0.to_vec();
@@ -420,12 +719,21 @@ fn run_rows(
     }
 }
 
+/// Serialize + write one reply line. Split out so `handle_conn` can
+/// observe the io error exactly once (accounting) before propagating.
+fn write_reply(writer: &mut TcpStream, reply: &Json) -> std::io::Result<()> {
+    writer.write_all(reply.to_string().as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()
+}
+
 fn handle_conn(
     stream: TcpStream,
     registry: &Registry,
     submitters: &std::collections::BTreeMap<String, SyncSender<GenRequest>>,
     stats: &Metrics,
-    shutdown: &AtomicBool,
+    lifecycle: &Lifecycle,
+    faults: &FaultPlan,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
@@ -442,16 +750,13 @@ fn handle_conn(
         if buf.len() as u64 >= MAX_LINE && buf.last() != Some(&b'\n') {
             // overlong line: report, then close (the stream cannot be
             // resynchronized mid-line)
-            let reply = Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                (
-                    "error",
-                    Json::Str(format!("request line exceeds {MAX_LINE} bytes")),
-                ),
-            ]);
-            writer.write_all(reply.to_string().as_bytes())?;
-            writer.write_all(b"\n")?;
-            writer.flush()?;
+            let err = ServeError::bad_request(format!("request line exceeds {MAX_LINE} bytes"));
+            stats.errors.inc();
+            stats.error_class(err.class.code()).inc();
+            if write_reply(&mut writer, &err.to_reply()).is_err() {
+                stats.conn_drops.inc();
+                return Ok(());
+            }
             // best-effort drain of what the client already sent before
             // closing: dropping the socket with unread bytes queued makes
             // the kernel RST the connection, which would destroy the
@@ -475,46 +780,125 @@ fn handle_conn(
         if trimmed.is_empty() {
             continue;
         }
-        let reply = match handle_request(trimmed, registry, submitters, stats, shutdown) {
-            Ok(j) => j,
-            Err(e) => {
-                stats.errors.inc();
-                Json::obj(vec![
-                    ("ok", Json::Bool(false)),
-                    ("error", Json::Str(e.to_string())),
-                ])
-            }
-        };
+        // error accounting happens HERE and only here: `errors` and the
+        // matching per-class counter move together, exactly once per
+        // error reply, whatever happens to the socket afterwards
+        let (reply, was_error) =
+            match handle_request(trimmed, registry, submitters, stats, lifecycle) {
+                Ok(j) => (j, false),
+                Err(e) => {
+                    stats.errors.inc();
+                    stats.error_class(e.class.code()).inc();
+                    (e.to_reply(), true)
+                }
+            };
+        // injected connection-drop fault: sever before the reply write
+        // so the client observes a mid-reply disconnect
+        if matches!(faults.on_reply(), ReplyFault::Drop) {
+            let _ = writer.shutdown(std::net::Shutdown::Both);
+        }
         let ser_span = Span::begin();
-        writer.write_all(reply.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+        let wrote = write_reply(&mut writer, &reply);
         ser_span.end(&stats.reply_serialize_ns);
-        if shutdown.load(Ordering::SeqCst) {
+        if let Err(e) = wrote {
+            // client went away mid-reply: count the dropped connection,
+            // and if the reply was a success count ONE error for the
+            // undeliverable result (an error reply was already counted
+            // above — never double-count it)
+            stats.conn_drops.inc();
+            if !was_error {
+                stats.errors.inc();
+                stats.error_class("internal").inc();
+            }
+            return Err(e.into());
+        }
+        if lifecycle.state() == LifeState::Stopped {
             return Ok(());
         }
     }
 }
 
+/// A `worker is gone` disconnect: retryable `worker_panic` while the
+/// supervisor is respawning, terminal `shutting_down` once the lifecycle
+/// has left `Running` (the worker exited on purpose and is not coming
+/// back).
+fn worker_gone(model: &str, lifecycle: &Lifecycle) -> ServeError {
+    if lifecycle.state() == LifeState::Running {
+        ServeError::worker_panic(format!("worker for '{model}' is gone"))
+    } else {
+        ServeError::shutting_down(format!("worker for '{model}' is gone"))
+    }
+}
+
 /// Submit one unit of work to a variant's batcher and wait for the
-/// reassembled exact-n reply.
+/// reassembled exact-n reply. Admission control lives here: drain gate,
+/// queue-full shedding, and the deadline-derived reply wait.
 fn submit(
     submitters: &std::collections::BTreeMap<String, SyncSender<GenRequest>>,
+    lifecycle: &Lifecycle,
+    stats: &Metrics,
     model: &str,
     work: Work,
-) -> Result<Vec<f32>> {
+    deadline: Option<Instant>,
+) -> Result<Vec<f32>, ServeError> {
     let tx = submitters
         .get(model)
-        .ok_or_else(|| anyhow!("unknown model '{model}'"))?;
+        .ok_or_else(|| ServeError::unknown_model(format!("unknown model '{model}'")))?;
+    if lifecycle.state() != LifeState::Running {
+        return Err(ServeError::shutting_down(format!(
+            "server is draining; not admitting new '{model}' work"
+        )));
+    }
     let (rtx, rrx) = mpsc::channel();
-    tx.send(GenRequest { work, reply: rtx })
-        .map_err(|_| anyhow!("worker for '{model}' is gone"))?;
-    match rrx.recv_timeout(Duration::from_secs(600)) {
-        Ok(reply) => reply.map_err(|e| anyhow!(e)),
-        Err(mpsc::RecvTimeoutError::Timeout) => Err(anyhow!("generation timed out")),
+    match tx.try_send(GenRequest {
+        work,
+        deadline,
+        reply: rtx,
+    }) {
+        Ok(()) => {}
+        Err(TrySendError::Full(_)) => {
+            stats.shed.inc();
+            return Err(ServeError::overloaded(
+                format!("queue for '{model}' is full"),
+                SHED_RETRY_MS,
+            ));
+        }
+        Err(TrySendError::Disconnected(_)) => return Err(worker_gone(model, lifecycle)),
+    }
+    let wait = deadline
+        .map(|dl| dl.saturating_duration_since(Instant::now()))
+        .unwrap_or(DEFAULT_SUBMIT_TIMEOUT);
+    match rrx.recv_timeout(wait) {
+        Ok(reply) => reply,
+        Err(mpsc::RecvTimeoutError::Timeout) => Err(if deadline.is_some() {
+            ServeError::deadline_exceeded("deadline exceeded awaiting generation")
+        } else {
+            ServeError::deadline_exceeded("generation timed out")
+        }),
         // worker died (panic / shutdown race): report that, not a timeout
-        Err(mpsc::RecvTimeoutError::Disconnected) => {
-            Err(anyhow!("worker for '{model}' is gone"))
+        Err(mpsc::RecvTimeoutError::Disconnected) => Err(worker_gone(model, lifecycle)),
+    }
+}
+
+/// Map a request-shape error (JSON parse, missing/mistyped field) onto
+/// the `bad_request` class with the message unchanged.
+fn bad(e: anyhow::Error) -> ServeError {
+    ServeError::bad_request(e.to_string())
+}
+
+/// Parse the optional `deadline_ms` field into an absolute [`Instant`].
+/// `0` is legal and expires immediately (deterministic in tests);
+/// values are capped at 24h.
+fn parse_deadline(req: &Json) -> Result<Option<Instant>, ServeError> {
+    match req.get("deadline_ms") {
+        None => Ok(None),
+        Some(j) => {
+            let ms = j.as_u64().ok_or_else(|| {
+                ServeError::bad_request("deadline_ms must be a non-negative integer")
+            })?;
+            Ok(Some(
+                Instant::now() + Duration::from_millis(ms.min(MAX_DEADLINE_MS)),
+            ))
         }
     }
 }
@@ -524,11 +908,11 @@ fn handle_request(
     registry: &Registry,
     submitters: &std::collections::BTreeMap<String, SyncSender<GenRequest>>,
     stats: &Metrics,
-    shutdown: &AtomicBool,
-) -> Result<Json> {
-    let req = parse(line)?;
+    lifecycle: &Lifecycle,
+) -> Result<Json, ServeError> {
+    let req = parse(line).map_err(bad)?;
     stats.requests.inc();
-    match req.req_str("op")? {
+    match req.req_str("op").map_err(bad)? {
         "ping" => Ok(Json::obj(vec![("ok", Json::Bool(true))])),
         "models" => Ok(Json::obj(vec![
             ("ok", Json::Bool(true)),
@@ -546,6 +930,12 @@ fn handle_request(
             ("samples", Json::Int(stats.samples.get() as i128)),
             ("encodes", Json::Int(stats.encodes.get() as i128)),
             ("errors", Json::Int(stats.errors.get() as i128)),
+            ("shed", Json::Int(stats.shed.get() as i128)),
+            (
+                "worker_respawns",
+                Json::Int(stats.worker_respawns.get() as i128),
+            ),
+            ("conn_drops", Json::Int(stats.conn_drops.get() as i128)),
             ("queue_depth", Json::Int(stats.queue_depth.get() as i128)),
             ("resident_bytes", Json::Int(stats.resident_bytes.get() as i128)),
             ("workspace_bytes", Json::Int(stats.workspace_bytes.get() as i128)),
@@ -555,7 +945,7 @@ fn handle_request(
                 None => "prometheus",
                 Some(j) => j
                     .as_str()
-                    .ok_or_else(|| anyhow!("format must be a string"))?,
+                    .ok_or_else(|| ServeError::bad_request("format must be a string"))?,
             };
             match format {
                 "prometheus" => Ok(Json::obj(vec![
@@ -570,37 +960,52 @@ fn handle_request(
                     ("ok", Json::Bool(true)),
                     ("metrics", obs::render_json(stats)),
                 ])),
-                other => Err(anyhow!(
+                other => Err(ServeError::bad_request(format!(
                     "unknown metrics format '{other}' (expected 'prometheus' or 'json')"
-                )),
+                ))),
             }
         }
         "shutdown" => {
-            shutdown.store(true, Ordering::SeqCst);
+            // begin a graceful drain; the CLI (or embedding test) sees
+            // `shutdown_requested` and completes the stop with its
+            // configured drain window
+            lifecycle.begin_drain();
             Ok(Json::obj(vec![("ok", Json::Bool(true))]))
         }
         "generate" => {
-            let model = req.req_str("model")?;
-            let n = req.req_usize("n")?;
+            let model = req.req_str("model").map_err(bad)?;
+            let n = req.req_usize("n").map_err(bad)?;
             if n == 0 || n > MAX_N {
-                bail!("n must be in 1..={MAX_N} (got {n})");
+                return Err(ServeError::bad_request(format!(
+                    "n must be in 1..={MAX_N} (got {n})"
+                )));
             }
             // strict like n: a coerced seed would silently alias two
             // distinct wire seeds onto one noise stream
             let seed = match req.get("seed") {
                 None => 0u64,
                 Some(j) => {
-                    let s = j
-                        .as_u64()
-                        .ok_or_else(|| anyhow!("seed must be an integer in 0..2^53"))?;
+                    let s = j.as_u64().ok_or_else(|| {
+                        ServeError::bad_request("seed must be an integer in 0..2^53")
+                    })?;
                     if s >= 9_007_199_254_740_992 {
-                        bail!("seed must be an integer in 0..2^53 (got {s})");
+                        return Err(ServeError::bad_request(format!(
+                            "seed must be an integer in 0..2^53 (got {s})"
+                        )));
                     }
                     s
                 }
             };
+            let deadline = parse_deadline(&req)?;
             let latency = Span::begin();
-            let imgs = submit(submitters, model, Work::Generate { n, seed })?;
+            let imgs = submit(
+                submitters,
+                lifecycle,
+                stats,
+                model,
+                Work::Generate { n, seed },
+                deadline,
+            )?;
             latency.end(&stats.request_latency_ns);
             let d = registry.spec.d.max(1);
             Ok(Json::obj(vec![
@@ -612,21 +1017,31 @@ fn handle_request(
             ]))
         }
         "encode" => {
-            let model = req.req_str("model")?;
-            let rows = req.req("images")?.to_f32s()?;
+            let model = req.req_str("model").map_err(bad)?;
+            let rows = req.req("images").map_err(bad)?.to_f32s().map_err(bad)?;
             let d = registry.spec.d.max(1);
             if rows.is_empty() || rows.len() % d != 0 {
-                bail!(
+                return Err(ServeError::bad_request(format!(
                     "images must be flat [n, d] with d={d} (got {} values)",
                     rows.len()
-                );
+                )));
             }
             let n = rows.len() / d;
             if n > MAX_N {
-                bail!("encode rows must be in 1..={MAX_N} (got {n})");
+                return Err(ServeError::bad_request(format!(
+                    "encode rows must be in 1..={MAX_N} (got {n})"
+                )));
             }
+            let deadline = parse_deadline(&req)?;
             let latency = Span::begin();
-            let latents = submit(submitters, model, Work::Encode { rows })?;
+            let latents = submit(
+                submitters,
+                lifecycle,
+                stats,
+                model,
+                Work::Encode { rows },
+                deadline,
+            )?;
             latency.end(&stats.request_latency_ns);
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
@@ -636,7 +1051,35 @@ fn handle_request(
                 ("latents", Json::from_f32s(&latents)),
             ]))
         }
-        other => Err(anyhow!("unknown op '{other}'")),
+        other => Err(ServeError::bad_request(format!("unknown op '{other}'"))),
+    }
+}
+
+/// Client-side retry schedule for *retryable* typed errors
+/// (`worker_panic`, `overloaded`): jittered exponential backoff, floored
+/// by the server's `retry_after_ms` hint when one is present. Terminal
+/// errors and transport failures are never retried here — a dropped
+/// connection needs a reconnect, which is the caller's policy call.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (so `max_retries + 1` calls max).
+    pub max_retries: u32,
+    /// Backoff before the first retry; doubles per subsequent retry.
+    pub base: Duration,
+    /// Ceiling on the exponential term.
+    pub cap: Duration,
+    /// Jitter stream seed (deterministic schedules in tests).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_retries: 4,
+            base: Duration::from_millis(50),
+            cap: Duration::from_secs(2),
+            seed: 0x5eed,
+        }
     }
 }
 
@@ -662,15 +1105,52 @@ impl Client {
         self.writer.flush()?;
         let mut line = String::new();
         if self.reader.read_line(&mut line)? == 0 {
-            return Err(anyhow!("server closed connection"));
+            return Err(anyhow::anyhow!("server closed connection"));
         }
         parse(line.trim())
+    }
+
+    /// `call`, retrying replies whose typed error is marked `retryable`
+    /// (worker respawning, queue full) under `policy`'s jittered
+    /// exponential backoff. The sleep never undercuts the server's
+    /// `retry_after_ms` hint. Returns the first success, or the last
+    /// error reply once retries are exhausted (as `server error: ...`,
+    /// the same shape `checked` produces).
+    pub fn call_with_retry(&mut self, req: &Json, policy: RetryPolicy) -> Result<Json> {
+        let mut rng = Pcg64::seed(policy.seed);
+        let mut attempt = 0u32;
+        loop {
+            let resp = self.call(req)?;
+            if resp.get("ok").and_then(|j| j.as_bool()) == Some(true) {
+                return Ok(resp);
+            }
+            let retryable = resp.get("retryable").and_then(|j| j.as_bool()) == Some(true);
+            if !retryable || attempt >= policy.max_retries {
+                return Err(anyhow::anyhow!(
+                    "server error: {}",
+                    resp.req_str("error").unwrap_or("unknown")
+                ));
+            }
+            let exp = policy
+                .base
+                .saturating_mul(1u32 << attempt.min(16))
+                .min(policy.cap);
+            let hint = resp
+                .get("retry_after_ms")
+                .and_then(|j| j.as_u64())
+                .map(Duration::from_millis)
+                .unwrap_or(Duration::ZERO);
+            // full backoff at most, half at least: jitter de-synchronizes
+            // a thundering herd of shed clients without starving any
+            thread::sleep(exp.max(hint).mul_f64(0.5 + 0.5 * rng.uniform()));
+            attempt += 1;
+        }
     }
 
     fn checked(&mut self, req: &Json) -> Result<Json> {
         let resp = self.call(req)?;
         if resp.get("ok").and_then(|j| j.as_bool()) != Some(true) {
-            return Err(anyhow!(
+            return Err(anyhow::anyhow!(
                 "server error: {}",
                 resp.req_str("error").unwrap_or("unknown")
             ));
@@ -690,6 +1170,45 @@ impl Client {
         self.checked(&req)?.req("images")?.to_f32s()
     }
 
+    /// `generate` with a per-request budget: the server sheds the
+    /// request with `deadline_exceeded` if `deadline_ms` elapses before
+    /// its rows are ready.
+    pub fn generate_with_deadline(
+        &mut self,
+        model: &str,
+        n: usize,
+        seed: u64,
+        deadline_ms: u64,
+    ) -> Result<Vec<f32>> {
+        let req = Json::obj(vec![
+            ("op", Json::Str("generate".into())),
+            ("model", Json::Str(model.into())),
+            ("n", Json::Num(n as f64)),
+            ("seed", Json::Num(seed as f64)),
+            ("deadline_ms", Json::Int(deadline_ms as i128)),
+        ]);
+        self.checked(&req)?.req("images")?.to_f32s()
+    }
+
+    /// `generate`, retrying retryable typed errors under `policy`.
+    /// Determinism makes this safe: a retried request returns bits
+    /// identical to what the first attempt would have.
+    pub fn generate_with_retry(
+        &mut self,
+        model: &str,
+        n: usize,
+        seed: u64,
+        policy: RetryPolicy,
+    ) -> Result<Vec<f32>> {
+        let req = Json::obj(vec![
+            ("op", Json::Str("generate".into())),
+            ("model", Json::Str(model.into())),
+            ("n", Json::Num(n as f64)),
+            ("seed", Json::Num(seed as f64)),
+        ]);
+        self.call_with_retry(&req, policy)?.req("images")?.to_f32s()
+    }
+
     /// Reverse-ODE encode: images (flat `[n, d]`) → latents.
     pub fn encode(&mut self, model: &str, imgs: &[f32]) -> Result<Vec<f32>> {
         let req = Json::obj(vec![
@@ -701,10 +1220,11 @@ impl Client {
     }
 
     /// Server counters (`requests`/`batches`/`samples`/`encodes`/
-    /// `errors`/`queue_depth`) plus the memory gauges: `resident_bytes`
-    /// (packed model bytes held by the native engines) and
-    /// `workspace_bytes` (high-water scratch across every worker's
-    /// reusable arenas). Values are integer-exact ([`Json::Int`]).
+    /// `errors`/`shed`/`worker_respawns`/`conn_drops`/`queue_depth`)
+    /// plus the memory gauges: `resident_bytes` (packed model bytes held
+    /// by the native engines) and `workspace_bytes` (high-water scratch
+    /// across every worker's reusable arenas). Values are integer-exact
+    /// ([`Json::Int`]).
     pub fn stats(&mut self) -> Result<Json> {
         self.checked(&Json::obj(vec![("op", Json::Str("stats".into()))]))
     }
@@ -723,8 +1243,9 @@ impl Client {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::errors::ErrClass;
     use crate::quant::QuantMethod;
-    use crate::util::rng::Pcg64;
+    use std::collections::BTreeMap;
 
     /// An explicit `--engine lut`/`lut2` on an unpackable model must
     /// surface the packing error; `auto` falls back to the reference.
@@ -745,5 +1266,133 @@ mod tests {
             .unwrap()
             .expect("auto resolves a native engine");
         assert_eq!(auto.name(), "cpu-ref");
+    }
+
+    /// A dead worker (dropped queue receiver) must report the retryable
+    /// `worker_panic` class — never masquerade as a deadline timeout —
+    /// and a deadline on a silent worker must cut the reply wait from
+    /// the historical 600s to the request's own budget.
+    #[test]
+    fn submit_distinguishes_dead_worker_from_deadline_timeout() {
+        let stats = Metrics::new();
+        let lifecycle = Lifecycle::new(1);
+        let mut submitters = BTreeMap::new();
+        let (dead_tx, dead_rx) = mpsc::sync_channel::<GenRequest>(1);
+        drop(dead_rx);
+        submitters.insert("dead".to_string(), dead_tx);
+        let (mute_tx, _mute_rx) = mpsc::sync_channel::<GenRequest>(1);
+        submitters.insert("mute".to_string(), mute_tx);
+
+        let err = submit(
+            &submitters,
+            &lifecycle,
+            &stats,
+            "dead",
+            Work::Generate { n: 1, seed: 0 },
+            None,
+        )
+        .unwrap_err();
+        assert_eq!(err.class, ErrClass::WorkerPanic, "dead worker: {err}");
+        assert!(err.to_string().contains("is gone"));
+
+        let t0 = Instant::now();
+        let err = submit(
+            &submitters,
+            &lifecycle,
+            &stats,
+            "mute",
+            Work::Generate { n: 1, seed: 0 },
+            Some(Instant::now() + Duration::from_millis(30)),
+        )
+        .unwrap_err();
+        assert_eq!(err.class, ErrClass::DeadlineExceeded, "mute worker: {err}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "deadline must bound the wait (waited {:?})",
+            t0.elapsed()
+        );
+
+        let err = submit(
+            &submitters,
+            &lifecycle,
+            &stats,
+            "nope",
+            Work::Generate { n: 1, seed: 0 },
+            None,
+        )
+        .unwrap_err();
+        assert_eq!(err.class, ErrClass::UnknownModel);
+    }
+
+    /// A full variant queue sheds with the typed `overloaded` error (and
+    /// its retry hint) instead of blocking the submitter; a draining
+    /// lifecycle refuses admission with `shutting_down`.
+    #[test]
+    fn full_queue_sheds_and_drain_gates_admission() {
+        let stats = Metrics::new();
+        let lifecycle = Lifecycle::new(1);
+        let mut submitters = BTreeMap::new();
+        let (mute_tx, _mute_rx) = mpsc::sync_channel::<GenRequest>(1);
+        submitters.insert("mute".to_string(), mute_tx);
+
+        // occupy the single queue slot (nobody ever receives it); the
+        // short deadline bounds this call's own reply wait
+        let err = submit(
+            &submitters,
+            &lifecycle,
+            &stats,
+            "mute",
+            Work::Generate { n: 1, seed: 0 },
+            Some(Instant::now() + Duration::from_millis(10)),
+        )
+        .unwrap_err();
+        assert_eq!(err.class, ErrClass::DeadlineExceeded);
+
+        // the slot is still held by the unreceived request -> shed
+        let err = submit(
+            &submitters,
+            &lifecycle,
+            &stats,
+            "mute",
+            Work::Generate { n: 1, seed: 1 },
+            None,
+        )
+        .unwrap_err();
+        assert_eq!(err.class, ErrClass::Overloaded);
+        assert_eq!(err.retry_after_ms, Some(SHED_RETRY_MS));
+        assert!(err.class.retryable());
+        assert_eq!(stats.shed.get(), 1);
+
+        // draining: admission is refused before touching the queue
+        lifecycle.begin_drain();
+        let err = submit(
+            &submitters,
+            &lifecycle,
+            &stats,
+            "mute",
+            Work::Generate { n: 1, seed: 2 },
+            None,
+        )
+        .unwrap_err();
+        assert_eq!(err.class, ErrClass::ShuttingDown);
+        assert_eq!(stats.shed.get(), 1, "drain refusal is not a shed");
+    }
+
+    /// Lifecycle transitions are one-way and `begin_drain` never
+    /// regresses a stopped server.
+    #[test]
+    fn lifecycle_transitions_are_one_way() {
+        let lc = Lifecycle::new(2);
+        assert_eq!(lc.state(), LifeState::Running);
+        assert_eq!(lc.workers_live(), 2);
+        lc.begin_drain();
+        assert_eq!(lc.state(), LifeState::Draining);
+        lc.stop_hard();
+        assert_eq!(lc.state(), LifeState::Stopped);
+        lc.begin_drain();
+        assert_eq!(lc.state(), LifeState::Stopped, "drain must not regress");
+        lc.worker_exited();
+        lc.worker_exited();
+        assert_eq!(lc.workers_live(), 0);
     }
 }

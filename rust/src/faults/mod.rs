@@ -1,0 +1,433 @@
+//! Deterministic, seeded fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is a small schedule of injected failures — "panic on
+//! the Nth super-batch", "sleep 25 ms before the 2nd batch for model X",
+//! "sever the connection before the 3rd reply write", "exercise torn
+//! artifact writes" — parsed from a compact spec string (usually the
+//! `FMQ_FAULTS` environment variable) and threaded through
+//! [`crate::coordinator::server`]. Because every rule fires on a fixed
+//! ordinal of a deterministic event stream, a failing chaos run
+//! reproduces byte-for-byte from the spec alone; there is no randomness
+//! at the injection sites themselves (the seed only drives *test-side*
+//! derivations such as [`torn_points`]).
+//!
+//! ## Spec grammar
+//!
+//! Comma-separated rules, order-irrelevant, plus an optional seed:
+//!
+//! ```text
+//! panic@batch:3            worker panics on its 3rd super-batch (any model)
+//! panic@batch/ot2:1        ...only the worker serving model "ot2"
+//! slow@batch/ot8:2:25ms    sleep 25 ms before ot8's 2nd super-batch
+//! drop@reply:2             sever the socket before the 2nd reply write
+//! torn@write:1             request torn-write coverage (drives torn_points)
+//! seed=42                  seed for derived schedules (default 0)
+//! ```
+//!
+//! ## Feature gating
+//!
+//! The real implementation only exists under `--features faults`. The
+//! default build gets the zero-sized twin at the bottom of this file
+//! (mirroring the `no-obs` treatment of [`crate::obs::span::Span`]):
+//! every query inlines to "no fault", `parse` accepts anything and
+//! returns the inert plan, and the serving hot path carries no branch
+//! cost and no allocations for a subsystem it cannot observe.
+
+use crate::util::rng::Pcg64;
+
+/// Outcome of asking the plan about the next super-batch for a model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchFault {
+    /// Run the batch normally.
+    None,
+    /// Panic inside the batch run (contained by the supervisor's
+    /// `catch_unwind`; exercises respawn).
+    Panic,
+    /// Sleep this long before running the batch (exercises deadlines,
+    /// queue buildup and load shedding). Milliseconds.
+    Slow(u64),
+}
+
+/// Outcome of asking the plan about the next reply write.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplyFault {
+    /// Write the reply normally.
+    None,
+    /// Sever the client socket before the write (exercises the
+    /// disconnect-mid-reply accounting in `handle_conn`).
+    Drop,
+}
+
+/// Deterministic truncation points for torn-write tests: structural
+/// boundaries of the FMQ1 container (mid-magic, mid-kind, mid-header-len,
+/// start of header) plus seeded interior cuts. Sorted, deduplicated, and
+/// strictly less than `len`, so every point yields a genuinely truncated
+/// file. Available in all builds — checkpoint corruption tests run in
+/// tier-1, not just under `--features faults`.
+pub fn torn_points(seed: u64, len: usize) -> Vec<usize> {
+    let mut pts: Vec<usize> = vec![0, 2, 4, 6, 8, 11, 12];
+    if len > 0 {
+        let mut rng = Pcg64::seed(seed ^ 0x7042_5f70_6f69_6e74); // "tB_point"
+        for _ in 0..8 {
+            pts.push(rng.below(len));
+        }
+        if len >= 2 {
+            pts.push(len - 1);
+            pts.push(len / 2);
+        }
+    }
+    pts.retain(|&p| p < len);
+    pts.sort_unstable();
+    pts.dedup();
+    pts
+}
+
+#[cfg(feature = "faults")]
+mod real {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    use anyhow::{bail, Context, Result};
+
+    use super::{BatchFault, ReplyFault};
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    enum Action {
+        Panic,
+        Slow(u64),
+        Drop,
+        Torn,
+    }
+
+    #[derive(Debug)]
+    struct Rule {
+        action: Action,
+        /// `None` matches every model (batch-site rules only).
+        model: Option<String>,
+        /// 1-based ordinal of the matching event this rule fires on.
+        nth: u64,
+        /// Matching events seen so far; the rule fires exactly once,
+        /// when this count reaches `nth`.
+        hits: AtomicU64,
+    }
+
+    impl Rule {
+        /// Count one matching event; true exactly when it is the nth.
+        fn fire(&self) -> bool {
+            self.hits.fetch_add(1, Ordering::Relaxed) + 1 == self.nth
+        }
+    }
+
+    /// A parsed, seeded fault schedule. Interior counters make the plan
+    /// shareable (`Arc<FaultPlan>`) across worker and connection threads
+    /// while each rule still fires exactly once.
+    #[derive(Debug)]
+    pub struct FaultPlan {
+        seed: u64,
+        rules: Vec<Rule>,
+    }
+
+    impl FaultPlan {
+        /// The empty plan: injects nothing.
+        pub fn none() -> Self {
+            Self {
+                seed: 0,
+                rules: Vec::new(),
+            }
+        }
+
+        /// Parse a spec string (see the module docs for the grammar).
+        pub fn parse(spec: &str) -> Result<Self> {
+            let mut seed = 0u64;
+            let mut rules = Vec::new();
+            for part in spec.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                if let Some(v) = part.strip_prefix("seed=") {
+                    seed = v
+                        .parse()
+                        .with_context(|| format!("bad seed in fault rule '{part}'"))?;
+                    continue;
+                }
+                rules.push(parse_rule(part)?);
+            }
+            Ok(Self { seed, rules })
+        }
+
+        /// Parse the `FMQ_FAULTS` environment variable (empty/unset →
+        /// the empty plan).
+        pub fn from_env() -> Result<Self> {
+            match std::env::var("FMQ_FAULTS") {
+                Ok(spec) => Self::parse(&spec),
+                Err(_) => Ok(Self::none()),
+            }
+        }
+
+        pub fn is_empty(&self) -> bool {
+            self.rules.is_empty()
+        }
+
+        /// Number of parsed rules (0 in inert builds).
+        pub fn rules_len(&self) -> usize {
+            self.rules.len()
+        }
+
+        /// Seed for derived schedules such as [`super::torn_points`].
+        pub fn seed(&self) -> u64 {
+            self.seed
+        }
+
+        /// True if the plan requests torn-write coverage (`torn@write:N`).
+        pub fn wants_torn_writes(&self) -> bool {
+            self.rules.iter().any(|r| r.action == Action::Torn)
+        }
+
+        /// Called by the worker once per non-empty super-batch, before
+        /// running it. Counts the event against every batch-site rule
+        /// whose model filter matches; the first rule reaching its
+        /// ordinal decides the outcome.
+        pub fn on_batch(&self, model: &str) -> BatchFault {
+            let mut out = BatchFault::None;
+            for r in &self.rules {
+                let matches = match r.action {
+                    Action::Panic | Action::Slow(_) => match r.model.as_deref() {
+                        Some(m) => m == model,
+                        None => true,
+                    },
+                    _ => false,
+                };
+                if matches && r.fire() && out == BatchFault::None {
+                    out = match r.action {
+                        Action::Panic => BatchFault::Panic,
+                        Action::Slow(ms) => BatchFault::Slow(ms),
+                        _ => BatchFault::None,
+                    };
+                }
+            }
+            out
+        }
+
+        /// Called by a connection handler once per reply, before the
+        /// write. Replies are counted across all connections in arrival
+        /// order, which is deterministic for sequential test clients.
+        pub fn on_reply(&self) -> ReplyFault {
+            let mut out = ReplyFault::None;
+            for r in &self.rules {
+                if r.action == Action::Drop && r.fire() && out == ReplyFault::None {
+                    out = ReplyFault::Drop;
+                }
+            }
+            out
+        }
+    }
+
+    fn parse_rule(part: &str) -> Result<Rule> {
+        let (action, rest) = part
+            .split_once('@')
+            .with_context(|| format!("fault rule '{part}' missing '@site'"))?;
+        let mut fields = rest.split(':');
+        let site = fields.next().unwrap_or("");
+        let (site, model) = match site.split_once('/') {
+            Some((s, m)) => (s, Some(m.to_string())),
+            None => (site, None),
+        };
+        let nth: u64 = fields
+            .next()
+            .with_context(|| format!("fault rule '{part}' missing ':N' ordinal"))?
+            .parse()
+            .with_context(|| format!("bad ordinal in fault rule '{part}'"))?;
+        if nth == 0 {
+            bail!("fault rule '{part}': ordinals are 1-based");
+        }
+        let extra = fields.next();
+        if fields.next().is_some() {
+            bail!("fault rule '{part}' has trailing fields");
+        }
+        let action = match (action, site) {
+            ("panic", "batch") => Action::Panic,
+            ("slow", "batch") => {
+                let ms = extra
+                    .with_context(|| format!("slow rule '{part}' missing ':<ms>' duration"))?;
+                let ms = ms.strip_suffix("ms").unwrap_or(ms);
+                Action::Slow(
+                    ms.parse()
+                        .with_context(|| format!("bad duration in fault rule '{part}'"))?,
+                )
+            }
+            ("drop", "reply") => Action::Drop,
+            ("torn", "write") => Action::Torn,
+            _ => bail!("unknown fault rule '{part}' (want action@site)"),
+        };
+        if !matches!(action, Action::Slow(_)) && extra.is_some() {
+            bail!("fault rule '{part}' has a trailing duration field");
+        }
+        if model.is_some() && !matches!(action, Action::Panic | Action::Slow(_)) {
+            bail!("fault rule '{part}': only batch-site rules take a /model filter");
+        }
+        Ok(Rule {
+            action,
+            model,
+            nth,
+            hits: AtomicU64::new(0),
+        })
+    }
+}
+
+#[cfg(feature = "faults")]
+pub use real::FaultPlan;
+
+/// Inert zero-sized twin: the default build's `FaultPlan`. Every query
+/// answers "no fault" and `parse`/`from_env` accept any spec without
+/// acting on it (the CLI prints a notice when `FMQ_FAULTS` is set on a
+/// build that cannot honor it).
+#[cfg(not(feature = "faults"))]
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultPlan;
+
+#[cfg(not(feature = "faults"))]
+impl FaultPlan {
+    #[inline]
+    pub fn none() -> Self {
+        Self
+    }
+
+    #[inline]
+    pub fn parse(_spec: &str) -> anyhow::Result<Self> {
+        Ok(Self)
+    }
+
+    #[inline]
+    pub fn from_env() -> anyhow::Result<Self> {
+        Ok(Self)
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        true
+    }
+
+    #[inline]
+    pub fn rules_len(&self) -> usize {
+        0
+    }
+
+    #[inline]
+    pub fn seed(&self) -> u64 {
+        0
+    }
+
+    #[inline]
+    pub fn wants_torn_writes(&self) -> bool {
+        false
+    }
+
+    #[inline]
+    pub fn on_batch(&self, _model: &str) -> BatchFault {
+        BatchFault::None
+    }
+
+    #[inline]
+    pub fn on_reply(&self) -> ReplyFault {
+        ReplyFault::None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn torn_points_are_deterministic_sorted_and_in_range() {
+        let a = torn_points(9, 1000);
+        let b = torn_points(9, 1000);
+        assert_eq!(a, b, "same seed+len must give the same cuts");
+        assert!(!a.is_empty());
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "sorted + deduped");
+        assert!(a.iter().all(|&p| p < 1000), "every cut truncates");
+        // structural boundaries of the FMQ1 container are always covered
+        for p in [0usize, 4, 8, 12] {
+            assert!(a.contains(&p), "missing structural cut {p}");
+        }
+        let c = torn_points(10, 1000);
+        assert_ne!(a, c, "different seeds explore different interiors");
+    }
+
+    #[test]
+    fn torn_points_handle_degenerate_lengths() {
+        assert!(torn_points(1, 0).is_empty());
+        assert_eq!(torn_points(1, 1), vec![0]);
+    }
+
+    #[test]
+    fn inert_or_empty_plan_injects_nothing() {
+        let plan = FaultPlan::none();
+        assert!(plan.is_empty());
+        assert_eq!(plan.rules_len(), 0);
+        assert_eq!(plan.on_batch("ot2"), BatchFault::None);
+        assert_eq!(plan.on_reply(), ReplyFault::None);
+        assert!(!plan.wants_torn_writes());
+    }
+
+    #[cfg(feature = "faults")]
+    #[test]
+    fn rules_fire_exactly_once_on_their_ordinal() {
+        let plan = FaultPlan::parse("panic@batch/ot2:2,slow@batch:3:25ms,seed=7").unwrap();
+        assert_eq!(plan.seed(), 7);
+        assert_eq!(plan.rules_len(), 2);
+        // ot8 never matches the panic rule but counts toward the
+        // unfiltered slow rule.
+        assert_eq!(plan.on_batch("ot8"), BatchFault::None); // slow hit 1
+        assert_eq!(plan.on_batch("ot2"), BatchFault::None); // panic hit 1, slow hit 2
+        assert_eq!(plan.on_batch("ot2"), BatchFault::Panic); // panic hit 2 fires (slow hit 3 also fires; panic wins by rule order)
+        assert_eq!(plan.on_batch("ot2"), BatchFault::None); // both spent
+    }
+
+    #[cfg(feature = "faults")]
+    #[test]
+    fn slow_fires_alone_on_its_ordinal() {
+        let plan = FaultPlan::parse("slow@batch/ot8:2:40").unwrap();
+        assert_eq!(plan.on_batch("ot8"), BatchFault::None);
+        assert_eq!(plan.on_batch("ot8"), BatchFault::Slow(40));
+        assert_eq!(plan.on_batch("ot8"), BatchFault::None);
+    }
+
+    #[cfg(feature = "faults")]
+    #[test]
+    fn reply_drops_count_globally() {
+        let plan = FaultPlan::parse("drop@reply:2").unwrap();
+        assert_eq!(plan.on_reply(), ReplyFault::None);
+        assert_eq!(plan.on_reply(), ReplyFault::Drop);
+        assert_eq!(plan.on_reply(), ReplyFault::None);
+    }
+
+    #[cfg(feature = "faults")]
+    #[test]
+    fn torn_rule_sets_coverage_flag() {
+        let plan = FaultPlan::parse("torn@write:1,seed=9").unwrap();
+        assert!(plan.wants_torn_writes());
+        assert_eq!(plan.on_batch("x"), BatchFault::None);
+    }
+
+    #[cfg(feature = "faults")]
+    #[test]
+    fn bad_specs_are_rejected_with_context() {
+        for bad in [
+            "panic:3",            // missing @site
+            "panic@batch",        // missing ordinal
+            "panic@batch:0",      // ordinals are 1-based
+            "panic@batch:x",      // non-numeric ordinal
+            "slow@batch:1",       // missing duration
+            "drop@reply/ot2:1",   // model filter on a non-batch site
+            "explode@batch:1",    // unknown action
+            "panic@batch:1:2:3",  // trailing fields
+            "seed=banana",        // bad seed
+            "drop@reply:1:10ms",  // trailing duration on a non-slow rule
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "spec '{bad}' should fail");
+        }
+        // empty / whitespace-only specs are the empty plan
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" , ").unwrap().is_empty());
+    }
+}

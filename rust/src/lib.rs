@@ -73,6 +73,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod data;
 pub mod engine;
+pub mod faults;
 pub mod flow;
 pub mod linalg;
 pub mod metrics;

@@ -620,6 +620,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "metrics-dump",
             "",
             "write a Prometheus text metrics snapshot here on shutdown",
+        )
+        .flag(
+            "drain-ms",
+            "5000",
+            "graceful-stop drain window before stragglers are failed",
         );
     let a = cmd.parse(argv)?;
     let spec = ModelSpec::default_spec();
@@ -636,12 +641,29 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         "" => None,
         p => Some(std::path::PathBuf::from(p)),
     };
+    // the fault plan is read from FMQ_FAULTS here — the CLI entrypoint —
+    // and nowhere else, so library users and unrelated tests never pick
+    // up a fault schedule from the ambient environment
+    let faults = fmq::faults::FaultPlan::from_env()?;
+    if !faults.is_empty() {
+        println!(
+            "fault injection ACTIVE: {} rule(s) from FMQ_FAULTS (seed {})",
+            faults.rules_len(),
+            faults.seed()
+        );
+    } else if std::env::var_os("FMQ_FAULTS").is_some() {
+        // built without the `faults` feature the plan is an inert ZST:
+        // say so instead of silently ignoring the operator's schedule
+        println!("FMQ_FAULTS set but this build has no `faults` feature; plan is inert");
+    }
     let cfg = ServerConfig {
         addr: a.get("addr").to_string(),
         steps: a.get_usize("steps")?,
         engine,
         queue_cap: a.get_usize("queue")?.max(1),
         metrics_dump,
+        drain: std::time::Duration::from_millis(a.get_usize("drain-ms")? as u64),
+        faults: Arc::new(faults),
         ..Default::default()
     };
     let server = serve(registry.clone(), art, cfg)?;

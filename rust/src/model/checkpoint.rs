@@ -7,7 +7,17 @@
 //! kind 1 = full-precision theta; kind 2 = quantized model. The JSON header
 //! makes the format self-describing and versionable without a schema
 //! compiler.
+//!
+//! Integrity: the header carries an FNV-1a 64 fingerprint of the payload
+//! (`"fp"`), written on every save and verified on every load (files
+//! from before the field are still accepted). Any structural damage —
+//! torn/truncated write, bit flip, header/payload length mismatch —
+//! surfaces as a typed [`CorruptCheckpoint`] error (downcastable through
+//! `anyhow`), never as a panic or silently-garbage parameters. The fault
+//! harness's torn-write schedule (`crate::faults::torn_points`) drives
+//! the round-trip tests below through every structural boundary.
 
+use std::fmt;
 use std::fs;
 use std::io::Write;
 use std::path::Path;
@@ -24,6 +34,38 @@ use crate::util::json::{parse, Json};
 
 const MAGIC: &[u8; 4] = b"FMQ1";
 
+/// A checkpoint failed its structural or integrity checks: bad magic,
+/// truncated header/payload, undecodable header, declared-vs-actual
+/// length mismatch, or payload fingerprint mismatch. Typed (rather than
+/// a bare `anyhow!`) so the serving layer can map it onto the
+/// `corrupt_artifact` wire class: `err.downcast_ref::<CorruptCheckpoint>()`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CorruptCheckpoint(pub String);
+
+impl fmt::Display for CorruptCheckpoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "corrupt checkpoint: {}", self.0)
+    }
+}
+
+impl std::error::Error for CorruptCheckpoint {}
+
+fn corrupt(msg: impl Into<String>) -> anyhow::Error {
+    anyhow::Error::new(CorruptCheckpoint(msg.into()))
+}
+
+/// FNV-1a 64 over the payload bytes: tiny, dependency-free, and plenty
+/// to catch torn writes and bit flips (this is an integrity check
+/// against accidents, not an authenticity check against adversaries).
+pub fn fingerprint(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01B3);
+    }
+    h
+}
+
 fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(xs.len() * 4);
     for &x in xs {
@@ -34,7 +76,7 @@ fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
 
 fn bytes_to_f32s(b: &[u8]) -> Result<Vec<f32>> {
     if b.len() % 4 != 0 {
-        bail!("f32 payload not multiple of 4");
+        return Err(corrupt("f32 payload not a multiple of 4 bytes"));
     }
     Ok(b.chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
@@ -51,15 +93,23 @@ fn u64s_to_bytes(xs: &[u64]) -> Vec<u8> {
 
 fn bytes_to_u64s(b: &[u8]) -> Result<Vec<u64>> {
     if b.len() % 8 != 0 {
-        bail!("u64 payload not multiple of 8");
+        return Err(corrupt("u64 payload not a multiple of 8 bytes"));
     }
     Ok(b.chunks_exact(8)
         .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
         .collect())
 }
 
-fn write_file(path: &Path, kind: u32, header: &Json, payload: &[u8]) -> Result<()> {
-    let hdr = header.to_string().into_bytes();
+/// `header_pairs` is extended with the payload fingerprint before
+/// serialization, so every saved file is integrity-checkable.
+fn write_file(
+    path: &Path,
+    kind: u32,
+    mut header_pairs: Vec<(&str, Json)>,
+    payload: &[u8],
+) -> Result<()> {
+    header_pairs.push(("fp", Json::Int(fingerprint(payload) as i128)));
+    let hdr = Json::obj(header_pairs).to_string().into_bytes();
     let mut f = fs::File::create(path).with_context(|| format!("create {path:?}"))?;
     f.write_all(MAGIC)?;
     f.write_all(&kind.to_le_bytes())?;
@@ -72,22 +122,47 @@ fn write_file(path: &Path, kind: u32, header: &Json, payload: &[u8]) -> Result<(
 fn read_file(path: &Path) -> Result<(u32, Json, Vec<u8>)> {
     let raw = fs::read(path).with_context(|| format!("read {path:?}"))?;
     if raw.len() < 12 || &raw[..4] != MAGIC {
-        bail!("{path:?}: not an FMQ1 checkpoint");
+        return Err(corrupt(format!("{path:?}: not an FMQ1 checkpoint")));
     }
     let kind = u32::from_le_bytes([raw[4], raw[5], raw[6], raw[7]]);
     let hlen = u32::from_le_bytes([raw[8], raw[9], raw[10], raw[11]]) as usize;
-    if raw.len() < 12 + hlen {
-        bail!("truncated header");
+    // checked: a torn length word could otherwise wrap 12 + hlen
+    let end = 12usize
+        .checked_add(hlen)
+        .ok_or_else(|| corrupt(format!("{path:?}: header length overflows")))?;
+    if raw.len() < end {
+        return Err(corrupt(format!(
+            "{path:?}: truncated header (declared {hlen} bytes, {} present)",
+            raw.len().saturating_sub(12)
+        )));
     }
-    let header = parse(std::str::from_utf8(&raw[12..12 + hlen])?)?;
-    Ok((kind, header, raw[12 + hlen..].to_vec()))
+    let text = std::str::from_utf8(&raw[12..end])
+        .map_err(|e| corrupt(format!("{path:?}: header is not UTF-8: {e}")))?;
+    let header =
+        parse(text).map_err(|e| corrupt(format!("{path:?}: header does not parse: {e}")))?;
+    let payload = raw[end..].to_vec();
+    // fingerprint verification; files from before the field have no
+    // "fp" and are accepted on the structural checks alone
+    if let Some(j) = header.get("fp") {
+        let want = j
+            .as_u64()
+            .ok_or_else(|| corrupt(format!("{path:?}: fp field is not an integer")))?;
+        let got = fingerprint(&payload);
+        if got != want {
+            return Err(corrupt(format!(
+                "{path:?}: payload fingerprint mismatch \
+                 (stored {want:#018x}, computed {got:#018x}) — torn write or bit rot"
+            )));
+        }
+    }
+    Ok((kind, header, payload))
 }
 
 /// Save a full-precision theta.
 pub fn save_theta(path: &Path, theta: &ParamStore, meta: Vec<(&str, Json)>) -> Result<()> {
     let mut pairs = vec![("p", Json::Num(theta.len() as f64))];
     pairs.extend(meta);
-    write_file(path, 1, &Json::obj(pairs), &f32s_to_bytes(theta.as_slice()))
+    write_file(path, 1, pairs, &f32s_to_bytes(theta.as_slice()))
 }
 
 /// Load a full-precision theta (checks length against spec).
@@ -96,13 +171,18 @@ pub fn load_theta(path: &Path, spec: &ModelSpec) -> Result<ParamStore> {
     if kind != 1 {
         bail!("{path:?}: kind {kind}, expected full-precision (1)");
     }
-    let p = header.req_usize("p")?;
+    let p = header
+        .req_usize("p")
+        .map_err(|e| corrupt(format!("{path:?}: {e}")))?;
     if p != spec.p() {
         bail!("checkpoint P={p}, spec P={}", spec.p());
     }
     let data = bytes_to_f32s(&payload)?;
     if data.len() != p {
-        bail!("payload has {} f32s, header says {p}", data.len());
+        return Err(corrupt(format!(
+            "{path:?}: payload has {} f32s, header says {p}",
+            data.len()
+        )));
     }
     Ok(ParamStore::new(data))
 }
@@ -115,17 +195,17 @@ pub fn save_quantized(path: &Path, qm: &QuantizedModel) -> Result<()> {
         .iter()
         .map(|cb| Json::from_f32s(&cb.levels))
         .collect();
-    let header = Json::obj(vec![
+    let header = vec![
         ("method", Json::Str(qm.method.name().to_string())),
         ("bits", Json::Num(qm.bits as f64)),
         ("n_codes", Json::Num(packed.n as f64)),
         ("n_words", Json::Num(packed.words.len() as f64)),
         ("n_biases", Json::Num(qm.biases.len() as f64)),
         ("codebooks", Json::Arr(levels)),
-    ]);
+    ];
     let mut payload = u64s_to_bytes(&packed.words);
     payload.extend_from_slice(&f32s_to_bytes(&qm.biases));
-    write_file(path, 2, &header, &payload)
+    write_file(path, 2, header, &payload)
 }
 
 /// Load a quantized model.
@@ -134,15 +214,27 @@ pub fn load_quantized(path: &Path, spec: &ModelSpec) -> Result<QuantizedModel> {
     if kind != 2 {
         bail!("{path:?}: kind {kind}, expected quantized (2)");
     }
-    let method = QuantMethod::parse(header.req_str("method")?)
+    let hdr_err = |e: anyhow::Error| corrupt(format!("{path:?}: {e}"));
+    let method = QuantMethod::parse(header.req_str("method").map_err(hdr_err)?)
         .context("unknown quant method in checkpoint")?;
-    let bits = header.req_usize("bits")? as u8;
-    let n_codes = header.req_usize("n_codes")?;
-    let n_words = header.req_usize("n_words")?;
-    let n_biases = header.req_usize("n_biases")?;
-    let words_bytes = n_words * 8;
-    if payload.len() != words_bytes + n_biases * 4 {
-        bail!("payload size mismatch");
+    let bits = header.req_usize("bits").map_err(hdr_err)? as u8;
+    let n_codes = header.req_usize("n_codes").map_err(hdr_err)?;
+    let n_words = header.req_usize("n_words").map_err(hdr_err)?;
+    let n_biases = header.req_usize("n_biases").map_err(hdr_err)?;
+    // checked arithmetic: a corrupted header must not be able to
+    // overflow the expected-size computation into a bogus match
+    let words_bytes = n_words
+        .checked_mul(8)
+        .ok_or_else(|| corrupt(format!("{path:?}: n_words={n_words} overflows")))?;
+    let expect = n_biases
+        .checked_mul(4)
+        .and_then(|b| words_bytes.checked_add(b))
+        .ok_or_else(|| corrupt(format!("{path:?}: declared sizes overflow")))?;
+    if payload.len() != expect {
+        return Err(corrupt(format!(
+            "{path:?}: payload is {} bytes, header declares {expect}",
+            payload.len()
+        )));
     }
     let packed = PackedCodes {
         bits,
@@ -151,7 +243,8 @@ pub fn load_quantized(path: &Path, spec: &ModelSpec) -> Result<QuantizedModel> {
     };
     let biases = bytes_to_f32s(&payload[words_bytes..])?;
     let codebooks: Vec<Codebook> = header
-        .req("codebooks")?
+        .req("codebooks")
+        .map_err(hdr_err)?
         .as_arr()
         .context("codebooks not an array")?
         .iter()
@@ -163,6 +256,7 @@ pub fn load_quantized(path: &Path, spec: &ModelSpec) -> Result<QuantizedModel> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::faults::torn_points;
     use crate::quant::{quantize_model, QuantMethod};
     use crate::util::rng::Pcg64;
 
@@ -220,5 +314,96 @@ mod tests {
         let p = tmp("short.fmq");
         save_theta(&p, &ParamStore::zeros(100), vec![]).unwrap();
         assert!(load_theta(&p, &spec).is_err());
+    }
+
+    /// Every torn prefix of a saved theta — the fault plan's seeded cut
+    /// schedule plus all structural boundaries — must load as a typed
+    /// [`CorruptCheckpoint`] error: never a panic, never garbage params.
+    #[test]
+    fn torn_theta_writes_are_typed_corruption() {
+        let spec = ModelSpec::default_spec();
+        let mut rng = Pcg64::seed(3);
+        let theta = spec.init_theta(&mut rng);
+        let p = tmp("torn-theta.fmq");
+        save_theta(&p, &theta, vec![]).unwrap();
+        let full = fs::read(&p).unwrap();
+        for cut in torn_points(0xBAD5EED, full.len()) {
+            assert!(cut < full.len());
+            let tp = tmp(&format!("torn-theta-{cut}.fmq"));
+            fs::write(&tp, &full[..cut]).unwrap();
+            let err = load_theta(&tp, &spec).expect_err("torn prefix must not load");
+            assert!(
+                err.downcast_ref::<CorruptCheckpoint>().is_some(),
+                "cut at {cut}/{}: untyped error: {err:#}",
+                full.len()
+            );
+        }
+    }
+
+    /// Same torn-write sweep for the quantized format (two payload
+    /// sections, so the boundaries differ), plus a single-bit payload
+    /// flip that only the fingerprint can catch (lengths all still
+    /// match).
+    #[test]
+    fn torn_and_bitflipped_quantized_writes_are_typed_corruption() {
+        let spec = ModelSpec::default_spec();
+        let mut rng = Pcg64::seed(4);
+        let theta = spec.init_theta(&mut rng);
+        let qm = quantize_model(&spec, &theta, QuantMethod::Uniform, 2);
+        let p = tmp("torn-q.fmq");
+        save_quantized(&p, &qm).unwrap();
+        let full = fs::read(&p).unwrap();
+        for cut in torn_points(0x7EA2, full.len()) {
+            let tp = tmp(&format!("torn-q-{cut}.fmq"));
+            fs::write(&tp, &full[..cut]).unwrap();
+            let err = load_quantized(&tp, &spec).expect_err("torn prefix must not load");
+            assert!(
+                err.downcast_ref::<CorruptCheckpoint>().is_some(),
+                "cut at {cut}/{}: untyped error: {err:#}",
+                full.len()
+            );
+        }
+        // bit rot in the last payload byte: sizes line up, only fp trips
+        let mut rotted = full.clone();
+        *rotted.last_mut().unwrap() ^= 0x40;
+        let rp = tmp("rot-q.fmq");
+        fs::write(&rp, &rotted).unwrap();
+        let err = load_quantized(&rp, &spec).expect_err("bit rot must not load");
+        let c = err
+            .downcast_ref::<CorruptCheckpoint>()
+            .expect("bit rot must be the typed corruption error");
+        assert!(c.0.contains("fingerprint"), "unexpected: {c}");
+    }
+
+    /// Files written before the `fp` header field (simulated by
+    /// stripping it) still load: integrity is additive, not a format
+    /// break.
+    #[test]
+    fn pre_fingerprint_files_still_load() {
+        let spec = ModelSpec::default_spec();
+        let theta = ParamStore::zeros(spec.p());
+        let payload = f32s_to_bytes(theta.as_slice());
+        let p = tmp("legacy.fmq");
+        // hand-write the v0 layout: header without "fp"
+        let hdr = Json::obj(vec![("p", Json::Num(spec.p() as f64))])
+            .to_string()
+            .into_bytes();
+        let mut raw = Vec::new();
+        raw.extend_from_slice(MAGIC);
+        raw.extend_from_slice(&1u32.to_le_bytes());
+        raw.extend_from_slice(&(hdr.len() as u32).to_le_bytes());
+        raw.extend_from_slice(&hdr);
+        raw.extend_from_slice(&payload);
+        fs::write(&p, &raw).unwrap();
+        let back = load_theta(&p, &spec).unwrap();
+        assert_eq!(back, theta);
+    }
+
+    #[test]
+    fn fingerprint_is_fnv1a64() {
+        // reference values for the standard FNV-1a 64 test vectors
+        assert_eq!(fingerprint(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fingerprint(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fingerprint(b"foobar"), 0x85944171f73967e8);
     }
 }

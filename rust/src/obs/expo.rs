@@ -43,8 +43,37 @@ pub fn render_prometheus(m: &Metrics) -> String {
         ("fmq_server_samples_total", "Samples produced by generate requests.", m.samples.get()),
         ("fmq_server_encodes_total", "Encode requests served.", m.encodes.get()),
         ("fmq_server_errors_total", "Requests answered with an error reply.", m.errors.get()),
+        (
+            "fmq_server_worker_respawns_total",
+            "Worker threads respawned by the supervisor after a panic.",
+            m.worker_respawns.get(),
+        ),
+        (
+            "fmq_server_shed_total",
+            "Requests shed by admission control (queue full).",
+            m.shed.get(),
+        ),
+        (
+            "fmq_server_conn_drops_total",
+            "Connections that died mid-reply.",
+            m.conn_drops.get(),
+        ),
     ] {
         counter_block(&mut out, name, help, v);
+    }
+
+    // one labelled sample per error class, same family
+    let _ = writeln!(
+        out,
+        "# HELP fmq_server_errors_by_class_total Error replies by wire error class."
+    );
+    let _ = writeln!(out, "# TYPE fmq_server_errors_by_class_total counter");
+    for (label, c) in super::ERROR_CLASSES.iter().zip(m.errors_by_class.iter()) {
+        let _ = writeln!(
+            out,
+            "fmq_server_errors_by_class_total{{class=\"{label}\"}} {}",
+            c.get()
+        );
     }
 
     for (name, help, v) in [
@@ -118,6 +147,19 @@ pub fn render_json(m: &Metrics) -> Json {
         ("samples", Json::Int(m.samples.get() as i128)),
         ("encodes", Json::Int(m.encodes.get() as i128)),
         ("errors", Json::Int(m.errors.get() as i128)),
+        (
+            "errors_by_class",
+            Json::obj(
+                super::ERROR_CLASSES
+                    .iter()
+                    .zip(m.errors_by_class.iter())
+                    .map(|(label, c)| (*label, Json::Int(c.get() as i128)))
+                    .collect(),
+            ),
+        ),
+        ("worker_respawns", Json::Int(m.worker_respawns.get() as i128)),
+        ("shed", Json::Int(m.shed.get() as i128)),
+        ("conn_drops", Json::Int(m.conn_drops.get() as i128)),
         ("queue_depth", Json::Int(m.queue_depth.get() as i128)),
         ("resident_bytes", Json::Int(m.resident_bytes.get() as i128)),
         ("workspace_bytes", Json::Int(m.workspace_bytes.get() as i128)),
@@ -215,6 +257,29 @@ mod tests {
         assert!(text.contains("fmq_server_request_latency_ns_count 1"));
         assert!(text.contains("fmq_server_request_latency_ns_approx{quantile=\"0.5\"}"));
         assert!(text.contains("quantile=\"0.99\""));
+    }
+
+    #[test]
+    fn error_class_and_robustness_counters_are_exposed() {
+        let m = Metrics::new();
+        m.error_class("deadline_exceeded").inc();
+        m.error_class("deadline_exceeded").inc();
+        m.error_class("not-a-real-class").inc(); // falls back to internal
+        m.worker_respawns.inc();
+        m.shed.add(3);
+        let text = render_prometheus(&m);
+        assert!(text.contains("fmq_server_errors_by_class_total{class=\"deadline_exceeded\"} 2"));
+        assert!(text.contains("fmq_server_errors_by_class_total{class=\"internal\"} 1"));
+        assert!(text.contains("fmq_server_worker_respawns_total 1"));
+        assert!(text.contains("fmq_server_shed_total 3"));
+        assert!(text.contains("fmq_server_conn_drops_total 0"));
+
+        let j = render_json(&m);
+        let server = j.get("server").unwrap();
+        let by_class = server.get("errors_by_class").unwrap();
+        assert_eq!(by_class.get("deadline_exceeded").unwrap().as_u64(), Some(2));
+        assert_eq!(server.get("worker_respawns").unwrap().as_u64(), Some(1));
+        assert_eq!(server.get("shed").unwrap().as_u64(), Some(3));
     }
 
     #[test]

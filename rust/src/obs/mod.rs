@@ -102,6 +102,21 @@ impl Default for Gauge {
     }
 }
 
+/// Wire error-class labels, index-aligned with
+/// [`Metrics::errors_by_class`]. The spellings are the `code` strings of
+/// [`crate::coordinator::errors::ErrClass`] (asserted by a test there);
+/// exposition renders one labelled sample per entry.
+pub const ERROR_CLASSES: [&str; 8] = [
+    "bad_request",
+    "unknown_model",
+    "worker_panic",
+    "deadline_exceeded",
+    "overloaded",
+    "shutting_down",
+    "corrupt_artifact",
+    "internal",
+];
+
 /// Per-server metrics registry: one instance per
 /// [`crate::coordinator::server::Server`], shared via `Arc` with every
 /// worker and connection thread. Fixed capacity — every metric is a
@@ -118,6 +133,15 @@ pub struct Metrics {
     pub encodes: Counter,
     /// Requests that returned an error reply.
     pub errors: Counter,
+    /// Error replies by class, index-aligned with [`ERROR_CLASSES`].
+    /// Sums to `errors` (both are bumped together in `handle_conn`).
+    pub errors_by_class: [Counter; 8],
+    /// Worker threads respawned by the supervisor after a panic.
+    pub worker_respawns: Counter,
+    /// Requests shed by admission control (queue full → `overloaded`).
+    pub shed: Counter,
+    /// Connections that died mid-reply (client gone before the write).
+    pub conn_drops: Counter,
     /// Rows admitted but not yet completed, across all variant queues.
     pub queue_depth: Gauge,
     /// Packed model bytes resident across serving variants.
@@ -147,6 +171,19 @@ impl Metrics {
             samples: Counter::new(),
             encodes: Counter::new(),
             errors: Counter::new(),
+            errors_by_class: [
+                Counter::new(),
+                Counter::new(),
+                Counter::new(),
+                Counter::new(),
+                Counter::new(),
+                Counter::new(),
+                Counter::new(),
+                Counter::new(),
+            ],
+            worker_respawns: Counter::new(),
+            shed: Counter::new(),
+            conn_drops: Counter::new(),
             queue_depth: Gauge::new(),
             resident_bytes: Gauge::new(),
             workspace_bytes: Gauge::new(),
@@ -157,6 +194,19 @@ impl Metrics {
             batch_rows: Hist::new(),
             reply_serialize_ns: Hist::new(),
         }
+    }
+
+    /// The per-class error counter for a wire `code` string. Cold path
+    /// (only runs while building an error reply); the linear scan over 8
+    /// static labels keeps the registry const-constructible. Unknown
+    /// codes fall back to the `internal` slot rather than dropping the
+    /// count.
+    pub fn error_class(&self, code: &str) -> &Counter {
+        let idx = ERROR_CLASSES
+            .iter()
+            .position(|&c| c == code)
+            .unwrap_or(ERROR_CLASSES.len() - 1);
+        self.errors_by_class.get(idx).unwrap_or(&self.errors)
     }
 }
 

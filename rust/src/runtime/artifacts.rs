@@ -1,10 +1,18 @@
 //! Artifact set: manifest-driven loading of every AOT-compiled entry point,
 //! with the layer-table cross-check against the rust `ModelSpec`.
+//!
+//! A manifest that fails to read, parse, or carry its declared shape
+//! fields is reported as the typed
+//! [`crate::model::checkpoint::CorruptCheckpoint`] error (same taxonomy
+//! as torn checkpoint files), so the serving layer can map artifact
+//! damage onto the `corrupt_artifact` wire class instead of a generic
+//! internal error.
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::model::checkpoint::CorruptCheckpoint;
 use crate::model::params::ParamStore;
 use crate::model::quantized::QuantizedModel;
 use crate::model::spec::ModelSpec;
@@ -58,14 +66,24 @@ impl ArtifactSet {
                 "artifact set incomplete at {dir:?} — run `make artifacts` first"
             );
         }
-        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))?;
-        let manifest = parse(&manifest_text).context("parse manifest.json")?;
+        let corrupt = |msg: String| anyhow::Error::new(CorruptCheckpoint(msg));
+        let mpath = dir.join("manifest.json");
+        let manifest_text = std::fs::read_to_string(&mpath)
+            .map_err(|e| corrupt(format!("{mpath:?}: unreadable: {e}")))?;
+        let manifest = parse(&manifest_text)
+            .map_err(|e| corrupt(format!("{mpath:?}: does not parse: {e}")))?;
         let spec = ModelSpec::default_spec();
         spec.matches_manifest(&manifest)
             .context("manifest/spec layer-table mismatch — rebuild artifacts")?;
-        let b_train = manifest.req_usize("b_train")?;
-        let b_sample = manifest.req_usize("b_sample")?;
-        let assign_chunk = manifest.req_usize("assign_chunk")?;
+        let b_train = manifest
+            .req_usize("b_train")
+            .map_err(|e| corrupt(format!("{mpath:?}: {e}")))?;
+        let b_sample = manifest
+            .req_usize("b_sample")
+            .map_err(|e| corrupt(format!("{mpath:?}: {e}")))?;
+        let assign_chunk = manifest
+            .req_usize("assign_chunk")
+            .map_err(|e| corrupt(format!("{mpath:?}: {e}")))?;
         let client = cpu_client()?;
         let load = |name: &str| Executable::load(&client, name, &dir.join(format!("{name}.hlo.txt")));
         Ok(Self {

@@ -1,0 +1,283 @@
+//! Chaos harness: seeded fault schedules against a live server.
+//!
+//! Only meaningful with the `faults` cargo feature (the CI `chaos` job
+//! runs `cargo test --features faults`); without it the plan compiles to
+//! an inert ZST and these tests vanish.
+//!
+//! The contract under test is the robustness tentpole: with a plan that
+//! panics one worker, slows another, and drops one connection,
+//! *unaffected* requests still return bit-identical replies, the
+//! panicked model serves again after the supervisor respawns it, and
+//! every failure is a typed wire error — never a hang, never changed
+//! bits. See `docs/ROBUSTNESS.md` for the fault matrix.
+
+#![cfg(feature = "faults")]
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fmq::coordinator::registry::Registry;
+use fmq::coordinator::server::{serve, Client, RetryPolicy, Server, ServerConfig};
+use fmq::faults::FaultPlan;
+use fmq::model::spec::{Layer, ModelSpec};
+use fmq::quant::QuantMethod;
+use fmq::util::json::Json;
+use fmq::util::rng::Pcg64;
+
+const STEPS: usize = 2;
+
+/// Same tiny architecture as server_integration: full layer-table shape,
+/// fast in debug builds.
+fn small_spec() -> ModelSpec {
+    let (d, hidden, temb_freqs, blocks) = (24usize, 32usize, 4usize, 2usize);
+    let mut layers = Vec::new();
+    let mut off = 0usize;
+    let mut add = |layers: &mut Vec<Layer>, name: &str, shape: Vec<usize>| {
+        let l = Layer {
+            name: name.to_string(),
+            shape,
+            offset: off,
+        };
+        off += l.size();
+        layers.push(l);
+    };
+    add(&mut layers, "w_in", vec![d, hidden]);
+    add(&mut layers, "b_in", vec![hidden]);
+    add(&mut layers, "w_t", vec![2 * temb_freqs, hidden]);
+    add(&mut layers, "b_t", vec![hidden]);
+    for i in 0..blocks {
+        add(&mut layers, &format!("w1_{i}"), vec![hidden, hidden]);
+        add(&mut layers, &format!("b1_{i}"), vec![hidden]);
+        add(&mut layers, &format!("w2_{i}"), vec![hidden, hidden]);
+        add(&mut layers, &format!("b2_{i}"), vec![hidden]);
+    }
+    add(&mut layers, "w_out", vec![hidden, d]);
+    add(&mut layers, "b_out", vec![d]);
+    ModelSpec {
+        layers,
+        d,
+        hidden,
+        blocks,
+        temb_freqs,
+        k_max: 256,
+        freq_max: 1000.0,
+    }
+}
+
+fn start_server(plan: &str, queue_cap: usize) -> (Server, String) {
+    let spec = small_spec();
+    let theta = spec.init_theta(&mut Pcg64::seed(5));
+    let registry = Arc::new(Registry::build_fleet(
+        &spec,
+        &theta,
+        &[QuantMethod::Ot],
+        &[2, 8],
+    ));
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        steps: STEPS,
+        linger: Duration::from_millis(3),
+        queue_cap,
+        faults: Arc::new(FaultPlan::parse(plan).expect("valid plan")),
+        ..Default::default()
+    };
+    let server = serve(registry, None, cfg).expect("server start");
+    let addr = server.addr.to_string();
+    (server, addr)
+}
+
+/// Fast retry schedule so chaos tests do not sleep for real-world spans.
+fn quick_retry() -> RetryPolicy {
+    RetryPolicy {
+        max_retries: 6,
+        base: Duration::from_millis(20),
+        cap: Duration::from_millis(200),
+        seed: 7,
+    }
+}
+
+/// The headline chaos run: one seeded plan panics the second ot2 batch,
+/// slows the first ot8 batch, and the schedule is fixed — yet every
+/// reply, on every model, is bit-identical to the same requests against
+/// a fault-free server. The panicked model keeps serving (respawn), the
+/// panic surfaces only as a retryable typed error, and nothing hangs.
+#[test]
+fn seeded_fault_schedule_preserves_reply_bits() {
+    // baseline bits from an undisturbed server
+    let requests: &[(&str, usize, u64)] = &[
+        ("ot2", 3, 11),
+        ("ot2", 2, 12),
+        ("ot2", 1, 13),
+        ("ot8", 2, 21),
+        ("fp32", 1, 31),
+    ];
+    let (clean, clean_addr) = start_server("", 64);
+    let mut c = Client::connect(&clean_addr).unwrap();
+    let baseline: Vec<Vec<f32>> = requests
+        .iter()
+        .map(|&(m, n, s)| c.generate(m, n, s).unwrap())
+        .collect();
+    clean.stop();
+
+    let (server, addr) = start_server("panic@batch/ot2:2,slow@batch/ot8:1:25ms,seed=7", 64);
+    let mut c = Client::connect(&addr).unwrap();
+    for (i, &(m, n, s)) in requests.iter().enumerate() {
+        // sequential requests, one batch each: the 2nd ot2 batch panics;
+        // the retry goes through the respawned worker
+        let got = c.generate_with_retry(m, n, s, quick_retry()).unwrap();
+        assert_eq!(
+            got, baseline[i],
+            "{m} n={n} seed={s}: bits changed under the fault schedule"
+        );
+    }
+    assert_eq!(
+        server.stats.worker_respawns.get(),
+        1,
+        "exactly one injected panic -> exactly one respawn"
+    );
+    assert!(
+        server.stats.errors.get() >= 1,
+        "the panicked batch must surface as a typed error"
+    );
+    // the panicked model serves post-respawn without retries needed
+    let again = c.generate("ot2", 3, 11).unwrap();
+    assert_eq!(again, baseline[0]);
+    server.stop();
+}
+
+/// An injected panic fails only the in-flight batch with the retryable
+/// `worker_panic` class; a plain (no-retry) client sees the typed error,
+/// and the per-class counter moves with it.
+#[test]
+fn worker_panic_is_typed_and_retryable_on_the_wire() {
+    let (server, addr) = start_server("panic@batch/ot2:1", 64);
+    let mut c = Client::connect(&addr).unwrap();
+    let resp = c
+        .call(&Json::obj(vec![
+            ("op", Json::Str("generate".into())),
+            ("model", Json::Str("ot2".into())),
+            ("n", Json::Num(1.0)),
+            ("seed", Json::Num(1.0)),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+    assert_eq!(resp.req_str("code").unwrap(), "worker_panic");
+    assert_eq!(resp.get("retryable").unwrap().as_bool(), Some(true));
+    assert!(resp.req_str("error").unwrap().contains("panicked"));
+    // same connection, plain retry: the respawned worker serves it
+    let imgs = c.generate("ot2", 1, 1).unwrap();
+    assert_eq!(imgs.len(), small_spec().d);
+    assert_eq!(server.stats.worker_respawns.get(), 1);
+    assert_eq!(server.stats.error_class("worker_panic").get(), 1);
+    server.stop();
+}
+
+/// A dropped connection (injected before the reply write) kills exactly
+/// one client; the server counts one conn drop + one error, and other
+/// connections are untouched.
+#[test]
+fn injected_connection_drop_counts_once_and_isolates() {
+    let (server, addr) = start_server("drop@reply:2", 64);
+    // reply 1: fine
+    let a = Client::connect(&addr).unwrap().generate("ot8", 1, 5).unwrap();
+    // reply 2: the server severs the socket before writing
+    let err = Client::connect(&addr)
+        .unwrap()
+        .generate("ot8", 1, 6)
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("server closed connection")
+            || err.to_string().contains("Connection reset")
+            || err.to_string().contains("os error"),
+        "got: {err}"
+    );
+    // reply 3 on a fresh connection: unaffected, and deterministic
+    let b = Client::connect(&addr).unwrap().generate("ot8", 1, 5).unwrap();
+    assert_eq!(a, b, "a dropped sibling connection must not change bits");
+    assert_eq!(server.stats.conn_drops.get(), 1, "one injected drop");
+    assert_eq!(
+        server.stats.errors.get(),
+        1,
+        "the undeliverable success counts exactly one error"
+    );
+    assert_eq!(server.stats.error_class("internal").get(), 1);
+    server.stop();
+}
+
+/// Load shedding under a slowed worker: with a queue bound of 1 and the
+/// first ot2 batch sleeping, a burst overfills the queue and the
+/// overflow is shed with the typed `overloaded` reply + retry hint —
+/// and a retrying client still completes every request.
+#[test]
+fn slowed_worker_sheds_overflow_with_typed_overloaded() {
+    let (server, addr) = start_server("slow@batch/ot2:1:300ms", 1);
+    // occupy the worker: this request's batch sleeps 300ms
+    let first = {
+        let addr = addr.clone();
+        std::thread::spawn(move || Client::connect(&addr).unwrap().generate("ot2", 1, 1).unwrap())
+    };
+    std::thread::sleep(Duration::from_millis(80));
+    // worker is inside the slow batch; this one parks in the queue (cap 1)
+    let second = {
+        let addr = addr.clone();
+        std::thread::spawn(move || Client::connect(&addr).unwrap().generate("ot2", 1, 2).unwrap())
+    };
+    std::thread::sleep(Duration::from_millis(80));
+    // queue is full now: a plain call is shed with the typed reply
+    let resp = Client::connect(&addr)
+        .unwrap()
+        .call(&Json::obj(vec![
+            ("op", Json::Str("generate".into())),
+            ("model", Json::Str("ot2".into())),
+            ("n", Json::Num(1.0)),
+            ("seed", Json::Num(3.0)),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{resp:?}");
+    assert_eq!(resp.req_str("code").unwrap(), "overloaded");
+    assert_eq!(resp.get("retryable").unwrap().as_bool(), Some(true));
+    assert!(resp.get("retry_after_ms").unwrap().as_u64().unwrap() >= 1);
+    // a retrying client rides out the congestion
+    let imgs = Client::connect(&addr)
+        .unwrap()
+        .generate_with_retry("ot2", 1, 4, quick_retry())
+        .unwrap();
+    assert_eq!(imgs.len(), small_spec().d);
+    first.join().unwrap();
+    second.join().unwrap();
+    assert!(server.stats.shed.get() >= 1, "at least one shed");
+    server.stop();
+}
+
+/// Graceful drain with work in flight: `stop()` lets a request admitted
+/// just before the drain finish (reply delivered, not `shutting_down`),
+/// while admission after the drain begins is refused with the typed
+/// terminal error.
+#[test]
+fn drain_flushes_inflight_and_refuses_new_work() {
+    let (server, addr) = start_server("slow@batch/ot2:1:200ms", 64);
+    // in-flight: its batch sleeps 200ms, so it straddles the drain
+    let inflight = {
+        let addr = addr.clone();
+        std::thread::spawn(move || Client::connect(&addr).unwrap().generate("ot2", 1, 9))
+    };
+    std::thread::sleep(Duration::from_millis(60));
+    let mut late = Client::connect(&addr).unwrap();
+    // begin the drain via the wire op (what operators use)
+    late.call(&Json::obj(vec![("op", Json::Str("shutdown".into()))]))
+        .unwrap();
+    let resp = late
+        .call(&Json::obj(vec![
+            ("op", Json::Str("generate".into())),
+            ("model", Json::Str("ot2".into())),
+            ("n", Json::Num(1.0)),
+            ("seed", Json::Num(1.0)),
+        ]))
+        .unwrap();
+    assert_eq!(resp.req_str("code").unwrap(), "shutting_down");
+    assert_eq!(resp.get("retryable").unwrap().as_bool(), Some(false));
+    // the in-flight request drains to a real reply
+    let imgs = inflight.join().unwrap().expect("in-flight must flush");
+    assert_eq!(imgs.len(), small_spec().d);
+    server.stop();
+}

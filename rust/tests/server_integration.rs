@@ -7,7 +7,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use fmq::coordinator::registry::Registry;
-use fmq::coordinator::server::{serve, Client, ServerConfig};
+use fmq::coordinator::server::{serve, Client, RetryPolicy, ServerConfig};
 use fmq::flow::sampler::{self, CpuQStep, CpuStep};
 use fmq::model::spec::{Layer, ModelSpec};
 use fmq::quant::{quantize_model, QuantMethod};
@@ -690,4 +690,142 @@ fn explicit_engine_failure_surfaces_to_client() {
         .unwrap();
     assert_eq!(imgs.len(), spec.d);
     auto.stop();
+}
+
+/// Per-request deadlines over the wire: `deadline_ms: 0` is legal,
+/// expires deterministically, and comes back as the typed non-retryable
+/// `deadline_exceeded` reply (never a hang, never a generic timeout); a
+/// generous deadline changes nothing about the bits.
+#[test]
+fn deadline_zero_sheds_typed_and_generous_deadline_serves_exact_bits() {
+    let (server, addr) = start_small_server();
+    let spec = small_spec();
+    let mut c = Client::connect(&addr).unwrap();
+    let resp = c
+        .call(&Json::obj(vec![
+            ("op", Json::Str("generate".into())),
+            ("model", Json::Str("ot2".into())),
+            ("n", Json::Num(1.0)),
+            ("seed", Json::Num(1.0)),
+            ("deadline_ms", Json::Num(0.0)),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{resp:?}");
+    assert_eq!(resp.req_str("code").unwrap(), "deadline_exceeded");
+    assert_eq!(resp.get("retryable").unwrap().as_bool(), Some(false));
+    assert_eq!(server.stats.error_class("deadline_exceeded").get(), 1);
+    // a malformed deadline is a bad request, not a silent default
+    let resp = c
+        .call(&Json::obj(vec![
+            ("op", Json::Str("generate".into())),
+            ("model", Json::Str("ot2".into())),
+            ("n", Json::Num(1.0)),
+            ("seed", Json::Num(1.0)),
+            ("deadline_ms", Json::Num(-5.0)),
+        ]))
+        .unwrap();
+    assert_eq!(resp.req_str("code").unwrap(), "bad_request");
+    assert!(resp.req_str("error").unwrap().contains("deadline_ms"));
+    // a generous budget is invisible in the result: same bits as the
+    // deadline-free determinism contract
+    let got = c.generate_with_deadline("ot2", 2, 42, 60_000).unwrap();
+    assert_eq!(got, expected_images(&spec, "ot2", 2, 42));
+    server.stop();
+}
+
+/// Load shedding + client retry, end to end: a `queue_cap = 1` server
+/// flooded by concurrent max-size requests must shed some of them with
+/// the retryable `overloaded` error — and retrying clients ride out the
+/// congestion, every reply still bit-identical to the offline sampler.
+#[test]
+fn overload_flood_sheds_and_retrying_clients_all_complete() {
+    let spec = small_spec();
+    let theta = test_theta(&spec);
+    let registry = Arc::new(Registry::build_fleet(
+        &spec,
+        &theta,
+        &[QuantMethod::Ot],
+        &[2],
+    ));
+    let cfg = ServerConfig {
+        queue_cap: 1,
+        ..test_config(None)
+    };
+    let server = serve(registry, None, cfg).expect("server start");
+    let addr = server.addr.to_string();
+    // max-size requests keep the single ot2 worker busy long enough that
+    // the cap-1 queue must turn try_send away (the flood is concurrent)
+    let (n, seed) = (256usize, 7u64);
+    let want = expected_images(&spec, "ot2", n, seed);
+    let mut handles = Vec::new();
+    for _ in 0..6 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            // generous retry budget: a debug-build flood can keep the
+            // cap-1 queue congested for whole seconds on slow CI hosts
+            let policy = RetryPolicy {
+                max_retries: 16,
+                base: Duration::from_millis(20),
+                cap: Duration::from_millis(250),
+                seed: 11,
+            };
+            Client::connect(&addr)
+                .unwrap()
+                .generate_with_retry("ot2", n, seed, policy)
+                .unwrap()
+        }));
+    }
+    for h in handles {
+        assert_eq!(
+            h.join().unwrap(),
+            want,
+            "a retried request must return the same bits as an unshed one"
+        );
+    }
+    assert!(
+        server.stats.shed.get() >= 1,
+        "a cap-1 queue under a 6-way flood must shed at least once"
+    );
+    server.stop();
+}
+
+/// The `shutdown` op begins a graceful drain: new generation is refused
+/// with the terminal `shutting_down` error, but observability (`ping`,
+/// `stats`) stays reachable for the whole drain window, and `stop()`
+/// completes cleanly via the drain-idle worker exit.
+#[test]
+fn drain_refuses_new_work_but_keeps_ops_reachable() {
+    let (server, addr) = start_small_server();
+    let mut c = Client::connect(&addr).unwrap();
+    c.generate("ot2", 1, 3).unwrap();
+    let resp = c
+        .call(&Json::obj(vec![("op", Json::Str("shutdown".into()))]))
+        .unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    // admission is now gated, with the non-retryable terminal class
+    let resp = c
+        .call(&Json::obj(vec![
+            ("op", Json::Str("generate".into())),
+            ("model", Json::Str("ot2".into())),
+            ("n", Json::Num(1.0)),
+            ("seed", Json::Num(4.0)),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+    assert_eq!(resp.req_str("code").unwrap(), "shutting_down");
+    assert_eq!(resp.get("retryable").unwrap().as_bool(), Some(false));
+    assert!(resp.req_str("error").unwrap().contains("draining"));
+    // a second drain request is an idempotent no-op
+    let again = c
+        .call(&Json::obj(vec![("op", Json::Str("shutdown".into()))]))
+        .unwrap();
+    assert_eq!(again.get("ok").unwrap().as_bool(), Some(true));
+    // operators can still watch the drain: ping + stats keep serving
+    let pong = c.call(&Json::obj(vec![("op", Json::Str("ping".into()))])).unwrap();
+    assert_eq!(pong.get("ok").unwrap().as_bool(), Some(true));
+    let s = c.stats().unwrap();
+    assert!(s.req("requests").unwrap().as_u64().unwrap() >= 1);
+    assert_eq!(s.req("errors").unwrap().as_u64(), Some(1));
+    // workers exit through the drain-idle path; stop() must not hang
+    server.stop();
 }

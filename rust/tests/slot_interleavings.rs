@@ -20,12 +20,34 @@
 //! (max_batch, n1, n2). Replies must be exact-n, bit-identical to the
 //! request's private noise stream regardless of slicing or completion
 //! order, and the backlog must drain to zero.
+//!
+//! Part C — supervisor respawn handoff: a worker panic fails the
+//! in-flight super-batch with the typed `worker_panic` error and leaves
+//! the batcher's queue intact for the respawned worker. The handoff is
+//! checked under **every** interleaving of a racing submit against the
+//! panic/complete/respawn sequence: queued requests survive untouched
+//! and reply with their exact private-noise bits.
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Duration;
 
 use fmq::coordinator::batcher::{Batcher, GenRequest, Reply, SuperBatch, Work};
+use fmq::coordinator::errors::{ErrClass, ServeError};
+use fmq::obs::Metrics;
 use fmq::util::rng::Pcg64;
+
+/// A batcher wired to a throwaway metrics registry (these tests assert
+/// on replies, not counters).
+fn mk_batcher(max_batch: usize, d: usize, queue_cap: usize) -> Batcher {
+    Batcher::new(
+        max_batch,
+        Duration::ZERO,
+        d,
+        queue_cap,
+        Arc::new(Metrics::new()),
+    )
+}
 
 // ---------------------------------------------------------------------
 // Part A: exhaustive interleavings of the slot-lease protocol.
@@ -229,6 +251,7 @@ fn gen_req(n: usize, seed: u64) -> (GenRequest, mpsc::Receiver<Reply>) {
     (
         GenRequest {
             work: Work::Generate { n, seed },
+            deadline: None,
             reply: rtx,
         },
         rrx,
@@ -240,6 +263,7 @@ fn encode_req(rows: Vec<f32>) -> (GenRequest, mpsc::Receiver<Reply>) {
     (
         GenRequest {
             work: Work::Encode { rows },
+            deadline: None,
             reply: rtx,
         },
         rrx,
@@ -300,7 +324,7 @@ fn completion_order_grid_reassembles_exact_n() {
     for (max_batch, n1, n2) in grid {
         let n_batches = (n1 + n2).div_ceil(max_batch);
         for perm in permutations(n_batches) {
-            let mut b = Batcher::new(max_batch, Duration::ZERO, d, 8);
+            let mut b = mk_batcher(max_batch, d, 8);
             let tx = b.submitter();
             let (r1, rx1) = gen_req(n1, 41);
             let (r2, rx2) = gen_req(n2, 42);
@@ -346,7 +370,7 @@ fn encode_rows_reassemble_in_order() {
     let n = 5;
     let rows: Vec<f32> = (0..n * d).map(|i| i as f32).collect();
     for max_batch in [2usize, 5, 8] {
-        let mut b = Batcher::new(max_batch, Duration::ZERO, d, 4);
+        let mut b = mk_batcher(max_batch, d, 4);
         let tx = b.submitter();
         let (req, rrx) = encode_req(rows.clone());
         tx.send(req).expect("queue has room");
@@ -368,7 +392,7 @@ fn directions_split_but_both_reply() {
     let d = 2;
     let (n1, n2) = (3usize, 2usize);
     let rows: Vec<f32> = (0..n2 * d).map(|i| 10.0 + i as f32).collect();
-    let mut b = Batcher::new(8, Duration::ZERO, d, 4);
+    let mut b = mk_batcher(8, d, 4);
     let tx = b.submitter();
     let (g, grx) = gen_req(n1, 7);
     let (e, erx) = encode_req(rows.clone());
@@ -387,4 +411,102 @@ fn directions_split_but_both_reply() {
     let got_e = erx.try_recv().expect("ready").expect("Ok");
     assert_eq!(got_e, integrate(&rows));
     assert_eq!(b.backlog_rows(), 0);
+}
+
+// ---------------------------------------------------------------------
+// Part C: supervisor respawn handoff under every submit interleaving.
+// ---------------------------------------------------------------------
+
+/// Submit the racing probe request (n=1, its own seed).
+fn send_probe(tx: &mpsc::SyncSender<GenRequest>) -> mpsc::Receiver<Reply> {
+    let (rb, rbx) = gen_req(1, 102);
+    tx.send(rb).expect("room for the probe");
+    rbx
+}
+
+/// The supervisor's panic handoff (server.rs `run_batches` returning
+/// `Panicked`, then the respawn loop reusing the same batcher), modeled
+/// at the batcher layer and exercised with a racing client submit landing
+/// at **every** point of the sequence: before the doomed batch assembles,
+/// while it is in flight, right after the supervisor fails it, and after
+/// the respawned worker takes over. In every interleaving:
+///
+/// * the panicked super-batch's request fails exactly once with the
+///   retryable `worker_panic` class — unissued tail rows die with it
+///   (a half-served request must not limp on under a fresh engine);
+/// * the request queued behind it and the racing submit both survive the
+///   respawn untouched, replying with their exact private-noise bits;
+/// * the backlog drains to zero — the handoff strands nothing.
+#[test]
+fn respawn_handoff_preserves_queued_requests_in_every_interleaving() {
+    let d = 3;
+    // n_a = 2: the doomed request exactly fills its super-batch;
+    // n_a = 3: it is sliced, and the unissued tail must die with it.
+    for n_a in [2usize, 3] {
+        for inject_at in 0..4usize {
+            let ctx = format!("n_a={n_a} inject_at={inject_at}");
+            let mut b = mk_batcher(2, d, 8);
+            let tx = b.submitter();
+            let (ra, arx) = gen_req(n_a, 100);
+            let (rc, crx) = gen_req(2, 101);
+            tx.send(ra).expect("room");
+            tx.send(rc).expect("room");
+            let mut brx = None;
+
+            // interleaving point 0: probe lands before the doomed batch
+            if inject_at == 0 {
+                brx = Some(send_probe(&tx));
+            }
+            let doomed = b.next_batch().expect("batcher alive");
+            assert_eq!(doomed.rows, 2, "A's slice fills the super-batch ({ctx})");
+            // interleaving point 1: probe lands while the batch is in flight
+            if inject_at == 1 {
+                brx = Some(send_probe(&tx));
+            }
+            // the supervisor catches the worker panic and fails exactly
+            // the in-flight super-batch with the typed, retryable class
+            let err = ServeError::worker_panic("worker panicked while serving this batch");
+            b.complete(doomed, Err(&err));
+            // interleaving point 2: probe lands during the respawn window
+            if inject_at == 2 {
+                brx = Some(send_probe(&tx));
+            }
+            // respawn boundary: the batcher carries over untouched — the
+            // handoff contract is that there is NO reset to perform here
+            // interleaving point 3: probe lands at the respawned worker
+            if inject_at == 3 {
+                brx = Some(send_probe(&tx));
+            }
+
+            // the doomed request failed eagerly, exactly once, tail included
+            let got = arx.try_recv().expect("failure delivered before respawn");
+            let e = got.expect_err("in-flight batch must fail");
+            assert_eq!(e.class, ErrClass::WorkerPanic, "{ctx}");
+            assert!(arx.try_recv().is_err(), "exactly one reply per request ({ctx})");
+
+            // the respawned worker drains the survivors: C's 2 rows + probe
+            let batches = drain_batches(&mut b, 3);
+            for batch in batches {
+                let out = integrate(&batch.x0);
+                b.complete(batch, Ok(&out));
+            }
+            let got_c = crx.try_recv().expect("C ready").expect("C unharmed");
+            assert_eq!(
+                got_c,
+                integrate(&expected_noise(101, 2, d)),
+                "queued request must cross the respawn bit-exact ({ctx})"
+            );
+            let got_b = brx
+                .expect("probe injected at every interleaving point")
+                .try_recv()
+                .expect("probe ready")
+                .expect("probe unharmed");
+            assert_eq!(
+                got_b,
+                integrate(&expected_noise(102, 1, d)),
+                "racing submit must cross the respawn bit-exact ({ctx})"
+            );
+            assert_eq!(b.backlog_rows(), 0, "handoff strands nothing ({ctx})");
+        }
+    }
 }
